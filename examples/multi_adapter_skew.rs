@@ -1,0 +1,125 @@
+//! Skewed multi-adapter serving: the paper's Fig.-6 scenario in example
+//! form. One shared ExpertWeave engine absorbs a power-law-skewed
+//! workload across adapters; the same trace split across per-adapter
+//! *merged* instances leaves the cold instances idle while the hot one
+//! queues.
+//!
+//! ```text
+//! cargo run --release --example multi_adapter_skew -- [--alpha 0.32]
+//! ```
+
+use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
+use expertweave::engine::{Engine, EngineOptions};
+use expertweave::runtime::{ArtifactSet, Variant};
+use expertweave::server;
+use expertweave::util::args::Args;
+use expertweave::weights::StoreMode;
+use expertweave::workload::power_law::power_law_shares;
+use expertweave::workload::trace::{Trace, TraceSpec};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::new("multi_adapter_skew", "skewed workload: weave vs merged instances")
+        .opt("config", Some("tiny"), "artifact config")
+        .opt("alpha", Some("0.32"), "power-law skew (0.32 -> ~80/20)")
+        .opt("lambda", Some("8"), "aggregate req/s")
+        .opt("horizon", Some("10"), "horizon (s)")
+        .parse_env()
+        .map_err(anyhow::Error::msg)?;
+    let dir = PathBuf::from("artifacts").join(a.get_or("config", "tiny"));
+    let cfg_dir = dir.clone();
+    let set = ArtifactSet::load(&dir)?;
+    let cfg = set.config.clone();
+    let alpha: f64 = a.get_f64("alpha").map_err(anyhow::Error::msg)?;
+
+    let mk_adapter = |i: usize| {
+        let mut p = paper_adapter_profiles()[i].clone();
+        p.max_experts = p.max_experts.min(cfg.e_max);
+        p.avg_experts = p.avg_experts.min(p.max_experts as f64);
+        synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, 42)
+    };
+    let ad0 = mk_adapter(0); // gate-math
+    let ad1 = mk_adapter(2); // gate-intent
+
+    let shares = power_law_shares(2, alpha);
+    println!(
+        "skew alpha={alpha}: {:.0}% -> {}, {:.0}% -> {}",
+        shares[0] * 100.0,
+        ad0.name,
+        shares[1] * 100.0,
+        ad1.name
+    );
+
+    let mut trace = Trace::generate(&TraceSpec {
+        adapters: vec![
+            (ad0.name.clone(), ad0.domain.clone()),
+            (ad1.name.clone(), ad1.domain.clone()),
+        ],
+        lambda: a.get_f64("lambda").map_err(anyhow::Error::msg)?,
+        alpha,
+        horizon: a.get_f64("horizon").map_err(anyhow::Error::msg)?,
+        vocab: cfg.vocab,
+        seed: 1,
+    });
+    let max_prompt = cfg.buckets.last().copied().unwrap().min(cfg.kv_cap / 2);
+    for e in &mut trace.events {
+        e.prompt.truncate(max_prompt);
+        e.max_new_tokens = e.max_new_tokens.clamp(1, (cfg.kv_cap / 16).max(1));
+    }
+
+    // --- ExpertWeave: one shared engine sees the whole trace -----------
+    let mut weave = Engine::new_weave(
+        &set,
+        &[ad0.clone(), ad1.clone()],
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions::default(),
+    )?;
+    let w = server::replay(&mut weave, &trace)?;
+    println!("{}", w.report.row("weave (shared)"));
+
+    // --- Merged: one isolated instance per adapter, split trace --------
+    let split = |name: &str| {
+        let mut t = trace.clone();
+        t.events.retain(|e| e.adapter.as_deref() == Some(name));
+        t
+    };
+    let outcomes = server::replay_multi(vec![
+        (
+            {
+                let set_dir = cfg_dir.clone();
+                let ad = ad0.clone();
+                Box::new(move || {
+                    let set = ArtifactSet::load(&set_dir)?;
+                    let half = EngineOptions { compute_share: 0.5, ..Default::default() };
+                    Engine::new_merged(&set, ad, half)
+                }) as Box<dyn FnOnce() -> anyhow::Result<Engine> + Send>
+            },
+            split(&ad0.name),
+        ),
+        (
+            {
+                let set_dir = cfg_dir.clone();
+                let ad = ad1.clone();
+                Box::new(move || {
+                    let set = ArtifactSet::load(&set_dir)?;
+                    let half = EngineOptions { compute_share: 0.5, ..Default::default() };
+                    Engine::new_merged(&set, ad, half)
+                }) as Box<dyn FnOnce() -> anyhow::Result<Engine> + Send>
+            },
+            split(&ad1.name),
+        ),
+    ])?;
+    for (o, name) in outcomes.iter().zip([&ad0.name, &ad1.name]) {
+        println!("{}", o.report.row(&format!("merged [{name}]")));
+    }
+    let agg = server::aggregate(&outcomes);
+    println!("{}", agg.row("merged (aggregate)"));
+    println!(
+        "\nweave decode {:.1} tok/s vs merged aggregate {:.1} tok/s ({:+.1}%)",
+        w.report.decode_throughput,
+        agg.decode_throughput,
+        (w.report.decode_throughput / agg.decode_throughput - 1.0) * 100.0
+    );
+    Ok(())
+}

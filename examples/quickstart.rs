@@ -1,0 +1,64 @@
+//! Quickstart: serve two ESFT adapters + the base model over one shared
+//! MoE deployment, end to end, in ~30 lines of API.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
+use expertweave::engine::{Engine, EngineOptions, RequestSpec};
+use expertweave::runtime::{ArtifactSet, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::weights::StoreMode;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the AOT artifacts (HLO text + ABI) for the test model
+    let set = ArtifactSet::load(Path::new("artifacts/tiny"))?;
+    let cfg = set.config.clone();
+
+    // 2. synthesize two Table-1-profile ESFT adapters for this geometry
+    let adapters: Vec<_> = paper_adapter_profiles()[..2]
+        .iter()
+        .map(|p| {
+            let mut p = p.clone();
+            p.max_experts = p.max_experts.min(cfg.e_max);
+            p.avg_experts = p.avg_experts.min(p.max_experts as f64);
+            synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, 42)
+        })
+        .collect();
+
+    // 3. one ExpertWeave engine: shared base + both adapters behind the
+    //    virtual weight tensor and the fused batched-rerouting kernel
+    let mut engine = Engine::new_weave(
+        &set,
+        &adapters,
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions::default(),
+    )?;
+
+    // 4. batch requests across adapters and the base model
+    for (i, who) in [Some("gate-math"), Some("token-math"), None].iter().enumerate() {
+        engine.submit(RequestSpec {
+            adapter: who.map(str::to_string),
+            prompt: (1..=8 + i as i32).collect(),
+            max_new_tokens: 6,
+            sampling: Sampling::Greedy,
+        })?;
+    }
+
+    // 5. run them to completion — tokens of all three requests are packed
+    //    into the same steps; rerouting sends each to its own experts
+    for c in engine.run_to_completion()? {
+        println!(
+            "request {} ({}) -> {:?}  (TTFT {:.1} ms)",
+            c.id,
+            c.adapter.as_deref().unwrap_or("<base>"),
+            c.output,
+            c.record.ttft.as_secs_f64() * 1e3,
+        );
+    }
+    println!("\n{}", engine.report().row("quickstart/tiny"));
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! End-to-end driver (the repository's headline validation run): load the
+//! ~120M-parameter `small` MoE model, register 5 ESFT adapters, and serve
+//! a 60-second multi-adapter online workload with continuous batching +
+//! chunked prefill, reporting the paper's four metrics (prefill/decode
+//! throughput, TTFT, TPOT) plus engine telemetry.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example serve_e2e
+//!   [--config small] [--adapters 5] [--lambda 0.4] [--horizon 60]
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
+use expertweave::bench::{fmt_bytes, fmt_time, Table};
+use expertweave::engine::{Engine, EngineOptions};
+use expertweave::runtime::{ArtifactSet, Variant};
+use expertweave::server;
+use expertweave::util::args::Args;
+use expertweave::weights::StoreMode;
+use expertweave::workload::trace::{Trace, TraceSpec};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::new("serve_e2e", "end-to-end multi-adapter serving run")
+        .opt("config", Some("small"), "artifact config")
+        .opt("adapters", Some("5"), "adapters to load")
+        .opt("lambda", Some("0.4"), "aggregate req/s (testbed-scaled)")
+        .opt("alpha", Some("1.0"), "adapter skew (1 = uniform)")
+        .opt("horizon", Some("60"), "trace horizon (s)")
+        .opt("seed", Some("0"), "workload seed")
+        .parse_env()
+        .map_err(anyhow::Error::msg)?;
+
+    let dir = PathBuf::from("artifacts").join(a.get_or("config", "small"));
+    let set = ArtifactSet::load(&dir)?;
+    let cfg = set.config.clone();
+    let n: usize = a.get_usize("adapters").map_err(anyhow::Error::msg)?;
+
+    println!(
+        "model {}: {} params (f32), {} layers x {} experts (top-{}), G = {} slots",
+        cfg.name,
+        fmt_bytes(cfg.base_model_bytes()),
+        cfg.layers,
+        cfg.num_experts,
+        cfg.top_k,
+        cfg.total_expert_slots()
+    );
+
+    let profiles = paper_adapter_profiles();
+    let adapters: Vec<_> = (0..n)
+        .map(|i| {
+            let mut p = profiles[i % profiles.len()].clone();
+            p.max_experts = p.max_experts.min(cfg.e_max);
+            p.avg_experts = p.avg_experts.min(p.max_experts as f64);
+            synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, 42 + i as u64)
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let mut engine = Engine::new_weave(
+        &set,
+        &adapters,
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions::default(),
+    )?;
+    println!(
+        "engine up in {} ({} adapters resident; weights mapped on device)",
+        fmt_time(t0.elapsed().as_secs_f64()),
+        n
+    );
+
+    let mut trace = Trace::generate(&TraceSpec {
+        adapters: adapters.iter().map(|ad| (ad.name.clone(), ad.domain.clone())).collect(),
+        lambda: a.get_f64("lambda").map_err(anyhow::Error::msg)?,
+        alpha: a.get_f64("alpha").map_err(anyhow::Error::msg)?,
+        horizon: a.get_f64("horizon").map_err(anyhow::Error::msg)?,
+        vocab: cfg.vocab,
+        seed: a.get_usize("seed").map_err(anyhow::Error::msg)? as u64,
+    });
+    let max_prompt = cfg.buckets.last().copied().unwrap().min(cfg.kv_cap / 2);
+    for e in &mut trace.events {
+        e.prompt.truncate(max_prompt);
+        e.max_new_tokens = e.max_new_tokens.clamp(1, cfg.kv_cap / 16);
+    }
+    println!(
+        "trace: {} requests over {:.0}s ({:?})",
+        trace.len(),
+        a.get_f64("horizon").map_err(anyhow::Error::msg)?,
+        trace.per_adapter_counts()
+    );
+
+    let outcome = server::replay(&mut engine, &trace)?;
+    let r = &outcome.report;
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["requests completed".into(), r.requests.to_string()]);
+    t.row(&["prefill throughput".into(), format!("{:.1} tok/s", r.prefill_throughput)]);
+    t.row(&["decode throughput".into(), format!("{:.1} tok/s", r.decode_throughput)]);
+    t.row(&["TTFT p50 / p99".into(), format!("{} / {}", fmt_time(r.ttft.median), fmt_time(r.ttft.p99))]);
+    t.row(&["TPOT p50 / p99".into(), format!("{} / {}", fmt_time(r.tpot.median), fmt_time(r.tpot.p99))]);
+    t.row(&["e2e p50".into(), fmt_time(r.e2e.median)]);
+    t.row(&["engine steps".into(), engine.metrics.step_count.to_string()]);
+    t.row(&["mean step".into(), fmt_time(engine.metrics.step_time.mean())]);
+    t.row(&["mean XLA execute".into(), fmt_time(engine.metrics.execute_time.mean())]);
+    t.row(&["mean batched tokens".into(), format!("{:.1}", engine.metrics.batched_tokens.mean())]);
+    t.print("serve_e2e");
+    t.write_csv("serve_e2e").ok();
+    Ok(())
+}

@@ -1,0 +1,147 @@
+"""AOT compile path: lower every (config, variant, token-bucket) step
+function to **HLO text** and emit ``meta.json``, the artifact ABI consumed
+by ``rust/src/runtime``.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out-dir ../artifacts [--configs tiny,small]
+                          [--check]
+
+Python runs only here — never on the request path. ``make artifacts``
+invokes this once; the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS
+from .model import VARIANTS, lower_step, param_spec, step_input_specs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return sanitize_hlo_text(comp.as_hlo_text())
+
+
+def sanitize_hlo_text(text: str) -> str:
+    """Make jax-0.8-emitted HLO text parseable by xla_extension 0.5.1.
+
+    The only incompatibility observed is the ``largest=true`` attribute on
+    ``topk`` (added after 0.5.1; descending order was and is the
+    behaviour). ``largest=false`` never occurs (we only lower
+    ``lax.top_k``); assert so a future change cannot silently flip
+    semantics.
+    """
+    assert "largest=false" not in text, "topk(largest=false) unsupported by old XLA"
+    return text.replace(", largest=true", "")
+
+
+def build_manifest(cfg, variant, bucket):
+    """Full ordered input manifest for one executable."""
+    params = [
+        {"name": n, "shape": list(s), "dtype": "f32"}
+        for n, s in param_spec(cfg, variant)
+    ]
+    inputs = [
+        {"name": n, "shape": list(s), "dtype": dt}
+        for n, s, dt in step_input_specs(cfg, variant, bucket)
+    ]
+    o = min(bucket, cfg.max_seqs)
+    return {
+        "variant": variant,
+        "bucket": bucket,
+        "out_rows": o,
+        "gmm_block": cfg.gmm_block(bucket),
+        "params": params,
+        "inputs": inputs,
+        # kv_cache is the first input after the flattened params tuple and
+        # is donated (input_output_alias in the HLO).
+        "donate_input_index": len(params),
+        "outputs": [
+            {"name": "logits", "shape": [o, cfg.vocab], "dtype": "f32"},
+            {"name": "kv_cache",
+             "shape": [cfg.layers, 2, cfg.kv_cap, cfg.kv_heads, cfg.head_dim],
+             "dtype": "f32"},
+        ],
+    }
+
+
+def self_check(cfg, variant, bucket, lowered):
+    """Compile the lowered module and execute it with arbitrary inputs —
+    catches manifest/ABI drift (input count/order/shape) at build time."""
+    import numpy as np
+
+    man = build_manifest(cfg, variant, bucket)
+    rng = np.random.default_rng(0)
+    params = tuple(
+        (rng.normal(size=p["shape"]) * 0.02).astype(np.float32)
+        for p in man["params"]
+    )
+    args = []
+    for i in man["inputs"]:
+        dt = np.float32 if i["dtype"] == "f32" else np.int32
+        args.append(np.zeros(i["shape"], dt))
+    logits, kv = lowered.compile()(params, *args)
+    want = [tuple(o["shape"]) for o in man["outputs"]]
+    got = [tuple(logits.shape), tuple(kv.shape)]
+    assert got == want, f"self-check output shapes {got} != {want}"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small")
+    ap.add_argument("--variants", default=",".join(VARIANTS))
+    ap.add_argument("--check", action="store_true",
+                    help="compile+execute each tiny artifact as a smoke test")
+    args = ap.parse_args()
+
+    for cfg_name in args.configs.split(","):
+        cfg = CONFIGS[cfg_name]
+        if not cfg.buckets:
+            print(f"[aot] {cfg_name}: accounting-only config, skipping")
+            continue
+        out_dir = os.path.join(args.out_dir, cfg.name)
+        os.makedirs(out_dir, exist_ok=True)
+        meta = {"config": cfg.to_json_dict(), "executables": []}
+        for variant in args.variants.split(","):
+            for bucket in cfg.buckets:
+                lowered = lower_step(cfg, variant, bucket)
+                text = to_hlo_text(lowered)
+                fname = f"{variant}_t{bucket}.hlo.txt"
+                path = os.path.join(out_dir, fname)
+                with open(path, "w") as f:
+                    f.write(text)
+                entry = build_manifest(cfg, variant, bucket)
+                entry["file"] = fname
+                entry["sha256"] = hashlib.sha256(text.encode()).hexdigest()
+                meta["executables"].append(entry)
+                print(f"[aot] {cfg.name}/{fname}: {len(text)} chars")
+                if args.check and cfg.name == "tiny":
+                    self_check(cfg, variant, bucket, lowered)
+                    print(f"[aot] {cfg.name}/{fname}: self-check OK")
+        with open(os.path.join(out_dir, "meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        print(f"[aot] wrote {out_dir}/meta.json "
+              f"({len(meta['executables'])} executables)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

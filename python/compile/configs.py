@@ -1,0 +1,136 @@
+"""Model/serving configurations shared by the AOT compile path and (via
+``meta.json``) the Rust runtime.
+
+A config fully determines the shapes of every artifact: the MoE transformer
+dimensions, the adapter-slot geometry of the virtual weight tensor
+(``M + N * E_max`` expert slots), the KV slot-pool capacity, and the token
+buckets the scheduler may dispatch.
+
+The paper's base model is the ESFT-vanilla 16B MoE (DeepSeek-V2-Lite
+architecture: 26 MoE layers, M=64 routed experts, top-6, fine-grained
+experts). ``small`` is a faithfully scaled-down sibling (~120M params) used
+for end-to-end serving experiments on CPU PJRT; ``tiny`` is for tests.
+``paper16b`` is *never compiled* — it exists so the memory-accounting
+experiments (Fig. 9, Table 1) can run the real allocator at paper scale.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    hidden: int          # H
+    layers: int          # L
+    q_heads: int         # QH
+    kv_heads: int        # KVH
+    head_dim: int        # D
+    num_experts: int     # M routed experts (router domain)
+    top_k: int           # K experts activated per token
+    expert_inter: int    # F per-expert FFN intermediate size
+    shared_inter: int    # shared-expert intermediate size (0 = none)
+    max_adapters: int    # N adapter slots in the virtual weight tensor
+    e_max: int           # E_max adapter expert slots per adapter per layer
+    kv_cap: int          # CAP KV slot-pool size
+    max_seqs: int        # O rows of logits returned per step
+    buckets: tuple = (4, 16, 64, 256)   # token buckets (sorted ascending)
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+
+    @property
+    def total_expert_slots(self) -> int:
+        """G: first-dimension size of the virtual weight tensor."""
+        return self.num_experts + self.max_adapters * self.e_max
+
+    def gmm_block(self, bucket: int) -> int:
+        """Grouped-matmul row-block size for a given token bucket.
+
+        Small buckets (decode-dominated) use small blocks so partially
+        filled groups waste little compute; large prefill buckets amortize
+        bigger blocks.
+        """
+        # tuned by sweep on the single-core testbed (EXPERIMENTS.md §Perf):
+        # R<=256 -> 4, R<=1024 -> 8, else 32
+        r = bucket * self.top_k
+        if r <= 256:
+            return 4
+        if r <= 1024:
+            return 8
+        return 32
+
+    def to_json_dict(self) -> dict:
+        d = asdict(self)
+        d["buckets"] = list(self.buckets)
+        d["total_expert_slots"] = self.total_expert_slots
+        d["gmm_blocks"] = {str(b): self.gmm_block(b) for b in self.buckets}
+        return d
+
+
+TINY = ModelConfig(
+    name="tiny",
+    vocab=128,
+    hidden=32,
+    layers=2,
+    q_heads=2,
+    kv_heads=1,
+    head_dim=16,
+    num_experts=8,
+    top_k=2,
+    expert_inter=16,
+    shared_inter=32,
+    max_adapters=3,
+    e_max=3,
+    kv_cap=64,
+    max_seqs=8,
+    buckets=(4, 16),
+)
+
+# ~120M parameters: 8 layers x 64 fine-grained experts (F=128), top-6,
+# GQA attention. Same family as DeepSeek-V2-Lite modulo MLA->GQA (see
+# DESIGN.md section 7).
+# Buckets/caps are sized for the single-core CPU-PJRT testbed (see
+# EXPERIMENTS.md "testbed scale" note): ~1 s worst-case prefill step.
+SMALL = ModelConfig(
+    name="small",
+    vocab=8192,
+    hidden=512,
+    layers=8,
+    q_heads=8,
+    kv_heads=2,
+    head_dim=64,
+    num_experts=64,
+    top_k=6,
+    expert_inter=128,
+    shared_inter=512,
+    max_adapters=20,
+    e_max=13,
+    kv_cap=1024,
+    max_seqs=32,
+    buckets=(8, 32, 128, 512),
+)
+
+# Paper-scale geometry for memory accounting only (never lowered/compiled).
+# DeepSeek-V2-Lite: 27 layers (26 MoE), H=2048, F=1408, M=64, top-6,
+# 16B params; each NPU has 64 GB. Expert weight bytes per expert per layer:
+# 3 * H * F * bytes.
+PAPER16B = ModelConfig(
+    name="paper16b",
+    vocab=102400,
+    hidden=2048,
+    layers=26,
+    q_heads=16,
+    kv_heads=16,
+    head_dim=128,
+    num_experts=64,
+    top_k=6,
+    expert_inter=1408,
+    shared_inter=2816,
+    max_adapters=20,
+    e_max=13,
+    kv_cap=0,
+    max_seqs=256,
+    buckets=(),
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, PAPER16B)}

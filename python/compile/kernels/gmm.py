@@ -1,0 +1,154 @@
+"""Grouped Matrix Multiplication (GMM) — the MoE expert-computation
+substrate (the role of ``torch_npu.npu_grouped_matmul`` in the paper).
+
+Semantics: rows of ``x`` are sorted by expert; ``group_offsets[g]`` /
+``group_offsets[g+1]`` delimit the rows owned by expert ``g``; each row
+block is multiplied by its owner's weight matrix::
+
+    out[offsets[g]:offsets[g+1]] = x[offsets[g]:offsets[g+1]] @ w[g]
+
+The paper deliberately keeps this operator *unmodified* — ExpertWeave's
+whole design (virtual weight tensor + batched rerouting) exists so the GMM
+only ever sees one ordinary stacked ``[G, H_in, H_out]`` tensor and
+ordinary expert IDs. We reproduce that property: the serving graph calls
+the same GMM for base-model and adapter experts alike.
+
+Two implementations:
+
+* :func:`grouped_matmul` — the one used in the serving graph. A
+  ``lax.while_loop`` walks (group, row) cursors and multiplies one
+  ``blk``-row block per iteration, skipping empty groups with a real branch
+  (``lax.cond``), so compute scales with *occupied* rows + one partial
+  block per active group, never with ``G``. Trip count is data-dependent;
+  shapes stay static. This mirrors how a ragged NPU GMM walks group
+  descriptors.
+
+* :func:`gmm_pallas` — a Pallas block-table formulation (grid over fixed
+  blocks, one expert per block) matching how the kernel would be tiled for
+  the TPU MXU: each grid step does a ``[blk, H_in] x [H_in, H_out]`` MXU
+  matmul with both tiles VMEM-resident (see DESIGN.md section 6). Used by
+  kernel tests and the TPU-design discussion; not in the CPU serving graph
+  because interpret-mode cannot skip empty blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@functools.partial(jax.jit, static_argnames=("blk",))
+def grouped_matmul(x_sorted, w, group_offsets, *, blk):
+    """Ragged grouped matmul with data-dependent trip count.
+
+    Args:
+      x_sorted:      ``[R, H_in]`` rows sorted by owning expert.
+      w:             ``[G, H_in, H_out]`` stacked expert weights (the
+                     virtual weight tensor view).
+      group_offsets: ``[G + 1]`` int32 row offsets (non-decreasing,
+                     ``group_offsets[G] == R``).
+      blk:           static row-block size.
+
+    Returns:
+      ``[R, H_out]`` with rows in the same (sorted) order.
+    """
+    r, h_in = x_sorted.shape
+    g_total, _, h_out = w.shape
+    # Pad rows so a block starting at the last row may overrun safely.
+    xp = jnp.concatenate([x_sorted, jnp.zeros((blk, h_in), x_sorted.dtype)], 0)
+    out0 = jnp.zeros((r + blk, h_out), x_sorted.dtype)
+
+    def cond(state):
+        g, _, _ = state
+        return g < g_total
+
+    def body(state):
+        g, row, out = state
+        end = group_offsets[g + 1]
+
+        def compute(out):
+            xb = jax.lax.dynamic_slice(xp, (row, 0), (blk, h_in))
+            wg = jax.lax.dynamic_slice(w, (g, 0, 0), (1, h_in, h_out))[0]
+            yb = xb @ wg
+            # Rows past the group end belong to the next group; keep the
+            # existing values there (they are rewritten when g advances).
+            valid = (row + jnp.arange(blk)) < end
+            cur = jax.lax.dynamic_slice(out, (row, 0), (blk, h_out))
+            merged = jnp.where(valid[:, None], yb, cur)
+            return jax.lax.dynamic_update_slice(out, merged, (row, 0))
+
+        # Real branch: empty groups cost one cheap iteration, no matmul.
+        out = jax.lax.cond(end > row, compute, lambda o: o, out)
+        row_next = jnp.minimum(row + blk, end)
+        g_next = jnp.where(row_next >= end, g + 1, g)
+        return g_next, row_next, out
+
+    _, _, out = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), jnp.int32(0), out0)
+    )
+    return out[:r]
+
+
+def _gmm_block_kernel(block_expert_ref, block_start_ref, x_ref, w_ref, out_ref):
+    """One fixed block: rows [start, start+blk) x w[expert] -> out rows."""
+    b = pl.program_id(0)
+    e = block_expert_ref[b]
+    start = block_start_ref[b]
+    blk = out_ref.shape[1]            # out block is [1, blk, H_out]
+    h_in = x_ref.shape[1]
+    xb = pl.load(x_ref, (pl.dslice(start, blk), pl.dslice(0, h_in)))
+    wg = w_ref[e]
+    out_ref[0, :, :] = xb @ wg
+
+
+def gmm_pallas(x_sorted, w, block_expert, block_start, *, blk):
+    """Block-table GMM as a Pallas kernel (TPU-tiled formulation).
+
+    The caller supplies a *block table*: ``block_expert[b]`` owns rows
+    ``[block_start[b], block_start[b] + blk)`` of ``x_sorted`` (blocks are
+    group-aligned; partial blocks duplicate the preceding rows and are
+    masked by the caller via row indices). Output block ``b`` holds the
+    product for exactly those rows.
+
+    Returns ``[NB, blk, H_out]`` per-block outputs; the caller scatters
+    them back by row (see ``ref.gmm_blocktable_combine``).
+    """
+    nb = block_expert.shape[0]
+    r, h_in = x_sorted.shape
+    _, _, h_out = w.shape
+    xp = jnp.concatenate([x_sorted, jnp.zeros((blk, h_in), x_sorted.dtype)], 0)
+    return pl.pallas_call(
+        _gmm_block_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(block_expert.shape, lambda b: (0,)),
+            pl.BlockSpec(block_start.shape, lambda b: (0,)),
+            pl.BlockSpec(xp.shape, lambda b: (0, 0)),
+            pl.BlockSpec(w.shape, lambda b: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk, h_out), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, blk, h_out), x_sorted.dtype),
+        interpret=True,
+    )(block_expert, block_start, xp, w)
+
+
+def sort_by_expert(ids_flat, g_total):
+    """Sort flattened top-k expert IDs and derive GMM group offsets.
+
+    Args:
+      ids_flat: ``[R]`` int32 expert IDs (already rerouted, in the
+                ``G``-slot domain).
+      g_total:  static number of expert slots ``G``.
+
+    Returns:
+      ``(perm, group_offsets)`` where ``perm`` is the stable argsort of
+      ``ids_flat`` (``ids_flat[perm]`` is sorted) and ``group_offsets`` is
+      the ``[G + 1]`` int32 offsets array for :func:`grouped_matmul`.
+    """
+    perm = jnp.argsort(ids_flat, stable=True)
+    sorted_ids = ids_flat[perm]
+    group_offsets = jnp.searchsorted(
+        sorted_ids, jnp.arange(g_total + 1, dtype=ids_flat.dtype), side="left"
+    ).astype(jnp.int32)
+    return perm, group_offsets

@@ -1,0 +1,136 @@
+"""Pure-jnp / numpy oracles for every kernel and for the MoE layer.
+
+These are the correctness ground truth: deliberately simple, loop-based or
+dense formulations with no performance tricks. ``python/tests`` sweeps the
+real kernels against these with hypothesis.
+"""
+
+import numpy as np
+
+
+def reroute_ref(ids, aid, expert_map):
+    """Oracle for batched rerouting: plain advanced indexing."""
+    ids = np.asarray(ids)
+    aid = np.asarray(aid)
+    emap = np.asarray(expert_map)
+    return emap[aid[:, None] + 1, ids]
+
+
+def gmm_ref(x_sorted, w, group_offsets):
+    """Oracle for grouped matmul: per-group numpy loop."""
+    x_sorted = np.asarray(x_sorted)
+    w = np.asarray(w)
+    offs = np.asarray(group_offsets)
+    out = np.zeros((x_sorted.shape[0], w.shape[2]), x_sorted.dtype)
+    for g in range(w.shape[0]):
+        lo, hi = offs[g], offs[g + 1]
+        if hi > lo:
+            out[lo:hi] = x_sorted[lo:hi] @ w[g]
+    return out
+
+
+def build_block_table(group_offsets, blk):
+    """Host/numpy construction of a group-aligned block table for
+    :func:`compile.kernels.gmm.gmm_pallas`.
+
+    Every group is covered by ``ceil(len/blk)`` blocks starting at the
+    group start; the trailing block of a group may overrun into the next
+    group, so a per-block row-validity count is returned for masking.
+
+    Returns ``(block_expert, block_start, block_rows)`` numpy arrays.
+    """
+    offs = np.asarray(group_offsets)
+    be, bs, brows = [], [], []
+    for g in range(len(offs) - 1):
+        lo, hi = int(offs[g]), int(offs[g + 1])
+        row = lo
+        while row < hi:
+            be.append(g)
+            bs.append(row)
+            brows.append(min(blk, hi - row))
+            row += blk
+    return (
+        np.asarray(be, np.int32),
+        np.asarray(bs, np.int32),
+        np.asarray(brows, np.int32),
+    )
+
+
+def gmm_blocktable_combine(block_out, block_start, block_rows, r):
+    """Scatter per-block outputs back into ``[R, H_out]`` row order."""
+    block_out = np.asarray(block_out)
+    out = np.zeros((r, block_out.shape[2]), block_out.dtype)
+    for b in range(block_out.shape[0]):
+        n = int(block_rows[b])
+        s = int(block_start[b])
+        out[s : s + n] = block_out[b, :n]
+    return out
+
+
+def rms_norm_ref(x, gamma, eps):
+    x = np.asarray(x, np.float32)
+    var = np.mean(x * x, axis=-1, keepdims=True)
+    return (x / np.sqrt(var + eps)) * np.asarray(gamma)
+
+
+def silu_ref(x):
+    x = np.asarray(x, np.float32)
+    return x / (1.0 + np.exp(-x))
+
+
+def moe_layer_ref(x, router_w, w_gate, w_up, w_down, top_k, aid=None, expert_map=None):
+    """Oracle for a full MoE layer (router -> [reroute] -> experts -> combine).
+
+    Dense per-token loop; ``w_*`` are stacked ``[G, .., ..]`` tensors.
+    If ``aid``/``expert_map`` are given, applies ESFT rerouting between
+    routing and expert computation (ExpertWeave semantics).
+    """
+    x = np.asarray(x, np.float32)
+    t, _ = x.shape
+    logits = x @ np.asarray(router_w)          # [T, M] — router over base experts
+    e = np.exp(logits - logits.max(-1, keepdims=True))
+    gate = e / e.sum(-1, keepdims=True)
+    # stable top-k (ties broken by lower expert id, matching lax.top_k)
+    idx = np.argsort(-gate, axis=-1, kind="stable")[:, :top_k]
+    wts = np.take_along_axis(gate, idx, axis=-1)
+    wts = wts / wts.sum(-1, keepdims=True)
+    if expert_map is not None:
+        idx = reroute_ref(idx.astype(np.int32), aid, expert_map)
+    out = np.zeros_like(x)
+    for ti in range(t):
+        for k in range(top_k):
+            g = int(idx[ti, k])
+            h = silu_ref(x[ti] @ w_gate[g]) * (x[ti] @ w_up[g])
+            out[ti] += wts[ti, k] * (h @ w_down[g])
+    return out.astype(np.float32)
+
+
+def attention_ref(q, k_cache, v_cache, q_pos, q_seg, cache_pos, cache_seg, scale):
+    """Oracle for slot-pool GQA attention with segment+causal masking.
+
+    q: [T, QH, D]; caches: [CAP, KVH, D]. Query head h attends to kv head
+    ``h // (QH // KVH)``. Fully masked rows return zeros.
+    """
+    q = np.asarray(q, np.float32)
+    k_cache = np.asarray(k_cache, np.float32)
+    v_cache = np.asarray(v_cache, np.float32)
+    t, qh, d = q.shape
+    cap, kvh, _ = k_cache.shape
+    groups = qh // kvh
+    out = np.zeros_like(q)
+    for ti in range(t):
+        for h in range(qh):
+            kvhead = h // groups
+            scores = (k_cache[:, kvhead] @ q[ti, h]) * scale
+            mask = (
+                (np.asarray(cache_seg) == q_seg[ti])
+                & (np.asarray(cache_pos) <= q_pos[ti])
+                & (np.asarray(cache_seg) >= 0)
+            )
+            if not mask.any() or q_seg[ti] < 0:
+                continue
+            scores = np.where(mask, scores, -1e30)
+            w = np.exp(scores - scores.max())
+            w = w / w.sum()
+            out[ti, h] = w @ v_cache[:, kvhead]
+    return out

@@ -1,0 +1,128 @@
+"""L1: the paper's fused **batched rerouting** kernel (section 4.3).
+
+After the MoE router emits base-model top-k expert IDs, every ID belonging
+to a token of adapter ``i`` must be redirected to its fine-tuned counterpart
+in the virtual weight tensor, via the per-layer ESFT expert map::
+
+    TopK'(x) = { Pi[A(x), j] : j in TopK(x) }
+
+where ``A(x)`` is the token's adapter ID (AID, -1 = base model) and
+``Pi[i, j]`` is either ``j`` (expert not fine-tuned by adapter ``i``) or
+``Delta_i + delta_ij`` (slot of the fine-tuned copy).
+
+The paper implements this as a fused kernel on Ascend vector cores to avoid
+the launch overhead + HBM round-trips of a chain of canonical ops
+(broadcast AID, compute offsets, gather). We express the same fusion as a
+single Pallas kernel: one VMEM-resident pass, grid tiled over tokens.
+``ExpertWeave-SingleOp`` (the paper's unfused baseline, Fig. 7) is
+reproduced by :func:`reroute_singleop`, whose stages are separated with
+``optimization_barrier`` so XLA cannot re-fuse them.
+
+Conventions:
+  * AID ``-1`` denotes the base model. The expert map is stored with a
+    leading identity row so row index = ``aid + 1``.
+  * ``expert_map`` has shape ``[N + 1, M]`` (int32); output IDs index the
+    virtual weight tensor's ``G = M + N * E_max`` expert slots.
+
+TPU mapping (DESIGN.md section 6): the whole map (``(N+1) * M`` int32,
+<= 21*64*4 B = 5.2 KB for the paper geometry) fits in VMEM alongside a
+``[T_blk, K]`` ID tile; the kernel is a pure vector-unit pass with no MXU
+involvement and no intermediate HBM traffic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step of the fused kernel. 256 rows x K<=8 int32 = 8 KB of
+# VMEM for the ID tile; the full expert map rides along in every step.
+_TOKEN_BLOCK = 256
+
+
+def _reroute_kernel(ids_ref, aid_ref, emap_ref, out_ref):
+    """One fused pass: broadcast AID, compute flat offsets, gather."""
+    ids = ids_ref[...]                    # [Tb, K] int32 base-expert IDs
+    aid = aid_ref[...]                    # [Tb]    int32 adapter IDs (-1 = base)
+    emap = emap_ref[...]                  # [N+1, M] int32
+    m = emap.shape[1]
+    # row 0 of emap is the identity (base model); adapter i -> row i+1.
+    flat = (aid[:, None] + 1) * m + ids   # [Tb, K] flat offsets into emap
+    out_ref[...] = jnp.take(emap.reshape(-1), flat.reshape(-1), axis=0).reshape(ids.shape)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def reroute_fused(ids, aid, expert_map):
+    """Fused batched rerouting (ExpertWeave).
+
+    Args:
+      ids:        ``[T, K]`` int32 router top-k base-expert IDs.
+      aid:        ``[T]`` int32 adapter ID per token, ``-1`` = base model.
+      expert_map: ``[N + 1, M]`` int32 ESFT expert map with identity row 0.
+
+    Returns:
+      ``[T, K]`` int32 expert slots in the virtual weight tensor.
+    """
+    t, k = ids.shape
+    blk = min(_TOKEN_BLOCK, t)
+    if t % blk != 0:  # buckets are powers of two; this is for odd test shapes
+        blk = t
+    grid = (t // blk,)
+    return pl.pallas_call(
+        _reroute_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, k), lambda i: (i, 0)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec(expert_map.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, k), jnp.int32),
+        interpret=True,  # CPU-PJRT execution path (see DESIGN.md section 6)
+    )(ids, aid, expert_map)
+
+
+def reroute_singleop(ids, aid, expert_map):
+    """Unfused batched rerouting (ExpertWeave-SingleOp baseline, Fig. 7).
+
+    The canonical-operator implementation the paper benchmarks against:
+    (1) broadcast the AID array, (2) compute offsets into the expert map,
+    (3) gather. Each stage is fenced with ``optimization_barrier`` so it
+    stays a separate materialized op, modelling the per-kernel launch
+    overhead and intermediate HBM round-trips of the PyTorch version.
+    """
+    t, k = ids.shape
+    m = expert_map.shape[1]
+    # stage 1: broadcast AID across the top-k dimension
+    aid_b = jax.lax.optimization_barrier(jnp.broadcast_to(aid[:, None], (t, k)))
+    # stage 2: offsets inside the ESFT expert map
+    flat = jax.lax.optimization_barrier((aid_b + 1) * m + ids)
+    # stage 3: gather
+    out = jnp.take(expert_map.reshape(-1), flat.reshape(-1), axis=0).reshape(t, k)
+    return jax.lax.optimization_barrier(out)
+
+
+def build_expert_map(num_experts, e_max, adapter_experts):
+    """Host-side construction of the ESFT expert map ``Pi`` for one layer.
+
+    ``adapter_experts`` is a list over adapter slots; entry ``i`` is the
+    (possibly empty) sorted list of base-expert IDs fine-tuned by adapter
+    ``i`` in this layer. Mirrors ``rust/src/adapters/expert_map.rs``; used
+    by tests and the AOT self-check.
+
+    Returns an ``[N + 1, M]`` int32 array with identity row 0 and
+    ``Pi[i + 1, j] = Delta_i + delta_ij`` for fine-tuned experts, where
+    ``Delta_i = M + i * E_max``.
+    """
+    import numpy as np
+
+    n = len(adapter_experts)
+    m = num_experts
+    pi = np.tile(np.arange(m, dtype=np.int32), (n + 1, 1))
+    for i, experts in enumerate(adapter_experts):
+        assert len(experts) <= e_max, "adapter exceeds E_max"
+        delta = m + i * e_max
+        for off, j in enumerate(sorted(experts)):
+            pi[i + 1, j] = delta + off
+    return jnp.asarray(pi)

@@ -1,0 +1,310 @@
+"""L2: the MoE transformer step function (JAX, build-time only).
+
+One *step* executes a packed token batch (mixed chunked-prefill + decode
+tokens, possibly from requests to different ESFT adapters) through the full
+model, updating a device-resident KV slot-pool cache:
+
+    step(params, kv_cache, token_ids, positions, seg_ids, slot_idx,
+         cache_seg, cache_pos, out_rows[, aid, expert_maps])
+      -> (logits[O, V], kv_cache')
+
+* ``kv_cache`` ``[L, 2, CAP, KVH, D]`` is donated: the lowered HLO carries
+  ``input_output_alias`` so PJRT updates it in place and the Rust runtime
+  chains the output buffer into the next step (no host round-trip).
+* Attention is GQA over the whole slot pool with a
+  ``(same segment) and (cache_pos <= q_pos)`` mask — functional
+  slot-granularity paged attention. New K/V are scattered at ``slot_idx``
+  (out-of-range index = dropped ⇒ padding tokens write nothing).
+* The MoE path is: router over the M *base* experts → **batched
+  rerouting** (L1 Pallas kernel; `weave` variant) → sort by expert →
+  unmodified grouped matmul over the stacked ``[G, ..]`` expert tensor →
+  weighted combine. The `base` variant skips rerouting (G = M); the
+  `singleop` variant uses the unfused rerouting baseline (Fig. 7).
+* ``out_rows`` selects which token rows get logits (last token of each
+  live sequence); the LM head runs only on those O rows.
+
+Weights arrive as a flat, *named*, ordered tuple — the order is the
+artifact ABI recorded in ``meta.json`` and consumed by
+``rust/src/runtime``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.gmm import grouped_matmul, sort_by_expert
+from .kernels.reroute import reroute_fused, reroute_singleop
+
+VARIANTS = ("base", "weave", "singleop")
+
+
+# ---------------------------------------------------------------------------
+# Parameter manifest (the artifact ABI)
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig, variant: str):
+    """Ordered list of ``(name, shape)`` for every weight tensor.
+
+    `weave`/`singleop` size the stacked expert tensors with
+    ``G = M + N * E_max`` slots (the virtual weight tensor); `base` uses
+    ``G = M`` (a merged or base-only deployment).
+    """
+    assert variant in VARIANTS
+    g = cfg.num_experts if variant == "base" else cfg.total_expert_slots
+    h, v = cfg.hidden, cfg.vocab
+    qd = cfg.q_heads * cfg.head_dim
+    kd = cfg.kv_heads * cfg.head_dim
+    f, s, m = cfg.expert_inter, cfg.shared_inter, cfg.num_experts
+    spec = [("embed", (v, h))]
+    for l in range(cfg.layers):
+        p = f"layer{l}."
+        spec += [
+            (p + "ln_attn", (h,)),
+            (p + "wq", (h, qd)),
+            (p + "wk", (h, kd)),
+            (p + "wv", (h, kd)),
+            (p + "wo", (qd, h)),
+            (p + "ln_ffn", (h,)),
+            (p + "router", (h, m)),
+            (p + "w_gate", (g, h, f)),
+            (p + "w_up", (g, h, f)),
+            (p + "w_down", (g, f, h)),
+            (p + "shared_gate", (h, s)),
+            (p + "shared_up", (h, s)),
+            (p + "shared_down", (s, h)),
+        ]
+    spec += [("ln_final", (h,)), ("lm_head", (h, v))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, variant: str, seed: int = 0):
+    """Random-init weights following :func:`param_spec` (tests / examples)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_spec(cfg, variant):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln_attn", "ln_ffn", "ln_final")):
+            arr = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+            arr = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+        out.append(arr)
+    return tuple(out)
+
+
+class _P:
+    """Name-based accessor over the flat ordered parameter tuple."""
+
+    def __init__(self, cfg, variant, params):
+        names = [n for n, _ in param_spec(cfg, variant)]
+        assert len(names) == len(params), (len(names), len(params))
+        self._d = dict(zip(names, params))
+
+    def __call__(self, name):
+        return self._d[name]
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)) * gamma
+
+
+def rope_tables(positions, d, theta):
+    """cos/sin tables for RoPE — layer-invariant, computed once per step."""
+    half = d // 2
+    freqs = jnp.arange(half, dtype=jnp.float32) * (-2.0 / d)
+    inv = jnp.power(theta, freqs)                      # [half]
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]   # [T, half]
+    return jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]
+
+
+def rope(x, positions, theta):
+    """Rotary embedding, GPT-NeoX (half-split) style. x: [T, H, D]."""
+    cos, sin = rope_tables(positions, x.shape[-1], theta)
+    return rope_apply(x, cos, sin)
+
+
+def rope_apply(x, cos, sin):
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def attention_mask(positions, seg_ids, cache_seg, cache_pos):
+    """`[T, CAP]` (same segment) ∧ (causal) ∧ (slot live) mask plus the
+    per-row any-valid flag — layer-invariant, computed once per step."""
+    mask = (
+        (cache_seg[None, :] == seg_ids[:, None])
+        & (cache_pos[None, :] <= positions[:, None])
+        & (cache_seg[None, :] >= 0)
+    )
+    any_valid = jnp.any(mask, axis=-1)
+    return mask, any_valid
+
+
+def attention(q, k_cache, v_cache, positions, seg_ids, cache_seg, cache_pos, cfg,
+              mask=None, any_valid=None):
+    """Slot-pool GQA attention. q: [T, QH, D]; caches: [CAP, KVH, D]."""
+    t = q.shape[0]
+    groups = cfg.q_heads // cfg.kv_heads
+    qg = q.reshape(t, cfg.kv_heads, groups, cfg.head_dim)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+    scores = jnp.einsum("tkgd,ckd->tkgc", qg, k_cache) * scale
+    if mask is None:
+        mask, any_valid = attention_mask(positions, seg_ids, cache_seg, cache_pos)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    # Zero fully-masked (padding) rows instead of emitting a uniform mix.
+    attn = jnp.where(any_valid[:, None, None, None], attn, 0.0)
+    out = jnp.einsum("tkgc,ckd->tkgd", attn, v_cache)
+    return out.reshape(t, cfg.q_heads * cfg.head_dim)
+
+
+def top_k_stable(gate, k):
+    """Descending top-k via a stable variadic sort.
+
+    ``lax.top_k`` lowers to the ``topk`` HLO instruction whose text syntax
+    changed after xla_extension 0.5.1 (the version behind the Rust `xla`
+    crate); a stable ``sort`` is plain HLO that round-trips. Ties break
+    toward the lower expert ID, matching the numpy oracle.
+    """
+    t, m = gate.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (t, m), 1)
+    neg_sorted, idx_sorted = jax.lax.sort((-gate, idx), num_keys=1, is_stable=True)
+    return -neg_sorted[:, :k], idx_sorted[:, :k]
+
+
+def moe_layer(h, router_w, w_gate, w_up, w_down, cfg, variant,
+              aid=None, expert_map=None, *, blk):
+    """Router → [batched rerouting] → sort → GMM → weighted combine.
+
+    ``h`` is the post-norm hidden state ``[T, H]``. Returns the routed-
+    expert output ``[T, H]`` (shared expert handled by the caller).
+    """
+    t = h.shape[0]
+    k = cfg.top_k
+    g_total = cfg.num_experts if variant == "base" else cfg.total_expert_slots
+
+    gate = jax.nn.softmax(h @ router_w, axis=-1)        # [T, M]
+    top_w, top_i = top_k_stable(gate, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    if variant == "weave":
+        ids = reroute_fused(top_i, aid, expert_map)
+    elif variant == "singleop":
+        ids = reroute_singleop(top_i, aid, expert_map)
+    else:
+        ids = top_i
+
+    r = t * k
+    perm, offsets = sort_by_expert(ids.reshape(r), g_total)
+    rows = h[perm // k]                                  # [R, H] sorted by expert
+    act = jax.nn.silu(grouped_matmul(rows, w_gate, offsets, blk=blk))
+    act = act * grouped_matmul(rows, w_up, offsets, blk=blk)
+    y_sorted = grouped_matmul(act, w_down, offsets, blk=blk)
+    # unsort by gathering through the inverse permutation — a row gather
+    # is markedly cheaper than a [R, H] row scatter on CPU (§Perf)
+    inv = jnp.zeros((r,), jnp.int32).at[perm].set(jnp.arange(r, dtype=jnp.int32))
+    y = y_sorted[inv]
+    return jnp.sum(y.reshape(t, k, cfg.hidden) * top_w[..., None], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# The step function
+# ---------------------------------------------------------------------------
+
+def make_step(cfg: ModelConfig, variant: str, bucket: int):
+    """Build the step function for one (variant, token-bucket) pair."""
+    assert variant in VARIANTS
+    blk = cfg.gmm_block(bucket)
+
+    def step(params, kv_cache, token_ids, positions, seg_ids, slot_idx,
+             cache_seg, cache_pos, out_rows, aid=None, expert_maps=None):
+        p = _P(cfg, variant, params)
+        x = p("embed")[token_ids]                        # [T, H]
+        t = x.shape[0]
+        # layer-invariant tables, computed once (§Perf: hoisted out of the
+        # layer loop — XLA did not CSE them across the cache scatters)
+        cos, sin = rope_tables(positions, cfg.head_dim, cfg.rope_theta)
+        mask, any_valid = attention_mask(positions, seg_ids, cache_seg, cache_pos)
+
+        for l in range(cfg.layers):
+            pre = f"layer{l}."
+            h = rms_norm(x, p(pre + "ln_attn"), cfg.rms_eps)
+            q = (h @ p(pre + "wq")).reshape(t, cfg.q_heads, cfg.head_dim)
+            kk = (h @ p(pre + "wk")).reshape(t, cfg.kv_heads, cfg.head_dim)
+            vv = (h @ p(pre + "wv")).reshape(t, cfg.kv_heads, cfg.head_dim)
+            q = rope_apply(q, cos, sin)
+            kk = rope_apply(kk, cos, sin)
+            # Scatter new K/V into the slot pool; OOB slot (= padding) drops.
+            kv_cache = kv_cache.at[l, 0, slot_idx].set(kk, mode="drop")
+            kv_cache = kv_cache.at[l, 1, slot_idx].set(vv, mode="drop")
+            o = attention(q, kv_cache[l, 0], kv_cache[l, 1],
+                          positions, seg_ids, cache_seg, cache_pos, cfg,
+                          mask=mask, any_valid=any_valid)
+            x = x + o @ p(pre + "wo")
+
+            h = rms_norm(x, p(pre + "ln_ffn"), cfg.rms_eps)
+            emap_l = None if variant == "base" else expert_maps[l]
+            y = moe_layer(h, p(pre + "router"), p(pre + "w_gate"),
+                          p(pre + "w_up"), p(pre + "w_down"), cfg, variant,
+                          aid=aid, expert_map=emap_l, blk=blk)
+            shared = (jax.nn.silu(h @ p(pre + "shared_gate"))
+                      * (h @ p(pre + "shared_up"))) @ p(pre + "shared_down")
+            x = x + y + shared
+
+        hf = rms_norm(x, p("ln_final"), cfg.rms_eps)
+        sel = hf[jnp.clip(out_rows, 0, t - 1)]           # [O, H]
+        logits = sel @ p("lm_head")                      # [O, V]
+        return logits, kv_cache
+
+    return step
+
+
+def step_input_specs(cfg: ModelConfig, variant: str, bucket: int):
+    """Ordered ``(name, shape, dtype)`` for the step's non-param inputs.
+
+    Must match the argument order of :func:`make_step`'s ``step`` exactly —
+    this is the other half of the artifact ABI.
+    """
+    t = bucket
+    o = min(bucket, cfg.max_seqs)
+    specs = [
+        ("kv_cache", (cfg.layers, 2, cfg.kv_cap, cfg.kv_heads, cfg.head_dim), "f32"),
+        ("token_ids", (t,), "i32"),
+        ("positions", (t,), "i32"),
+        ("seg_ids", (t,), "i32"),
+        ("slot_idx", (t,), "i32"),
+        ("cache_seg", (cfg.kv_cap,), "i32"),
+        ("cache_pos", (cfg.kv_cap,), "i32"),
+        ("out_rows", (o,), "i32"),
+    ]
+    if variant != "base":
+        specs += [
+            ("aid", (t,), "i32"),
+            ("expert_maps",
+             (cfg.layers, cfg.max_adapters + 1, cfg.num_experts), "i32"),
+        ]
+    return specs
+
+
+def lower_step(cfg: ModelConfig, variant: str, bucket: int):
+    """Lower one step function; returns the jax ``Lowered`` object.
+
+    ``kv_cache`` (the argument right after the params tuple) is donated so
+    the HLO carries the input→output alias for in-place cache update.
+    """
+    step = make_step(cfg, variant, bucket)
+    p_shapes = [jax.ShapeDtypeStruct(s, jnp.float32)
+                for _, s in param_spec(cfg, variant)]
+    arg_shapes = []
+    for _, shape, dt in step_input_specs(cfg, variant, bucket):
+        dtype = jnp.float32 if dt == "f32" else jnp.int32
+        arg_shapes.append(jax.ShapeDtypeStruct(shape, dtype))
+    return jax.jit(step, donate_argnums=(1,)).lower(tuple(p_shapes), *arg_shapes)

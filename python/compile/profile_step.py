@@ -1,0 +1,143 @@
+"""L2/L1 perf-pass harness: time the compiled step function on CPU and
+attribute cost to components (GMM block size sweep, attention, reroute
+variants), guiding the optimization log in EXPERIMENTS.md §Perf.
+
+Usage (from python/):
+
+    python -m compile.profile_step --config small --bucket 128 [--sweep-blk]
+
+The timings here use the *same* XLA CPU backend the Rust runtime runs on,
+so deltas transfer directly (wall-clock parity was verified against the
+Rust engine's execute_time metric).
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import CONFIGS
+from .kernels.gmm import grouped_matmul, sort_by_expert
+from .kernels.reroute import reroute_fused, reroute_singleop
+from .model import make_step, init_params, step_input_specs
+
+
+def timeit(fn, *args, reps=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def step_args(cfg, variant, bucket, seed=0):
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, variant, seed=1)
+    args = []
+    for name, shape, dt in step_input_specs(cfg, variant, bucket):
+        if name == "kv_cache":
+            args.append(jnp.zeros(shape, jnp.float32))
+        elif name == "token_ids":
+            args.append(jnp.asarray(rng.integers(0, cfg.vocab, shape), jnp.int32))
+        elif name == "positions":
+            args.append(jnp.arange(bucket, dtype=jnp.int32))
+        elif name == "seg_ids":
+            args.append(jnp.zeros(shape, jnp.int32))
+        elif name == "slot_idx":
+            args.append(jnp.arange(bucket, dtype=jnp.int32))
+        elif name == "cache_seg":
+            a = np.full(shape, -1, np.int32)
+            a[:bucket] = 0
+            args.append(jnp.asarray(a))
+        elif name == "cache_pos":
+            a = np.zeros(shape, np.int32)
+            a[:bucket] = np.arange(bucket)
+            args.append(jnp.asarray(a))
+        elif name == "out_rows":
+            args.append(jnp.zeros(shape, jnp.int32))
+        elif name == "aid":
+            args.append(jnp.zeros(shape, jnp.int32))  # all adapter 0
+        elif name == "expert_maps":
+            m = np.tile(np.arange(cfg.num_experts, dtype=np.int32),
+                        (cfg.layers, cfg.max_adapters + 1, 1))
+            args.append(jnp.asarray(m))
+        else:
+            raise KeyError(name)
+    return params, args
+
+
+def profile_full_step(cfg, variant, bucket):
+    step = jax.jit(make_step(cfg, variant, bucket), donate_argnums=())
+    params, args = step_args(cfg, variant, bucket)
+    t = timeit(step, params, *args)
+    print(f"[step] {variant} bucket={bucket}: {t*1e3:8.1f} ms")
+    return t
+
+
+def profile_gmm_sweep(cfg, bucket):
+    """GMM block-size sweep at this bucket's R = bucket * top_k."""
+    rng = np.random.default_rng(0)
+    r = bucket * cfg.top_k
+    g = cfg.total_expert_slots
+    h, f = cfg.hidden, cfg.expert_inter
+    x = jnp.asarray(rng.normal(size=(r, h)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(g, h, f)).astype(np.float32) * 0.05)
+    # realistic routing: top-6 of 64 experts, concentrated
+    ids = rng.choice(cfg.num_experts, size=r, p=_concentrated(cfg.num_experts))
+    ids = jnp.asarray(np.sort(ids).astype(np.int32))
+    perm, offs = sort_by_expert(ids, g)
+    xs = x[perm]
+    for blk in (4, 8, 16, 32, 64, 128):
+        if blk > max(4, r):
+            continue
+        fn = jax.jit(lambda a, b, c, blk=blk: grouped_matmul(a, b, c, blk=blk))
+        t = timeit(fn, xs, w, offs)
+        ideal = r * h * f * 2
+        print(f"[gmm]  bucket={bucket} blk={blk:4d}: {t*1e3:7.2f} ms "
+              f"({ideal/t/1e9:6.2f} GF/s effective)")
+
+
+def profile_reroute(cfg, bucket):
+    rng = np.random.default_rng(0)
+    t_, k = bucket, cfg.top_k
+    ids = jnp.asarray(rng.integers(0, cfg.num_experts, (t_, k)).astype(np.int32))
+    aid = jnp.asarray(rng.integers(-1, cfg.max_adapters, (t_,)).astype(np.int32))
+    emap = jnp.asarray(
+        np.tile(np.arange(cfg.num_experts, dtype=np.int32),
+                (cfg.max_adapters + 1, 1)))
+    tf = timeit(jax.jit(reroute_fused), ids, aid, emap)
+    ts = timeit(jax.jit(reroute_singleop), ids, aid, emap)
+    print(f"[reroute] bucket={bucket}: fused {tf*1e6:7.1f} us  "
+          f"singleop {ts*1e6:7.1f} us")
+
+
+def _concentrated(m):
+    p = np.ones(m)
+    p[: m // 4] = 6.0
+    return p / p.sum()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="small")
+    ap.add_argument("--bucket", type=int, default=0, help="0 = all buckets")
+    ap.add_argument("--sweep-blk", action="store_true")
+    ap.add_argument("--variants", default="base,weave")
+    args = ap.parse_args()
+    cfg = CONFIGS[args.config]
+    buckets = [args.bucket] if args.bucket else list(cfg.buckets)
+    for b in buckets:
+        for v in args.variants.split(","):
+            profile_full_step(cfg, v, b)
+        profile_reroute(cfg, b)
+        if args.sweep_blk:
+            profile_gmm_sweep(cfg, b)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""AOT pipeline tests: HLO text emission, sanitizer, manifest/ABI
+consistency, and donation aliasing presence."""
+
+import numpy as np
+import pytest
+
+from compile.aot import build_manifest, sanitize_hlo_text, to_hlo_text
+from compile.configs import CONFIGS, TINY
+from compile.model import VARIANTS, lower_step, param_spec, step_input_specs
+
+
+def test_sanitizer_strips_topk_largest():
+    txt = "x = topk(y), k=2, largest=true\nz = add(a, b)"
+    out = sanitize_hlo_text(txt)
+    assert "largest" not in out
+    assert "k=2" in out
+
+
+def test_sanitizer_rejects_largest_false():
+    with pytest.raises(AssertionError):
+        sanitize_hlo_text("topk(y), k=2, largest=false")
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_hlo_text_emitted_and_parseable_header(variant):
+    lowered = lower_step(TINY, variant, TINY.buckets[0])
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    # donation alias must survive to the text (kv cache in-place update)
+    assert "input_output_alias" in text.splitlines()[0]
+    # no new-style topk attribute (old XLA cannot parse it)
+    assert "largest=" not in text
+
+
+def test_manifest_matches_lowered_input_count():
+    for variant in VARIANTS:
+        man = build_manifest(TINY, variant, TINY.buckets[0])
+        lowered = lower_step(TINY, variant, TINY.buckets[0])
+        text = to_hlo_text(lowered)
+        # entry computation parameters == params + inputs
+        want = len(man["params"]) + len(man["inputs"])
+        header = text.splitlines()[0]
+        # entry_computation_layout={(p0, p1, ...)->...}
+        args = header.split("entry_computation_layout={(")[1].split(")->")[0]
+        depth = 0
+        count = 1
+        for c in args:
+            if c in "([{":
+                depth += 1
+            elif c in ")]}":
+                depth -= 1
+            elif c == "," and depth == 0:
+                count += 1
+        assert count == want, f"{variant}: {count} != {want}"
+
+
+def test_manifest_donation_index_points_at_kv():
+    man = build_manifest(TINY, "weave", 4)
+    assert man["donate_input_index"] == len(man["params"])
+    assert man["inputs"][0]["name"] == "kv_cache"
+
+
+def test_param_spec_order_is_stable():
+    names = [n for n, _ in param_spec(TINY, "weave")]
+    assert names[0] == "embed"
+    assert names[-2:] == ["ln_final", "lm_head"]
+    man = build_manifest(TINY, "weave", 4)
+    assert [p["name"] for p in man["params"]] == names
+
+
+def test_all_configs_have_valid_buckets():
+    for cfg in CONFIGS.values():
+        assert list(cfg.buckets) == sorted(cfg.buckets)
+        for b in cfg.buckets:
+            assert cfg.gmm_block(b) >= 1
+        if cfg.buckets:
+            assert cfg.max_seqs <= cfg.kv_cap
+
+
+def test_input_specs_shapes_consistent():
+    for variant in VARIANTS:
+        for bucket in TINY.buckets:
+            specs = step_input_specs(TINY, variant, bucket)
+            d = {n: (s, dt) for n, s, dt in specs}
+            assert d["token_ids"][0] == (bucket,)
+            assert d["kv_cache"][0][2] == TINY.kv_cap
+            assert d["out_rows"][0][0] == min(bucket, TINY.max_seqs)
+            if variant == "base":
+                assert "aid" not in d
+            else:
+                assert d["aid"][0] == (bucket,)
+                assert d["expert_maps"][0] == (
+                    TINY.layers,
+                    TINY.max_adapters + 1,
+                    TINY.num_experts,
+                )
+
+
+def test_weave_and_singleop_share_param_shapes():
+    a = param_spec(TINY, "weave")
+    b = param_spec(TINY, "singleop")
+    assert a == b
+    c = dict(param_spec(TINY, "base"))
+    assert c["layer0.w_gate"][0] == TINY.num_experts

@@ -1,0 +1,148 @@
+"""L1 kernel tests: grouped matmul (while-loop serving op + Pallas block
+formulation) against the numpy oracle, with hypothesis shape/dtype and
+group-distribution sweeps."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gmm import gmm_pallas, grouped_matmul, sort_by_expert
+from compile.kernels.ref import (
+    build_block_table,
+    gmm_blocktable_combine,
+    gmm_ref,
+)
+
+
+def _make_groups(rng, r, g):
+    """Random non-negative group sizes summing to r (many zeros likely)."""
+    cuts = np.sort(rng.integers(0, r + 1, size=g - 1))
+    sizes = np.diff(np.concatenate([[0], cuts, [r]]))
+    offs = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    return offs
+
+
+def _case(rng, r, g, h_in, h_out):
+    x = rng.normal(size=(r, h_in)).astype(np.float32)
+    w = rng.normal(size=(g, h_in, h_out)).astype(np.float32)
+    offs = _make_groups(rng, r, g)
+    return x, w, offs
+
+
+def test_gmm_basic():
+    rng = np.random.default_rng(0)
+    x, w, offs = _case(rng, 32, 6, 16, 8)
+    out = np.asarray(grouped_matmul(x, w, offs, blk=4))
+    np.testing.assert_allclose(out, gmm_ref(x, w, offs), rtol=1e-5, atol=1e-5)
+
+
+def test_gmm_single_group_owns_everything():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(16, 8)).astype(np.float32)
+    w = rng.normal(size=(4, 8, 4)).astype(np.float32)
+    offs = np.array([0, 0, 16, 16, 16], np.int32)
+    out = np.asarray(grouped_matmul(x, w, offs, blk=8))
+    np.testing.assert_allclose(out, x @ w[1], rtol=1e-5, atol=1e-5)
+
+
+def test_gmm_all_groups_empty_but_last():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(8, 4)).astype(np.float32)
+    w = rng.normal(size=(5, 4, 4)).astype(np.float32)
+    offs = np.array([0, 0, 0, 0, 0, 8], np.int32)
+    out = np.asarray(grouped_matmul(x, w, offs, blk=4))
+    np.testing.assert_allclose(out, x @ w[4], rtol=1e-5, atol=1e-5)
+
+
+def test_gmm_zero_rows():
+    """R=0 is impossible in serving (buckets > 0) but blocks must not
+    explode on empty groups in the middle."""
+    rng = np.random.default_rng(3)
+    x, w, _ = _case(rng, 8, 3, 4, 4)
+    offs = np.array([0, 8, 8, 8], np.int32)
+    out = np.asarray(grouped_matmul(x, w, offs, blk=16))  # blk > group size
+    np.testing.assert_allclose(out, x @ w[0], rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    r=st.sampled_from([1, 4, 8, 32, 96, 128]),
+    g=st.sampled_from([1, 3, 8, 17, 64]),
+    h_in=st.sampled_from([1, 4, 16]),
+    h_out=st.sampled_from([1, 8]),
+    blk=st.sampled_from([1, 4, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gmm_matches_ref_hypothesis(r, g, h_in, h_out, blk, seed):
+    rng = np.random.default_rng(seed)
+    x, w, offs = _case(rng, r, g, h_in, h_out)
+    out = np.asarray(grouped_matmul(x, w, offs, blk=blk))
+    np.testing.assert_allclose(out, gmm_ref(x, w, offs), rtol=1e-4, atol=1e-4)
+
+
+def test_sort_by_expert_offsets():
+    ids = np.array([3, 1, 3, 0, 1, 1], np.int32)
+    perm, offs = sort_by_expert(ids, 5)
+    perm, offs = np.asarray(perm), np.asarray(offs)
+    s = ids[perm]
+    assert np.array_equal(s, np.sort(ids))
+    # offsets bracket each group
+    for g in range(5):
+        lo, hi = offs[g], offs[g + 1]
+        assert np.all(s[lo:hi] == g)
+    assert offs[0] == 0 and offs[-1] == len(ids)
+
+
+def test_sort_by_expert_stability():
+    """Stable sort: rows of the same expert stay in token order — required
+    so the combine step's scatter-by-perm is a bijection."""
+    ids = np.array([2, 2, 2, 2], np.int32)
+    perm, _ = sort_by_expert(ids, 3)
+    assert np.array_equal(np.asarray(perm), np.arange(4))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    r=st.sampled_from([1, 16, 64, 257]),
+    g=st.sampled_from([2, 8, 64, 324]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sort_by_expert_hypothesis(r, g, seed):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, g, size=(r,)).astype(np.int32)
+    perm, offs = sort_by_expert(ids, g)
+    perm, offs = np.asarray(perm), np.asarray(offs)
+    assert sorted(perm.tolist()) == list(range(r))  # bijection
+    s = ids[perm]
+    assert np.all(np.diff(s) >= 0)
+    counts = np.bincount(ids, minlength=g)
+    assert np.array_equal(np.diff(offs), counts)
+
+
+def test_gmm_pallas_blocktable():
+    rng = np.random.default_rng(7)
+    r, g, h_in, h_out, blk = 48, 6, 8, 4, 8
+    x, w, offs = _case(rng, r, g, h_in, h_out)
+    be, bs, brows = build_block_table(offs, blk)
+    if len(be) == 0:
+        return
+    block_out = np.asarray(gmm_pallas(x, w, be, bs, blk=blk))
+    out = gmm_blocktable_combine(block_out, bs, brows, r)
+    np.testing.assert_allclose(out, gmm_ref(x, w, offs), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.sampled_from([8, 32, 64]),
+    g=st.sampled_from([2, 5, 16]),
+    blk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gmm_pallas_matches_ref_hypothesis(r, g, blk, seed):
+    rng = np.random.default_rng(seed)
+    x, w, offs = _case(rng, r, g, 8, 8)
+    be, bs, brows = build_block_table(offs, blk)
+    if len(be) == 0:
+        return
+    block_out = np.asarray(gmm_pallas(x, w, be, bs, blk=blk))
+    out = gmm_blocktable_combine(block_out, bs, brows, r)
+    np.testing.assert_allclose(out, gmm_ref(x, w, offs), rtol=1e-4, atol=1e-4)

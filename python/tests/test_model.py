@@ -1,0 +1,315 @@
+"""L2 model tests: building blocks vs oracles, step shapes, KV-cache
+semantics, and the central ExpertWeave property — serving an adapter through
+the virtual weight tensor + batched rerouting produces *identical* outputs
+to serving the merged model."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.configs import TINY
+from compile.kernels.ref import attention_ref, moe_layer_ref, rms_norm_ref
+from compile.kernels.reroute import build_expert_map
+from compile.model import (
+    _P,
+    attention,
+    init_params,
+    make_step,
+    moe_layer,
+    param_spec,
+    rms_norm,
+    rope,
+    step_input_specs,
+)
+
+CFG = TINY
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def test_rms_norm_matches_ref():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(5, CFG.hidden)).astype(np.float32)
+    g = rng.normal(size=(CFG.hidden,)).astype(np.float32)
+    out = np.asarray(rms_norm(jnp.asarray(x), jnp.asarray(g), CFG.rms_eps))
+    np.testing.assert_allclose(out, rms_norm_ref(x, g, CFG.rms_eps),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rope_preserves_norm():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(6, 2, 16)).astype(np.float32)
+    pos = np.arange(6, dtype=np.int32) * 3
+    out = np.asarray(rope(jnp.asarray(x), jnp.asarray(pos), 10000.0))
+    np.testing.assert_allclose(np.linalg.norm(out, axis=-1),
+                               np.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_rope_zero_position_is_identity():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(3, 2, 16)).astype(np.float32)
+    pos = np.zeros(3, np.int32)
+    out = np.asarray(rope(jnp.asarray(x), jnp.asarray(pos), 10000.0))
+    np.testing.assert_allclose(out, x, rtol=1e-6, atol=1e-6)
+
+
+def test_attention_matches_ref():
+    rng = np.random.default_rng(3)
+    t, cap = 5, CFG.kv_cap
+    q = rng.normal(size=(t, CFG.q_heads, CFG.head_dim)).astype(np.float32)
+    kc = rng.normal(size=(cap, CFG.kv_heads, CFG.head_dim)).astype(np.float32)
+    vc = rng.normal(size=(cap, CFG.kv_heads, CFG.head_dim)).astype(np.float32)
+    pos = np.array([2, 0, 1, 5, 3], np.int32)
+    seg = np.array([0, 1, 0, -1, 1], np.int32)
+    cache_pos = rng.integers(0, 8, size=cap).astype(np.int32)
+    cache_seg = rng.integers(-1, 3, size=cap).astype(np.int32)
+    out = np.asarray(attention(jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc),
+                               jnp.asarray(pos), jnp.asarray(seg),
+                               jnp.asarray(cache_seg), jnp.asarray(cache_pos), CFG))
+    ref = attention_ref(q, kc, vc, pos, seg, cache_pos, cache_seg,
+                        1.0 / np.sqrt(CFG.head_dim))
+    np.testing.assert_allclose(out, ref.reshape(t, -1), rtol=1e-4, atol=1e-4)
+
+
+def _layer_weights(rng, variant):
+    g = CFG.num_experts if variant == "base" else CFG.total_expert_slots
+    h, f, m = CFG.hidden, CFG.expert_inter, CFG.num_experts
+    return (
+        rng.normal(size=(h, m)).astype(np.float32) / np.sqrt(h),
+        rng.normal(size=(g, h, f)).astype(np.float32) / np.sqrt(h),
+        rng.normal(size=(g, h, f)).astype(np.float32) / np.sqrt(h),
+        rng.normal(size=(g, f, h)).astype(np.float32) / np.sqrt(f),
+    )
+
+
+def test_moe_layer_base_matches_ref():
+    rng = np.random.default_rng(4)
+    router, wg, wu, wd = _layer_weights(rng, "base")
+    x = rng.normal(size=(9, CFG.hidden)).astype(np.float32)
+    out = np.asarray(moe_layer(jnp.asarray(x), jnp.asarray(router),
+                               jnp.asarray(wg), jnp.asarray(wu), jnp.asarray(wd),
+                               CFG, "base", blk=4))
+    ref = moe_layer_ref(x, router, wg, wu, wd, CFG.top_k)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("variant", ["weave", "singleop"])
+def test_moe_layer_adapter_matches_ref(variant):
+    rng = np.random.default_rng(5)
+    router, wg, wu, wd = _layer_weights(rng, variant)
+    x = rng.normal(size=(8, CFG.hidden)).astype(np.float32)
+    aid = np.array([-1, 0, 1, 2, 0, -1, 1, 1], np.int32)
+    adapter_experts = [[0, 3], [5], [1, 2, 7]]
+    emap = build_expert_map(CFG.num_experts, CFG.e_max, adapter_experts)
+    out = np.asarray(moe_layer(jnp.asarray(x), jnp.asarray(router),
+                               jnp.asarray(wg), jnp.asarray(wu), jnp.asarray(wd),
+                               CFG, variant, aid=jnp.asarray(aid),
+                               expert_map=emap, blk=4))
+    ref = moe_layer_ref(x, router, wg, wu, wd, CFG.top_k,
+                        aid=aid, expert_map=np.asarray(emap))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the ExpertWeave equivalence property (Table 3's mechanism)
+# ---------------------------------------------------------------------------
+
+def _merged_params_from_weave(weave_params, adapter_idx, adapter_experts):
+    """Build merged-model params: base expert rows overwritten with the
+    adapter's fine-tuned rows from the virtual weight tensor region."""
+    m, e_max = CFG.num_experts, CFG.e_max
+    names = [n for n, _ in param_spec(CFG, "weave")]
+    merged = []
+    for name, arr in zip(names, weave_params):
+        arr = np.asarray(arr)
+        if name.split(".")[-1] in ("w_gate", "w_up", "w_down"):
+            l = int(name.split(".")[0][len("layer"):])
+            out = arr[:m].copy()
+            delta = m + adapter_idx * e_max
+            for off, j in enumerate(sorted(adapter_experts[l])):
+                out[j] = arr[delta + off]
+            merged.append(jnp.asarray(out))
+        else:
+            merged.append(jnp.asarray(arr))
+    return tuple(merged)
+
+
+def test_weave_equals_merged_end_to_end():
+    """Core Table-3 property: a request served through ExpertWeave
+    (shared base + adapter slots + rerouting) gets bit-for-bit the logits
+    of the merged model."""
+    bucket = 16  # enough tokens that the router hits the fine-tuned experts
+    rng = np.random.default_rng(6)
+    weave_params = init_params(CFG, "weave", seed=1)
+
+    # adapter 0 fine-tunes these base experts per layer
+    adapter_experts = [[1, 4], [2]]
+    per_layer = [[adapter_experts[l], [], []] for l in range(CFG.layers)]
+    emaps = jnp.stack([
+        build_expert_map(CFG.num_experts, CFG.e_max, per_layer[l])
+        for l in range(CFG.layers)
+    ])
+    # make the adapter rows differ from base so the test has teeth
+    merged_params = _merged_params_from_weave(
+        weave_params, 0, adapter_experts)
+
+    t = bucket
+    token_ids = rng.integers(0, CFG.vocab, size=t).astype(np.int32)
+    positions = np.arange(t, dtype=np.int32)
+    seg_ids = np.zeros(t, np.int32)
+    slot_idx = np.arange(t, dtype=np.int32)
+    cache_seg = np.full(CFG.kv_cap, -1, np.int32)
+    cache_seg[:t] = 0
+    cache_pos = np.zeros(CFG.kv_cap, np.int32)
+    cache_pos[:t] = positions
+    o = min(bucket, CFG.max_seqs)
+    out_rows = np.full(o, t - 1, np.int32)
+    kv = jnp.zeros((CFG.layers, 2, CFG.kv_cap, CFG.kv_heads, CFG.head_dim),
+                   jnp.float32)
+
+    weave_step = make_step(CFG, "weave", bucket)
+    base_step = make_step(CFG, "base", bucket)
+
+    aid = np.zeros(t, np.int32)  # all tokens belong to adapter 0
+    logits_w, kv_w = weave_step(weave_params, kv, token_ids, positions,
+                                seg_ids, slot_idx, cache_seg, cache_pos,
+                                out_rows, jnp.asarray(aid), emaps)
+    logits_m, kv_m = base_step(merged_params, kv, token_ids, positions,
+                               seg_ids, slot_idx, cache_seg, cache_pos,
+                               out_rows)
+    np.testing.assert_allclose(np.asarray(logits_w), np.asarray(logits_m),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kv_w), np.asarray(kv_m),
+                               rtol=1e-5, atol=1e-5)
+
+    # and base-model tokens (aid = -1) must NOT see adapter weights
+    aid_base = np.full(t, -1, np.int32)
+    logits_b, _ = weave_step(weave_params, kv, token_ids, positions,
+                             seg_ids, slot_idx, cache_seg, cache_pos,
+                             out_rows, jnp.asarray(aid_base), emaps)
+    base_params = tuple(
+        jnp.asarray(np.asarray(a)[:CFG.num_experts]) if n.split(".")[-1] in
+        ("w_gate", "w_up", "w_down") else a
+        for (n, _), a in zip(param_spec(CFG, "weave"), weave_params)
+    )
+    logits_pure, _ = base_step(base_params, kv, token_ids, positions,
+                               seg_ids, slot_idx, cache_seg, cache_pos,
+                               out_rows)
+    np.testing.assert_allclose(np.asarray(logits_b), np.asarray(logits_pure),
+                               rtol=1e-5, atol=1e-5)
+    # adapter logits must differ from base logits (the adapter does something)
+    assert not np.allclose(np.asarray(logits_w), np.asarray(logits_b))
+
+
+# ---------------------------------------------------------------------------
+# step mechanics
+# ---------------------------------------------------------------------------
+
+def _blank_batch(bucket):
+    o = min(bucket, CFG.max_seqs)
+    return dict(
+        token_ids=np.zeros(bucket, np.int32),
+        positions=np.zeros(bucket, np.int32),
+        seg_ids=np.full(bucket, -1, np.int32),
+        slot_idx=np.full(bucket, CFG.kv_cap, np.int32),  # OOB -> dropped
+        cache_seg=np.full(CFG.kv_cap, -1, np.int32),
+        cache_pos=np.zeros(CFG.kv_cap, np.int32),
+        out_rows=np.zeros(o, np.int32),
+    )
+
+
+def test_step_shapes_and_padding_tokens_write_nothing():
+    bucket = 4
+    params = init_params(CFG, "base", seed=0)
+    kv = jnp.full((CFG.layers, 2, CFG.kv_cap, CFG.kv_heads, CFG.head_dim),
+                  7.0, jnp.float32)
+    b = _blank_batch(bucket)
+    step = make_step(CFG, "base", bucket)
+    logits, kv2 = step(params, kv, **{k: jnp.asarray(v) for k, v in b.items()})
+    assert logits.shape == (min(bucket, CFG.max_seqs), CFG.vocab)
+    # all tokens were padding: the cache must be untouched
+    np.testing.assert_array_equal(np.asarray(kv2), np.asarray(kv))
+
+
+def test_step_kv_scatter_targets_only_slots():
+    bucket = 4
+    params = init_params(CFG, "base", seed=0)
+    kv = jnp.zeros((CFG.layers, 2, CFG.kv_cap, CFG.kv_heads, CFG.head_dim),
+                   jnp.float32)
+    b = _blank_batch(bucket)
+    b["seg_ids"] = np.array([0, 0, -1, -1], np.int32)
+    b["slot_idx"] = np.array([3, 9, CFG.kv_cap, CFG.kv_cap], np.int32)
+    b["token_ids"] = np.array([5, 6, 0, 0], np.int32)
+    b["positions"] = np.array([0, 1, 0, 0], np.int32)
+    b["cache_seg"][3] = 0
+    b["cache_seg"][9] = 0
+    b["cache_pos"][9] = 1
+    step = make_step(CFG, "base", bucket)
+    _, kv2 = step(params, kv, **{k: jnp.asarray(v) for k, v in b.items()})
+    kv2 = np.asarray(kv2)
+    touched = np.nonzero(np.abs(kv2).sum(axis=(0, 1, 3, 4)))[0]
+    assert set(touched.tolist()) <= {3, 9}
+    assert np.abs(kv2[:, :, 3]).sum() > 0 and np.abs(kv2[:, :, 9]).sum() > 0
+
+
+def test_decode_equals_prefill_continuation():
+    """Processing [t0 t1 t2] in one step then decoding t3 must equal
+    processing [t0..t3] in one step (same cache-pool semantics)."""
+    params = init_params(CFG, "base", seed=2)
+    rng = np.random.default_rng(8)
+    toks = rng.integers(0, CFG.vocab, size=4).astype(np.int32)
+    kv0 = jnp.zeros((CFG.layers, 2, CFG.kv_cap, CFG.kv_heads, CFG.head_dim),
+                    jnp.float32)
+    step4 = make_step(CFG, "base", 4)
+
+    # one-shot: all 4 tokens
+    b = _blank_batch(4)
+    b.update(token_ids=toks, positions=np.arange(4, dtype=np.int32),
+             seg_ids=np.zeros(4, np.int32), slot_idx=np.arange(4, dtype=np.int32))
+    b["cache_seg"][:4] = 0
+    b["cache_pos"][:4] = np.arange(4)
+    b["out_rows"] = np.full(4, 3, np.int32)
+    logits_full, _ = step4(params, kv0, **{k: jnp.asarray(v) for k, v in b.items()})
+
+    # split: prefill 3 then decode 1 (decode packed into the same bucket)
+    b1 = _blank_batch(4)
+    b1.update(token_ids=np.concatenate([toks[:3], [0]]).astype(np.int32),
+              positions=np.array([0, 1, 2, 0], np.int32),
+              seg_ids=np.array([0, 0, 0, -1], np.int32),
+              slot_idx=np.array([0, 1, 2, CFG.kv_cap], np.int32))
+    b1["cache_seg"][:3] = 0
+    b1["cache_pos"][:3] = np.arange(3)
+    _, kv1 = step4(params, kv0, **{k: jnp.asarray(v) for k, v in b1.items()})
+
+    b2 = _blank_batch(4)
+    b2.update(token_ids=np.array([toks[3], 0, 0, 0], np.int32),
+              positions=np.array([3, 0, 0, 0], np.int32),
+              seg_ids=np.array([0, -1, -1, -1], np.int32),
+              slot_idx=np.array([3, CFG.kv_cap, CFG.kv_cap, CFG.kv_cap], np.int32))
+    b2["cache_seg"][:4] = 0
+    b2["cache_pos"][:4] = np.arange(4)
+    b2["out_rows"] = np.zeros(4, np.int32)
+    logits_split, _ = step4(params, kv1, **{k: jnp.asarray(v) for k, v in b2.items()})
+
+    np.testing.assert_allclose(np.asarray(logits_full[0]),
+                               np.asarray(logits_split[0]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_param_spec_counts():
+    spec_b = param_spec(CFG, "base")
+    spec_w = param_spec(CFG, "weave")
+    assert len(spec_b) == len(spec_w) == 3 + 13 * CFG.layers
+    d = dict(spec_w)
+    assert d["layer0.w_gate"][0] == CFG.total_expert_slots
+    assert dict(spec_b)["layer0.w_gate"][0] == CFG.num_experts
+
+
+def test_step_input_specs_variants():
+    base = step_input_specs(CFG, "base", 4)
+    weave = step_input_specs(CFG, "weave", 4)
+    assert [s[0] for s in weave][-2:] == ["aid", "expert_maps"]
+    assert len(weave) == len(base) + 2

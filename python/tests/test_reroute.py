@@ -1,0 +1,111 @@
+"""L1 kernel tests: batched rerouting (fused Pallas + singleop baseline)
+against the numpy oracle, including hypothesis sweeps over shapes and
+adapter configurations."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import reroute_ref
+from compile.kernels.reroute import (
+    build_expert_map,
+    reroute_fused,
+    reroute_singleop,
+)
+
+
+def _random_case(rng, t, k, n, m, e_max):
+    ids = rng.integers(0, m, size=(t, k)).astype(np.int32)
+    aid = rng.integers(-1, n, size=(t,)).astype(np.int32)
+    adapter_experts = []
+    for _ in range(n):
+        cnt = min(int(rng.integers(0, e_max + 1)), m)
+        adapter_experts.append(
+            sorted(rng.choice(m, size=cnt, replace=False).tolist())
+        )
+    emap = np.asarray(build_expert_map(m, e_max, adapter_experts))
+    return ids, aid, emap, adapter_experts
+
+
+def test_identity_for_base_tokens():
+    rng = np.random.default_rng(0)
+    ids, aid, emap, _ = _random_case(rng, 16, 4, 3, 8, 2)
+    aid[:] = -1  # all base-model tokens
+    out = np.asarray(reroute_fused(ids, aid, emap))
+    assert np.array_equal(out, ids)
+
+
+def test_fused_matches_ref_basic():
+    rng = np.random.default_rng(1)
+    ids, aid, emap, _ = _random_case(rng, 32, 6, 4, 16, 5)
+    out = np.asarray(reroute_fused(ids, aid, emap))
+    assert np.array_equal(out, reroute_ref(ids, aid, emap))
+
+
+def test_singleop_matches_fused():
+    rng = np.random.default_rng(2)
+    ids, aid, emap, _ = _random_case(rng, 64, 6, 4, 16, 5)
+    a = np.asarray(reroute_fused(ids, aid, emap))
+    b = np.asarray(reroute_singleop(ids, aid, emap))
+    assert np.array_equal(a, b)
+
+
+def test_fine_tuned_ids_point_into_adapter_region():
+    """Rerouted IDs of adapter tokens must land in [Delta_i, Delta_i+e_i)."""
+    rng = np.random.default_rng(3)
+    m, e_max, n = 16, 4, 3
+    ids, aid, emap, adapter_experts = _random_case(rng, 64, 4, n, m, e_max)
+    out = np.asarray(reroute_fused(ids, aid, emap))
+    for t in range(ids.shape[0]):
+        i = aid[t]
+        for k in range(ids.shape[1]):
+            j, jj = int(ids[t, k]), int(out[t, k])
+            if i < 0 or j not in adapter_experts[i]:
+                assert jj == j  # untouched
+            else:
+                delta = m + i * e_max
+                off = adapter_experts[i].index(j)
+                assert jj == delta + off  # paper eq. for Pi[i, j]
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    t=st.sampled_from([1, 4, 16, 128, 256, 300]),
+    k=st.integers(1, 8),
+    n=st.integers(1, 8),
+    m=st.sampled_from([4, 8, 64]),
+    e_max=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_matches_ref_hypothesis(t, k, n, m, e_max, seed):
+    rng = np.random.default_rng(seed)
+    ids, aid, emap, _ = _random_case(rng, t, k, n, m, e_max)
+    out = np.asarray(reroute_fused(ids, aid, emap))
+    assert np.array_equal(out, reroute_ref(ids, aid, emap))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.sampled_from([4, 16, 64]),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_singleop_matches_ref_hypothesis(t, k, seed):
+    rng = np.random.default_rng(seed)
+    ids, aid, emap, _ = _random_case(rng, t, k, 4, 16, 4)
+    out = np.asarray(reroute_singleop(ids, aid, emap))
+    assert np.array_equal(out, reroute_ref(ids, aid, emap))
+
+
+def test_build_expert_map_rejects_overflow():
+    with pytest.raises(AssertionError):
+        build_expert_map(8, 2, [[0, 1, 2]])
+
+
+def test_expert_map_identity_row():
+    emap = np.asarray(build_expert_map(8, 2, [[1], [0, 7]]))
+    assert np.array_equal(emap[0], np.arange(8))
+    # adapter 0: expert 1 -> slot 8 + 0*2 + 0
+    assert emap[1, 1] == 8
+    # adapter 1: experts 0,7 -> slots 10, 11
+    assert emap[2, 0] == 10 and emap[2, 7] == 11

@@ -1,0 +1,153 @@
+//! Figure 6 — ExpertWeave vs per-adapter merged deployments under skew.
+//!
+//! Paper setup: 2 adapters (gate-math, gate-intent), fixed aggregate λ,
+//! skew α sweeping so 80→95% of requests hit gate-math. ExpertWeave runs
+//! one shared deployment; the merged baseline runs one isolated instance
+//! per adapter with the trace split by domain — the hot instance
+//! saturates and queues while the cold one idles, which is exactly the
+//! imbalance the paper attributes the win to. Device partitioning is
+//! emulated with `compute_share`: weave owns 2 NPUs (share 0.5 of the
+//! testbed), each merged instance owns its own 2 NPUs (share 0.5 each,
+//! 2x aggregate) — the paper's deliberately merged-favouring setup.
+//!
+//! `cargo bench --bench fig6_vs_merged [-- --config small --lambda 0.6]`
+
+use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
+use expertweave::bench::Table;
+use expertweave::engine::{Engine, EngineOptions};
+use expertweave::runtime::{ArtifactSet, Variant};
+use expertweave::server;
+use expertweave::util::args::Args;
+use expertweave::weights::StoreMode;
+use expertweave::workload::power_law::power_law_shares;
+use expertweave::workload::trace::{Trace, TraceSpec};
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::new("fig6_vs_merged", "shared weave vs merged instances under skew")
+        .opt("config", Some("small"), "artifact config")
+        .opt("lambda", Some("0.6"), "aggregate req/s")
+        .opt("alphas", Some("0.32,0.19"), "skew values (0.32 ~ 80/20)")
+        .opt("horizon", Some("15"), "horizon (s)")
+        .opt("seed", Some("0"), "workload seed")
+        .parse_env()
+        .map_err(anyhow::Error::msg)?;
+    let dir = PathBuf::from("artifacts").join(a.get_or("config", "small"));
+    let set = ArtifactSet::load(&dir)?;
+    let cfg = set.config.clone();
+    let lambda: f64 = a.get_f64("lambda").map_err(anyhow::Error::msg)?;
+    let alphas: Vec<f64> = a.get_list("alphas").map_err(anyhow::Error::msg)?;
+    let horizon: f64 = a.get_f64("horizon").map_err(anyhow::Error::msg)?;
+    let seed: u64 = a.get_usize("seed").map_err(anyhow::Error::msg)? as u64;
+
+    let mk = |idx: usize| {
+        let mut p = paper_adapter_profiles()[idx].clone();
+        p.max_experts = p.max_experts.min(cfg.e_max);
+        p.avg_experts = p.avg_experts.min(p.max_experts as f64);
+        synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, 42)
+    };
+    let ad0 = mk(0); // gate-math — receives the bulk of traffic
+    let ad1 = mk(2); // gate-intent
+
+    eprintln!("[fig6] building shared weave engine...");
+    // weave owns "2 NPUs" = share 0.5; merged gets 0.5 per instance
+    // (2x aggregate), mirroring the paper's merged-favouring allocation
+    let mut weave = Engine::new_weave(
+        &set,
+        &[ad0.clone(), ad1.clone()],
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions { compute_share: 0.5, ..Default::default() },
+    )?;
+
+    let clip = |t: &mut Trace| {
+        let max_prompt = cfg.buckets.last().copied().unwrap().min(cfg.kv_cap / 2);
+        for e in &mut t.events {
+            e.prompt.truncate(max_prompt);
+            e.max_new_tokens = e.max_new_tokens.clamp(1, (cfg.kv_cap / 16).max(1));
+        }
+    };
+
+    let mut t = Table::new(&[
+        "alpha", "hot share", "system", "req", "prefill tok/s", "decode tok/s",
+        "TTFT p50 ms", "TPOT p50 ms",
+    ]);
+    for &alpha in &alphas {
+        let shares = power_law_shares(2, alpha);
+        let mut trace = Trace::generate(&TraceSpec {
+            adapters: vec![
+                (ad0.name.clone(), ad0.domain.clone()),
+                (ad1.name.clone(), ad1.domain.clone()),
+            ],
+            lambda,
+            alpha,
+            horizon,
+            vocab: cfg.vocab,
+            seed,
+        });
+        clip(&mut trace);
+
+        // shared ExpertWeave deployment
+        weave.reset_session();
+        let w = server::replay(&mut weave, &trace)?;
+        t.row(&[
+            format!("{alpha}"),
+            format!("{:.0}%", shares[0] * 100.0),
+            "weave (shared)".into(),
+            w.report.requests.to_string(),
+            format!("{:.1}", w.report.prefill_throughput),
+            format!("{:.1}", w.report.decode_throughput),
+            format!("{:.1}", w.report.ttft.median * 1e3),
+            format!("{:.1}", w.report.tpot.median * 1e3),
+        ]);
+
+        // merged: isolated per-adapter instances, domain-split traces
+        let split = |name: &str| {
+            let mut t = trace.clone();
+            t.events.retain(|e| e.adapter.as_deref() == Some(name));
+            t
+        };
+        let dir0 = dir.clone();
+        let dir1 = dir.clone();
+        let (a0, a1) = (ad0.clone(), ad1.clone());
+        // each merged instance owns half the devices (paper setup); on
+        // the one-core testbed that is a 0.5 compute share per instance —
+        // a hot instance cannot borrow its idle neighbour's hardware.
+        let half = EngineOptions { compute_share: 0.5, ..Default::default() };
+        let (h0, h1) = (half.clone(), half);
+        let outcomes = server::replay_multi(vec![
+            (
+                Box::new(move || {
+                    Engine::new_merged(&ArtifactSet::load(&dir0)?, a0, h0)
+                }) as Box<dyn FnOnce() -> anyhow::Result<Engine> + Send>,
+                split(&ad0.name),
+            ),
+            (
+                Box::new(move || {
+                    Engine::new_merged(&ArtifactSet::load(&dir1)?, a1, h1)
+                }) as Box<dyn FnOnce() -> anyhow::Result<Engine> + Send>,
+                split(&ad1.name),
+            ),
+        ])?;
+        let agg = server::aggregate(&outcomes);
+        t.row(&[
+            format!("{alpha}"),
+            format!("{:.0}%", shares[0] * 100.0),
+            "merged (2 inst.)".into(),
+            agg.requests.to_string(),
+            format!("{:.1}", agg.prefill_throughput),
+            format!("{:.1}", agg.decode_throughput),
+            format!("{:.1}", agg.ttft.median * 1e3),
+            format!("{:.1}", agg.tpot.median * 1e3),
+        ]);
+        eprintln!(
+            "[fig6] alpha={alpha}: weave {:.1} dec tok/s vs merged {:.1} ({:+.1}%)",
+            w.report.decode_throughput,
+            agg.decode_throughput,
+            (w.report.decode_throughput / agg.decode_throughput.max(1e-9) - 1.0) * 100.0
+        );
+    }
+    t.print("Figure 6 — shared ExpertWeave vs merged instances under skew (paper: +7-14% prefill, +14-18% decode)");
+    t.write_csv("fig6_vs_merged").ok();
+    Ok(())
+}

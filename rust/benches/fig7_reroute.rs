@@ -1,0 +1,149 @@
+//! Figure 7 — impact of the fused batched-rerouting kernel: TTFT across
+//! prompt lengths (prefill) and TPOT across batch sizes (decode) for
+//! vLLM-Ascend (Merged) vs ExpertWeave-SingleOp vs ExpertWeave (fused).
+//!
+//! Offline microbenchmark (paper section 5.3): batch = 1 prefill of each
+//! prompt length, repeated; decode of 32 steps at each batch size; median
+//! reported. Uses the gate-math adapter + math prompts.
+//!
+//! `cargo bench --bench fig7_reroute [-- --config small --reps 5]`
+
+use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
+use expertweave::bench::Table;
+use expertweave::engine::{Engine, EngineOptions, RequestSpec};
+use expertweave::runtime::{ArtifactSet, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::util::args::Args;
+use expertweave::util::stats::Samples;
+use expertweave::weights::StoreMode;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::new("fig7_reroute", "fused vs singleop rerouting microbench")
+        .opt("config", Some("small"), "artifact config")
+        .opt("reps", Some("3"), "repetitions per point")
+        .opt("decode-steps", Some("16"), "decode steps per TPOT point")
+        .parse_env()
+        .map_err(anyhow::Error::msg)?;
+    let dir = PathBuf::from("artifacts").join(a.get_or("config", "small"));
+    let set = ArtifactSet::load(&dir)?;
+    let cfg = set.config.clone();
+    let reps: usize = a.get_usize("reps").map_err(anyhow::Error::msg)?;
+    let decode_steps: usize = a.get_usize("decode-steps").map_err(anyhow::Error::msg)?;
+
+    let mut p = paper_adapter_profiles()[0].clone(); // gate-math
+    p.max_experts = p.max_experts.min(cfg.e_max);
+    p.avg_experts = p.avg_experts.min(p.max_experts as f64);
+    let adapter = synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, 42);
+
+    // prompt lengths / decode batch sizes scaled to the config's buckets
+    let max_bucket = *cfg.buckets.last().unwrap();
+    let mut prompt_lens: Vec<usize> = cfg
+        .buckets
+        .iter()
+        .map(|&b| (b * 3 / 4).max(2))
+        .filter(|&p| p <= max_bucket && p <= cfg.kv_cap / 2)
+        .collect();
+    prompt_lens.dedup();
+    let mut batch_sizes: Vec<usize> = cfg
+        .buckets
+        .iter()
+        .map(|&b| b.min(cfg.max_seqs))
+        .take_while(|&b| b * 2 + 8 <= cfg.kv_cap)
+        .collect();
+    batch_sizes.dedup();
+
+    // three systems: merged (no rerouting inputs), weave (fused pallas
+    // kernel), singleop (unfused ops + barriers)
+    let mut merged = Engine::new_merged(&set, adapter.clone(), EngineOptions::default())?;
+    let mut weave = Engine::new_weave(
+        &set, &[adapter.clone()], Variant::Weave, StoreMode::Virtual, EngineOptions::default())?;
+    let mut single = Engine::new_weave(
+        &set, &[adapter.clone()], Variant::SingleOp, StoreMode::Virtual, EngineOptions::default())?;
+
+    let who = adapter.name.clone();
+    let adapter_of = |e: &Engine| -> Option<String> {
+        match e.variant() {
+            Variant::Base => None,
+            _ => Some(who.clone()),
+        }
+    };
+
+    // --- TTFT vs prompt length (batch 1) --------------------------------
+    let mut ttft_rows: Vec<(usize, [f64; 3])> = Vec::new();
+    for &plen in &prompt_lens {
+        // interleave systems per repetition so thermal/load drift cancels
+        let mut samples = [Samples::new(), Samples::new(), Samples::new()];
+        for _ in 0..reps {
+            for (slot, engine) in [&mut merged, &mut single, &mut weave].into_iter().enumerate() {
+                let who = adapter_of(engine);
+                engine.reset_session();
+                engine.submit(RequestSpec {
+                    adapter: who.clone(),
+                    prompt: (0..plen as i32).collect(),
+                    max_new_tokens: 1,
+                    sampling: Sampling::Greedy,
+                })?;
+                let done = engine.run_to_completion()?;
+                samples[slot].push(done[0].record.ttft.as_secs_f64());
+            }
+        }
+        let meds = [samples[0].median(), samples[1].median(), samples[2].median()];
+        ttft_rows.push((plen, meds));
+    }
+    let mut t = Table::new(&["prompt len", "merged TTFT", "singleop", "fused (weave)", "singleop ovh", "fused ovh"]);
+    for (plen, [m, s, w]) in &ttft_rows {
+        t.row(&[
+            plen.to_string(),
+            format!("{:.1}ms", m * 1e3),
+            format!("{:.1}ms", s * 1e3),
+            format!("{:.1}ms", w * 1e3),
+            format!("{:+.1}%", (s / m - 1.0) * 100.0),
+            format!("{:+.1}%", (w / m - 1.0) * 100.0),
+        ]);
+    }
+    t.print("Figure 7a — TTFT vs prompt length (paper: singleop ~+29%, fused <1%)");
+    t.write_csv("fig7_ttft").ok();
+
+    // --- TPOT vs decode batch size --------------------------------------
+    let mut tpot_rows: Vec<(usize, [f64; 3])> = Vec::new();
+    for &bs in &batch_sizes {
+        let mut samples = [Samples::new(), Samples::new(), Samples::new()];
+        for _ in 0..reps.div_ceil(2) {
+            for (slot, engine) in [&mut merged, &mut single, &mut weave].into_iter().enumerate() {
+                let who = adapter_of(engine);
+                engine.reset_session();
+                for _ in 0..bs {
+                    engine.submit(RequestSpec {
+                        adapter: who.clone(),
+                        prompt: (0..2).collect(),
+                        max_new_tokens: decode_steps,
+                        sampling: Sampling::Greedy,
+                    })?;
+                }
+                let done = engine.run_to_completion()?;
+                for c in &done {
+                    if let Some(tpot) = c.record.tpot {
+                        samples[slot].push(tpot.as_secs_f64());
+                    }
+                }
+            }
+        }
+        let meds = [samples[0].median(), samples[1].median(), samples[2].median()];
+        tpot_rows.push((bs, meds));
+    }
+    let mut t = Table::new(&["batch", "merged TPOT", "singleop", "fused (weave)", "singleop ovh", "fused ovh"]);
+    for (bs, [m, s, w]) in &tpot_rows {
+        t.row(&[
+            bs.to_string(),
+            format!("{:.1}ms", m * 1e3),
+            format!("{:.1}ms", s * 1e3),
+            format!("{:.1}ms", w * 1e3),
+            format!("{:+.1}%", (s / m - 1.0) * 100.0),
+            format!("{:+.1}%", (w / m - 1.0) * 100.0),
+        ]);
+    }
+    t.print("Figure 7b — TPOT vs decode batch size");
+    t.write_csv("fig7_tpot").ok();
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! Figure 9 — memory usage and KV-cache capacity when serving 1–3
+//! adapters on a single 64 GB device: vLLM-Ascend (Merged) vs
+//! ExpertWeave-Padding vs ExpertWeave (virtual weight tensor).
+//!
+//! Runs the *real* expert-memory-manager allocator in accounting mode at
+//! the paper's 16B-model scale (bf16 weights, 2 MB pages), charging a
+//! simulated 64 GB `DeviceMemory`; KV capacity = what the remaining
+//! budget affords at the paper's per-token KV cost.
+//!
+//! `cargo bench --bench fig9_memory`
+
+use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
+use expertweave::bench::{fmt_bytes, Table};
+use expertweave::kvcache::kv_capacity_tokens;
+use expertweave::memsim::{gib, DeviceMemory};
+use expertweave::model::ModelConfig;
+use expertweave::vmm::expert_manager::ExpertMemoryManager;
+use expertweave::vmm::DEFAULT_PAGE_SIZE;
+use std::sync::{Arc, Mutex};
+
+const BF16: usize = 2;
+const DEVICE: usize = gib(64);
+const GPU_UTIL: f64 = 0.9;
+/// Activation + framework reserve per serving instance (calibrated so the
+/// merged single-adapter deployment affords ~810K KV tokens, the paper's
+/// measured value; vLLM/CANN runtime overhead is of this order).
+const RESERVE_PER_INSTANCE: usize = (2.5 * (1u64 << 30) as f64) as usize;
+
+/// Paper-scale weight store: accounting managers per (layer, proj).
+struct Store {
+    cfg: ModelConfig,
+    managers: Vec<ExpertMemoryManager>,
+    device: Arc<Mutex<DeviceMemory>>,
+}
+
+impl Store {
+    fn new() -> Self {
+        let cfg = ModelConfig::paper16b();
+        let device = DeviceMemory::shared(DEVICE);
+        let expert_proj = cfg.hidden * cfg.expert_inter * BF16;
+        let managers = (0..cfg.layers * 3)
+            .map(|_| {
+                ExpertMemoryManager::new_accounting(
+                    expert_proj,
+                    cfg.total_expert_slots(),
+                    DEFAULT_PAGE_SIZE,
+                    device.clone(),
+                )
+            })
+            .collect();
+        Store { cfg, managers, device }
+    }
+
+    fn load_base_and_attn(&mut self) -> anyhow::Result<()> {
+        // non-expert weights (attention, embeddings, shared experts)
+        // charged directly; expert weights go through the page allocator
+        let expert_bytes_f32 = self.cfg.layers * 3 * self.cfg.num_experts
+            * self.cfg.hidden * self.cfg.expert_inter * 4;
+        let non_expert = (self.cfg.base_model_bytes() - expert_bytes_f32) / 4 * BF16;
+        self.device.lock().unwrap().alloc(non_expert)?;
+        for m in &mut self.managers {
+            m.load_range(0, self.cfg.num_experts)?;
+        }
+        Ok(())
+    }
+
+    fn load_adapter(&mut self, slot: usize, counts: &[usize], padded: bool) -> anyhow::Result<()> {
+        let delta = self.cfg.adapter_slot_base(slot);
+        for (l, &c) in counts.iter().enumerate() {
+            let commit = if padded { self.cfg.e_max } else { c };
+            if commit == 0 {
+                continue;
+            }
+            for p in 0..3 {
+                self.managers[l * 3 + p].load_range(delta, commit)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn used(&self) -> usize {
+        self.device.lock().unwrap().used()
+    }
+
+    fn kv_tokens(&self) -> usize {
+        kv_tokens_of(DEVICE, self.used(), 1, &self.cfg)
+    }
+}
+
+/// KV tokens affordable on `device` bytes after `used` weight bytes and
+/// `instances` runtime reserves, at the paper model's MLA cache cost
+/// (compressed 512 + 64 rope dims per layer, bf16).
+fn kv_tokens_of(device: usize, used: usize, instances: usize, cfg: &ModelConfig) -> usize {
+    let kv_per_token = cfg.layers * (512 + 64) * BF16;
+    let budget = (device as f64 * GPU_UTIL) as usize;
+    let reserved = used + instances * RESERVE_PER_INSTANCE;
+    kv_capacity_tokens(budget.saturating_sub(reserved), 1.0, kv_per_token)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::paper16b();
+    let names = ["gate-math", "token-math", "gate-intent"];
+    let counts: Vec<Vec<usize>> = paper_adapter_profiles()
+        .iter()
+        .filter(|p| names.contains(&p.name))
+        .map(|p| {
+            synth_adapter(p, cfg.layers, cfg.num_experts, 8, 4, 42)
+                .layers
+                .iter()
+                .map(|l| l.expert_count())
+                .collect()
+        })
+        .collect();
+    let merged_model = cfg.base_model_bytes() / 4 * BF16;
+
+    let mut t = Table::new(&[
+        "adapters", "merged mem", "padding mem", "virtual mem",
+        "merged KV(tok)", "padding KV(tok)", "virtual KV(tok)",
+    ]);
+
+    for n in 1..=3usize {
+        // merged: n full model instances on the device
+        let merged_used = merged_model.checked_mul(n).unwrap();
+        let merged_cell = if merged_used > DEVICE {
+            ("OOM".to_string(), "OOM".to_string())
+        } else {
+            let kv = kv_tokens_of(DEVICE, merged_used, n, &cfg);
+            (fmt_bytes(merged_used), format!("{kv}"))
+        };
+
+        // padding / virtual: one shared deployment, n adapters
+        let mut run = |padded: bool| -> anyhow::Result<(usize, usize)> {
+            let mut s = Store::new();
+            s.load_base_and_attn()?;
+            for (i, c) in counts.iter().take(n).enumerate() {
+                s.load_adapter(i, c, padded)?;
+            }
+            Ok((s.used(), s.kv_tokens()))
+        };
+        let (pad_used, pad_kv) = run(true)?;
+        let (virt_used, virt_kv) = run(false)?;
+
+        t.row(&[
+            n.to_string(),
+            merged_cell.0.clone(),
+            fmt_bytes(pad_used),
+            fmt_bytes(virt_used),
+            merged_cell.1.clone(),
+            pad_kv.to_string(),
+            virt_kv.to_string(),
+        ]);
+    }
+    t.print("Figure 9 — memory & KV capacity on one 64 GB device (paper scale)");
+    t.write_csv("fig9_memory").ok();
+
+    // headline ratios the paper quotes
+    let mut virt2 = Store::new();
+    virt2.load_base_and_attn()?;
+    for (i, c) in counts.iter().take(2).enumerate() {
+        virt2.load_adapter(i, c, false)?;
+    }
+    let merged2 = 2 * merged_model;
+    if merged2 <= DEVICE {
+        let merged_kv = kv_tokens_of(DEVICE, merged2, 2, &cfg);
+        if merged_kv > 0 {
+            println!(
+                "\nKV capacity ratio at 2 adapters (weave/merged): {:.1}x (paper: 94.4x)",
+                virt2.kv_tokens() as f64 / merged_kv as f64
+            );
+        } else {
+            println!(
+                "\nmerged 2-adapter deployment exhausts the device before any KV \
+                 (weave affords {} tokens; paper measured 94.4x at a ~6K-token margin)",
+                virt2.kv_tokens()
+            );
+        }
+    }
+    let mut pad1 = Store::new();
+    pad1.load_base_and_attn()?;
+    let base_used = pad1.used();
+    pad1.load_adapter(0, &counts[0], true)?;
+    let pad_over = pad1.used() - base_used;
+    let mut virt1 = Store::new();
+    virt1.load_base_and_attn()?;
+    virt1.load_adapter(0, &counts[0], false)?;
+    let virt_over = virt1.used() - base_used;
+    println!(
+        "1-adapter overhead: padding {} vs virtual {} ({:.1}% reduction; paper: 4.7 GB -> 2.8 GB, 40.4%)",
+        fmt_bytes(pad_over),
+        fmt_bytes(virt_over),
+        (1.0 - virt_over as f64 / pad_over as f64) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Table 3 — serving accuracy: ExpertWeave must match the per-task
+//! accuracy of the respective merged models exactly.
+//!
+//! With no GSM8K/intent datasets offline, accuracy parity is reproduced
+//! as the stronger statement it follows from: **greedy-decode token
+//! agreement**. For a corpus of prompts per task, the tokens produced by
+//! ExpertWeave (two adapters resident, requests routed by adapter ID)
+//! must equal those of the corresponding merged model, for every prompt
+//! — hence any downstream-task accuracy is identical. The base model is
+//! decoded too, to show the adapters actually change behaviour.
+//!
+//! `cargo bench --bench table3_accuracy`
+
+use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
+use expertweave::bench::Table;
+use expertweave::engine::{Engine, EngineOptions, RequestSpec};
+use expertweave::runtime::{ArtifactSet, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::weights::StoreMode;
+use expertweave::workload::prompts::PromptGen;
+use std::path::PathBuf;
+
+const PROMPTS_PER_TASK: usize = 24;
+const MAX_NEW: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("artifacts/tiny");
+    let set = ArtifactSet::load(&dir)?;
+    let cfg = set.config.clone();
+
+    let mk = |idx: usize| {
+        let mut p = paper_adapter_profiles()[idx].clone();
+        p.max_experts = p.max_experts.min(cfg.e_max);
+        p.avg_experts = cfg.e_max as f64; // dense adapters: visible effect
+        synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, 42)
+    };
+    let ad_math = mk(0); // gate-math
+    let ad_intent = mk(2); // gate-intent
+
+    // prompt corpora per task (synthetic domain prompts, greedy decode)
+    let mut gen = PromptGen::new(cfg.vocab, 7);
+    let max_prompt = cfg.buckets.last().copied().unwrap().min(cfg.kv_cap / 4);
+    let corpus = |gen: &mut PromptGen, domain: &str| -> Vec<Vec<i32>> {
+        (0..PROMPTS_PER_TASK)
+            .map(|_| {
+                let (mut p, _) = gen.sample(domain);
+                p.truncate(max_prompt.max(4));
+                if p.is_empty() {
+                    p.push(1);
+                }
+                p
+            })
+            .collect()
+    };
+    let math_prompts = corpus(&mut gen, "math");
+    let intent_prompts = corpus(&mut gen, "intent");
+
+    let decode = |engine: &mut Engine, adapter: Option<&str>, prompts: &[Vec<i32>]| {
+        let mut ids = Vec::new();
+        for p in prompts {
+            ids.push(
+                engine
+                    .submit(RequestSpec {
+                        adapter: adapter.map(str::to_string),
+                        prompt: p.clone(),
+                        max_new_tokens: MAX_NEW,
+                        sampling: Sampling::Greedy,
+                    })
+                    .unwrap(),
+            );
+        }
+        let done = engine.run_to_completion().unwrap();
+        ids.iter()
+            .map(|id| done.iter().find(|c| c.id == *id).unwrap().output.clone())
+            .collect::<Vec<_>>()
+    };
+
+    // ExpertWeave: both adapters resident, both corpora through one engine
+    let mut weave = Engine::new_weave(
+        &set,
+        &[ad_math.clone(), ad_intent.clone()],
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions::default(),
+    )?;
+    let w_math = decode(&mut weave, Some("gate-math"), &math_prompts);
+    let w_intent = decode(&mut weave, Some("gate-intent"), &intent_prompts);
+    let w_base_math = decode(&mut weave, None, &math_prompts);
+
+    // merged references
+    let mut m_math_engine = Engine::new_merged(&set, ad_math, EngineOptions::default())?;
+    let m_math = decode(&mut m_math_engine, None, &math_prompts);
+    drop(m_math_engine);
+    let mut m_intent_engine = Engine::new_merged(&set, ad_intent, EngineOptions::default())?;
+    let m_intent = decode(&mut m_intent_engine, None, &intent_prompts);
+    drop(m_intent_engine);
+
+    // base model reference
+    let mut base_engine = Engine::new_base_only(&set, EngineOptions::default())?;
+    let b_math = decode(&mut base_engine, None, &math_prompts);
+
+    let agree = |a: &[Vec<i32>], b: &[Vec<i32>]| {
+        let hits = a.iter().zip(b).filter(|(x, y)| x == y).count();
+        100.0 * hits as f64 / a.len() as f64
+    };
+
+    let mut t = Table::new(&["system", "math agreement", "intent agreement"]);
+    t.row(&[
+        "ExpertWeave vs merged".into(),
+        format!("{:.1}%", agree(&w_math, &m_math)),
+        format!("{:.1}%", agree(&w_intent, &m_intent)),
+    ]);
+    t.row(&[
+        "base model vs merged".into(),
+        format!("{:.1}%", agree(&b_math, &m_math)),
+        "-".into(),
+    ]);
+    t.row(&[
+        "weave(base tokens) vs base".into(),
+        format!("{:.1}%", agree(&w_base_math, &b_math)),
+        "-".into(),
+    ]);
+    t.print("Table 3 — greedy-decode agreement (accuracy-parity mechanism)");
+    t.write_csv("table3_accuracy").ok();
+
+    let a1 = agree(&w_math, &m_math);
+    let a2 = agree(&w_intent, &m_intent);
+    let a3 = agree(&w_base_math, &b_math);
+    assert_eq!(a1, 100.0, "weave must match merged on math");
+    assert_eq!(a2, 100.0, "weave must match merged on intent");
+    assert_eq!(a3, 100.0, "weave base-path must match base model");
+    println!(
+        "\nExpertWeave reproduces merged-model outputs exactly (=> identical task accuracy; paper: 62.3/78.8 on both systems)."
+    );
+    Ok(())
+}

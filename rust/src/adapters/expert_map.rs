@@ -1,0 +1,239 @@
+//! The ESFT expert map Π (paper section 4.1/4.3), host side.
+//!
+//! `Π^(l)[i, j]` stores the virtual-weight-tensor slot of base expert `j`
+//! under adapter slot `i` in layer `l`:
+//!
+//! ```text
+//! Π^(l)[i, j] = j                     if j not fine-tuned by adapter i
+//!             = Δ_i + δ_ij^(l)        otherwise, Δ_i = M + i·E_max
+//! ```
+//!
+//! The map is stored flattened as `[L, N+1, M]` i32 with an identity row
+//! at adapter index 0 (`AID -1` → row 0), matching the artifact ABI of the
+//! L1 Pallas kernel. Loading/evicting an adapter rewrites only its rows;
+//! the tensor is re-uploaded to the device by the engine afterwards.
+
+use crate::model::ModelConfig;
+use anyhow::{bail, Result};
+
+/// Host copy of the per-layer ESFT expert maps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpertMaps {
+    layers: usize,
+    n_adapters: usize,
+    m: usize,
+    e_max: usize,
+    /// `[L, N+1, M]` flattened, identity row at adapter index 0.
+    data: Vec<i32>,
+}
+
+impl ExpertMaps {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let (l, n, m) = (cfg.layers, cfg.max_adapters, cfg.num_experts);
+        let mut data = vec![0i32; l * (n + 1) * m];
+        for li in 0..l {
+            for row in 0..=n {
+                let off = (li * (n + 1) + row) * m;
+                for j in 0..m {
+                    data[off + j] = j as i32;
+                }
+            }
+        }
+        ExpertMaps { layers: l, n_adapters: n, m, e_max: cfg.e_max, data }
+    }
+
+    /// Flattened `[L, N+1, M]` i32 view (device upload).
+    pub fn as_slice(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn shape(&self) -> [usize; 3] {
+        [self.layers, self.n_adapters + 1, self.m]
+    }
+
+    fn idx(&self, layer: usize, row: usize, j: usize) -> usize {
+        (layer * (self.n_adapters + 1) + row) * self.m + j
+    }
+
+    /// Π^(l)[slot, j] with row 0 = identity; `slot` is the adapter slot.
+    pub fn lookup(&self, layer: usize, aid: i32, j: usize) -> i32 {
+        let row = (aid + 1) as usize;
+        self.data[self.idx(layer, row, j)]
+    }
+
+    /// Install adapter rows: for each layer, `experts[l]` is the sorted
+    /// list of fine-tuned base expert IDs; local offset δ is the index in
+    /// that sorted list (mirrors `python/compile/kernels/reroute.py`).
+    pub fn install(&mut self, slot: usize, experts_per_layer: &[Vec<u32>]) -> Result<()> {
+        if slot >= self.n_adapters {
+            bail!("adapter slot {slot} out of range (N = {})", self.n_adapters);
+        }
+        if experts_per_layer.len() != self.layers {
+            bail!(
+                "adapter has {} layers, model has {}",
+                experts_per_layer.len(),
+                self.layers
+            );
+        }
+        for (l, experts) in experts_per_layer.iter().enumerate() {
+            if experts.len() > self.e_max {
+                bail!(
+                    "layer {l}: {} experts exceed E_max {}",
+                    experts.len(),
+                    self.e_max
+                );
+            }
+            if !experts.windows(2).all(|w| w[0] < w[1]) {
+                bail!("layer {l}: expert ids not strictly sorted");
+            }
+            let delta = (self.m + slot * self.e_max) as i32;
+            let row = slot + 1;
+            // reset the row to identity, then point fine-tuned experts at
+            // their slots
+            for j in 0..self.m {
+                let at = self.idx(l, row, j);
+                self.data[at] = j as i32;
+            }
+            for (off, &j) in experts.iter().enumerate() {
+                if j as usize >= self.m {
+                    bail!("layer {l}: expert id {j} >= M {}", self.m);
+                }
+                let at = self.idx(l, row, j as usize);
+                self.data[at] = delta + off as i32;
+            }
+        }
+        Ok(())
+    }
+
+    /// Reset an adapter slot's rows to identity (eviction).
+    pub fn clear(&mut self, slot: usize) -> Result<()> {
+        if slot >= self.n_adapters {
+            bail!("adapter slot {slot} out of range");
+        }
+        for l in 0..self.layers {
+            let row = slot + 1;
+            for j in 0..self.m {
+                let at = self.idx(l, row, j);
+                self.data[at] = j as i32;
+            }
+        }
+        Ok(())
+    }
+
+    /// Host-side rerouting (reference + scheduler-side validation):
+    /// `TopK'(x) = { Π[A(x), j] : j ∈ TopK(x) }`.
+    pub fn reroute(&self, layer: usize, aid: i32, top_k: &[i32]) -> Vec<i32> {
+        top_k
+            .iter()
+            .map(|&j| self.lookup(layer, aid, j as usize))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        let mut c = ModelConfig::paper16b();
+        c.layers = 2;
+        c.num_experts = 8;
+        c.max_adapters = 3;
+        c.e_max = 3;
+        c
+    }
+
+    #[test]
+    fn identity_by_default() {
+        let maps = ExpertMaps::new(&cfg());
+        for l in 0..2 {
+            for aid in -1..3 {
+                for j in 0..8 {
+                    assert_eq!(maps.lookup(l, aid, j), j as i32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn install_points_into_adapter_region() {
+        let c = cfg();
+        let mut maps = ExpertMaps::new(&c);
+        maps.install(1, &[vec![1, 4], vec![7]]).unwrap();
+        // layer 0: Δ_1 = 8 + 1*3 = 11; experts 1 -> 11, 4 -> 12
+        assert_eq!(maps.lookup(0, 1, 1), 11);
+        assert_eq!(maps.lookup(0, 1, 4), 12);
+        assert_eq!(maps.lookup(0, 1, 0), 0); // untouched
+        assert_eq!(maps.lookup(1, 1, 7), 11); // layer 1: δ restarts at 0
+        // other adapters unaffected
+        assert_eq!(maps.lookup(0, 0, 1), 1);
+        assert_eq!(maps.lookup(0, 2, 4), 4);
+        // base row (-1) is always identity
+        assert_eq!(maps.lookup(0, -1, 4), 4);
+    }
+
+    #[test]
+    fn reinstall_overwrites_and_clear_resets() {
+        let mut maps = ExpertMaps::new(&cfg());
+        maps.install(0, &[vec![0, 1], vec![2]]).unwrap();
+        maps.install(0, &[vec![5], vec![]]).unwrap();
+        assert_eq!(maps.lookup(0, 0, 0), 0); // reset by reinstall
+        assert_eq!(maps.lookup(0, 0, 5), 8);
+        maps.clear(0).unwrap();
+        assert_eq!(maps.lookup(0, 0, 5), 5);
+    }
+
+    #[test]
+    fn validation() {
+        let mut maps = ExpertMaps::new(&cfg());
+        assert!(maps.install(3, &[vec![], vec![]]).is_err()); // slot OOR
+        assert!(maps.install(0, &[vec![]]).is_err()); // wrong layer count
+        assert!(maps.install(0, &[vec![0, 1, 2, 3], vec![]]).is_err()); // > E_max
+        assert!(maps.install(0, &[vec![2, 1], vec![]]).is_err()); // unsorted
+        assert!(maps.install(0, &[vec![9], vec![]]).is_err()); // id >= M
+    }
+
+    #[test]
+    fn reroute_semantics() {
+        let mut maps = ExpertMaps::new(&cfg());
+        maps.install(2, &[vec![3], vec![]]).unwrap();
+        let out = maps.reroute(0, 2, &[3, 5, 3]);
+        let delta = 8 + 2 * 3;
+        assert_eq!(out, vec![delta as i32, 5, delta as i32]);
+        assert_eq!(maps.reroute(0, -1, &[3, 5]), vec![3, 5]);
+    }
+
+    #[test]
+    fn property_lookup_in_valid_domain() {
+        crate::util::prop::check(505, 40, |rng| {
+            let c = cfg();
+            let mut maps = ExpertMaps::new(&c);
+            for slot in 0..c.max_adapters {
+                let per_layer: Vec<Vec<u32>> = (0..c.layers)
+                    .map(|_| {
+                        let k = rng.below((c.e_max + 1) as u64) as usize;
+                        rng.sample_distinct(c.num_experts, k)
+                            .into_iter()
+                            .map(|x| x as u32)
+                            .collect()
+                    })
+                    .collect();
+                maps.install(slot, &per_layer).unwrap();
+            }
+            let g = c.total_expert_slots() as i32;
+            for l in 0..c.layers {
+                for aid in -1..(c.max_adapters as i32) {
+                    for j in 0..c.num_experts {
+                        let s = maps.lookup(l, aid, j);
+                        assert!((0..g).contains(&s));
+                        if aid >= 0 && s >= c.num_experts as i32 {
+                            // fine-tuned: must be inside adapter aid's region
+                            let d = c.adapter_slot_base(aid as usize) as i32;
+                            assert!(s >= d && s < d + c.e_max as i32);
+                        }
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,359 @@
+//! `.esft` adapter checkpoint format + in-memory representation.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   "ESFT"                        4 B
+//! version u32                           4 B
+//! name    u32 len + utf8 bytes
+//! domain  u32 len + utf8 bytes
+//! layers  u32   hidden u32   inter u32
+//! per layer:
+//!   count u32
+//!   expert ids  count * u32            (sorted base-model expert IDs)
+//!   weights     count * 3 * hidden * inter * f32   (gate, up, down)
+//! crc32  u32 over everything above
+//! ```
+//!
+//! The format mirrors the paper's deployment flow: adapters live in
+//! secondary storage, are loaded/cached in host memory ([`Adapter`]), and
+//! only then copied into the device-side virtual weight tensor.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"ESFT";
+const VERSION: u32 = 1;
+
+/// One MoE layer of an adapter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdapterLayer {
+    /// Sorted base-model expert IDs fine-tuned in this layer.
+    pub expert_ids: Vec<u32>,
+    /// `expert_ids.len() * 3 * hidden * inter` f32 weights,
+    /// ordered `[expert][gate|up|down][...]`.
+    pub weights: Vec<f32>,
+}
+
+impl AdapterLayer {
+    pub fn expert_count(&self) -> usize {
+        self.expert_ids.len()
+    }
+
+    /// The three projection matrices of local expert `e`, flattened.
+    pub fn expert_weights(&self, e: usize, hidden: usize, inter: usize) -> &[f32] {
+        let per = 3 * hidden * inter;
+        &self.weights[e * per..(e + 1) * per]
+    }
+}
+
+/// A fully loaded (host-cached) ESFT adapter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Adapter {
+    pub name: String,
+    pub domain: String,
+    pub hidden: usize,
+    pub inter: usize,
+    pub layers: Vec<AdapterLayer>,
+}
+
+impl Adapter {
+    /// E_i — max fine-tuned experts in any layer.
+    pub fn max_experts(&self) -> usize {
+        self.layers.iter().map(|l| l.expert_count()).max().unwrap_or(0)
+    }
+
+    /// Mean fine-tuned experts per layer.
+    pub fn avg_experts(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.expert_count()).sum::<usize>() as f64
+            / self.layers.len() as f64
+    }
+
+    /// Adapter sparsity factor S_i (paper section 3.1):
+    /// `Σ_l (E_i - e_i^(l)) / (L * E_i)`.
+    pub fn sparsity(&self) -> f64 {
+        let e_i = self.max_experts();
+        if e_i == 0 || self.layers.is_empty() {
+            return 0.0;
+        }
+        let l = self.layers.len();
+        let deficit: usize = self.layers.iter().map(|la| e_i - la.expert_count()).sum();
+        deficit as f64 / (l * e_i) as f64
+    }
+
+    /// Total fine-tuned experts across layers.
+    pub fn total_experts(&self) -> usize {
+        self.layers.iter().map(|l| l.expert_count()).sum()
+    }
+
+    /// Serialized + in-memory weight bytes (f32).
+    pub fn weight_bytes(&self) -> usize {
+        self.total_experts() * 3 * self.hidden * self.inter * 4
+    }
+
+    // -- (de)serialization -------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut w = CrcWriter::new(BufWriter::new(f));
+        w.write_all(MAGIC)?;
+        w.write_u32(VERSION)?;
+        w.write_str(&self.name)?;
+        w.write_str(&self.domain)?;
+        w.write_u32(self.layers.len() as u32)?;
+        w.write_u32(self.hidden as u32)?;
+        w.write_u32(self.inter as u32)?;
+        for layer in &self.layers {
+            w.write_u32(layer.expert_ids.len() as u32)?;
+            for &id in &layer.expert_ids {
+                w.write_u32(id)?;
+            }
+            let expect = layer.expert_ids.len() * 3 * self.hidden * self.inter;
+            if layer.weights.len() != expect {
+                bail!("layer weight count {} != {}", layer.weights.len(), expect);
+            }
+            w.write_f32s(&layer.weights)?;
+        }
+        let crc = w.crc();
+        w.write_u32(crc)?;
+        w.into_inner().flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Adapter> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut r = CrcReader::new(BufReader::new(f));
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an ESFT adapter file");
+        }
+        let version = r.read_u32()?;
+        if version != VERSION {
+            bail!("unsupported ESFT version {version}");
+        }
+        let name = r.read_str()?;
+        let domain = r.read_str()?;
+        let n_layers = r.read_u32()? as usize;
+        let hidden = r.read_u32()? as usize;
+        let inter = r.read_u32()? as usize;
+        if n_layers > 1024 || hidden > 1 << 20 || inter > 1 << 20 {
+            bail!("implausible header (corrupt file?)");
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let count = r.read_u32()? as usize;
+            let mut expert_ids = Vec::with_capacity(count);
+            for _ in 0..count {
+                expert_ids.push(r.read_u32()?);
+            }
+            if !expert_ids.windows(2).all(|w| w[0] < w[1]) {
+                bail!("expert ids not strictly sorted");
+            }
+            let weights = r.read_f32s(count * 3 * hidden * inter)?;
+            layers.push(AdapterLayer { expert_ids, weights });
+        }
+        let computed = r.crc();
+        let stored = r.read_u32()?;
+        if computed != stored {
+            bail!("crc mismatch: file corrupt");
+        }
+        Ok(Adapter { name, domain, hidden, inter, layers })
+    }
+}
+
+// -- tiny CRC-32 (IEEE) streaming wrappers ---------------------------------
+
+fn crc32_update(mut crc: u32, data: &[u8]) -> u32 {
+    crc = !crc;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            crc = (crc >> 1) ^ (0xEDB88320 & (0u32.wrapping_sub(crc & 1)));
+        }
+    }
+    !crc
+}
+
+struct CrcWriter<W: Write> {
+    inner: W,
+    crc: u32,
+}
+
+impl<W: Write> CrcWriter<W> {
+    fn new(inner: W) -> Self {
+        CrcWriter { inner, crc: 0 }
+    }
+
+    fn write_all(&mut self, data: &[u8]) -> Result<()> {
+        self.crc = crc32_update(self.crc, data);
+        self.inner.write_all(data)?;
+        Ok(())
+    }
+
+    fn write_u32(&mut self, v: u32) -> Result<()> {
+        self.write_all(&v.to_le_bytes())
+    }
+
+    fn write_str(&mut self, s: &str) -> Result<()> {
+        self.write_u32(s.len() as u32)?;
+        self.write_all(s.as_bytes())
+    }
+
+    fn write_f32s(&mut self, v: &[f32]) -> Result<()> {
+        // bulk: f32 slice viewed as bytes (little-endian hosts only, as
+        // is every supported target)
+        let bytes =
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+        self.write_all(bytes)
+    }
+
+    fn crc(&self) -> u32 {
+        self.crc
+    }
+
+    fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+struct CrcReader<R: Read> {
+    inner: R,
+    crc: u32,
+}
+
+impl<R: Read> CrcReader<R> {
+    fn new(inner: R) -> Self {
+        CrcReader { inner, crc: 0 }
+    }
+
+    fn read_exact(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.inner.read_exact(buf)?;
+        self.crc = crc32_update(self.crc, buf);
+        Ok(())
+    }
+
+    fn read_u32(&mut self) -> Result<u32> {
+        // NOTE: the trailing crc field itself is read with read_u32_raw
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn read_str(&mut self) -> Result<String> {
+        let len = self.read_u32()? as usize;
+        if len > 4096 {
+            bail!("implausible string length {len}");
+        }
+        let mut b = vec![0u8; len];
+        self.read_exact(&mut b)?;
+        Ok(String::from_utf8(b).context("invalid utf8 in adapter header")?)
+    }
+
+    fn read_f32s(&mut self, count: usize) -> Result<Vec<f32>> {
+        let mut v = vec![0f32; count];
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, count * 4)
+        };
+        self.inner.read_exact(bytes)?;
+        self.crc = crc32_update(self.crc, bytes);
+        Ok(v)
+    }
+
+    fn crc(&self) -> u32 {
+        self.crc
+    }
+}
+
+// The crc trailer is read after crc() is captured, so reading it through
+// read_u32 (which updates crc) is fine — we already snapshotted.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn sample_adapter(seed: u64) -> Adapter {
+        let mut rng = Pcg::new(seed);
+        let (hidden, inter) = (8, 4);
+        let layers = (0..3)
+            .map(|_| {
+                let count = rng.below(4) as usize;
+                let expert_ids: Vec<u32> =
+                    rng.sample_distinct(16, count).into_iter().map(|x| x as u32).collect();
+                let weights = (0..count * 3 * hidden * inter)
+                    .map(|_| rng.f32() - 0.5)
+                    .collect();
+                AdapterLayer { expert_ids, weights }
+            })
+            .collect();
+        Adapter {
+            name: format!("ad{seed}"),
+            domain: "math".into(),
+            hidden,
+            inter,
+            layers,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("ew_fmt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for seed in 0..5 {
+            let a = sample_adapter(seed);
+            let p = dir.join(format!("a{seed}.esft"));
+            a.save(&p).unwrap();
+            let b = Adapter::load(&p).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = std::env::temp_dir().join("ew_fmt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = sample_adapter(9);
+        let p = dir.join("corrupt.esft");
+        a.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(Adapter::load(&p).is_err());
+    }
+
+    #[test]
+    fn not_an_adapter() {
+        let dir = std::env::temp_dir().join("ew_fmt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("junk.esft");
+        std::fs::write(&p, b"not an adapter").unwrap();
+        assert!(Adapter::load(&p).is_err());
+    }
+
+    #[test]
+    fn stats() {
+        let a = Adapter {
+            name: "x".into(),
+            domain: "d".into(),
+            hidden: 2,
+            inter: 2,
+            layers: vec![
+                AdapterLayer { expert_ids: vec![0, 1, 2], weights: vec![0.0; 36] },
+                AdapterLayer { expert_ids: vec![5], weights: vec![0.0; 12] },
+            ],
+        };
+        assert_eq!(a.max_experts(), 3);
+        assert!((a.avg_experts() - 2.0).abs() < 1e-9);
+        // S = ((3-3) + (3-1)) / (2*3) = 1/3
+        assert!((a.sparsity() - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(a.weight_bytes(), 4 * 3 * 2 * 2 * 4);
+    }
+}

@@ -1,0 +1,288 @@
+//! Synthetic ESFT adapter generator.
+//!
+//! Off-the-shelf ESFT checkpoints are scarce (the paper itself notes
+//! this); we cannot download the 10 published adapters offline, so we
+//! regenerate adapters whose *expert-count profiles* — max experts in any
+//! layer, average per layer, hence sparsity factor S_i — match Table 1 of
+//! the paper exactly. Serving-system behaviour (memory layout, routing,
+//! batching) depends only on these counts and the expert placements, not
+//! on the weight values, so the substitution preserves every experiment
+//! (DESIGN.md section 7).
+
+use super::format::{Adapter, AdapterLayer};
+use crate::util::rng::Pcg;
+
+/// A Table-1 row: target profile for one synthetic adapter.
+#[derive(Debug, Clone)]
+pub struct AdapterProfile {
+    pub name: &'static str,
+    pub domain: &'static str,
+    /// E_i — max fine-tuned experts in any layer.
+    pub max_experts: usize,
+    /// target mean experts per layer.
+    pub avg_experts: f64,
+}
+
+/// The 10 published adapters of Table 1 (5 domains x {gate, token}).
+pub fn paper_adapter_profiles() -> Vec<AdapterProfile> {
+    vec![
+        AdapterProfile { name: "gate-math", domain: "math", max_experts: 12, avg_experts: 7.04 },
+        AdapterProfile { name: "token-math", domain: "math", max_experts: 9, avg_experts: 6.12 },
+        AdapterProfile { name: "gate-intent", domain: "intent", max_experts: 12, avg_experts: 9.50 },
+        AdapterProfile { name: "token-intent", domain: "intent", max_experts: 8, avg_experts: 7.12 },
+        AdapterProfile { name: "gate-summary", domain: "summary", max_experts: 11, avg_experts: 7.73 },
+        AdapterProfile { name: "token-summary", domain: "summary", max_experts: 8, avg_experts: 5.15 },
+        AdapterProfile { name: "gate-law", domain: "law", max_experts: 12, avg_experts: 7.35 },
+        AdapterProfile { name: "token-law", domain: "law", max_experts: 10, avg_experts: 6.58 },
+        AdapterProfile { name: "gate-translation", domain: "translation", max_experts: 13, avg_experts: 4.69 },
+        AdapterProfile { name: "token-translation", domain: "translation", max_experts: 6, avg_experts: 3.85 },
+    ]
+}
+
+/// Per-layer expert counts hitting `max` exactly and `avg` as closely as
+/// an integer profile over `layers` allows (|achieved - avg| < 1/L).
+pub fn layer_counts(profile: &AdapterProfile, layers: usize, rng: &mut Pcg) -> Vec<usize> {
+    assert!(layers >= 1);
+    let target_total = (profile.avg_experts * layers as f64).round() as usize;
+    let max = profile.max_experts;
+    let target_total = target_total.clamp(max, layers * max);
+    // start: one layer at the max, the rest at floor(average of remainder)
+    let mut counts = vec![0usize; layers];
+    counts[0] = max;
+    let mut rest = target_total - max;
+    // spread the remainder as evenly as possible, capped at max
+    for i in 1..layers {
+        let left = layers - i;
+        let take = (rest / left).min(max);
+        counts[i] = take;
+        rest -= take;
+    }
+    // distribute leftover +1s (can happen due to the cap)
+    let mut i = 1;
+    while rest > 0 && i < layers {
+        if counts[i] < max {
+            counts[i] += 1;
+            rest -= 1;
+        }
+        i += 1;
+        if i == layers {
+            i = 1;
+        }
+    }
+    // jitter pairs (keep sum, keep <= max, keep the single max layer) for
+    // realistic variance across layers
+    for _ in 0..(if layers > 1 { layers * 4 } else { 0 }) {
+        let a = 1 + rng.below((layers - 1) as u64) as usize;
+        let b = 1 + rng.below((layers - 1) as u64) as usize;
+        if a != b && counts[a] > 1 && counts[b] + 1 < max {
+            counts[a] -= 1;
+            counts[b] += 1;
+        }
+    }
+    // place the max layer somewhere random
+    let swap_to = rng.below(layers as u64) as usize;
+    counts.swap(0, swap_to);
+    counts
+}
+
+/// Generate a full synthetic adapter for a model geometry.
+///
+/// * expert IDs per layer follow a task-specific preference: each domain
+///   seed biases a fixed subset of experts (the "expert specialization"
+///   pattern ESFT exploits — top-activated sets differ across tasks).
+/// * weights are seeded noise at fine-tuning scale (`base + 0.05·N(0,1)`
+///   is applied at registry-load time against the base weights; here we
+///   store the standalone fine-tuned rows).
+pub fn synth_adapter(
+    profile: &AdapterProfile,
+    layers: usize,
+    num_experts: usize,
+    hidden: usize,
+    inter: usize,
+    seed: u64,
+) -> Adapter {
+    let mut rng = Pcg::with_stream(seed, fxhash(profile.name));
+    let counts = layer_counts(profile, layers, &mut rng);
+    // Domain-preferred experts: a fixed half of the expert space is 4x
+    // more likely, making routed traffic concentrate like real ESFT tasks.
+    let mut pref: Vec<f64> = vec![1.0; num_experts];
+    let mut drng = Pcg::with_stream(fxhash(profile.domain), 77);
+    for _ in 0..num_experts / 2 {
+        pref[drng.below(num_experts as u64) as usize] = 4.0;
+    }
+    let total: f64 = pref.iter().sum();
+    let probs: Vec<f64> = pref.iter().map(|p| p / total).collect();
+
+    let layers_vec = (0..layers)
+        .map(|_l| {
+            let count = counts[_l].min(num_experts);
+            // weighted distinct sampling
+            let mut chosen = std::collections::BTreeSet::new();
+            while chosen.len() < count {
+                chosen.insert(rng.categorical(&probs) as u32);
+            }
+            let expert_ids: Vec<u32> = chosen.into_iter().collect();
+            let n = expert_ids.len() * 3 * hidden * inter;
+            let scale = 1.0 / (hidden as f32).sqrt();
+            // uniform (not gaussian): ~5x faster generation at the 20-adapter
+            // x 100M-param scale, indistinguishable for system behaviour
+            let weights = (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect();
+            AdapterLayer { expert_ids, weights }
+        })
+        .collect();
+    Adapter {
+        name: profile.name.to_string(),
+        domain: profile.domain.to_string(),
+        hidden,
+        inter,
+        layers: layers_vec,
+    }
+}
+
+/// Memory fragmentation factor F_mem of the padding approach for a set of
+/// adapters (paper section 3.1):
+/// `L * (M + N*E_max) / Σ_l (M + Σ_i e_i^(l))`.
+pub fn fragmentation_factor(adapters: &[Adapter], m: usize, e_max: usize) -> f64 {
+    if adapters.is_empty() {
+        return 1.0;
+    }
+    let l = adapters[0].layers.len();
+    let n = adapters.len();
+    let allocated = l * (m + n * e_max);
+    let used: usize = (0..l)
+        .map(|li| m + adapters.iter().map(|a| a.layers[li].expert_count()).sum::<usize>())
+        .sum();
+    allocated as f64 / used as f64
+}
+
+/// Adapter-weights-only fragmentation (excludes the base model's M slots).
+/// Note: the paper's reported F_mem = 1.51 uses the whole-tensor form
+/// ([`fragmentation_factor`]); this adapter-only view is stricter (~2.0
+/// for the Table-1 set) and is reported alongside it by the benches.
+pub fn adapter_fragmentation_factor(adapters: &[Adapter], e_max: usize) -> f64 {
+    if adapters.is_empty() {
+        return 1.0;
+    }
+    let l = adapters[0].layers.len();
+    let n = adapters.len();
+    let allocated = l * n * e_max;
+    let used: usize = adapters.iter().map(Adapter::total_experts).sum();
+    allocated as f64 / used.max(1) as f64
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L: usize = 26; // paper layer count for Table 1 checks
+
+    #[test]
+    fn layer_counts_hit_profile() {
+        let mut rng = Pcg::new(1);
+        for p in paper_adapter_profiles() {
+            let counts = layer_counts(&p, L, &mut rng);
+            assert_eq!(counts.len(), L);
+            assert_eq!(*counts.iter().max().unwrap(), p.max_experts, "{}", p.name);
+            let avg = counts.iter().sum::<usize>() as f64 / L as f64;
+            assert!(
+                (avg - p.avg_experts).abs() <= 0.5 / L as f64 + 0.021,
+                "{}: avg {avg} target {}",
+                p.name,
+                p.avg_experts
+            );
+            assert!(counts.iter().all(|&c| c >= 1 && c <= p.max_experts));
+        }
+    }
+
+    #[test]
+    fn sparsity_matches_table1() {
+        // Table 1's sparsity column follows from (max, avg):
+        // S = (E - avg) / E. Verify generated adapters land on it.
+        let expected = [
+            ("gate-math", 0.41),
+            ("token-math", 0.32),
+            ("gate-intent", 0.21),
+            ("token-intent", 0.11),
+            ("gate-summary", 0.30),
+            ("token-summary", 0.36),
+            ("gate-law", 0.39),
+            ("token-law", 0.34),
+            ("gate-translation", 0.64),
+            ("token-translation", 0.36),
+        ];
+        for (p, (name, s_target)) in paper_adapter_profiles().iter().zip(expected) {
+            assert_eq!(p.name, name);
+            let a = synth_adapter(p, L, 64, 8, 4, 42);
+            assert!(
+                (a.sparsity() - s_target).abs() < 0.03,
+                "{name}: S {} vs table {s_target}",
+                a.sparsity()
+            );
+        }
+    }
+
+    #[test]
+    fn fragmentation_factor_matches_paper() {
+        // paper: E_max = 13 over the 10 adapters yields F_mem = 1.51
+        // (whole-tensor form, M = 64 base experts included)
+        let adapters: Vec<Adapter> = paper_adapter_profiles()
+            .iter()
+            .map(|p| synth_adapter(p, L, 64, 8, 4, 42))
+            .collect();
+        let f = fragmentation_factor(&adapters, 64, 13);
+        assert!((f - 1.51).abs() < 0.03, "F_mem = {f}");
+        // adapter-only view is ~2x
+        let fa = adapter_fragmentation_factor(&adapters, 13);
+        assert!((fa - 2.0).abs() < 0.1, "adapter-only F = {fa}");
+    }
+
+    #[test]
+    fn expert_ids_valid_and_sorted() {
+        let p = &paper_adapter_profiles()[0];
+        let a = synth_adapter(p, 8, 64, 8, 4, 7);
+        for layer in &a.layers {
+            assert!(layer.expert_ids.windows(2).all(|w| w[0] < w[1]));
+            assert!(layer.expert_ids.iter().all(|&id| (id as usize) < 64));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = &paper_adapter_profiles()[3];
+        let a = synth_adapter(p, 8, 64, 8, 4, 5);
+        let b = synth_adapter(p, 8, 64, 8, 4, 5);
+        let c = synth_adapter(p, 8, 64, 8, 4, 6);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn property_counts_within_bounds_any_profile() {
+        crate::util::prop::check(404, 60, |rng| {
+            let max = 1 + rng.below(16) as usize;
+            let avg = 1.0 + rng.f64() * (max as f64 - 1.0);
+            let layers = 1 + rng.below(32) as usize;
+            let p = AdapterProfile {
+                name: "x",
+                domain: "d",
+                max_experts: max,
+                avg_experts: avg,
+            };
+            let counts = layer_counts(&p, layers, rng);
+            assert_eq!(counts.len(), layers);
+            assert_eq!(*counts.iter().max().unwrap(), max);
+            let total: usize = counts.iter().sum();
+            let target = (avg * layers as f64).round() as usize;
+            assert_eq!(total, target.clamp(max, layers * max));
+        });
+    }
+}

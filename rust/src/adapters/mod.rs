@@ -1,0 +1,19 @@
+//! ESFT adapter ecosystem: on-disk format, synthetic generator matching
+//! the paper's published adapter statistics (Table 1), the per-layer ESFT
+//! expert map Π, and the runtime adapter registry.
+//!
+//! An **ESFT adapter** is, per MoE layer, a (possibly empty) set of
+//! fine-tuned experts identified by base-model expert ID, plus the new
+//! weights for exactly those experts. Counts vary across layers and
+//! across adapters (the source of the fragmentation problem the virtual
+//! weight tensor solves).
+
+pub mod expert_map;
+pub mod format;
+pub mod generator;
+pub mod registry;
+
+pub use expert_map::ExpertMaps;
+pub use format::{Adapter, AdapterLayer};
+pub use generator::{paper_adapter_profiles, synth_adapter, AdapterProfile};
+pub use registry::AdapterRegistry;

@@ -1,0 +1,247 @@
+//! Runtime adapter registry: slot assignment, load/evict lifecycle, and
+//! the coupling between the weight store (where the expert rows live) and
+//! the ESFT expert maps (how the router finds them).
+//!
+//! Requests carry an adapter *name*; the registry resolves it to the AID
+//! (slot index) the batch carries to the device. Loading an adapter is the
+//! paper's Figure-1 flow: host-cached [`Adapter`] → physical pages mapped
+//! into the virtual weight tensor → expert map rows installed.
+
+use super::expert_map::ExpertMaps;
+use super::format::Adapter;
+use crate::model::ModelConfig;
+use crate::weights::store::WeightStore;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Metadata of one resident adapter.
+#[derive(Debug, Clone)]
+pub struct ResidentAdapter {
+    pub name: String,
+    pub domain: String,
+    pub slot: usize,
+    /// Fine-tuned expert counts per layer (for stats/evict).
+    pub counts: Vec<usize>,
+    /// Monotonic use counter for LRU eviction.
+    pub last_use: u64,
+}
+
+/// Adapter slot manager over a [`WeightStore`] + [`ExpertMaps`].
+pub struct AdapterRegistry {
+    cfg: ModelConfig,
+    maps: ExpertMaps,
+    by_name: HashMap<String, usize>,
+    slots: Vec<Option<ResidentAdapter>>,
+    clock: u64,
+    /// Bumped whenever the expert maps change (engine re-uploads then).
+    maps_version: u64,
+}
+
+impl AdapterRegistry {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        AdapterRegistry {
+            cfg: cfg.clone(),
+            maps: ExpertMaps::new(cfg),
+            by_name: HashMap::new(),
+            slots: (0..cfg.max_adapters).map(|_| None).collect(),
+            clock: 0,
+            maps_version: 1,
+        }
+    }
+
+    pub fn maps(&self) -> &ExpertMaps {
+        &self.maps
+    }
+
+    pub fn maps_version(&self) -> u64 {
+        self.maps_version
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn resident(&self) -> impl Iterator<Item = &ResidentAdapter> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+
+    /// Resolve a request's adapter name to its AID; `None` (base model)
+    /// maps to -1. Bumps the LRU clock.
+    pub fn resolve(&mut self, name: Option<&str>) -> Result<i32> {
+        match name {
+            None => Ok(-1),
+            Some(n) => match self.by_name.get(n) {
+                Some(&slot) => {
+                    self.clock += 1;
+                    if let Some(r) = self.slots[slot].as_mut() {
+                        r.last_use = self.clock;
+                    }
+                    Ok(slot as i32)
+                }
+                None => bail!("adapter {n:?} is not loaded"),
+            },
+        }
+    }
+
+    /// Peek an AID without touching LRU state.
+    pub fn aid_of(&self, name: &str) -> Option<i32> {
+        self.by_name.get(name).map(|&s| s as i32)
+    }
+
+    /// Load an adapter into a free slot (or error if full — callers can
+    /// evict first via [`Self::lru_victim`]).
+    pub fn load(&mut self, store: &mut WeightStore, adapter: &Adapter) -> Result<usize> {
+        if self.by_name.contains_key(&adapter.name) {
+            bail!("adapter {:?} already loaded", adapter.name);
+        }
+        let slot = match self.slots.iter().position(Option::is_none) {
+            Some(s) => s,
+            None => bail!(
+                "no free adapter slots (N = {}); evict first",
+                self.cfg.max_adapters
+            ),
+        };
+        store.load_adapter(slot, adapter)?;
+        let per_layer: Vec<Vec<u32>> =
+            adapter.layers.iter().map(|l| l.expert_ids.clone()).collect();
+        if let Err(e) = self.maps.install(slot, &per_layer) {
+            // keep store and maps consistent
+            let _ = store.unload_adapter(slot);
+            return Err(e);
+        }
+        self.clock += 1;
+        self.slots[slot] = Some(ResidentAdapter {
+            name: adapter.name.clone(),
+            domain: adapter.domain.clone(),
+            slot,
+            counts: adapter.layers.iter().map(|l| l.expert_count()).collect(),
+            last_use: self.clock,
+        });
+        self.by_name.insert(adapter.name.clone(), slot);
+        self.maps_version += 1;
+        Ok(slot)
+    }
+
+    /// Evict by name; frees pages and resets the map rows.
+    pub fn evict(&mut self, store: &mut WeightStore, name: &str) -> Result<usize> {
+        let slot = match self.by_name.remove(name) {
+            Some(s) => s,
+            None => bail!("adapter {name:?} is not loaded"),
+        };
+        store.unload_adapter(slot)?;
+        self.maps.clear(slot)?;
+        self.slots[slot] = None;
+        self.maps_version += 1;
+        Ok(slot)
+    }
+
+    /// Least-recently-used resident adapter (eviction candidate).
+    pub fn lru_victim(&self) -> Option<&ResidentAdapter> {
+        self.resident().min_by_key(|r| r.last_use)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::generator::{paper_adapter_profiles, synth_adapter};
+    use crate::memsim::DeviceMemory;
+    use crate::vmm::page_pool::PagePool;
+    use crate::weights::base_gen::BaseWeights;
+    use crate::weights::store::StoreMode;
+    use std::sync::{Arc, Mutex};
+
+    fn cfg() -> ModelConfig {
+        let mut c = ModelConfig::paper16b();
+        c.name = "t".into();
+        c.hidden = 16;
+        c.layers = 2;
+        c.num_experts = 8;
+        c.expert_inter = 8;
+        c.shared_inter = 16;
+        c.max_adapters = 2;
+        c.e_max = 3;
+        c.vocab = 32;
+        c.q_heads = 2;
+        c.kv_heads = 1;
+        c.head_dim = 8;
+        c
+    }
+
+    fn setup() -> (AdapterRegistry, WeightStore) {
+        let c = cfg();
+        let pool = Arc::new(Mutex::new(PagePool::new(64 << 10, 4096).unwrap()));
+        let device = DeviceMemory::shared(usize::MAX / 2);
+        let mut store = WeightStore::new(&c, StoreMode::Virtual, pool, device).unwrap();
+        store.load_base(&BaseWeights::generate(&c, 0)).unwrap();
+        (AdapterRegistry::new(&c), store)
+    }
+
+    fn ad(name: &'static str, seed: u64) -> Adapter {
+        let c = cfg();
+        let mut p = paper_adapter_profiles()[0].clone();
+        p.name = name;
+        p.max_experts = c.e_max;
+        p.avg_experts = 2.0;
+        synth_adapter(&p, c.layers, c.num_experts, c.hidden, c.expert_inter, seed)
+    }
+
+    #[test]
+    fn load_resolve_evict_cycle() {
+        let (mut reg, mut store) = setup();
+        assert_eq!(reg.resolve(None).unwrap(), -1);
+        assert!(reg.resolve(Some("a")).is_err());
+
+        let s0 = reg.load(&mut store, &ad("a", 1)).unwrap();
+        let s1 = reg.load(&mut store, &ad("b", 2)).unwrap();
+        assert_ne!(s0, s1);
+        assert_eq!(reg.resolve(Some("a")).unwrap(), s0 as i32);
+        assert_eq!(reg.resident_count(), 2);
+
+        // full: third load fails until eviction
+        assert!(reg.load(&mut store, &ad("c", 3)).is_err());
+        reg.evict(&mut store, "a").unwrap();
+        assert!(reg.aid_of("a").is_none());
+        let s2 = reg.load(&mut store, &ad("c", 3)).unwrap();
+        assert_eq!(s2, s0); // reuses the freed slot
+    }
+
+    #[test]
+    fn maps_follow_lifecycle() {
+        let (mut reg, mut store) = setup();
+        let v0 = reg.maps_version();
+        let a = ad("a", 4);
+        let slot = reg.load(&mut store, &a).unwrap();
+        assert!(reg.maps_version() > v0);
+        // a fine-tuned expert points into the adapter window
+        let c = cfg();
+        let delta = c.adapter_slot_base(slot) as i32;
+        let l0 = &a.layers[0].expert_ids;
+        if let Some(&j) = l0.first() {
+            let got = reg.maps().lookup(0, slot as i32, j as usize);
+            assert!(got >= delta && got < delta + c.e_max as i32);
+        }
+        reg.evict(&mut store, "a").unwrap();
+        if let Some(&j) = l0.first() {
+            assert_eq!(reg.maps().lookup(0, slot as i32, j as usize), j as i32);
+        }
+    }
+
+    #[test]
+    fn lru_victim_is_least_recently_resolved() {
+        let (mut reg, mut store) = setup();
+        reg.load(&mut store, &ad("a", 1)).unwrap();
+        reg.load(&mut store, &ad("b", 2)).unwrap();
+        reg.resolve(Some("a")).unwrap(); // touch a; b is now LRU
+        assert_eq!(reg.lru_victim().unwrap().name, "b");
+        reg.resolve(Some("b")).unwrap();
+        assert_eq!(reg.lru_victim().unwrap().name, "a");
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let (mut reg, mut store) = setup();
+        reg.load(&mut store, &ad("a", 1)).unwrap();
+        assert!(reg.load(&mut store, &ad("a", 9)).is_err());
+    }
+}

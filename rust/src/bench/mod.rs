@@ -1,0 +1,155 @@
+//! Micro-benchmark harness (criterion substitute) used by the
+//! `rust/benches/*` paper-reproduction targets.
+//!
+//! Provides warmup + timed sampling with summary statistics, simple
+//! fixed-width table printing (the "same rows the paper reports"), and
+//! CSV emission under `target/bench_results/` for EXPERIMENTS.md.
+
+use crate::util::stats::{Samples, Summary};
+use std::io::Write;
+use std::time::Instant;
+
+/// Time `f` for `samples` measured runs after `warmup` unmeasured ones.
+pub fn time_fn<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s.summary()
+}
+
+/// Time a fallible closure, propagating the first error.
+pub fn time_fn_result<F: FnMut() -> anyhow::Result<()>>(
+    warmup: usize,
+    samples: usize,
+    mut f: F,
+) -> anyhow::Result<Summary> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut s = Samples::new();
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f()?;
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(s.summary())
+}
+
+/// Fixed-width table printer for paper-style result blocks.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {title} ==");
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Write the table as CSV under `target/bench_results/<name>.csv`.
+    pub fn write_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("target/bench_results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path)
+    }
+}
+
+/// Format seconds as adaptive ms/us.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.1}ms", secs * 1e3)
+    } else {
+        format!("{:.1}us", secs * 1e6)
+    }
+}
+
+/// Bytes with binary units.
+pub fn fmt_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_sane() {
+        let s = time_fn(1, 5, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert_eq!(s.n, 5);
+        assert!(s.median >= 0.002 && s.median < 0.2, "{}", s.median);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print("test");
+        let p = t.write_csv("harness_selftest").unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_time(2.0), "2.00s");
+        assert_eq!(fmt_time(0.0025), "2.5ms");
+        assert_eq!(fmt_time(2.5e-6), "2.5us");
+        assert_eq!(fmt_bytes(10), "10B");
+        assert_eq!(fmt_bytes(2 << 20), "2.00MiB");
+    }
+}

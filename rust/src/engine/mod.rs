@@ -1,0 +1,419 @@
+//! The serving engine: one deployment of the model on one (simulated)
+//! device, tying together the PJRT runtime, the weight store + adapter
+//! registry, the continuous-batching scheduler, the KV cache and the
+//! sampler.
+//!
+//! Deployment flavours mirror the paper's systems under test:
+//! * [`Engine::new_weave`] — **ExpertWeave**: shared base model +
+//!   N adapters through the virtual weight tensor and batched rerouting
+//!   (or the SingleOp rerouting baseline, or the Padding store baseline).
+//! * [`Engine::new_base_only`] — *vLLM-Ascend (Base-Only)*.
+//! * [`Engine::new_merged`] — *vLLM-Ascend (Merged)*: one engine instance
+//!   per adapter, serving its merged checkpoint in isolation.
+
+use crate::adapters::format::Adapter;
+use crate::adapters::registry::AdapterRegistry;
+use crate::kvcache::KvCache;
+use crate::memsim::DeviceMemory;
+use crate::metrics::{MetricsCollector, Report, RequestRecord};
+use crate::model::ModelConfig;
+use crate::runtime::{ArtifactSet, Runtime, Variant};
+use crate::sampler::{sample, Sampling};
+use crate::scheduler::{SchedConfig, Scheduler, SeqState, SlotMeta};
+use crate::util::rng::Pcg;
+use crate::vmm::page_pool::PagePool;
+use crate::weights::{
+    BaseOnlyParams, BaseWeights, MergedParams, StoreMode, StoreParams, WeightStore,
+};
+use anyhow::{bail, Context, Result};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A request as submitted by clients / the trace replayer.
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    /// Adapter name; `None` = base model.
+    pub adapter: Option<String>,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+}
+
+/// Completed request (tokens + latency record).
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub adapter: Option<String>,
+    pub output: Vec<i32>,
+    pub record: RequestRecord,
+}
+
+/// Engine tuning knobs beyond the artifact config.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Chunked-prefill budget per sequence per step.
+    pub chunk: usize,
+    /// Cap on concurrent sequences (≤ artifact max_seqs).
+    pub max_seqs: usize,
+    /// Seed for sampling.
+    pub seed: u64,
+    /// Physical page size for the weight store.
+    pub page_size: usize,
+    /// Simulated device capacity in bytes (weights ledger).
+    pub device_capacity: usize,
+    /// Fraction of the testbed's compute this deployment owns (1.0 =
+    /// whole machine). Emulates per-instance device partitioning on the
+    /// single-core testbed: after each step the engine idles
+    /// `elapsed * (1/share - 1)`, so an instance pinned to half the
+    /// devices runs at half speed even when its neighbours are idle
+    /// (the Fig. 6 merged-deployment setup; see DESIGN.md section 7).
+    pub compute_share: f64,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            chunk: 256,
+            max_seqs: usize::MAX,
+            seed: 0,
+            page_size: 2 << 20,
+            device_capacity: usize::MAX / 2,
+            compute_share: 1.0,
+        }
+    }
+}
+
+enum Weights {
+    Weave { store: WeightStore, registry: AdapterRegistry },
+    BaseOnly,
+    Merged { adapter: Adapter },
+}
+
+/// One model deployment.
+pub struct Engine {
+    cfg: ModelConfig,
+    runtime: Runtime,
+    base: BaseWeights,
+    weights: Weights,
+    scheduler: Scheduler,
+    kv: KvCache,
+    slot_meta: SlotMeta,
+    pub metrics: MetricsCollector,
+    rng: Pcg,
+    next_seq: u64,
+    weights_version: u64,
+    device: Arc<Mutex<DeviceMemory>>,
+    compute_share: f64,
+}
+
+impl Engine {
+    fn sched_config(cfg: &ModelConfig, opts: &EngineOptions) -> SchedConfig {
+        SchedConfig {
+            max_seqs: cfg.max_seqs.min(opts.max_seqs),
+            chunk: opts.chunk.min(*cfg.buckets.last().unwrap()),
+            buckets: cfg.buckets.clone(),
+            kv_cap: cfg.kv_cap,
+        }
+    }
+
+    /// ExpertWeave deployment: shared base + adapters.
+    ///
+    /// `variant` selects the rerouting implementation
+    /// ([`Variant::Weave`] fused kernel / [`Variant::SingleOp`]);
+    /// `mode` selects the weight store ([`StoreMode::Virtual`] /
+    /// [`StoreMode::Padding`] baseline).
+    pub fn new_weave(
+        set: &ArtifactSet,
+        adapters: &[Adapter],
+        variant: Variant,
+        mode: StoreMode,
+        opts: EngineOptions,
+    ) -> Result<Engine> {
+        if !variant.is_adapter_aware() {
+            bail!("weave deployment needs an adapter-aware variant");
+        }
+        let cfg = set.config.clone();
+        let runtime = Runtime::new(set, variant)?;
+        let base = BaseWeights::generate(&cfg, opts.seed);
+        let device = DeviceMemory::shared(opts.device_capacity);
+        // pool sized to the device budget (pages are the real constraint)
+        let pool_pages = (opts.device_capacity / opts.page_size).min(1 << 20);
+        let pool = Arc::new(Mutex::new(PagePool::new(opts.page_size, pool_pages)?));
+        let mut store = WeightStore::new(&cfg, mode, pool, device.clone())?;
+        store.load_base(&base)?;
+        let mut registry = AdapterRegistry::new(&cfg);
+        for a in adapters {
+            registry.load(&mut store, a)?;
+        }
+        let mut engine = Engine {
+            scheduler: Scheduler::new(Self::sched_config(&cfg, &opts)),
+            kv: KvCache::new(cfg.kv_cap),
+            slot_meta: SlotMeta::new(cfg.kv_cap),
+            metrics: MetricsCollector::new(),
+            rng: Pcg::with_stream(opts.seed, 555),
+            next_seq: 1,
+            weights_version: 1,
+            device,
+            cfg,
+            runtime,
+            base,
+            compute_share: opts.compute_share.clamp(0.05, 1.0),
+            weights: Weights::Weave { store, registry },
+        };
+        engine.sync_device_state()?;
+        Ok(engine)
+    }
+
+    /// vLLM-Ascend (Base-Only) baseline.
+    pub fn new_base_only(set: &ArtifactSet, opts: EngineOptions) -> Result<Engine> {
+        let cfg = set.config.clone();
+        let runtime = Runtime::new(set, Variant::Base)?;
+        let base = BaseWeights::generate(&cfg, opts.seed);
+        let device = DeviceMemory::shared(opts.device_capacity);
+        device
+            .lock()
+            .unwrap()
+            .alloc(cfg.base_model_bytes())
+            .context("base model exceeds device budget")?;
+        let mut engine = Engine {
+            scheduler: Scheduler::new(Self::sched_config(&cfg, &opts)),
+            kv: KvCache::new(cfg.kv_cap),
+            slot_meta: SlotMeta::new(cfg.kv_cap),
+            metrics: MetricsCollector::new(),
+            rng: Pcg::with_stream(opts.seed, 555),
+            next_seq: 1,
+            weights_version: 1,
+            device,
+            cfg,
+            runtime,
+            base,
+            compute_share: opts.compute_share.clamp(0.05, 1.0),
+            weights: Weights::BaseOnly,
+        };
+        engine.sync_device_state()?;
+        Ok(engine)
+    }
+
+    /// vLLM-Ascend (Merged) baseline: serves exactly one adapter's merged
+    /// checkpoint.
+    pub fn new_merged(set: &ArtifactSet, adapter: Adapter, opts: EngineOptions) -> Result<Engine> {
+        let cfg = set.config.clone();
+        let runtime = Runtime::new(set, Variant::Base)?;
+        let base = BaseWeights::generate(&cfg, opts.seed);
+        let device = DeviceMemory::shared(opts.device_capacity);
+        device
+            .lock()
+            .unwrap()
+            .alloc(cfg.base_model_bytes())
+            .context("merged model exceeds device budget")?;
+        let mut engine = Engine {
+            scheduler: Scheduler::new(Self::sched_config(&cfg, &opts)),
+            kv: KvCache::new(cfg.kv_cap),
+            slot_meta: SlotMeta::new(cfg.kv_cap),
+            metrics: MetricsCollector::new(),
+            rng: Pcg::with_stream(opts.seed, 555),
+            next_seq: 1,
+            weights_version: 1,
+            device,
+            cfg,
+            runtime,
+            base,
+            compute_share: opts.compute_share.clamp(0.05, 1.0),
+            weights: Weights::Merged { adapter },
+        };
+        engine.sync_device_state()?;
+        Ok(engine)
+    }
+
+    /// Upload weights + expert maps if stale.
+    fn sync_device_state(&mut self) -> Result<()> {
+        match &self.weights {
+            Weights::Weave { store, registry } => {
+                let mut src = StoreParams::new(&self.base, store);
+                self.runtime.upload_params(&mut src, self.weights_version)?;
+                self.runtime
+                    .upload_expert_maps(registry.maps().as_slice(), registry.maps_version())?;
+            }
+            Weights::BaseOnly => {
+                let mut src = BaseOnlyParams { base: &self.base };
+                self.runtime.upload_params(&mut src, self.weights_version)?;
+            }
+            Weights::Merged { adapter } => {
+                let mut src = MergedParams::new(&self.cfg, &self.base, adapter);
+                self.runtime.upload_params(&mut src, self.weights_version)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.runtime.variant()
+    }
+
+    pub fn device(&self) -> Arc<Mutex<DeviceMemory>> {
+        self.device.clone()
+    }
+
+    pub fn kv_free_slots(&self) -> usize {
+        self.kv.free_slots()
+    }
+
+    /// Load another adapter at runtime (weave deployments only).
+    pub fn load_adapter(&mut self, adapter: &Adapter) -> Result<usize> {
+        let Weights::Weave { store, registry } = &mut self.weights else {
+            bail!("adapter load on a non-weave deployment");
+        };
+        let slot = registry.load(store, adapter)?;
+        self.weights_version += 1;
+        self.sync_device_state()?;
+        Ok(slot)
+    }
+
+    /// Evict an adapter at runtime (weave deployments only).
+    pub fn evict_adapter(&mut self, name: &str) -> Result<()> {
+        let Weights::Weave { store, registry } = &mut self.weights else {
+            bail!("adapter evict on a non-weave deployment");
+        };
+        registry.evict(store, name)?;
+        self.weights_version += 1;
+        self.sync_device_state()
+    }
+
+    /// Submit a request; returns the sequence id.
+    pub fn submit(&mut self, req: RequestSpec) -> Result<u64> {
+        let aid = match (&mut self.weights, &req.adapter) {
+            (Weights::Weave { registry, .. }, name) => registry.resolve(name.as_deref())?,
+            (Weights::BaseOnly, None) => -1,
+            (Weights::BaseOnly, Some(n)) => {
+                bail!("base-only deployment cannot serve adapter {n:?}")
+            }
+            (Weights::Merged { adapter }, Some(n)) if *n == adapter.name => -1,
+            (Weights::Merged { .. }, None) => -1,
+            (Weights::Merged { adapter }, Some(n)) => bail!(
+                "merged instance serves {:?}, got request for {n:?}",
+                adapter.name
+            ),
+        };
+        if req.prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if req.prompt.len() + req.max_new_tokens.max(1) > self.cfg.kv_cap {
+            bail!(
+                "request needs {} KV slots (prompt {} + output {}), capacity is {}",
+                req.prompt.len() + req.max_new_tokens.max(1),
+                req.prompt.len(),
+                req.max_new_tokens.max(1),
+                self.cfg.kv_cap
+            );
+        }
+        let id = self.next_seq;
+        self.next_seq += 1;
+        self.scheduler.submit(SeqState::new(
+            id,
+            aid,
+            req.adapter,
+            req.prompt,
+            req.max_new_tokens.max(1),
+            req.sampling,
+        ));
+        Ok(id)
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.scheduler.is_idle()
+    }
+
+    pub fn queue_depth(&self) -> (usize, usize) {
+        (self.scheduler.waiting_len(), self.scheduler.running_len())
+    }
+
+    /// Run one engine iteration (one packed batch through the model).
+    /// Returns completions finished this step; `None` if idle.
+    pub fn step(&mut self) -> Result<Option<Vec<Completion>>> {
+        let t0 = Instant::now();
+        let Some(batch) = self.scheduler.build_batch(&mut self.kv, &mut self.slot_meta)? else {
+            return Ok(None);
+        };
+        let out = self.runtime.step(batch.bucket, &batch.inputs)?;
+        // sample every row that completed its backlog
+        for &(row, seq_id) in &batch.rows {
+            let logits = &out.logits[row * self.cfg.vocab..(row + 1) * self.cfg.vocab];
+            let sampling = self
+                .scheduler
+                .running()
+                .iter()
+                .find(|s| s.id == seq_id)
+                .map(|s| s.sampling)
+                .unwrap_or(Sampling::Greedy);
+            let tok = sample(logits, sampling, &mut self.rng);
+            self.scheduler.push_token(seq_id, tok)?;
+        }
+        // device-partitioning emulation: idle out the unowned share
+        if self.compute_share < 1.0 {
+            let extra = t0.elapsed().mul_f64(1.0 / self.compute_share - 1.0);
+            std::thread::sleep(extra);
+        }
+        let finished = self.scheduler.reap(&mut self.kv, &mut self.slot_meta);
+        self.metrics.record_step(
+            t0.elapsed(),
+            out.execute_time,
+            batch.prefill_tokens + batch.decode_tokens,
+        );
+        let completions: Vec<Completion> = finished
+            .into_iter()
+            .map(|seq| {
+                let first = seq.first_token_at.unwrap_or_else(Instant::now);
+                let end = seq.finished_at.unwrap_or_else(Instant::now);
+                let outputs = seq.generated();
+                let record = RequestRecord {
+                    id: seq.id,
+                    adapter: seq.adapter.clone(),
+                    prompt_tokens: seq.prompt_len,
+                    output_tokens: outputs,
+                    ttft: first - seq.arrival,
+                    tpot: (outputs > 1)
+                        .then(|| (end - first) / (outputs as u32 - 1)),
+                    e2e: end - seq.arrival,
+                };
+                self.metrics.complete_request(record.clone());
+                Completion {
+                    id: seq.id,
+                    adapter: seq.adapter,
+                    output: seq.tokens[seq.prompt_len..].to_vec(),
+                    record,
+                }
+            })
+            .collect();
+        Ok(Some(completions))
+    }
+
+    /// Drain everything that is queued; returns all completions.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        while let Some(mut done) = self.step()? {
+            all.append(&mut done);
+        }
+        Ok(all)
+    }
+
+    pub fn report(&mut self) -> Report {
+        self.metrics.report()
+    }
+
+    /// Start a fresh serving session on the same deployment: clears the
+    /// scheduler, KV cache and metrics (weights and compiled executables
+    /// stay resident). Benches reuse one engine across sweep cells to
+    /// amortize PJRT compilation.
+    pub fn reset_session(&mut self) {
+        assert!(self.scheduler.is_idle() || true);
+        self.scheduler = Scheduler::new(Scheduler::rebuild_config(&self.scheduler));
+        self.kv = KvCache::new(self.cfg.kv_cap);
+        self.slot_meta = SlotMeta::new(self.cfg.kv_cap);
+        self.metrics = MetricsCollector::new();
+        self.runtime.reset_kv();
+    }
+}

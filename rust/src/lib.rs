@@ -1,0 +1,49 @@
+//! # ExpertWeave
+//!
+//! A from-scratch reproduction of *ExpertWeave: Efficiently Serving
+//! Expert-Specialized Fine-Tuned Adapters at Scale* (CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! ExpertWeave serves many **ESFT adapters** (per-layer subsets of fine-tuned
+//! MoE experts) concurrently over a single shared Mixture-of-Experts base
+//! model. Its two core mechanisms, both implemented here:
+//!
+//! * **Virtual-memory-assisted expert weight management** ([`vmm`],
+//!   [`weights`]): one contiguous *virtual weight tensor* of
+//!   `M + N * E_max` expert slots per MoE projection, with physical 2 MB
+//!   pages mapped only under slots that actually hold expert weights.
+//!   Padding slots consume address space but no memory.
+//! * **Batched rerouting** ([`adapters`], L1 Pallas kernel):
+//!   per-layer expert maps `Π[aid, expert]` rewrite the router's top-k
+//!   expert IDs per token so that tokens of different adapters, batched
+//!   together, are dispatched to the right fine-tuned experts by an
+//!   *unmodified* grouped-matmul operator.
+//!
+//! The crate is organised like a serving framework (vLLM-role), because the
+//! paper's system is one: [`scheduler`] (continuous batching + chunked
+//! prefill), [`kvcache`], [`sampler`], [`runtime`] (PJRT execution of
+//! AOT-lowered JAX/Pallas artifacts), [`server`] (request loop), plus the
+//! experiment substrates [`workload`], [`metrics`], [`memsim`] and
+//! [`bench`].
+//!
+//! Python/JAX runs only at build time (`make artifacts`); the request path
+//! is pure Rust + PJRT.
+
+pub mod adapters;
+pub mod bench;
+pub mod engine;
+pub mod kvcache;
+pub mod memsim;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sampler;
+pub mod scheduler;
+pub mod server;
+pub mod util;
+pub mod vmm;
+pub mod weights;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,258 @@
+//! `expertweave` — the leader CLI.
+//!
+//! Subcommands:
+//! * `serve`        — replay a synthetic workload trace against a
+//!                    deployment (weave / base-only / merged) and print
+//!                    the serving report.
+//! * `gen-adapters` — synthesize the Table-1 ESFT adapters for a config
+//!                    and write `.esft` checkpoints.
+//! * `inspect`      — show an artifact set (config, executables, ABI).
+//! * `sparsity`     — print the Table-1 sparsity/fragmentation analysis.
+//!
+//! Examples:
+//! ```text
+//! expertweave inspect --config tiny
+//! expertweave gen-adapters --config small --out /tmp/adapters
+//! expertweave serve --config tiny --adapters 2 --lambda 5 --horizon 10
+//! ```
+
+use anyhow::{bail, Context, Result};
+use expertweave::adapters::generator::{
+    adapter_fragmentation_factor, fragmentation_factor, paper_adapter_profiles, synth_adapter,
+};
+use expertweave::bench::Table;
+use expertweave::engine::{Engine, EngineOptions};
+use expertweave::runtime::{ArtifactSet, Variant};
+use expertweave::server;
+use expertweave::util::args::Args;
+use expertweave::util::logging::{set_level, Level};
+use expertweave::weights::StoreMode;
+use expertweave::workload::trace::{Trace, TraceSpec};
+use std::path::PathBuf;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("usage: expertweave <serve|gen-adapters|inspect|sparsity> [options]");
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let result = match cmd.as_str() {
+        "serve" => serve(argv),
+        "gen-adapters" => gen_adapters(argv),
+        "inspect" => inspect(argv),
+        "sparsity" => sparsity(argv),
+        other => {
+            eprintln!("unknown command {other:?}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifact_set(config: &str) -> Result<ArtifactSet> {
+    let dir = PathBuf::from("artifacts").join(config);
+    ArtifactSet::load(&dir)
+}
+
+fn serve(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("expertweave serve", "replay a synthetic trace")
+        .opt("config", Some("tiny"), "artifact config (tiny|small)")
+        .opt("deployment", Some("weave"), "weave|singleop|padding|base-only")
+        .opt("adapters", Some("2"), "number of Table-1 adapters to load")
+        .opt("lambda", Some("2.0"), "aggregate arrival rate (req/s)")
+        .opt("alpha", Some("1.0"), "power-law skew (1 = uniform)")
+        .opt("horizon", Some("10.0"), "trace horizon (s)")
+        .opt("chunk", Some("256"), "chunked-prefill budget per seq")
+        .opt("seed", Some("0"), "workload seed")
+        .flag("verbose", "debug logging")
+        .parse(argv)
+        .map_err(anyhow::Error::msg)?;
+    if a.has_flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let set = artifact_set(&a.get_or("config", "tiny"))?;
+    let cfg = set.config.clone();
+    let n: usize = a.get_usize("adapters").map_err(anyhow::Error::msg)?;
+    if n > cfg.max_adapters {
+        bail!("config supports at most {} adapters", cfg.max_adapters);
+    }
+    let profiles = paper_adapter_profiles();
+    let adapters: Vec<_> = (0..n)
+        .map(|i| {
+            let mut p = profiles[i % profiles.len()].clone();
+            p.max_experts = p.max_experts.min(cfg.e_max);
+            p.avg_experts = p.avg_experts.min(p.max_experts as f64);
+            synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, 42 + i as u64)
+        })
+        .collect();
+
+    let opts = EngineOptions {
+        chunk: a.get_usize("chunk").map_err(anyhow::Error::msg)?,
+        ..Default::default()
+    };
+    let deployment = a.get_or("deployment", "weave");
+    let mut engine = match deployment.as_str() {
+        "weave" => Engine::new_weave(&set, &adapters, Variant::Weave, StoreMode::Virtual, opts)?,
+        "singleop" => {
+            Engine::new_weave(&set, &adapters, Variant::SingleOp, StoreMode::Virtual, opts)?
+        }
+        "padding" => Engine::new_weave(&set, &adapters, Variant::Weave, StoreMode::Padding, opts)?,
+        "base-only" => Engine::new_base_only(&set, opts)?,
+        other => bail!("unknown deployment {other:?}"),
+    };
+
+    let trace_adapters: Vec<(String, String)> = if deployment == "base-only" {
+        vec![]
+    } else {
+        adapters
+            .iter()
+            .map(|ad| (ad.name.clone(), ad.domain.clone()))
+            .collect()
+    };
+    let mut trace = if trace_adapters.is_empty() {
+        // base-only: same arrival pattern, all requests to the base model
+        let mut t = Trace::generate(&TraceSpec {
+            adapters: vec![("base".into(), "math".into())],
+            lambda: a.get_f64("lambda").map_err(anyhow::Error::msg)?,
+            alpha: 1.0,
+            horizon: a.get_f64("horizon").map_err(anyhow::Error::msg)?,
+            vocab: cfg.vocab,
+            seed: a.get_usize("seed").map_err(anyhow::Error::msg)? as u64,
+        });
+        for e in &mut t.events {
+            e.adapter = None;
+        }
+        t
+    } else {
+        Trace::generate(&TraceSpec {
+            adapters: trace_adapters,
+            lambda: a.get_f64("lambda").map_err(anyhow::Error::msg)?,
+            alpha: a.get_f64("alpha").map_err(anyhow::Error::msg)?,
+            horizon: a.get_f64("horizon").map_err(anyhow::Error::msg)?,
+            vocab: cfg.vocab,
+            seed: a.get_usize("seed").map_err(anyhow::Error::msg)? as u64,
+        })
+    };
+    // keep prompts + outputs within the model's bucket/KV budget
+    let max_prompt = cfg.buckets.last().copied().unwrap_or(64).min(cfg.kv_cap / 2);
+    let max_new = (cfg.kv_cap / 8).max(1);
+    for e in &mut trace.events {
+        e.prompt.truncate(max_prompt);
+        e.max_new_tokens = e.max_new_tokens.clamp(1, max_new);
+    }
+    println!(
+        "replaying {} requests over {:.1}s against {deployment} ({})...",
+        trace.len(),
+        a.get_f64("horizon").map_err(anyhow::Error::msg)?,
+        cfg.name
+    );
+    let outcome = server::replay(&mut engine, &trace)?;
+    println!("{}", outcome.report.row(&format!("{deployment}/{}", cfg.name)));
+    if outcome.rejected > 0 {
+        println!("rejected: {}", outcome.rejected);
+    }
+    Ok(())
+}
+
+fn gen_adapters(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("expertweave gen-adapters", "write Table-1 .esft checkpoints")
+        .opt("config", Some("small"), "artifact config")
+        .opt("out", Some("adapters"), "output directory")
+        .opt("seed", Some("42"), "generator seed")
+        .parse(argv)
+        .map_err(anyhow::Error::msg)?;
+    let set = artifact_set(&a.get_or("config", "small"))?;
+    let cfg = set.config;
+    let dir = PathBuf::from(a.get_or("out", "adapters"));
+    std::fs::create_dir_all(&dir)?;
+    let seed: u64 = a.get_usize("seed").map_err(anyhow::Error::msg)? as u64;
+    for p in paper_adapter_profiles() {
+        let mut p = p;
+        p.max_experts = p.max_experts.min(cfg.e_max);
+        p.avg_experts = p.avg_experts.min(p.max_experts as f64);
+        let ad = synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, seed);
+        let path = dir.join(format!("{}.esft", ad.name));
+        ad.save(&path).with_context(|| format!("write {}", path.display()))?;
+        println!(
+            "{:<20} max={:<3} avg={:<5.2} S={:.2} {}",
+            ad.name,
+            ad.max_experts(),
+            ad.avg_experts(),
+            ad.sparsity(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn inspect(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("expertweave inspect", "show an artifact set")
+        .opt("config", Some("tiny"), "artifact config")
+        .parse(argv)
+        .map_err(anyhow::Error::msg)?;
+    let set = artifact_set(&a.get_or("config", "tiny"))?;
+    let c = &set.config;
+    println!("config {}", c.name);
+    println!(
+        "  H={} L={} QH={} KVH={} D={} vocab={}",
+        c.hidden, c.layers, c.q_heads, c.kv_heads, c.head_dim, c.vocab
+    );
+    println!(
+        "  experts: M={} top-k={} F={} | adapters: N={} E_max={} G={}",
+        c.num_experts, c.top_k, c.expert_inter, c.max_adapters, c.e_max,
+        c.total_expert_slots()
+    );
+    println!("  kv_cap={} max_seqs={} buckets={:?}", c.kv_cap, c.max_seqs, c.buckets);
+    println!(
+        "  base model ≈ {} (f32), expert = {}/layer/proj",
+        expertweave::bench::fmt_bytes(c.base_model_bytes()),
+        expertweave::bench::fmt_bytes(c.expert_proj_bytes()),
+    );
+    let mut t = Table::new(&["file", "variant", "bucket", "out_rows", "gmm_blk", "inputs"]);
+    for e in &set.executables {
+        t.row(&[
+            e.file.file_name().unwrap().to_string_lossy().to_string(),
+            e.variant.as_str().to_string(),
+            e.bucket.to_string(),
+            e.out_rows.to_string(),
+            e.gmm_block.to_string(),
+            (e.params.len() + e.inputs.len()).to_string(),
+        ]);
+    }
+    t.print("executables");
+    Ok(())
+}
+
+fn sparsity(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("expertweave sparsity", "Table-1 adapter analysis")
+        .opt("layers", Some("26"), "layers (26 = paper scale)")
+        .opt("e-max", Some("13"), "E_max for fragmentation")
+        .parse(argv)
+        .map_err(anyhow::Error::msg)?;
+    let layers: usize = a.get_usize("layers").map_err(anyhow::Error::msg)?;
+    let e_max: usize = a.get_usize("e-max").map_err(anyhow::Error::msg)?;
+    let adapters: Vec<_> = paper_adapter_profiles()
+        .iter()
+        .map(|p| synth_adapter(p, layers, 64, 8, 4, 42))
+        .collect();
+    let mut t = Table::new(&["adapter", "max#", "avg#", "sparsity"]);
+    for ad in &adapters {
+        t.row(&[
+            ad.name.clone(),
+            ad.max_experts().to_string(),
+            format!("{:.2}", ad.avg_experts()),
+            format!("{:.2}", ad.sparsity()),
+        ]);
+    }
+    t.print("Table 1 — adapter sparsity");
+    println!(
+        "F_mem (M=64, E_max={e_max}): {:.2}   adapter-only: {:.2}",
+        fragmentation_factor(&adapters, 64, e_max),
+        adapter_fragmentation_factor(&adapters, e_max)
+    );
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Simulated accelerator memory budget.
+//!
+//! The paper's memory-efficiency experiments (Fig. 9) run on one 64 GB
+//! Ascend NPU. CPU PJRT has no such boundary, so every component that
+//! would consume device memory (expert weight pages, KV cache slots,
+//! activation reserve) charges a [`DeviceMemory`] ledger instead. All
+//! capacity/OOM numbers reported by the benches come from this ledger
+//! driven by the *real* allocator logic (`vmm::expert_manager` in
+//! accounting mode), making the paper-scale math exact.
+
+use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex};
+
+/// A byte-granular device memory ledger with OOM semantics.
+#[derive(Debug)]
+pub struct DeviceMemory {
+    capacity: usize,
+    used: usize,
+    peak: usize,
+}
+
+impl DeviceMemory {
+    pub fn new(capacity: usize) -> Self {
+        DeviceMemory { capacity, used: 0, peak: 0 }
+    }
+
+    /// Shared handle (weights manager + KV cache charge the same device).
+    pub fn shared(capacity: usize) -> Arc<Mutex<DeviceMemory>> {
+        Arc::new(Mutex::new(DeviceMemory::new(capacity)))
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Charge `bytes`; fails with an OOM error if the budget is exceeded.
+    pub fn alloc(&mut self, bytes: usize) -> Result<()> {
+        if self.used + bytes > self.capacity {
+            bail!(
+                "device OOM: need {bytes} B, {} B free of {} B",
+                self.free(),
+                self.capacity
+            );
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    /// Release `bytes` back to the budget.
+    pub fn release(&mut self, bytes: usize) {
+        debug_assert!(bytes <= self.used, "release of {bytes} B exceeds used {}", self.used);
+        self.used = self.used.saturating_sub(bytes);
+    }
+}
+
+/// Convenience: gibibytes.
+pub const fn gib(n: usize) -> usize {
+    n << 30
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_and_oom() {
+        let mut d = DeviceMemory::new(100);
+        d.alloc(60).unwrap();
+        assert_eq!(d.free(), 40);
+        assert!(d.alloc(41).is_err());
+        d.alloc(40).unwrap();
+        assert_eq!(d.free(), 0);
+        d.release(100);
+        assert_eq!(d.used(), 0);
+        assert_eq!(d.peak(), 100);
+    }
+
+    #[test]
+    fn failed_alloc_charges_nothing() {
+        let mut d = DeviceMemory::new(10);
+        assert!(d.alloc(11).is_err());
+        assert_eq!(d.used(), 0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Serving metrics: the paper's four headline numbers — prefill
+//! throughput, TTFT, decode throughput, TPOT — plus per-step engine
+//! telemetry.
+
+use crate::util::stats::{Samples, Summary};
+use std::time::Duration;
+
+/// Per-request lifecycle record.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub adapter: Option<String>,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    /// Arrival → first output token.
+    pub ttft: Duration,
+    /// Mean time per output token after the first.
+    pub tpot: Option<Duration>,
+    /// Arrival → completion.
+    pub e2e: Duration,
+}
+
+/// Aggregated serving metrics over a run.
+#[derive(Debug, Default)]
+pub struct MetricsCollector {
+    records: Vec<RequestRecord>,
+    pub step_count: usize,
+    pub step_time: Samples,
+    /// Time spent inside PJRT execute (XLA compute) per step.
+    pub execute_time: Samples,
+    pub batched_tokens: Samples,
+    run_wall: Option<Duration>,
+}
+
+/// Final report of a serving run (one Fig. 5/6 data point).
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub requests: usize,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    /// tokens / s over the run wall time.
+    pub prefill_throughput: f64,
+    pub decode_throughput: f64,
+    pub ttft: Summary,
+    pub tpot: Summary,
+    pub e2e: Summary,
+    pub wall: f64,
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn complete_request(&mut self, rec: RequestRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn record_step(&mut self, wall: Duration, execute: Duration, tokens: usize) {
+        self.step_count += 1;
+        self.step_time.push(wall.as_secs_f64());
+        self.execute_time.push(execute.as_secs_f64());
+        self.batched_tokens.push(tokens as f64);
+    }
+
+    pub fn set_wall(&mut self, wall: Duration) {
+        self.run_wall = Some(wall);
+    }
+
+    pub fn completed(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn records(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    pub fn report(&mut self) -> Report {
+        let wall = self
+            .run_wall
+            .map(|d| d.as_secs_f64())
+            .unwrap_or_else(|| self.step_time.sum())
+            .max(1e-9);
+        let prefill_tokens: usize = self.records.iter().map(|r| r.prompt_tokens).sum();
+        let decode_tokens: usize = self.records.iter().map(|r| r.output_tokens).sum();
+        let mut ttft = Samples::new();
+        let mut tpot = Samples::new();
+        let mut e2e = Samples::new();
+        for r in &self.records {
+            ttft.push(r.ttft.as_secs_f64());
+            if let Some(t) = r.tpot {
+                tpot.push(t.as_secs_f64());
+            }
+            e2e.push(r.e2e.as_secs_f64());
+        }
+        Report {
+            requests: self.records.len(),
+            prefill_tokens,
+            decode_tokens,
+            prefill_throughput: prefill_tokens as f64 / wall,
+            decode_throughput: decode_tokens as f64 / wall,
+            ttft: ttft.summary(),
+            tpot: tpot.summary(),
+            e2e: e2e.summary(),
+            wall,
+        }
+    }
+}
+
+impl Report {
+    /// One bench-output row (fixed-width, paper-style).
+    pub fn row(&self, label: &str) -> String {
+        format!(
+            "{label:<28} req={:<4} prefill={:>8.1} tok/s decode={:>7.1} tok/s \
+             TTFT p50={:>7.1} ms TPOT p50={:>7.1} ms",
+            self.requests,
+            self.prefill_throughput,
+            self.decode_throughput,
+            self.ttft.median * 1e3,
+            self.tpot.median * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_math() {
+        let mut m = MetricsCollector::new();
+        for i in 0..4 {
+            m.complete_request(RequestRecord {
+                id: i,
+                adapter: None,
+                prompt_tokens: 100,
+                output_tokens: 10,
+                ttft: Duration::from_millis(50 + i as u64 * 10),
+                tpot: Some(Duration::from_millis(20)),
+                e2e: Duration::from_millis(300),
+            });
+        }
+        m.set_wall(Duration::from_secs(2));
+        let r = m.report();
+        assert_eq!(r.requests, 4);
+        assert_eq!(r.prefill_tokens, 400);
+        assert!((r.prefill_throughput - 200.0).abs() < 1e-9);
+        assert!((r.decode_throughput - 20.0).abs() < 1e-9);
+        assert!((r.ttft.median - 0.065).abs() < 1e-9);
+        assert!(!r.row("x").is_empty());
+    }
+
+    #[test]
+    fn steps_recorded() {
+        let mut m = MetricsCollector::new();
+        m.record_step(Duration::from_millis(10), Duration::from_millis(8), 16);
+        m.record_step(Duration::from_millis(12), Duration::from_millis(9), 32);
+        assert_eq!(m.step_count, 2);
+        assert!((m.batched_tokens.mean() - 24.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,183 @@
+//! Model configuration, parsed from the artifact ABI (`meta.json`).
+//!
+//! The Rust side never hard-codes model geometry: everything — tensor
+//! shapes, expert-slot layout, token buckets — comes from the `meta.json`
+//! emitted by `python/compile/aot.py`, so the two layers cannot drift.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Mirror of `python/compile/configs.py::ModelConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    /// M — routed experts in the base model (router domain).
+    pub num_experts: usize,
+    pub top_k: usize,
+    pub expert_inter: usize,
+    pub shared_inter: usize,
+    /// N — adapter slots in the virtual weight tensor.
+    pub max_adapters: usize,
+    /// E_max — expert slots per adapter per layer.
+    pub e_max: usize,
+    /// CAP — KV slot-pool size.
+    pub kv_cap: usize,
+    /// O — logits rows returned per step.
+    pub max_seqs: usize,
+    pub buckets: Vec<usize>,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+}
+
+impl ModelConfig {
+    /// G = M + N * E_max: expert slots in the virtual weight tensor.
+    pub fn total_expert_slots(&self) -> usize {
+        self.num_experts + self.max_adapters * self.e_max
+    }
+
+    /// Δ_i — first slot of adapter slot `i`'s region.
+    pub fn adapter_slot_base(&self, adapter_slot: usize) -> usize {
+        self.num_experts + adapter_slot * self.e_max
+    }
+
+    /// Bytes of one expert's weights for one projection (f32).
+    ///
+    /// gate/up are `[H, F]`, down is `[F, H]` — same element count.
+    pub fn expert_proj_bytes(&self) -> usize {
+        self.hidden * self.expert_inter * 4
+    }
+
+    /// Bytes of one expert across all three projections in one layer.
+    pub fn expert_bytes(&self) -> usize {
+        3 * self.expert_proj_bytes()
+    }
+
+    /// Bytes of KV cache per token slot across all layers (f32).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.layers * 2 * self.kv_heads * self.head_dim * 4
+    }
+
+    /// Total parameter bytes of a merged/base (G = M) model, f32.
+    pub fn base_model_bytes(&self) -> usize {
+        let h = self.hidden;
+        let emb = self.vocab * h * 2; // embed + lm_head
+        let per_layer = h // ln_attn
+            + h * (self.q_heads * self.head_dim) // wq
+            + 2 * h * (self.kv_heads * self.head_dim) // wk, wv
+            + (self.q_heads * self.head_dim) * h // wo
+            + h // ln_ffn
+            + h * self.num_experts // router
+            + 3 * self.num_experts * h * self.expert_inter // experts
+            + 3 * h * self.shared_inter; // shared expert
+        (emb + h + self.layers * per_layer) * 4
+    }
+
+    /// Parse the `config` object of `meta.json`.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let us = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("config field {k}"))
+        };
+        Ok(ModelConfig {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .context("config.name")?
+                .to_string(),
+            vocab: us("vocab")?,
+            hidden: us("hidden")?,
+            layers: us("layers")?,
+            q_heads: us("q_heads")?,
+            kv_heads: us("kv_heads")?,
+            head_dim: us("head_dim")?,
+            num_experts: us("num_experts")?,
+            top_k: us("top_k")?,
+            expert_inter: us("expert_inter")?,
+            shared_inter: us("shared_inter")?,
+            max_adapters: us("max_adapters")?,
+            e_max: us("e_max")?,
+            kv_cap: us("kv_cap")?,
+            max_seqs: us("max_seqs")?,
+            buckets: j
+                .get("buckets")
+                .and_then(Json::as_usize_vec)
+                .context("config.buckets")?,
+            rope_theta: j.get("rope_theta").and_then(Json::as_f64).unwrap_or(10000.0),
+            rms_eps: j.get("rms_eps").and_then(Json::as_f64).unwrap_or(1e-6),
+        })
+    }
+
+    /// Paper-scale geometry (16B ESFT-vanilla / DeepSeek-V2-Lite) used by
+    /// the Fig. 9 / Table 1 accounting experiments. Mirrors
+    /// `configs.PAPER16B`; no artifacts exist for it.
+    pub fn paper16b() -> Self {
+        ModelConfig {
+            name: "paper16b".into(),
+            vocab: 102400,
+            hidden: 2048,
+            layers: 26,
+            q_heads: 16,
+            kv_heads: 16,
+            head_dim: 128,
+            num_experts: 64,
+            top_k: 6,
+            expert_inter: 1408,
+            shared_inter: 2816,
+            max_adapters: 20,
+            e_max: 13,
+            kv_cap: 0,
+            max_seqs: 256,
+            buckets: vec![],
+            rope_theta: 10000.0,
+            rms_eps: 1e-6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let j = Json::parse(
+            r#"{"name":"tiny","vocab":128,"hidden":32,"layers":2,
+                "q_heads":2,"kv_heads":1,"head_dim":16,"num_experts":8,
+                "top_k":2,"expert_inter":16,"shared_inter":32,
+                "max_adapters":3,"e_max":3,"kv_cap":64,"max_seqs":8,
+                "buckets":[4,16],"rope_theta":10000.0,"rms_eps":1e-6}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c.total_expert_slots(), 8 + 3 * 3);
+        assert_eq!(c.adapter_slot_base(2), 8 + 6);
+        assert_eq!(c.expert_bytes(), 3 * 32 * 16 * 4);
+        assert_eq!(c.kv_bytes_per_token(), 2 * 2 * 16 * 4);
+    }
+
+    #[test]
+    fn paper16b_sizes_match_paper() {
+        let c = ModelConfig::paper16b();
+        // one expert (three [2048,1408] f32 projections) ≈ 34.6 MB
+        assert_eq!(c.expert_proj_bytes(), 2048 * 1408 * 4);
+        // total params ≈ 16B * 4 B/f32 ≈ 60+ GB f32? No — the 16B model is
+        // ~16e9 params; f32 bytes ≈ 64 GB, bf16 ≈ 32 GB. The paper serves
+        // in bf16-ish precision; our ledger maths use explicit dtype sizes
+        // at the call site, so here we only sanity-check the f32 figure.
+        let p = c.base_model_bytes() as f64 / 4.0; // param count
+        assert!((13e9..18e9).contains(&p), "param count {p}");
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let j = Json::parse(r#"{"name":"x"}"#).unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+}

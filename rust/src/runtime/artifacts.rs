@@ -1,0 +1,192 @@
+//! Artifact discovery: parse `artifacts/<config>/meta.json` into typed
+//! metadata (the artifact ABI between `python/compile/aot.py` and the
+//! runtime).
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which step-function flavour an executable implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// No rerouting inputs; `G = M` (base-only and merged deployments).
+    Base,
+    /// Fused Pallas batched-rerouting kernel (ExpertWeave).
+    Weave,
+    /// Unfused rerouting ops (ExpertWeave-SingleOp baseline, Fig. 7).
+    SingleOp,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "base" => Variant::Base,
+            "weave" => Variant::Weave,
+            "singleop" => Variant::SingleOp,
+            other => bail!("unknown variant {other:?}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Base => "base",
+            Variant::Weave => "weave",
+            Variant::SingleOp => "singleop",
+        }
+    }
+
+    /// Does this variant take `aid` + `expert_maps` inputs?
+    pub fn is_adapter_aware(&self) -> bool {
+        !matches!(self, Variant::Base)
+    }
+}
+
+/// Shape+dtype of one named input tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `"f32"` or `"i32"`.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name").and_then(Json::as_str).context("spec.name")?.to_string(),
+            shape: j.get("shape").and_then(Json::as_usize_vec).context("spec.shape")?,
+            dtype: j.get("dtype").and_then(Json::as_str).context("spec.dtype")?.to_string(),
+        })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Metadata of one compiled step executable.
+#[derive(Debug, Clone)]
+pub struct ExecutableMeta {
+    pub file: PathBuf,
+    pub variant: Variant,
+    /// Token bucket T.
+    pub bucket: usize,
+    /// O — logits rows returned.
+    pub out_rows: usize,
+    pub gmm_block: usize,
+    /// Ordered weight tensors (first inputs of the program).
+    pub params: Vec<TensorSpec>,
+    /// Ordered non-param inputs (kv_cache first).
+    pub inputs: Vec<TensorSpec>,
+    /// Input index of the donated kv_cache (= params.len()).
+    pub donate_input_index: usize,
+}
+
+/// All executables + config of one artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub executables: Vec<ExecutableMeta>,
+}
+
+impl ArtifactSet {
+    pub fn load(dir: &Path) -> Result<ArtifactSet> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", meta_path.display()))?;
+        let j = Json::parse(&text).context("parse meta.json")?;
+        let config = ModelConfig::from_json(j.at(&["config"])).context("meta.config")?;
+        let mut executables = Vec::new();
+        for e in j.at(&["executables"]).as_arr().context("meta.executables")? {
+            let params = e
+                .at(&["params"])
+                .as_arr()
+                .context("exe.params")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let inputs = e
+                .at(&["inputs"])
+                .as_arr()
+                .context("exe.inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            executables.push(ExecutableMeta {
+                file: dir.join(e.get("file").and_then(Json::as_str).context("exe.file")?),
+                variant: Variant::parse(
+                    e.get("variant").and_then(Json::as_str).context("exe.variant")?,
+                )?,
+                bucket: e.get("bucket").and_then(Json::as_usize).context("exe.bucket")?,
+                out_rows: e.get("out_rows").and_then(Json::as_usize).context("exe.out_rows")?,
+                gmm_block: e.get("gmm_block").and_then(Json::as_usize).unwrap_or(0),
+                donate_input_index: e
+                    .get("donate_input_index")
+                    .and_then(Json::as_usize)
+                    .context("exe.donate_input_index")?,
+                params,
+                inputs,
+            });
+        }
+        if executables.is_empty() {
+            bail!("no executables in {}", meta_path.display());
+        }
+        Ok(ArtifactSet { dir: dir.to_path_buf(), config, executables })
+    }
+
+    /// Executables of one variant, ascending by bucket.
+    pub fn variant(&self, v: Variant) -> Vec<&ExecutableMeta> {
+        let mut out: Vec<&ExecutableMeta> =
+            self.executables.iter().filter(|e| e.variant == v).collect();
+        out.sort_by_key(|e| e.bucket);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        d.join("meta.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_tiny_meta() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/tiny missing (run `make artifacts`)");
+            return;
+        };
+        let set = ArtifactSet::load(&dir).unwrap();
+        assert_eq!(set.config.name, "tiny");
+        // 3 variants x 2 buckets
+        assert_eq!(set.executables.len(), 6);
+        let weave = set.variant(Variant::Weave);
+        assert_eq!(weave.len(), 2);
+        assert!(weave[0].bucket < weave[1].bucket);
+        let e = weave[0];
+        assert_eq!(e.donate_input_index, e.params.len());
+        assert_eq!(e.inputs[0].name, "kv_cache");
+        assert_eq!(e.inputs.last().unwrap().name, "expert_maps");
+        assert!(e.file.exists());
+        // base variant has no rerouting inputs
+        let base = set.variant(Variant::Base)[0];
+        assert!(base.inputs.iter().all(|i| i.name != "aid"));
+        // expert tensor sizing differs between variants
+        let g_w = weave[0].params.iter().find(|p| p.name == "layer0.w_gate").unwrap();
+        let g_b = base.params.iter().find(|p| p.name == "layer0.w_gate").unwrap();
+        assert_eq!(g_w.shape[0], set.config.total_expert_slots());
+        assert_eq!(g_b.shape[0], set.config.num_experts);
+    }
+
+    #[test]
+    fn variant_parse() {
+        assert_eq!(Variant::parse("weave").unwrap(), Variant::Weave);
+        assert!(Variant::parse("nope").is_err());
+        assert!(Variant::Weave.is_adapter_aware());
+        assert!(!Variant::Base.is_adapter_aware());
+    }
+}

@@ -1,0 +1,327 @@
+//! PJRT execution core: compiled step executables with device-resident
+//! weights and a chained KV cache.
+//!
+//! Buffer lifecycle per step:
+//! * weight buffers — uploaded once per weights *version* (adapter
+//!   load/evict), reused by `execute_b` every step;
+//! * KV cache — output of step *n* feeds step *n+1*. The `xla` crate's
+//!   PJRT wrapper returns outputs as one tuple buffer, so the tuple is
+//!   fetched to host and the KV part re-uploaded (~2x kv bytes of PCIe-
+//!   equivalent traffic per step; bounded and measured in EXPERIMENTS.md
+//!   §Perf — the in-graph donation alias still avoids a third copy);
+//! * batch tensors (token ids, slots, AID, ...) — tiny, uploaded per step.
+
+use super::artifacts::{ArtifactSet, ExecutableMeta, TensorSpec, Variant};
+use crate::model::ModelConfig;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Source of weight tensors by ABI name.
+///
+/// `expert_tensor` must serve the stacked `[G|M, ..]` projections
+/// (`layerN.w_gate|w_up|w_down`); everything else comes from `named`.
+pub trait ParamSource {
+    fn named(&self, name: &str) -> Option<&[f32]>;
+    /// Stacked expert tensor for (layer, proj) sized per `spec`.
+    fn expert_tensor(&mut self, layer: usize, proj: usize, len: usize) -> Result<&[f32]>;
+}
+
+/// One packed step batch (already bucket-padded by the scheduler).
+#[derive(Debug, Clone)]
+pub struct StepInputs {
+    pub token_ids: Vec<i32>,
+    pub positions: Vec<i32>,
+    pub seg_ids: Vec<i32>,
+    pub slot_idx: Vec<i32>,
+    pub cache_seg: Vec<i32>,
+    pub cache_pos: Vec<i32>,
+    pub out_rows: Vec<i32>,
+    /// Adapter ID per token (-1 = base); ignored by `base` executables.
+    pub aid: Vec<i32>,
+}
+
+impl StepInputs {
+    /// An all-padding batch for bucket `t` (useful in tests/benches).
+    pub fn blank(cfg: &ModelConfig, bucket: usize, out_rows: usize) -> StepInputs {
+        StepInputs {
+            token_ids: vec![0; bucket],
+            positions: vec![0; bucket],
+            seg_ids: vec![-1; bucket],
+            slot_idx: vec![cfg.kv_cap as i32; bucket],
+            cache_seg: vec![-1; cfg.kv_cap],
+            cache_pos: vec![0; cfg.kv_cap],
+            out_rows: vec![0; out_rows],
+            aid: vec![-1; bucket],
+        }
+    }
+}
+
+/// Result of one step.
+#[derive(Debug)]
+pub struct StepOutput {
+    /// `[O, vocab]` row-major logits for the requested rows.
+    pub logits: Vec<f32>,
+    pub out_rows: usize,
+    /// Wall time inside PJRT execute (the XLA part of the step).
+    pub execute_time: std::time::Duration,
+}
+
+struct CompiledStep {
+    meta: ExecutableMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime for one model variant on one (simulated) device.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cfg: ModelConfig,
+    variant: Variant,
+    steps: BTreeMap<usize, CompiledStep>,
+    /// Device buffers for `params`, ordered per the ABI manifest.
+    param_bufs: Vec<xla::PjRtBuffer>,
+    /// Host KV cache image between steps (see module docs).
+    kv_literal: Option<xla::Literal>,
+    /// Cached device buffer of the expert maps (re-built on version bump).
+    expert_maps_buf: Option<xla::PjRtBuffer>,
+    maps_version: u64,
+    weights_version: u64,
+    scratch: Vec<f32>,
+}
+
+fn parse_layer_proj(name: &str) -> Option<(usize, usize)> {
+    let rest = name.strip_prefix("layer")?;
+    let (l, field) = rest.split_once('.')?;
+    let proj = match field {
+        "w_gate" => 0,
+        "w_up" => 1,
+        "w_down" => 2,
+        _ => return None,
+    };
+    Some((l.parse().ok()?, proj))
+}
+
+impl Runtime {
+    /// Compile all buckets of `variant` from `set`.
+    pub fn new(set: &ArtifactSet, variant: Variant) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut steps = BTreeMap::new();
+        for meta in set.variant(variant) {
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                meta.file.to_str().context("artifact path utf8")?,
+            )
+            .with_context(|| format!("parse {}", meta.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", meta.file.display()))?;
+            crate::log_info!(
+                "runtime",
+                "compiled {} in {:.2}s",
+                meta.file.file_name().unwrap().to_string_lossy(),
+                t0.elapsed().as_secs_f64()
+            );
+            steps.insert(meta.bucket, CompiledStep { meta: meta.clone(), exe });
+        }
+        if steps.is_empty() {
+            bail!("no {} executables in {}", variant.as_str(), set.dir.display());
+        }
+        Ok(Runtime {
+            client,
+            cfg: set.config.clone(),
+            variant,
+            steps,
+            param_bufs: Vec::new(),
+            kv_literal: None,
+            expert_maps_buf: None,
+            maps_version: 0,
+            weights_version: 0,
+            scratch: Vec::new(),
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// Available token buckets, ascending.
+    pub fn buckets(&self) -> Vec<usize> {
+        self.steps.keys().copied().collect()
+    }
+
+    /// Smallest bucket that fits `tokens`.
+    pub fn bucket_for(&self, tokens: usize) -> Option<usize> {
+        self.steps.keys().copied().find(|&b| b >= tokens)
+    }
+
+    pub fn out_rows(&self, bucket: usize) -> Option<usize> {
+        self.steps.get(&bucket).map(|s| s.meta.out_rows)
+    }
+
+    fn manifest(&self) -> &ExecutableMeta {
+        &self.steps.values().next().unwrap().meta
+    }
+
+    /// Upload all weight tensors from `source`. Call at startup and after
+    /// every adapter load/evict (`version` guards redundant uploads).
+    pub fn upload_params<S: ParamSource>(&mut self, source: &mut S, version: u64) -> Result<()> {
+        if version == self.weights_version && !self.param_bufs.is_empty() {
+            return Ok(());
+        }
+        let manifest: Vec<TensorSpec> = self.manifest().params.clone();
+        let mut bufs = Vec::with_capacity(manifest.len());
+        for spec in &manifest {
+            let data: &[f32] = if let Some((layer, proj)) = parse_layer_proj(&spec.name) {
+                source.expert_tensor(layer, proj, spec.element_count())?
+            } else {
+                source
+                    .named(&spec.name)
+                    .with_context(|| format!("missing param {}", spec.name))?
+            };
+            if data.len() != spec.element_count() {
+                bail!(
+                    "param {}: {} elements, manifest wants {:?}",
+                    spec.name,
+                    data.len(),
+                    spec.shape
+                );
+            }
+            bufs.push(
+                self.client
+                    .buffer_from_host_buffer(data, &spec.shape, None)
+                    .with_context(|| format!("upload {}", spec.name))?,
+            );
+        }
+        self.param_bufs = bufs;
+        self.weights_version = version;
+        Ok(())
+    }
+
+    /// Upload the flattened `[L, N+1, M]` expert maps (adapter-aware
+    /// variants only).
+    pub fn upload_expert_maps(&mut self, maps: &[i32], version: u64) -> Result<()> {
+        if !self.variant.is_adapter_aware() {
+            return Ok(());
+        }
+        if version == self.maps_version && self.expert_maps_buf.is_some() {
+            return Ok(());
+        }
+        let dims = [
+            self.cfg.layers,
+            self.cfg.max_adapters + 1,
+            self.cfg.num_experts,
+        ];
+        if maps.len() != dims.iter().product::<usize>() {
+            bail!("expert maps length {} != {:?}", maps.len(), dims);
+        }
+        self.expert_maps_buf = Some(self.client.buffer_from_host_buffer(maps, &dims, None)?);
+        self.maps_version = version;
+        Ok(())
+    }
+
+    /// Reset the KV cache to zeros (new serving session).
+    pub fn reset_kv(&mut self) {
+        self.kv_literal = None;
+    }
+
+    fn kv_dims(&self) -> [usize; 5] {
+        [
+            self.cfg.layers,
+            2,
+            self.cfg.kv_cap,
+            self.cfg.kv_heads,
+            self.cfg.head_dim,
+        ]
+    }
+
+    /// Execute one step on the smallest bucket `>= inputs.token_ids.len()`
+    /// (the caller pads; lengths must match the chosen bucket exactly).
+    pub fn step(&mut self, bucket: usize, inputs: &StepInputs) -> Result<StepOutput> {
+        let Some(step) = self.steps.get(&bucket) else {
+            bail!("no executable for bucket {bucket}");
+        };
+        let meta = &step.meta;
+        if self.param_bufs.is_empty() {
+            bail!("params not uploaded");
+        }
+        let t = meta.bucket;
+        for (name, v, want) in [
+            ("token_ids", inputs.token_ids.len(), t),
+            ("positions", inputs.positions.len(), t),
+            ("seg_ids", inputs.seg_ids.len(), t),
+            ("slot_idx", inputs.slot_idx.len(), t),
+            ("cache_seg", inputs.cache_seg.len(), self.cfg.kv_cap),
+            ("cache_pos", inputs.cache_pos.len(), self.cfg.kv_cap),
+            ("out_rows", inputs.out_rows.len(), meta.out_rows),
+            ("aid", inputs.aid.len(), t),
+        ] {
+            if v != want {
+                bail!("step input {name}: {v} elements, bucket wants {want}");
+            }
+        }
+
+        // kv cache buffer: from last step's literal, or zeros
+        let kv_dims = self.kv_dims();
+        let kv_buf = match &self.kv_literal {
+            Some(lit) => self.client.buffer_from_host_literal(None, lit)?,
+            None => {
+                let n: usize = kv_dims.iter().product();
+                self.scratch.clear();
+                self.scratch.resize(n, 0.0);
+                self.client
+                    .buffer_from_host_buffer(&self.scratch, &kv_dims, None)?
+            }
+        };
+
+        let up_i32 = |data: &[i32], dims: &[usize]| -> Result<xla::PjRtBuffer> {
+            Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        };
+        let mut batch_bufs: Vec<xla::PjRtBuffer> = vec![
+            kv_buf,
+            up_i32(&inputs.token_ids, &[t])?,
+            up_i32(&inputs.positions, &[t])?,
+            up_i32(&inputs.seg_ids, &[t])?,
+            up_i32(&inputs.slot_idx, &[t])?,
+            up_i32(&inputs.cache_seg, &[self.cfg.kv_cap])?,
+            up_i32(&inputs.cache_pos, &[self.cfg.kv_cap])?,
+            up_i32(&inputs.out_rows, &[meta.out_rows])?,
+        ];
+        if self.variant.is_adapter_aware() {
+            batch_bufs.push(up_i32(&inputs.aid, &[t])?);
+        }
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+            self.param_bufs.len() + batch_bufs.len() + 1,
+        );
+        args.extend(self.param_bufs.iter());
+        args.extend(batch_bufs.iter());
+        if self.variant.is_adapter_aware() {
+            args.push(
+                self.expert_maps_buf
+                    .as_ref()
+                    .context("expert maps not uploaded")?,
+            );
+        }
+
+        let t0 = std::time::Instant::now();
+        let result = step.exe.execute_b(&args).context("PJRT execute")?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let execute_time = t0.elapsed();
+
+        let (logits_lit, kv_lit) = tuple.to_tuple2().context("untuple step outputs")?;
+        let logits = logits_lit.to_vec::<f32>()?;
+        debug_assert_eq!(logits.len(), meta.out_rows * self.cfg.vocab);
+        self.kv_literal = Some(kv_lit);
+        Ok(StepOutput { logits, out_rows: meta.out_rows, execute_time })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests live in rust/tests/runtime_integration.rs — they need
+    // the tiny artifacts on disk and a PJRT client (one per process).
+}

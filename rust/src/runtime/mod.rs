@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT artifacts (HLO text + `meta.json`), compile them
+//! on the CPU PJRT client, and execute model steps with device-resident
+//! weights.
+//!
+//! This is the only module that touches the `xla` crate. Everything above
+//! it (scheduler, engine, server) sees plain Rust types.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactSet, ExecutableMeta, TensorSpec, Variant};
+pub use engine::{ParamSource, Runtime, StepInputs, StepOutput};

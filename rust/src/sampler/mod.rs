@@ -1,0 +1,133 @@
+//! Token sampling over step logits: greedy, temperature, top-k.
+//!
+//! Operates on one `[vocab]` row of the step output (the engine slices the
+//! `[O, vocab]` block by out-row index). Deterministic given the PRNG.
+
+use crate::util::rng::Pcg;
+
+/// Sampling configuration per request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    /// argmax (ties -> lowest token id). Used by the accuracy experiments
+    /// (greedy agreement must be exact).
+    Greedy,
+    /// softmax(logits / temperature) sampling.
+    Temperature(f32),
+    /// top-k filter then temperature sampling.
+    TopK { k: usize, temperature: f32 },
+}
+
+/// Sample one token id from a logits row.
+pub fn sample(logits: &[f32], mode: Sampling, rng: &mut Pcg) -> i32 {
+    match mode {
+        Sampling::Greedy => argmax(logits),
+        Sampling::Temperature(t) => {
+            let probs = softmax_scaled(logits, t);
+            pick(&probs, rng)
+        }
+        Sampling::TopK { k, temperature } => {
+            let k = k.clamp(1, logits.len());
+            // indices of the k largest logits
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                logits[b].partial_cmp(&logits[a]).unwrap()
+            });
+            idx.truncate(k);
+            let sub: Vec<f32> = idx.iter().map(|&i| logits[i]).collect();
+            let probs = softmax_scaled(&sub, temperature);
+            idx[pick(&probs, rng) as usize] as i32
+        }
+    }
+}
+
+/// argmax with deterministic tie-break (lowest index).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+fn softmax_scaled(logits: &[f32], temperature: f32) -> Vec<f32> {
+    let t = temperature.max(1e-6);
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut e: Vec<f32> = logits.iter().map(|&x| ((x - m) / t).exp()).collect();
+    let s: f32 = e.iter().sum();
+    for v in &mut e {
+        *v /= s;
+    }
+    e
+}
+
+fn pick(probs: &[f32], rng: &mut Pcg) -> i32 {
+    let x = rng.f32();
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if x < acc {
+            return i as i32;
+        }
+    }
+    (probs.len() - 1) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax_with_stable_ties() {
+        let l = [0.0, 3.0, 3.0, -1.0];
+        let mut rng = Pcg::new(0);
+        assert_eq!(sample(&l, Sampling::Greedy, &mut rng), 1);
+    }
+
+    #[test]
+    fn zero_temperature_degenerates_to_argmax() {
+        let l = [0.1, 5.0, -2.0];
+        let mut rng = Pcg::new(1);
+        for _ in 0..50 {
+            assert_eq!(sample(&l, Sampling::Temperature(1e-9), &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_follows_distribution() {
+        let l = [0.0f32, (2.0f32).ln()]; // probs 1/3, 2/3 at T=1
+        let mut rng = Pcg::new(2);
+        let n = 30_000;
+        let mut ones = 0;
+        for _ in 0..n {
+            if sample(&l, Sampling::Temperature(1.0), &mut rng) == 1 {
+                ones += 1;
+            }
+        }
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 2.0 / 3.0).abs() < 0.02, "{frac}");
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let l = [0.0, 10.0, 9.0, -5.0, 8.0];
+        let mut rng = Pcg::new(3);
+        for _ in 0..200 {
+            let t = sample(&l, Sampling::TopK { k: 2, temperature: 1.0 }, &mut rng);
+            assert!(t == 1 || t == 2, "sampled {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn topk_k1_is_greedy() {
+        let l = [1.0, 0.5, 2.0];
+        let mut rng = Pcg::new(4);
+        assert_eq!(
+            sample(&l, Sampling::TopK { k: 1, temperature: 1.0 }, &mut rng),
+            2
+        );
+    }
+}

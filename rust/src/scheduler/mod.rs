@@ -1,0 +1,502 @@
+//! Continuous batching + chunked prefill scheduler (the vLLM-role core).
+//!
+//! Every step packs, into one token bucket:
+//! 1. one token per *decoding* sequence (decode keeps priority so TPOT
+//!    stays flat — the Sarathi/vLLM hybrid-batch rule), then
+//! 2. chunked prefill tokens of admitted sequences, FCFS, up to
+//!    `chunk` tokens per sequence per step.
+//!
+//! New sequences are admitted while the sequence and KV-slot budgets
+//! hold (conservative reservation: prompt + max_new slots). Tokens of
+//! requests for different ESFT adapters are freely interleaved — the
+//! batch carries the per-token AID array the rerouting kernel consumes
+//! (token-granularity batching, paper section 4.3).
+
+use crate::kvcache::KvCache;
+use crate::runtime::engine::StepInputs;
+use crate::sampler::Sampling;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Scheduler limits (derived from the artifact ABI + engine policy).
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Max concurrently running sequences (≤ artifact `max_seqs`).
+    pub max_seqs: usize,
+    /// Max prefill tokens per sequence per step (chunked prefill).
+    pub chunk: usize,
+    /// Token buckets, ascending (from the artifact set).
+    pub buckets: Vec<usize>,
+    /// KV slot-pool size CAP.
+    pub kv_cap: usize,
+}
+
+impl SchedConfig {
+    /// Logits rows available for a bucket (must mirror the ABI).
+    pub fn out_rows(&self, bucket: usize) -> usize {
+        bucket.min(self.max_seqs)
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+}
+
+/// One sequence moving through the engine.
+#[derive(Debug, Clone)]
+pub struct SeqState {
+    pub id: u64,
+    /// Adapter ID for rerouting (-1 = base model).
+    pub aid: i32,
+    pub adapter: Option<String>,
+    /// prompt ++ generated tokens.
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// How many of `tokens` are already in the KV cache.
+    pub prefilled: usize,
+    pub max_new: usize,
+    pub sampling: Sampling,
+    pub arrival: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+}
+
+impl SeqState {
+    pub fn new(
+        id: u64,
+        aid: i32,
+        adapter: Option<String>,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: Sampling,
+    ) -> Self {
+        let prompt_len = prompt.len();
+        SeqState {
+            id,
+            aid,
+            adapter,
+            tokens: prompt,
+            prompt_len,
+            prefilled: 0,
+            max_new,
+            sampling,
+            arrival: Instant::now(),
+            first_token_at: None,
+            finished_at: None,
+        }
+    }
+
+    /// Tokens not yet fed to the model.
+    pub fn pending(&self) -> usize {
+        self.tokens.len() - self.prefilled
+    }
+
+    pub fn generated(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated() >= self.max_new
+    }
+
+    /// In pure decode phase (prompt fully prefilled)?
+    pub fn decoding(&self) -> bool {
+        self.prefilled >= self.prompt_len
+    }
+}
+
+/// A packed step batch plus the bookkeeping to apply its results.
+#[derive(Debug)]
+pub struct Batch {
+    pub bucket: usize,
+    pub inputs: StepInputs,
+    /// `(out_row index, seq id)` — rows that must be sampled after the
+    /// step (the row points at the sequence's last scheduled token).
+    pub rows: Vec<(usize, u64)>,
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+}
+
+/// Per-slot cache metadata mirrored to the device each step
+/// (`cache_seg` / `cache_pos` inputs of the step executable).
+#[derive(Debug)]
+pub struct SlotMeta {
+    pub seg: Vec<i32>,
+    pub pos: Vec<i32>,
+}
+
+impl SlotMeta {
+    pub fn new(cap: usize) -> Self {
+        SlotMeta { seg: vec![-1; cap], pos: vec![0; cap] }
+    }
+
+    pub fn clear_slots(&mut self, slots: &[u32]) {
+        for &s in slots {
+            self.seg[s as usize] = -1;
+            self.pos[s as usize] = 0;
+        }
+    }
+}
+
+/// The continuous-batching scheduler.
+#[derive(Debug)]
+pub struct Scheduler {
+    cfg: SchedConfig,
+    waiting: VecDeque<SeqState>,
+    running: Vec<SeqState>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedConfig) -> Self {
+        assert!(!cfg.buckets.is_empty());
+        assert!(cfg.chunk > 0);
+        Scheduler { cfg, waiting: VecDeque::new(), running: Vec::new() }
+    }
+
+    pub fn config(&self) -> &SchedConfig {
+        &self.cfg
+    }
+
+    /// Clone a scheduler's config (engine session reset).
+    pub fn rebuild_config(s: &Scheduler) -> SchedConfig {
+        s.cfg.clone()
+    }
+
+    pub fn submit(&mut self, seq: SeqState) {
+        self.waiting.push_back(seq);
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+
+    pub fn running(&self) -> &[SeqState] {
+        &self.running
+    }
+
+    /// Upper bound on KV slots a sequence will still consume.
+    fn future_need(seq: &SeqState) -> usize {
+        seq.pending() + seq.max_new.saturating_sub(seq.generated())
+    }
+
+    fn admit(&mut self, kv: &KvCache) {
+        // conservative reservation: pending prompt + remaining output of
+        // every running sequence is already spoken for (no preemption)
+        let mut reserved: usize =
+            self.running.iter().map(Self::future_need).sum();
+        while self.running.len() < self.cfg.max_seqs {
+            let Some(seq) = self.waiting.front() else { break };
+            let need = Self::future_need(seq);
+            if kv.free_slots() < reserved + need {
+                break;
+            }
+            reserved += need;
+            let seq = self.waiting.pop_front().unwrap();
+            self.running.push(seq);
+        }
+    }
+
+    /// Build the next batch, allocating KV slots and updating `meta`.
+    /// Returns `None` when nothing is runnable.
+    pub fn build_batch(&mut self, kv: &mut KvCache, meta: &mut SlotMeta) -> Result<Option<Batch>> {
+        self.admit(kv);
+        if self.running.is_empty() {
+            return Ok(None);
+        }
+        let budget = self.cfg.max_bucket();
+        // (seq index, how many tokens this step)
+        let mut plan: Vec<(usize, usize)> = Vec::new();
+        let mut total = 0usize;
+
+        // decode first: one token each
+        for (i, s) in self.running.iter().enumerate() {
+            if s.decoding() && total < budget {
+                debug_assert_eq!(s.pending(), 1);
+                plan.push((i, 1));
+                total += 1;
+            }
+        }
+        // then chunked prefill, FCFS over running order
+        for (i, s) in self.running.iter().enumerate() {
+            if !s.decoding() && total < budget {
+                let take = s.pending().min(self.cfg.chunk).min(budget - total);
+                if take > 0 {
+                    plan.push((i, take));
+                    total += take;
+                }
+            }
+        }
+        if total == 0 {
+            return Ok(None);
+        }
+        let Some(&bucket) = self.cfg.buckets.iter().find(|&&b| b >= total) else {
+            bail!("no bucket fits {total} tokens (buckets {:?})", self.cfg.buckets);
+        };
+        let out_rows = self.cfg.out_rows(bucket);
+
+        let mut inputs = StepInputs {
+            token_ids: vec![0; bucket],
+            positions: vec![0; bucket],
+            seg_ids: vec![-1; bucket],
+            slot_idx: vec![self.cfg.kv_cap as i32; bucket],
+            cache_seg: Vec::new(),
+            cache_pos: Vec::new(),
+            out_rows: vec![0; out_rows],
+            aid: vec![-1; bucket],
+        };
+        let mut rows: Vec<(usize, u64)> = Vec::new();
+        let mut cursor = 0usize;
+        let mut prefill_tokens = 0usize;
+        let mut decode_tokens = 0usize;
+
+        for &(si, take) in &plan {
+            let seq = &mut self.running[si];
+            let start = seq.prefilled;
+            let slots = kv.alloc(seq.id, take)?;
+            let seg = (seq.id & 0x7fff_ffff) as i32;
+            for (j, &slot) in slots.iter().enumerate() {
+                let pos = (start + j) as i32;
+                let t = cursor + j;
+                inputs.token_ids[t] = seq.tokens[start + j];
+                inputs.positions[t] = pos;
+                inputs.seg_ids[t] = seg;
+                inputs.slot_idx[t] = slot as i32;
+                inputs.aid[t] = seq.aid;
+                meta.seg[slot as usize] = seg;
+                meta.pos[slot as usize] = pos;
+            }
+            if seq.decoding() {
+                decode_tokens += take;
+            } else {
+                prefill_tokens += take;
+            }
+            seq.prefilled += take;
+            // this step consumed the whole backlog → its last row yields
+            // the next token
+            if seq.pending() == 0 {
+                let row_idx = rows.len();
+                if row_idx >= out_rows {
+                    bail!("out_rows overflow: {row_idx} >= {out_rows}");
+                }
+                inputs.out_rows[row_idx] = (cursor + take - 1) as i32;
+                rows.push((row_idx, seq.id));
+            }
+            cursor += take;
+        }
+        inputs.cache_seg = meta.seg.clone();
+        inputs.cache_pos = meta.pos.clone();
+        Ok(Some(Batch { bucket, inputs, rows, prefill_tokens, decode_tokens }))
+    }
+
+    /// Append a sampled token to a running sequence.
+    pub fn push_token(&mut self, seq_id: u64, token: i32) -> Result<()> {
+        let Some(seq) = self.running.iter_mut().find(|s| s.id == seq_id) else {
+            bail!("push_token: unknown sequence {seq_id}");
+        };
+        seq.tokens.push(token);
+        if seq.first_token_at.is_none() {
+            seq.first_token_at = Some(Instant::now());
+        }
+        Ok(())
+    }
+
+    /// Remove finished sequences, freeing their KV slots; returns them.
+    pub fn reap(&mut self, kv: &mut KvCache, meta: &mut SlotMeta) -> Vec<SeqState> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].done() {
+                let mut seq = self.running.swap_remove(i);
+                seq.finished_at = Some(Instant::now());
+                if let Some(slots) = kv.slots_of(seq.id) {
+                    let slots = slots.to_vec();
+                    meta.clear_slots(&slots);
+                }
+                kv.free_seq(seq.id);
+                out.push(seq);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SchedConfig {
+        SchedConfig { max_seqs: 4, chunk: 8, buckets: vec![4, 16], kv_cap: 64 }
+    }
+
+    fn seq(id: u64, prompt_len: usize, max_new: usize) -> SeqState {
+        SeqState::new(
+            id,
+            -1,
+            None,
+            (0..prompt_len as i32).collect(),
+            max_new,
+            Sampling::Greedy,
+        )
+    }
+
+    fn setup() -> (Scheduler, KvCache, SlotMeta) {
+        (Scheduler::new(cfg()), KvCache::new(64), SlotMeta::new(64))
+    }
+
+    #[test]
+    fn single_seq_prefill_then_decode() {
+        let (mut s, mut kv, mut meta) = setup();
+        s.submit(seq(1, 10, 2));
+        // chunk=8: first step takes 8 prompt tokens, no rows
+        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        assert_eq!(b.prefill_tokens, 8);
+        assert_eq!(b.bucket, 16);
+        assert!(b.rows.is_empty());
+        // second step: remaining 2 prompt tokens -> one row
+        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        assert_eq!(b.prefill_tokens, 2);
+        assert_eq!(b.bucket, 4);
+        assert_eq!(b.rows.len(), 1);
+        assert_eq!(b.inputs.out_rows[0], 1); // last of the 2 tokens
+        s.push_token(1, 42).unwrap();
+        // decode step: 1 token
+        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        assert_eq!(b.decode_tokens, 1);
+        assert_eq!(b.inputs.token_ids[0], 42);
+        assert_eq!(b.inputs.positions[0], 10);
+        s.push_token(1, 43).unwrap();
+        let done = s.reap(&mut kv, &mut meta);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), 12);
+        assert_eq!(kv.used_slots(), 0);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn decode_has_priority_and_mixed_batches_pack() {
+        let (mut s, mut kv, mut meta) = setup();
+        s.submit(seq(1, 3, 4));
+        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        assert_eq!(b.rows.len(), 1);
+        s.push_token(1, 9).unwrap();
+        // now submit a long-prompt request; batch = 1 decode + prefill chunk
+        s.submit(seq(2, 12, 1));
+        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        assert_eq!(b.decode_tokens, 1);
+        assert_eq!(b.prefill_tokens, 8);
+        // decode token sits at index 0
+        assert_eq!(b.inputs.positions[0], 3);
+        // seg ids differ per sequence
+        assert_ne!(b.inputs.seg_ids[0], b.inputs.seg_ids[1]);
+    }
+
+    #[test]
+    fn admission_respects_max_seqs_and_kv_room() {
+        let (mut s, mut kv, mut meta) = setup();
+        for i in 0..6 {
+            s.submit(seq(i, 4, 2));
+        }
+        let _ = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        assert_eq!(s.running_len(), 4); // max_seqs
+        assert_eq!(s.waiting_len(), 2);
+
+        // KV-constrained admission: capacity 64, each seq reserves 6
+        let (mut s, mut kv, mut meta) = (
+            Scheduler::new(SchedConfig { max_seqs: 64, ..cfg() }),
+            KvCache::new(16),
+            SlotMeta::new(16),
+        );
+        for i in 0..5 {
+            s.submit(seq(i, 4, 2)); // needs 6 reserved
+        }
+        let _ = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        assert_eq!(s.running_len(), 2, "16 slots / 6 per seq -> 2 admitted");
+    }
+
+    #[test]
+    fn batch_arrays_are_consistent() {
+        let (mut s, mut kv, mut meta) = setup();
+        s.submit(seq(7, 5, 3));
+        s.submit(seq(8, 2, 3));
+        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        // every non-pad token has a valid slot; pads point out of range
+        for t in 0..b.bucket {
+            if b.inputs.seg_ids[t] >= 0 {
+                let slot = b.inputs.slot_idx[t] as usize;
+                assert!(slot < 64);
+                assert_eq!(meta.seg[slot], b.inputs.seg_ids[t]);
+                assert_eq!(meta.pos[slot], b.inputs.positions[t]);
+            } else {
+                assert_eq!(b.inputs.slot_idx[t], 64);
+            }
+        }
+        // rows reference in-batch positions
+        for &(row, _) in &b.rows {
+            let r = b.inputs.out_rows[row] as usize;
+            assert!(r < b.bucket);
+            assert!(b.inputs.seg_ids[r] >= 0);
+        }
+    }
+
+    #[test]
+    fn property_token_budget_and_row_capacity_hold() {
+        crate::util::prop::check(707, 30, |rng| {
+            let cfg = SchedConfig {
+                max_seqs: 1 + rng.below(6) as usize,
+                chunk: 1 + rng.below(12) as usize,
+                buckets: vec![4, 16, 64],
+                kv_cap: 256,
+            };
+            let mut s = Scheduler::new(cfg.clone());
+            let mut kv = KvCache::new(256);
+            let mut meta = SlotMeta::new(256);
+            let mut next_id = 0u64;
+            for _ in 0..30 {
+                if rng.below(2) == 0 {
+                    next_id += 1;
+                    s.submit(seq_with(next_id, 1 + rng.below(40) as usize, 1 + rng.below(5) as usize));
+                }
+                if let Some(b) = s.build_batch(&mut kv, &mut meta).unwrap() {
+                    let used = b.prefill_tokens + b.decode_tokens;
+                    assert!(used <= b.bucket);
+                    assert!(b.bucket <= 64);
+                    assert!(b.rows.len() <= cfg.out_rows(b.bucket));
+                    for (row, seq_id) in &b.rows {
+                        let _ = row;
+                        s.push_token(*seq_id, 1).unwrap();
+                    }
+                    s.reap(&mut kv, &mut meta);
+                }
+            }
+            // drain: everything eventually terminates
+            for _ in 0..500 {
+                match s.build_batch(&mut kv, &mut meta).unwrap() {
+                    Some(b) => {
+                        for (_, seq_id) in &b.rows {
+                            s.push_token(*seq_id, 1).unwrap();
+                        }
+                        s.reap(&mut kv, &mut meta);
+                    }
+                    None => break,
+                }
+            }
+            assert!(s.is_idle(), "scheduler must drain");
+            assert_eq!(kv.used_slots(), 0);
+        });
+
+        fn seq_with(id: u64, p: usize, n: usize) -> SeqState {
+            SeqState::new(id, -1, None, (0..p as i32).collect(), n, Sampling::Greedy)
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Online serving loop: real-time trace replay against one or more
+//! engine instances (the paper's section-5.2 experiment harness).
+//!
+//! * [`replay`] — drive one engine with a [`Trace`], injecting requests at
+//!   their arrival times and stepping the engine whenever it has work.
+//! * [`replay_multi`] — run several isolated instances concurrently on
+//!   threads (the *vLLM-Ascend (Merged)* deployment of Fig. 6: one engine
+//!   per adapter, each receiving only its domain's requests). Engines are
+//!   constructed inside their threads (PJRT handles are not `Send`).
+
+use crate::engine::{Completion, Engine, RequestSpec};
+use crate::metrics::Report;
+use crate::sampler::Sampling;
+use crate::workload::trace::Trace;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// Outcome of one replay run.
+#[derive(Debug)]
+pub struct ReplayOutcome {
+    pub report: Report,
+    pub completions: Vec<Completion>,
+    /// Requests whose submission failed (e.g. adapter not loaded).
+    pub rejected: usize,
+}
+
+/// Replay a trace against one engine in real time.
+///
+/// The loop steps the engine whenever work is queued; between arrivals
+/// with an idle engine it sleeps in short slices. Requests are greedy-
+/// sampled (accuracy experiments rely on determinism).
+pub fn replay(engine: &mut Engine, trace: &Trace) -> Result<ReplayOutcome> {
+    let start = Instant::now();
+    let mut next = 0usize;
+    let mut completions = Vec::new();
+    let mut rejected = 0usize;
+    loop {
+        let now = start.elapsed().as_secs_f64();
+        while next < trace.events.len() && trace.events[next].at <= now {
+            let e = &trace.events[next];
+            let spec = RequestSpec {
+                adapter: e.adapter.clone(),
+                prompt: e.prompt.clone(),
+                max_new_tokens: e.max_new_tokens,
+                sampling: Sampling::Greedy,
+            };
+            if engine.submit(spec).is_err() {
+                rejected += 1;
+            }
+            next += 1;
+        }
+        if engine.has_work() {
+            if let Some(mut done) = engine.step()? {
+                completions.append(&mut done);
+            }
+        } else if next < trace.events.len() {
+            let wait = trace.events[next].at - start.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(wait.min(0.05)));
+            }
+        } else {
+            break;
+        }
+    }
+    engine.metrics.set_wall(start.elapsed());
+    Ok(ReplayOutcome { report: engine.report(), completions, rejected })
+}
+
+/// Construct-and-replay on a dedicated thread per instance.
+///
+/// `builders` supply `(engine factory, trace)` pairs; every factory runs
+/// on its own thread (one PJRT client each), mirroring independent
+/// serving processes pinned to disjoint devices.
+pub fn replay_multi(
+    builders: Vec<(
+        Box<dyn FnOnce() -> Result<Engine> + Send>,
+        Trace,
+    )>,
+) -> Result<Vec<ReplayOutcome>> {
+    let handles: Vec<_> = builders
+        .into_iter()
+        .enumerate()
+        .map(|(i, (build, trace))| {
+            std::thread::Builder::new()
+                .name(format!("instance-{i}"))
+                .spawn(move || -> Result<ReplayOutcome> {
+                    let mut engine = build()?;
+                    replay(&mut engine, &trace)
+                })
+                .expect("spawn instance thread")
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("instance thread panicked"))
+        .collect()
+}
+
+/// Aggregate reports of isolated instances into one system-level view
+/// (throughputs add; latency summaries are merged request-weighted).
+pub fn aggregate(outcomes: &[ReplayOutcome]) -> Report {
+    let mut requests = 0;
+    let mut prefill_tokens = 0;
+    let mut decode_tokens = 0;
+    let mut wall: f64 = 0.0;
+    let mut ttft = crate::util::stats::Samples::new();
+    let mut tpot = crate::util::stats::Samples::new();
+    let mut e2e = crate::util::stats::Samples::new();
+    for o in outcomes {
+        requests += o.report.requests;
+        prefill_tokens += o.report.prefill_tokens;
+        decode_tokens += o.report.decode_tokens;
+        wall = wall.max(o.report.wall);
+        for c in &o.completions {
+            ttft.push(c.record.ttft.as_secs_f64());
+            if let Some(t) = c.record.tpot {
+                tpot.push(t.as_secs_f64());
+            }
+            e2e.push(c.record.e2e.as_secs_f64());
+        }
+    }
+    let wall = wall.max(1e-9);
+    Report {
+        requests,
+        prefill_tokens,
+        decode_tokens,
+        prefill_throughput: prefill_tokens as f64 / wall,
+        decode_throughput: decode_tokens as f64 / wall,
+        ttft: ttft.summary(),
+        tpot: tpot.summary(),
+        e2e: e2e.summary(),
+        wall,
+    }
+}

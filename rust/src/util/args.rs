@@ -1,0 +1,233 @@
+//! Tiny CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generated `--help` text. Typed getters parse on access and report
+//! errors naming the offending flag.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declarative CLI spec + parsed values.
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+struct Spec {
+    name: String,
+    default: Option<String>,
+    help: String,
+    is_flag: bool,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            default: default.map(|s| s.to_string()),
+            help: help.to_string(),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            default: None,
+            help: help.to_string(),
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse an iterator of raw args (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(mut self, argv: I) -> Result<Self, String> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if a == "--bench" {
+                // cargo bench appends this to harness=false binaries
+                continue;
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{name} takes no value"));
+                    }
+                    self.flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} requires a value"))?,
+                    };
+                    self.values.insert(name, v);
+                }
+            } else {
+                self.positional.push(a);
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse from the process environment.
+    pub fn parse_env(self) -> Result<Self, String> {
+        self.parse(std::env::args().skip(1))
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <v>", spec.name)
+            };
+            let dfl = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "{head:<28}{}{dfl}", spec.help);
+        }
+        s
+    }
+
+    fn raw(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+    }
+
+    pub fn get(&self, name: &str) -> Option<String> {
+        self.raw(name)
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.raw(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        let v = self
+            .raw(name)
+            .ok_or_else(|| format!("missing required option --{name}"))?;
+        v.parse::<T>()
+            .map_err(|_| format!("invalid value for --{name}: {v:?}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get_parsed(name)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get_parsed(name)
+    }
+
+    /// Comma-separated list, e.g. `--lam 1,2,5`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>, String> {
+        let v = self
+            .raw(name)
+            .ok_or_else(|| format!("missing required option --{name}"))?;
+        v.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<T>()
+                    .map_err(|_| format!("invalid element in --{name}: {s:?}"))
+            })
+            .collect()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> Args {
+        Args::new("t", "test")
+            .opt("config", Some("tiny"), "model config")
+            .opt("lam", None, "arrival rates")
+            .flag("verbose", "log more")
+    }
+
+    fn strs(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = mk().parse(strs(&[])).unwrap();
+        assert_eq!(a.get_or("config", "x"), "tiny");
+        let a = mk().parse(strs(&["--config", "small"])).unwrap();
+        assert_eq!(a.get_or("config", "x"), "small");
+        let a = mk().parse(strs(&["--config=small"])).unwrap();
+        assert_eq!(a.get_or("config", "x"), "small");
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = mk().parse(strs(&["--verbose", "pos1", "pos2"])).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional(), &["pos1", "pos2"]);
+        assert!(!mk().parse(strs(&[])).unwrap().has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_and_lists() {
+        let a = mk().parse(strs(&["--lam", "1,2.5,5"])).unwrap();
+        assert_eq!(a.get_list::<f64>("lam").unwrap(), vec![1.0, 2.5, 5.0]);
+        assert!(a.get_usize("lam").is_err());
+    }
+
+    #[test]
+    fn errors() {
+        assert!(mk().parse(strs(&["--nope"])).is_err());
+        assert!(mk().parse(strs(&["--lam"])).is_err());
+        assert!(mk().parse(strs(&["--verbose=1"])).is_err());
+        assert!(mk().parse(strs(&["--help"])).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Commodity substrates built in-tree because the image is offline
+//! (no serde/clap/criterion/tokio): JSON, CLI args, PRNG, stats,
+//! logging and a tiny property-testing helper.
+
+pub mod args;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

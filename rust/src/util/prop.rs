@@ -1,0 +1,68 @@
+//! Micro property-testing helper (proptest substitute).
+//!
+//! `check(seed, cases, |rng| ...)` runs a randomized invariant many times
+//! with independent PRNG streams and reports the failing case index + its
+//! reproduction seed on panic, so failures are one-line reproducible:
+//!
+//! ```text
+//! property failed at case 17 (repro: Pcg::with_stream(SEED, 17))
+//! ```
+
+use super::rng::Pcg;
+
+/// Run `f` for `cases` independent randomized cases.
+///
+/// Each case gets its own PRNG stream derived from `seed` and the case
+/// index; any panic inside `f` is annotated with the case index so it can
+/// be replayed in isolation with [`replay`].
+pub fn check<F: Fn(&mut Pcg) + std::panic::RefUnwindSafe>(seed: u64, cases: u64, f: F) {
+    for case in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg::with_stream(seed, case);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case} (repro: prop::replay({seed}, {case})): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case from [`check`].
+pub fn replay<F: FnOnce(&mut Pcg)>(seed: u64, case: u64, f: F) {
+    let mut rng = Pcg::with_stream(seed, case);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_invariant_holds() {
+        check(1, 50, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    fn reports_case_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            check(2, 50, |rng| {
+                // fail when we draw a value in the upper half
+                assert!(rng.below(100) < 50, "drew upper half");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("property failed at case"), "{msg}");
+        assert!(msg.contains("drew upper half"), "{msg}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Latency/throughput statistics: online summaries and percentile
+//! estimation over recorded samples. Used by [`crate::metrics`] and the
+//! bench harness ([`crate::bench`]).
+
+/// A collected sample set with percentile queries (exact, sorted lazily).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    values: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.values.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile by linear interpolation, `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.values.len();
+        if n == 1 {
+            return self.values[0];
+        }
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.values[lo] * (1.0 - frac) + self.values[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// `(mean, median, p99, min, max)` summary tuple.
+    pub fn summary(&mut self) -> Summary {
+        Summary {
+            n: self.len(),
+            mean: self.mean(),
+            median: self.median(),
+            p90: self.percentile(90.0),
+            p99: self.p99(),
+            min: self.min(),
+            max: self.max(),
+            std: self.std(),
+        }
+    }
+}
+
+/// Precomputed summary of a [`Samples`] set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+    pub std: f64,
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.3} p50={:.3} p90={:.3} p99={:.3} min={:.3} max={:.3}",
+            self.n, self.mean, self.median, self.p90, self.p99, self.min, self.max
+        )
+    }
+}
+
+/// Fixed-boundary histogram for long-running online aggregation
+/// (O(1) memory irrespective of request count).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>, // ascending upper bounds; last bucket = +inf
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// Exponential buckets covering `[lo, hi]` with `n` buckets.
+    pub fn exponential(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n >= 2);
+        let ratio = (hi / lo).powf(1.0 / (n - 1) as f64);
+        let mut bounds: Vec<f64> = (0..n).map(|i| lo * ratio.powi(i as i32)).collect();
+        bounds.push(f64::INFINITY);
+        let len = bounds.len();
+        Histogram { bounds, counts: vec![0; len], total: 0, sum: 0.0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Percentile estimate: upper bound of the bucket containing the rank.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                return self.bounds[i];
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = Samples::new();
+        for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            s.push(v);
+        }
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert_eq!(s.percentile(25.0), 2.0);
+    }
+
+    #[test]
+    fn summary_sane() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        let sum = s.summary();
+        assert_eq!(sum.n, 100);
+        assert!((sum.mean - 50.5).abs() < 1e-9);
+        assert!((sum.median - 50.5).abs() < 1e-9);
+        assert!((sum.p99 - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Samples::new();
+        assert!(s.mean().is_nan());
+        assert!(s.median().is_nan());
+    }
+
+    #[test]
+    fn histogram_percentile_bounds_true_value() {
+        let mut h = Histogram::exponential(1e-4, 10.0, 64);
+        let mut rng = crate::util::rng::Pcg::new(1);
+        let mut s = Samples::new();
+        for _ in 0..10_000 {
+            let v = rng.exp(2.0);
+            h.record(v);
+            s.push(v);
+        }
+        // histogram p99 within one bucket ratio of exact p99
+        let exact = s.p99();
+        let est = h.percentile(99.0);
+        assert!(est >= exact, "estimate must upper-bound");
+        assert!(est / exact < 1.35, "est {est} exact {exact}");
+    }
+
+    #[test]
+    fn histogram_mean_exact() {
+        let mut h = Histogram::exponential(0.1, 10.0, 8);
+        for v in [0.5, 1.5, 2.5] {
+            h.record(v);
+        }
+        assert!((h.mean() - 1.5).abs() < 1e-12);
+        assert_eq!(h.count(), 3);
+    }
+}

@@ -1,0 +1,445 @@
+//! The paper's **expert memory manager** (section 4.2): maps physical
+//! pages only under occupied expert slots of a virtual weight tensor,
+//! with *sub-page allocation* — a partially filled boundary page is shared
+//! by the neighbouring adapter's experts via reference counting, so
+//! expert/page misalignment never wastes a page or double-maps one.
+//!
+//! The manager is generic over a [`Backing`]:
+//! * [`Backing::Real`] — a live [`VirtualSpace`] + [`PagePool`] (memfd
+//!   pages; bytes are readable/writable and feed PJRT buffer uploads).
+//! * [`Backing::Accounting`] — no memory is touched; page map/unmap
+//!   charge a [`DeviceMemory`] ledger. Used to run the *same allocator
+//!   logic* at paper scale (16B model, 64 GB device) for Fig. 9.
+
+use super::page_pool::{PageId, PagePool};
+use super::virtual_mem::VirtualSpace;
+use crate::memsim::DeviceMemory;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+/// Physical backing of an [`ExpertMemoryManager`].
+pub enum Backing {
+    /// memfd-backed pages, really mapped into the reserved range.
+    Real { space: VirtualSpace, pool: Arc<Mutex<PagePool>> },
+    /// Ledger-only: page map/unmap charges `page_size` bytes to `device`.
+    Accounting { device: Arc<Mutex<DeviceMemory>>, mapped: std::collections::BTreeSet<usize> },
+}
+
+/// Memory statistics of one virtual weight tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemStats {
+    /// Pages currently mapped (physical commitment).
+    pub mapped_pages: usize,
+    /// `mapped_pages * page_size`.
+    pub mapped_bytes: usize,
+    /// Bytes of expert weights actually loaded (no padding).
+    pub used_bytes: usize,
+    /// Bytes the padding approach would commit for the same loads
+    /// (full reservation of every slot ever addressable is *not* counted;
+    /// this is the virtual span of loaded adapters — see
+    /// `weights::padding` for the baseline's own accounting).
+    pub reserved_bytes: usize,
+}
+
+/// Manages physical pages for one virtual weight tensor of
+/// `total_slots` expert slots of `expert_size` bytes each.
+pub struct ExpertMemoryManager {
+    expert_size: usize,
+    total_slots: usize,
+    page_size: usize,
+    /// page index -> number of loaded ranges touching it
+    refcount: HashMap<usize, u32>,
+    /// first_slot -> slot count of each loaded range
+    loaded: BTreeMap<usize, usize>,
+    backing: Backing,
+    used_bytes: usize,
+}
+
+impl ExpertMemoryManager {
+    /// Real backing: reserve the full virtual span, share `pool` pages.
+    pub fn new_real(
+        expert_size: usize,
+        total_slots: usize,
+        pool: Arc<Mutex<PagePool>>,
+    ) -> Result<Self> {
+        let page_size = pool.lock().unwrap().page_size();
+        let total_bytes = expert_size
+            .checked_mul(total_slots)
+            .context("tensor size overflow")?;
+        let pages = total_bytes.div_ceil(page_size);
+        let space = VirtualSpace::reserve(page_size, pages)?;
+        Ok(ExpertMemoryManager {
+            expert_size,
+            total_slots,
+            page_size,
+            refcount: HashMap::new(),
+            loaded: BTreeMap::new(),
+            backing: Backing::Real { space, pool },
+            used_bytes: 0,
+        })
+    }
+
+    /// Accounting backing: identical allocator behaviour, ledger-only.
+    pub fn new_accounting(
+        expert_size: usize,
+        total_slots: usize,
+        page_size: usize,
+        device: Arc<Mutex<DeviceMemory>>,
+    ) -> Self {
+        ExpertMemoryManager {
+            expert_size,
+            total_slots,
+            page_size,
+            refcount: HashMap::new(),
+            loaded: BTreeMap::new(),
+            backing: Backing::Accounting { device, mapped: Default::default() },
+            used_bytes: 0,
+        }
+    }
+
+    pub fn expert_size(&self) -> usize {
+        self.expert_size
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.total_slots
+    }
+
+    /// Page indices covered by a slot range's bytes.
+    fn pages_of(&self, first_slot: usize, n_slots: usize) -> std::ops::RangeInclusive<usize> {
+        let lo = first_slot * self.expert_size;
+        let hi = (first_slot + n_slots) * self.expert_size - 1;
+        (lo / self.page_size)..=(hi / self.page_size)
+    }
+
+    fn overlaps_loaded(&self, first_slot: usize, n_slots: usize) -> bool {
+        self.loaded.iter().any(|(&s, &n)| s < first_slot + n_slots && first_slot < s + n)
+    }
+
+    fn map_one(&mut self, page_index: usize) -> Result<()> {
+        match &mut self.backing {
+            Backing::Real { space, pool } => {
+                let page = {
+                    let mut p = pool.lock().unwrap();
+                    p.alloc(1)?[0]
+                };
+                if let Err(e) = space.map_page(page_index, page, &pool.lock().unwrap()) {
+                    pool.lock().unwrap().free(&[page]);
+                    return Err(e);
+                }
+                Ok(())
+            }
+            Backing::Accounting { device, mapped } => {
+                device.lock().unwrap().alloc(self.page_size)?;
+                mapped.insert(page_index);
+                Ok(())
+            }
+        }
+    }
+
+    fn unmap_one(&mut self, page_index: usize) {
+        match &mut self.backing {
+            Backing::Real { space, pool } => {
+                let page = space
+                    .unmap_page(page_index)
+                    .expect("refcounted page must be mapped");
+                pool.lock().unwrap().free(&[page]);
+            }
+            Backing::Accounting { device, mapped } => {
+                assert!(mapped.remove(&page_index), "unmap of unmapped page");
+                device.lock().unwrap().release(self.page_size);
+            }
+        }
+    }
+
+    /// Load a contiguous range of expert slots (paper: mapping
+    /// `[Δ_i : Δ_i + e_i^(l)]`), committing only the pages that are not
+    /// already mapped by a neighbouring range (sub-page sharing).
+    ///
+    /// On OOM the operation is rolled back completely.
+    pub fn load_range(&mut self, first_slot: usize, n_slots: usize) -> Result<()> {
+        if n_slots == 0 {
+            return Ok(());
+        }
+        if first_slot + n_slots > self.total_slots {
+            bail!(
+                "slot range [{first_slot}, {}) exceeds tensor slots {}",
+                first_slot + n_slots,
+                self.total_slots
+            );
+        }
+        if self.overlaps_loaded(first_slot, n_slots) {
+            bail!("slot range [{first_slot}, {}) overlaps a loaded range", first_slot + n_slots);
+        }
+        let mut newly_mapped: Vec<usize> = Vec::new();
+        for page in self.pages_of(first_slot, n_slots) {
+            if self.refcount.get(&page).copied().unwrap_or(0) == 0 {
+                if let Err(e) = self.map_one(page) {
+                    // roll back pages mapped so far by this call
+                    for &p in &newly_mapped {
+                        self.refcount.remove(&p);
+                        self.unmap_one(p);
+                    }
+                    return Err(e);
+                }
+                newly_mapped.push(page);
+            }
+            *self.refcount.entry(page).or_insert(0) += 1;
+        }
+        self.loaded.insert(first_slot, n_slots);
+        self.used_bytes += n_slots * self.expert_size;
+        Ok(())
+    }
+
+    /// Unload a previously loaded range; pages whose refcount drops to 0
+    /// are unmapped and returned to the pool (`aclrtUnmapMem` +
+    /// `aclrtFreePhysical`).
+    pub fn unload_range(&mut self, first_slot: usize) -> Result<()> {
+        let n_slots = match self.loaded.remove(&first_slot) {
+            Some(n) => n,
+            None => bail!("no loaded range starts at slot {first_slot}"),
+        };
+        for page in self.pages_of(first_slot, n_slots) {
+            let rc = self
+                .refcount
+                .get_mut(&page)
+                .expect("loaded range must have refcounted pages");
+            *rc -= 1;
+            if *rc == 0 {
+                self.refcount.remove(&page);
+                self.unmap_one(page);
+            }
+        }
+        self.used_bytes -= n_slots * self.expert_size;
+        Ok(())
+    }
+
+    /// Copy one expert's weights into its slot (real backing only).
+    pub fn write_expert(&mut self, slot: usize, data: &[u8]) -> Result<()> {
+        if data.len() != self.expert_size {
+            bail!("expert data {} B != expert_size {} B", data.len(), self.expert_size);
+        }
+        match &mut self.backing {
+            Backing::Real { space, .. } => space.write(slot * self.expert_size, data),
+            Backing::Accounting { .. } => bail!("write on accounting backing"),
+        }
+    }
+
+    /// Read one expert's weights back (real backing only).
+    pub fn read_expert(&self, slot: usize, out: &mut [u8]) -> Result<()> {
+        match &self.backing {
+            Backing::Real { space, .. } => space.read(slot * self.expert_size, out),
+            Backing::Accounting { .. } => bail!("read on accounting backing"),
+        }
+    }
+
+    /// Borrow a loaded slot range as `f32`s (PJRT upload path).
+    pub fn slice_f32(&self, first_slot: usize, n_slots: usize) -> Result<&[f32]> {
+        match &self.backing {
+            Backing::Real { space, .. } => space.slice_f32(
+                first_slot * self.expert_size,
+                n_slots * self.expert_size / std::mem::size_of::<f32>(),
+            ),
+            Backing::Accounting { .. } => bail!("slice on accounting backing"),
+        }
+    }
+
+    pub fn is_loaded(&self, first_slot: usize) -> bool {
+        self.loaded.contains_key(&first_slot)
+    }
+
+    pub fn stats(&self) -> MemStats {
+        let mapped_pages = self.refcount.len();
+        let reserved_bytes = self
+            .loaded
+            .iter()
+            .map(|(_, &n)| n * self.expert_size)
+            .sum::<usize>();
+        MemStats {
+            mapped_pages,
+            mapped_bytes: mapped_pages * self.page_size,
+            used_bytes: self.used_bytes,
+            reserved_bytes,
+        }
+    }
+}
+
+impl Drop for ExpertMemoryManager {
+    fn drop(&mut self) {
+        // Release everything (pages back to pool / ledger).
+        let starts: Vec<usize> = self.loaded.keys().copied().collect();
+        for s in starts {
+            let _ = self.unload_range(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PS: usize = 64 << 10; // 64 KB test pages
+
+    fn real_mgr(expert_size: usize, slots: usize, pool_pages: usize) -> (ExpertMemoryManager, Arc<Mutex<PagePool>>) {
+        let pool = Arc::new(Mutex::new(PagePool::new(PS, pool_pages).unwrap()));
+        let mgr = ExpertMemoryManager::new_real(expert_size, slots, pool.clone()).unwrap();
+        (mgr, pool)
+    }
+
+    #[test]
+    fn load_maps_only_covering_pages() {
+        // expert = 1.5 pages (the paper's Fig. 3 example)
+        let esz = PS * 3 / 2;
+        let (mut mgr, pool) = real_mgr(esz, 8, 32);
+        mgr.load_range(0, 2).unwrap(); // 3 pages exactly
+        assert_eq!(mgr.stats().mapped_pages, 3);
+        assert_eq!(pool.lock().unwrap().allocated_pages(), 3);
+        // slots 2..8 unmapped: no physical cost for padding
+        assert_eq!(mgr.stats().used_bytes, 2 * esz);
+    }
+
+    #[test]
+    fn subpage_sharing_between_neighbouring_ranges() {
+        // expert = half a page: ranges [0,1) and [1,2) share page 0
+        let esz = PS / 2;
+        let (mut mgr, pool) = real_mgr(esz, 8, 32);
+        mgr.load_range(0, 1).unwrap();
+        assert_eq!(pool.lock().unwrap().allocated_pages(), 1);
+        mgr.load_range(1, 1).unwrap();
+        // second load shares the already-mapped page — no new page
+        assert_eq!(pool.lock().unwrap().allocated_pages(), 1);
+        // unloading the first range must keep the shared page alive
+        mgr.unload_range(0).unwrap();
+        assert_eq!(pool.lock().unwrap().allocated_pages(), 1);
+        mgr.unload_range(1).unwrap();
+        assert_eq!(pool.lock().unwrap().allocated_pages(), 0);
+    }
+
+    #[test]
+    fn misaligned_boundary_page_shared() {
+        // Fig. 3: expert = 1.5 pages; adapter A = slots [0,2), B = [3,4).
+        // B starts at byte 4.5*PS -> page 4; A's pages are 0,1,2.
+        let esz = PS * 3 / 2;
+        let (mut mgr, pool) = real_mgr(esz, 8, 32);
+        mgr.load_range(0, 2).unwrap(); // pages 0..=2
+        mgr.load_range(3, 1).unwrap(); // bytes [4.5PS, 6PS) -> pages 4,5
+        assert_eq!(pool.lock().unwrap().allocated_pages(), 5);
+        // now load slot 2 (bytes [3PS, 4.5PS) -> pages 3,4): page 4 shared
+        mgr.load_range(2, 1).unwrap();
+        assert_eq!(pool.lock().unwrap().allocated_pages(), 6);
+        mgr.unload_range(3).unwrap(); // page 5 freed, page 4 kept (shared)
+        assert_eq!(pool.lock().unwrap().allocated_pages(), 5);
+    }
+
+    #[test]
+    fn write_read_roundtrip_across_pages() {
+        let esz = PS + 1024; // misaligned on purpose
+        let (mut mgr, _pool) = real_mgr(esz, 4, 32);
+        mgr.load_range(1, 2).unwrap();
+        let data: Vec<u8> = (0..esz).map(|i| (i % 251) as u8).collect();
+        mgr.write_expert(2, &data).unwrap();
+        let mut back = vec![0u8; esz];
+        mgr.read_expert(2, &mut back).unwrap();
+        assert_eq!(back, data);
+        // slot 0 not loaded: write must fail, not fault
+        assert!(mgr.write_expert(0, &data).is_err());
+    }
+
+    #[test]
+    fn oom_rolls_back_cleanly() {
+        let esz = PS;
+        let (mut mgr, pool) = real_mgr(esz, 16, 4);
+        mgr.load_range(0, 3).unwrap();
+        // needs 5 pages, only 1 left -> OOM, nothing must leak
+        assert!(mgr.load_range(4, 5).is_err());
+        assert_eq!(pool.lock().unwrap().allocated_pages(), 3);
+        assert_eq!(mgr.stats().mapped_pages, 3);
+        // and we can still load what fits
+        mgr.load_range(4, 1).unwrap();
+    }
+
+    #[test]
+    fn overlap_rejected() {
+        let (mut mgr, _pool) = real_mgr(PS, 8, 16);
+        mgr.load_range(2, 3).unwrap();
+        assert!(mgr.load_range(4, 2).is_err());
+        assert!(mgr.load_range(0, 3).is_err());
+        mgr.load_range(0, 2).unwrap();
+    }
+
+    #[test]
+    fn unload_unknown_range_rejected() {
+        let (mut mgr, _pool) = real_mgr(PS, 8, 16);
+        mgr.load_range(0, 2).unwrap();
+        assert!(mgr.unload_range(1).is_err()); // 1 is inside, not a start
+        mgr.unload_range(0).unwrap();
+    }
+
+    #[test]
+    fn accounting_backing_matches_real_page_counts() {
+        let esz = PS * 3 / 2;
+        let device = DeviceMemory::shared(PS * 1000);
+        let mut acc = ExpertMemoryManager::new_accounting(esz, 64, PS, device.clone());
+        let (mut real, pool) = real_mgr(esz, 64, 1000);
+        let loads = [(0usize, 2usize), (5, 3), (8, 1), (20, 4)];
+        for &(s, n) in &loads {
+            acc.load_range(s, n).unwrap();
+            real.load_range(s, n).unwrap();
+            assert_eq!(acc.stats(), real.stats());
+            assert_eq!(
+                device.lock().unwrap().used(),
+                pool.lock().unwrap().allocated_pages() * PS
+            );
+        }
+        acc.unload_range(5).unwrap();
+        real.unload_range(5).unwrap();
+        assert_eq!(acc.stats(), real.stats());
+    }
+
+    #[test]
+    fn accounting_oom_at_budget() {
+        let device = DeviceMemory::shared(PS * 2);
+        let mut acc = ExpertMemoryManager::new_accounting(PS, 16, PS, device);
+        acc.load_range(0, 2).unwrap();
+        assert!(acc.load_range(4, 1).is_err());
+    }
+
+    #[test]
+    fn property_refcounts_equal_covering_ranges() {
+        crate::util::prop::check(303, 25, |rng| {
+            let esz = (1 + rng.below(4) as usize) * PS / 2 + if rng.below(2) == 0 { 0 } else { 4096 };
+            let slots = 32;
+            let device = DeviceMemory::shared(usize::MAX / 2);
+            let mut mgr = ExpertMemoryManager::new_accounting(esz, slots, PS, device);
+            let mut model: Vec<(usize, usize)> = Vec::new();
+            for _ in 0..60 {
+                if rng.below(2) == 0 {
+                    let s = rng.below(slots as u64) as usize;
+                    let n = 1 + rng.below(4) as usize;
+                    if s + n <= slots && mgr.load_range(s, n).is_ok() {
+                        model.push((s, n));
+                    }
+                } else if !model.is_empty() {
+                    let i = rng.below(model.len() as u64) as usize;
+                    let (s, _) = model.swap_remove(i);
+                    mgr.unload_range(s).unwrap();
+                }
+                // model-check: mapped pages == union of pages of loaded ranges
+                let mut pages = std::collections::BTreeSet::new();
+                for &(s, n) in &model {
+                    let lo = s * esz / PS;
+                    let hi = ((s + n) * esz - 1) / PS;
+                    pages.extend(lo..=hi);
+                }
+                assert_eq!(mgr.stats().mapped_pages, pages.len());
+                let used: usize = model.iter().map(|&(_, n)| n * esz).sum();
+                assert_eq!(mgr.stats().used_bytes, used);
+            }
+        });
+    }
+}

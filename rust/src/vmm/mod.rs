@@ -1,0 +1,31 @@
+//! Virtual-memory-assisted expert weight management (paper section 4.2).
+//!
+//! The paper decouples *virtual address reservation* from *physical page
+//! commitment* using AscendCL VMM APIs so that the padded regions of the
+//! virtual weight tensor consume no device memory. This module rebuilds
+//! that API surface on Linux:
+//!
+//! | AscendCL                  | here                                      |
+//! |---------------------------|-------------------------------------------|
+//! | `aclrtReserveMemAddress`  | [`virtual_mem::VirtualSpace::reserve`] (`mmap(PROT_NONE)`) |
+//! | `aclrtMallocPhysical`     | [`page_pool::PagePool::alloc`] (`memfd` pages) |
+//! | `aclrtFreePhysical`       | [`page_pool::PagePool::free`]             |
+//! | `aclrtMapMem`             | [`virtual_mem::VirtualSpace::map_page`] (`mmap(MAP_FIXED)`) |
+//! | `aclrtUnmapMem`           | [`virtual_mem::VirtualSpace::unmap_page`] |
+//!
+//! [`expert_manager::ExpertMemoryManager`] implements the paper's
+//! *expert memory manager*: it maps pages only under occupied expert
+//! slots, shares partially-filled boundary pages between neighbouring
+//! adapters (sub-page allocation), and reference-counts pages so eviction
+//! releases exactly the pages no loaded range still touches.
+//!
+//! The same manager runs against an accounting-only backing
+//! ([`expert_manager::Backing::Accounting`]) to reproduce the paper-scale
+//! memory numbers (Fig. 9) without 64 GB of host RAM.
+
+pub mod expert_manager;
+pub mod page_pool;
+pub mod virtual_mem;
+
+/// Default physical page granularity (the paper's 2 MB).
+pub const DEFAULT_PAGE_SIZE: usize = 2 << 20;

@@ -1,0 +1,209 @@
+//! Physical memory page pool (the paper's per-device pool of fixed-size
+//! pages, `aclrtMallocPhysical`/`aclrtFreePhysical`).
+//!
+//! Pages are backed by a `memfd` so they can be mapped at arbitrary
+//! virtual addresses with `mmap(MAP_FIXED)` — the same decoupling the
+//! Ascend runtime provides between physical NPU pages and virtual device
+//! addresses. The pool pre-allocates capacity from the "device" (the
+//! memfd), hands pages to virtual weight tensors at adapter-load time and
+//! takes them back on eviction for reuse.
+
+use anyhow::{bail, Context, Result};
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd};
+
+/// Identifier of one physical page inside the pool's memfd.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PageId(pub u32);
+
+/// A fixed-granularity physical page pool ("device memory").
+pub struct PagePool {
+    fd: OwnedFd,
+    page_size: usize,
+    capacity: usize,
+    free: Vec<PageId>,
+    /// High-water mark of simultaneously allocated pages.
+    peak_allocated: usize,
+}
+
+impl PagePool {
+    /// Create a pool of `capacity` pages of `page_size` bytes each.
+    pub fn new(page_size: usize, capacity: usize) -> Result<Self> {
+        if page_size == 0 || page_size % page_align() != 0 {
+            bail!("page_size {page_size} must be a positive multiple of the OS page size");
+        }
+        let fd = unsafe {
+            let raw = libc::memfd_create(
+                b"expertweave-pool\0".as_ptr() as *const libc::c_char,
+                libc::MFD_CLOEXEC,
+            );
+            if raw < 0 {
+                bail!("memfd_create failed: {}", std::io::Error::last_os_error());
+            }
+            OwnedFd::from_raw_fd(raw)
+        };
+        let total = page_size
+            .checked_mul(capacity)
+            .context("pool size overflow")?;
+        let rc = unsafe { libc::ftruncate(fd.as_raw_fd(), total as libc::off_t) };
+        if rc != 0 {
+            bail!("ftruncate failed: {}", std::io::Error::last_os_error());
+        }
+        // LIFO free list: hot pages get reused first.
+        let free = (0..capacity as u32).rev().map(PageId).collect();
+        Ok(PagePool { fd, page_size, capacity, free, peak_allocated: 0 })
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn allocated_pages(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    pub fn peak_allocated(&self) -> usize {
+        self.peak_allocated
+    }
+
+    pub(crate) fn raw_fd(&self) -> i32 {
+        self.fd.as_raw_fd()
+    }
+
+    /// Byte offset of a page inside the memfd.
+    pub fn page_offset(&self, page: PageId) -> usize {
+        page.0 as usize * self.page_size
+    }
+
+    /// Allocate `n` physical pages (`aclrtMallocPhysical`).
+    pub fn alloc(&mut self, n: usize) -> Result<Vec<PageId>> {
+        if n > self.free.len() {
+            bail!(
+                "device out of memory: requested {n} pages, {} free of {}",
+                self.free.len(),
+                self.capacity
+            );
+        }
+        let at = self.free.len() - n;
+        let pages = self.free.split_off(at);
+        self.peak_allocated = self.peak_allocated.max(self.allocated_pages());
+        Ok(pages)
+    }
+
+    /// Return pages to the pool (`aclrtFreePhysical`).
+    ///
+    /// Double-free is a logic error and panics in debug builds.
+    pub fn free(&mut self, pages: &[PageId]) {
+        for &p in pages {
+            debug_assert!(
+                !self.free.contains(&p),
+                "double free of physical page {p:?}"
+            );
+            debug_assert!((p.0 as usize) < self.capacity);
+            self.free.push(p);
+        }
+    }
+}
+
+impl std::fmt::Debug for PagePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagePool")
+            .field("page_size", &self.page_size)
+            .field("capacity", &self.capacity)
+            .field("free", &self.free.len())
+            .finish()
+    }
+}
+
+/// OS page size (mmap granularity floor).
+pub fn page_align() -> usize {
+    static CACHE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| unsafe { libc::sysconf(libc::_SC_PAGESIZE) as usize })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut pool = PagePool::new(64 << 10, 16).unwrap();
+        assert_eq!(pool.free_pages(), 16);
+        let a = pool.alloc(5).unwrap();
+        assert_eq!(a.len(), 5);
+        assert_eq!(pool.allocated_pages(), 5);
+        let b = pool.alloc(11).unwrap();
+        assert_eq!(pool.free_pages(), 0);
+        pool.free(&a);
+        assert_eq!(pool.free_pages(), 5);
+        pool.free(&b);
+        assert_eq!(pool.free_pages(), 16);
+        assert_eq!(pool.peak_allocated(), 16);
+    }
+
+    #[test]
+    fn oom_is_an_error() {
+        let mut pool = PagePool::new(64 << 10, 4).unwrap();
+        let _a = pool.alloc(3).unwrap();
+        assert!(pool.alloc(2).is_err());
+        assert!(pool.alloc(1).is_ok());
+    }
+
+    #[test]
+    fn distinct_pages() {
+        let mut pool = PagePool::new(64 << 10, 32).unwrap();
+        let a = pool.alloc(32).unwrap();
+        let mut set = std::collections::HashSet::new();
+        for p in &a {
+            assert!(set.insert(*p), "duplicate page handed out");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_page_size() {
+        assert!(PagePool::new(1000, 4).is_err());
+        assert!(PagePool::new(0, 4).is_err());
+    }
+
+    #[test]
+    fn reuse_is_lifo() {
+        let mut pool = PagePool::new(64 << 10, 8).unwrap();
+        let a = pool.alloc(2).unwrap();
+        pool.free(&a);
+        let b = pool.alloc(2).unwrap();
+        // LIFO: the just-freed pages come back first (reuse-hot property)
+        assert_eq!(
+            std::collections::HashSet::<PageId>::from_iter(a),
+            std::collections::HashSet::from_iter(b)
+        );
+    }
+
+    #[test]
+    fn property_alloc_free_never_loses_pages() {
+        crate::util::prop::check(101, 50, |rng| {
+            let cap = 1 + rng.below(64) as usize;
+            let mut pool = PagePool::new(64 << 10, cap).unwrap();
+            let mut held: Vec<Vec<PageId>> = Vec::new();
+            for _ in 0..100 {
+                if rng.below(2) == 0 {
+                    let want = rng.below(8) as usize;
+                    if let Ok(pages) = pool.alloc(want) {
+                        held.push(pages);
+                    }
+                } else if let Some(pages) = held.pop() {
+                    pool.free(&pages);
+                }
+                let held_count: usize = held.iter().map(|v| v.len()).sum();
+                assert_eq!(pool.allocated_pages(), held_count);
+                assert_eq!(pool.free_pages() + held_count, cap);
+            }
+        });
+    }
+}

@@ -1,0 +1,339 @@
+//! Contiguous virtual address space with page-granular physical mapping
+//! (`aclrtReserveMemAddress` / `aclrtMapMem` / `aclrtUnmapMem`).
+//!
+//! `reserve` mmaps the whole range `PROT_NONE` (pure address-space
+//! reservation, zero physical cost); `map_page` replaces one page-sized
+//! window with a `MAP_SHARED | MAP_FIXED` view of a [`PagePool`] page;
+//! `unmap_page` restores the `PROT_NONE` reservation. Accessing an
+//! unmapped window faults — exactly the "inconsiderate implementations
+//! lead to runtime errors" hazard the paper calls out, which the
+//! [`super::expert_manager`] layer exists to prevent.
+
+use super::page_pool::{page_align, PageId, PagePool};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A reserved virtual region with decoupled physical backing.
+pub struct VirtualSpace {
+    base: *mut u8,
+    len: usize,
+    page_size: usize,
+    /// page-index -> physical page currently mapped there
+    mapped: BTreeMap<usize, PageId>,
+}
+
+// The raw pointer is owned exclusively by this struct (mmap region).
+unsafe impl Send for VirtualSpace {}
+
+impl VirtualSpace {
+    /// Reserve `pages * page_size` bytes of contiguous virtual address
+    /// space without committing any physical memory.
+    pub fn reserve(page_size: usize, pages: usize) -> Result<Self> {
+        if page_size == 0 || page_size % page_align() != 0 {
+            bail!("page_size must be a multiple of the OS page size");
+        }
+        let len = page_size * pages;
+        let base = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len.max(1),
+                libc::PROT_NONE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_NORESERVE,
+                -1,
+                0,
+            )
+        };
+        if base == libc::MAP_FAILED {
+            bail!("reserve mmap failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(VirtualSpace { base: base as *mut u8, len, page_size, mapped: BTreeMap::new() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn mapped_pages(&self) -> usize {
+        self.mapped.len()
+    }
+
+    pub fn base_ptr(&self) -> *const u8 {
+        self.base
+    }
+
+    /// Is the page at `page_index` currently backed?
+    pub fn is_mapped(&self, page_index: usize) -> bool {
+        self.mapped.contains_key(&page_index)
+    }
+
+    /// Map a physical page from `pool` at `page_index` (`aclrtMapMem`).
+    pub fn map_page(&mut self, page_index: usize, page: PageId, pool: &PagePool) -> Result<()> {
+        if pool.page_size() != self.page_size {
+            bail!("pool page size mismatch");
+        }
+        let offset = page_index * self.page_size;
+        if offset + self.page_size > self.len {
+            bail!("map beyond reserved range: page {page_index}");
+        }
+        if self.mapped.contains_key(&page_index) {
+            bail!("page {page_index} already mapped");
+        }
+        let addr = unsafe {
+            libc::mmap(
+                self.base.add(offset) as *mut libc::c_void,
+                self.page_size,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED | libc::MAP_FIXED,
+                pool.raw_fd(),
+                pool.page_offset(page) as libc::off_t,
+            )
+        };
+        if addr == libc::MAP_FAILED {
+            bail!("map_page mmap failed: {}", std::io::Error::last_os_error());
+        }
+        self.mapped.insert(page_index, page);
+        Ok(())
+    }
+
+    /// Unmap the page at `page_index`, restoring the bare reservation;
+    /// returns the physical page so the caller can release it to the pool
+    /// (`aclrtUnmapMem`).
+    pub fn unmap_page(&mut self, page_index: usize) -> Result<PageId> {
+        let page = match self.mapped.remove(&page_index) {
+            Some(p) => p,
+            None => bail!("page {page_index} is not mapped"),
+        };
+        let offset = page_index * self.page_size;
+        let addr = unsafe {
+            libc::mmap(
+                self.base.add(offset) as *mut libc::c_void,
+                self.page_size,
+                libc::PROT_NONE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_FIXED | libc::MAP_NORESERVE,
+                -1,
+                0,
+            )
+        };
+        if addr == libc::MAP_FAILED {
+            bail!("unmap re-reserve failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(page)
+    }
+
+    fn check_range_mapped(&self, offset: usize, len: usize) -> Result<()> {
+        if len == 0 {
+            return Ok(());
+        }
+        if offset + len > self.len {
+            bail!("range [{offset}, {}) beyond reservation", offset + len);
+        }
+        let first = offset / self.page_size;
+        let last = (offset + len - 1) / self.page_size;
+        for p in first..=last {
+            if !self.mapped.contains_key(&p) {
+                bail!("access to unmapped page {p} (offset {offset}, len {len})");
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy bytes into the region (must be fully mapped).
+    pub fn write(&mut self, offset: usize, data: &[u8]) -> Result<()> {
+        self.check_range_mapped(offset, data.len())?;
+        unsafe {
+            std::ptr::copy_nonoverlapping(data.as_ptr(), self.base.add(offset), data.len());
+        }
+        Ok(())
+    }
+
+    /// Read bytes out of the region (must be fully mapped).
+    pub fn read(&self, offset: usize, out: &mut [u8]) -> Result<()> {
+        self.check_range_mapped(offset, out.len())?;
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.base.add(offset), out.as_mut_ptr(), out.len());
+        }
+        Ok(())
+    }
+
+    /// Borrow a mapped range as a typed slice (e.g. for buffer upload).
+    ///
+    /// # Safety-by-construction
+    /// Errors (rather than faulting) if any page in the range is unmapped.
+    pub fn slice_f32(&self, offset: usize, count: usize) -> Result<&[f32]> {
+        let len = count * std::mem::size_of::<f32>();
+        self.check_range_mapped(offset, len)?;
+        if offset % std::mem::align_of::<f32>() != 0 {
+            bail!("unaligned f32 slice at offset {offset}");
+        }
+        Ok(unsafe { std::slice::from_raw_parts(self.base.add(offset) as *const f32, count) })
+    }
+}
+
+impl Drop for VirtualSpace {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.base as *mut libc::c_void, self.len.max(1));
+        }
+    }
+}
+
+impl std::fmt::Debug for VirtualSpace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("VirtualSpace")
+            .field("len", &self.len)
+            .field("page_size", &self.page_size)
+            .field("mapped_pages", &self.mapped.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PS: usize = 64 << 10;
+
+    #[test]
+    fn reserve_is_free_of_physical_pages() {
+        let vs = VirtualSpace::reserve(PS, 1024).unwrap(); // 64 MB of address space
+        assert_eq!(vs.mapped_pages(), 0);
+        assert_eq!(vs.len(), 1024 * PS);
+    }
+
+    #[test]
+    fn map_write_read_roundtrip() {
+        let mut pool = PagePool::new(PS, 4).unwrap();
+        let mut vs = VirtualSpace::reserve(PS, 8).unwrap();
+        let p = pool.alloc(1).unwrap()[0];
+        vs.map_page(2, p, &pool).unwrap();
+        let data = vec![0xAB_u8; 128];
+        vs.write(2 * PS + 100, &data).unwrap();
+        let mut back = vec![0u8; 128];
+        vs.read(2 * PS + 100, &mut back).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn unmapped_access_is_an_error_not_a_fault() {
+        let mut pool = PagePool::new(PS, 4).unwrap();
+        let mut vs = VirtualSpace::reserve(PS, 8).unwrap();
+        assert!(vs.write(0, &[1, 2, 3]).is_err());
+        let p = pool.alloc(1).unwrap()[0];
+        vs.map_page(0, p, &pool).unwrap();
+        // crossing into the unmapped second page is rejected
+        assert!(vs.write(PS - 2, &[1, 2, 3, 4]).is_err());
+        assert!(vs.write(PS - 2, &[1, 2]).is_ok());
+    }
+
+    #[test]
+    fn two_mappings_of_same_physical_page_share_content() {
+        // the mechanism behind sub-page sharing between adjacent adapters
+        let mut pool = PagePool::new(PS, 2).unwrap();
+        let mut a = VirtualSpace::reserve(PS, 2).unwrap();
+        let mut b = VirtualSpace::reserve(PS, 2).unwrap();
+        let p = pool.alloc(1).unwrap()[0];
+        a.map_page(0, p, &pool).unwrap();
+        b.map_page(1, p, &pool).unwrap();
+        a.write(10, b"hello").unwrap();
+        let mut out = [0u8; 5];
+        b.read(PS + 10, &mut out).unwrap();
+        assert_eq!(&out, b"hello");
+    }
+
+    #[test]
+    fn unmap_returns_page_and_blocks_access() {
+        let mut pool = PagePool::new(PS, 2).unwrap();
+        let mut vs = VirtualSpace::reserve(PS, 2).unwrap();
+        let p = pool.alloc(1).unwrap()[0];
+        vs.map_page(1, p, &pool).unwrap();
+        vs.write(PS, &[9]).unwrap();
+        let back = vs.unmap_page(1).unwrap();
+        assert_eq!(back, p);
+        assert!(vs.write(PS, &[9]).is_err());
+        assert!(vs.unmap_page(1).is_err());
+        pool.free(&[back]);
+        assert_eq!(pool.free_pages(), 2);
+    }
+
+    #[test]
+    fn remap_after_unmap_preserves_pool_content() {
+        // physical pages keep their bytes while unmapped (memfd-backed)
+        let mut pool = PagePool::new(PS, 1).unwrap();
+        let mut vs = VirtualSpace::reserve(PS, 4).unwrap();
+        let p = pool.alloc(1).unwrap()[0];
+        vs.map_page(0, p, &pool).unwrap();
+        vs.write(0, b"persist").unwrap();
+        let p = vs.unmap_page(0).unwrap();
+        vs.map_page(3, p, &pool).unwrap();
+        let mut out = [0u8; 7];
+        vs.read(3 * PS, &mut out).unwrap();
+        assert_eq!(&out, b"persist");
+    }
+
+    #[test]
+    fn double_map_rejected() {
+        let mut pool = PagePool::new(PS, 2).unwrap();
+        let mut vs = VirtualSpace::reserve(PS, 2).unwrap();
+        let pages = pool.alloc(2).unwrap();
+        vs.map_page(0, pages[0], &pool).unwrap();
+        assert!(vs.map_page(0, pages[1], &pool).is_err());
+    }
+
+    #[test]
+    fn map_out_of_range_rejected() {
+        let mut pool = PagePool::new(PS, 1).unwrap();
+        let mut vs = VirtualSpace::reserve(PS, 2).unwrap();
+        let p = pool.alloc(1).unwrap()[0];
+        assert!(vs.map_page(2, p, &pool).is_err());
+    }
+
+    #[test]
+    fn slice_f32_over_mapped_range() {
+        let mut pool = PagePool::new(PS, 2).unwrap();
+        let mut vs = VirtualSpace::reserve(PS, 2).unwrap();
+        for (i, p) in pool.alloc(2).unwrap().into_iter().enumerate() {
+            vs.map_page(i, p, &pool).unwrap();
+        }
+        let vals: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(vals.as_ptr() as *const u8, vals.len() * 4)
+        };
+        vs.write(PS - 64, bytes).unwrap(); // straddles the page boundary
+        let s = vs.slice_f32(PS - 64, 32).unwrap();
+        assert_eq!(s, &vals[..]);
+        assert!(vs.slice_f32(PS - 63, 4).is_err()); // unaligned
+    }
+
+    #[test]
+    fn property_mapped_set_tracks_operations() {
+        crate::util::prop::check(202, 30, |rng| {
+            let pages = 16;
+            let mut pool = PagePool::new(PS, pages).unwrap();
+            let mut vs = VirtualSpace::reserve(PS, pages).unwrap();
+            let mut model: std::collections::BTreeMap<usize, PageId> = Default::default();
+            for _ in 0..60 {
+                let idx = rng.below(pages as u64) as usize;
+                if model.contains_key(&idx) {
+                    let p = vs.unmap_page(idx).unwrap();
+                    assert_eq!(p, model.remove(&idx).unwrap());
+                    pool.free(&[p]);
+                } else if let Ok(ps) = pool.alloc(1) {
+                    vs.map_page(idx, ps[0], &pool).unwrap();
+                    model.insert(idx, ps[0]);
+                }
+                assert_eq!(vs.mapped_pages(), model.len());
+                for (&i, _) in &model {
+                    assert!(vs.is_mapped(i));
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,147 @@
+//! Seeded base-model weight generation.
+//!
+//! The paper serves the ESFT-vanilla 16B checkpoint; no checkpoint is
+//! available offline, so base weights are generated deterministically from
+//! a seed (uniform `±1/sqrt(fan_in)`, RMS-norm gains = 1). System
+//! behaviour — routing distributions, batching, memory — is what the
+//! experiments measure, and the weave≡merged equivalence tests are
+//! value-exact regardless of the values chosen.
+
+use crate::model::ModelConfig;
+use crate::util::rng::Pcg;
+
+/// All non-expert parameters by name, plus the base (`M`-slot) expert
+/// tensors per layer/projection.
+pub struct BaseWeights {
+    cfg: ModelConfig,
+    /// name -> host array for every non-expert parameter.
+    named: std::collections::BTreeMap<String, Vec<f32>>,
+    /// `[layer][proj]` -> `[M * hidden * inter]` f32 (proj: gate, up, down).
+    experts: Vec<[Vec<f32>; 3]>,
+}
+
+/// Projection index names (order fixed by the artifact ABI).
+pub const PROJ_NAMES: [&str; 3] = ["w_gate", "w_up", "w_down"];
+
+fn fill_uniform(rng: &mut Pcg, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+}
+
+impl BaseWeights {
+    /// Generate every base parameter for `cfg` from `seed`.
+    pub fn generate(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut named = std::collections::BTreeMap::new();
+        let h = cfg.hidden;
+        let (qd, kd) = (cfg.q_heads * cfg.head_dim, cfg.kv_heads * cfg.head_dim);
+        let s_h = 1.0 / (h as f32).sqrt();
+        let mut rng = Pcg::with_stream(seed, 0);
+
+        named.insert("embed".into(), fill_uniform(&mut rng, cfg.vocab * h, s_h));
+        for l in 0..cfg.layers {
+            let p = format!("layer{l}.");
+            let mut lrng = Pcg::with_stream(seed, 100 + l as u64);
+            named.insert(format!("{p}ln_attn"), vec![1.0; h]);
+            named.insert(format!("{p}wq"), fill_uniform(&mut lrng, h * qd, s_h));
+            named.insert(format!("{p}wk"), fill_uniform(&mut lrng, h * kd, s_h));
+            named.insert(format!("{p}wv"), fill_uniform(&mut lrng, h * kd, s_h));
+            named.insert(format!("{p}wo"), fill_uniform(&mut lrng, qd * h, 1.0 / (qd as f32).sqrt()));
+            named.insert(format!("{p}ln_ffn"), vec![1.0; h]);
+            named.insert(format!("{p}router"), fill_uniform(&mut lrng, h * cfg.num_experts, s_h));
+            named.insert(format!("{p}shared_gate"), fill_uniform(&mut lrng, h * cfg.shared_inter, s_h));
+            named.insert(format!("{p}shared_up"), fill_uniform(&mut lrng, h * cfg.shared_inter, s_h));
+            named.insert(
+                format!("{p}shared_down"),
+                fill_uniform(&mut lrng, cfg.shared_inter * h, 1.0 / (cfg.shared_inter as f32).sqrt()),
+            );
+        }
+        named.insert("ln_final".into(), vec![1.0; h]);
+        named.insert("lm_head".into(), fill_uniform(&mut rng, h * cfg.vocab, s_h));
+
+        let per_proj = cfg.num_experts * h * cfg.expert_inter;
+        let s_f = 1.0 / (cfg.expert_inter as f32).sqrt();
+        let experts = (0..cfg.layers)
+            .map(|l| {
+                let mut erng = Pcg::with_stream(seed, 1000 + l as u64);
+                [
+                    fill_uniform(&mut erng, per_proj, s_h),
+                    fill_uniform(&mut erng, per_proj, s_h),
+                    fill_uniform(&mut erng, per_proj, s_f),
+                ]
+            })
+            .collect();
+        BaseWeights { cfg: cfg.clone(), named, experts }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Non-expert parameter by ABI name (`layer3.wq`, `embed`, ...).
+    pub fn named(&self, name: &str) -> Option<&[f32]> {
+        self.named.get(name).map(|v| v.as_slice())
+    }
+
+    /// Base expert tensor `[M * hidden * inter]` for (layer, proj).
+    pub fn experts(&self, layer: usize, proj: usize) -> &[f32] {
+        &self.experts[layer][proj]
+    }
+
+    /// One base expert's rows for (layer, proj, expert).
+    pub fn expert(&self, layer: usize, proj: usize, e: usize) -> &[f32] {
+        let per = self.cfg.hidden * self.cfg.expert_inter;
+        &self.experts[layer][proj][e * per..(e + 1) * per]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        let mut c = ModelConfig::paper16b();
+        c.name = "t".into();
+        c.vocab = 64;
+        c.hidden = 16;
+        c.layers = 2;
+        c.q_heads = 2;
+        c.kv_heads = 1;
+        c.head_dim = 8;
+        c.num_experts = 4;
+        c.expert_inter = 8;
+        c.shared_inter = 16;
+        c
+    }
+
+    #[test]
+    fn deterministic_and_named() {
+        let c = tiny_cfg();
+        let a = BaseWeights::generate(&c, 7);
+        let b = BaseWeights::generate(&c, 7);
+        assert_eq!(a.named("embed"), b.named("embed"));
+        assert_eq!(a.experts(1, 2), b.experts(1, 2));
+        let d = BaseWeights::generate(&c, 8);
+        assert_ne!(a.named("embed"), d.named("embed"));
+    }
+
+    #[test]
+    fn shapes() {
+        let c = tiny_cfg();
+        let w = BaseWeights::generate(&c, 0);
+        assert_eq!(w.named("embed").unwrap().len(), 64 * 16);
+        assert_eq!(w.named("layer0.wq").unwrap().len(), 16 * 16);
+        assert_eq!(w.named("layer1.router").unwrap().len(), 16 * 4);
+        assert_eq!(w.experts(0, 0).len(), 4 * 16 * 8);
+        assert_eq!(w.expert(0, 1, 3).len(), 16 * 8);
+        assert!(w.named("nope").is_none());
+        // norms are ones
+        assert!(w.named("layer0.ln_attn").unwrap().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn values_bounded_by_scale() {
+        let c = tiny_cfg();
+        let w = BaseWeights::generate(&c, 0);
+        let s = 1.0 / (16f32).sqrt();
+        assert!(w.named("embed").unwrap().iter().all(|&x| x.abs() <= s));
+    }
+}

@@ -1,0 +1,104 @@
+//! The *vLLM-Ascend (Merged)* baseline: merge an ESFT adapter into the
+//! base model offline, producing a standalone `M`-expert checkpoint that
+//! is then served in isolation (one engine instance per adapter).
+//!
+//! Used by Fig. 6 (throughput vs merged instances under skew), Fig. 9
+//! (memory scaling: one full model per adapter) and Table 3 (accuracy
+//! parity: ExpertWeave output must equal the merged model's).
+
+use crate::adapters::format::Adapter;
+use crate::model::ModelConfig;
+use crate::weights::base_gen::BaseWeights;
+use anyhow::{bail, Result};
+
+/// Build the merged `[M * hidden * inter]` expert tensor for one
+/// (layer, projection): base experts with the adapter's fine-tuned rows
+/// substituted in place.
+pub fn merged_expert_tensor(
+    cfg: &ModelConfig,
+    base: &BaseWeights,
+    adapter: &Adapter,
+    layer: usize,
+    proj: usize,
+) -> Result<Vec<f32>> {
+    if adapter.layers.len() != cfg.layers {
+        bail!("adapter/model layer mismatch");
+    }
+    let per = cfg.hidden * cfg.expert_inter;
+    let mut out = base.experts(layer, proj).to_vec();
+    let la = &adapter.layers[layer];
+    for (local, &id) in la.expert_ids.iter().enumerate() {
+        let id = id as usize;
+        if id >= cfg.num_experts {
+            bail!("expert id {id} out of range");
+        }
+        let w3 = la.expert_weights(local, cfg.hidden, cfg.expert_inter);
+        out[id * per..(id + 1) * per].copy_from_slice(&w3[proj * per..(proj + 1) * per]);
+    }
+    Ok(out)
+}
+
+/// Device bytes of one merged-model deployment (full model weights, f32).
+/// Each extra adapter costs a whole model in the merged strategy.
+pub fn merged_model_bytes(cfg: &ModelConfig) -> usize {
+    cfg.base_model_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::format::AdapterLayer;
+
+    fn tiny_cfg() -> ModelConfig {
+        let mut c = ModelConfig::paper16b();
+        c.hidden = 4;
+        c.layers = 1;
+        c.num_experts = 3;
+        c.expert_inter = 2;
+        c.max_adapters = 2;
+        c.e_max = 2;
+        c
+    }
+
+    #[test]
+    fn substitutes_only_fine_tuned_rows() {
+        let cfg = tiny_cfg();
+        let base = BaseWeights::generate(&cfg, 0);
+        let per = cfg.hidden * cfg.expert_inter;
+        let ad = Adapter {
+            name: "a".into(),
+            domain: "d".into(),
+            hidden: cfg.hidden,
+            inter: cfg.expert_inter,
+            layers: vec![AdapterLayer {
+                expert_ids: vec![1],
+                weights: (0..3 * per).map(|i| 100.0 + i as f32).collect(),
+            }],
+        };
+        for proj in 0..3 {
+            let merged = merged_expert_tensor(&cfg, &base, &ad, 0, proj).unwrap();
+            assert_eq!(&merged[..per], &base.experts(0, proj)[..per]); // expert 0 kept
+            assert_eq!(&merged[2 * per..], &base.experts(0, proj)[2 * per..]); // expert 2 kept
+            let want: Vec<f32> =
+                (0..per).map(|i| 100.0 + (proj * per + i) as f32).collect();
+            assert_eq!(&merged[per..2 * per], &want[..]); // expert 1 replaced
+        }
+    }
+
+    #[test]
+    fn bad_adapter_rejected() {
+        let cfg = tiny_cfg();
+        let base = BaseWeights::generate(&cfg, 0);
+        let ad = Adapter {
+            name: "a".into(),
+            domain: "d".into(),
+            hidden: cfg.hidden,
+            inter: cfg.expert_inter,
+            layers: vec![AdapterLayer {
+                expert_ids: vec![7], // out of range
+                weights: vec![0.0; 3 * cfg.hidden * cfg.expert_inter],
+            }],
+        };
+        assert!(merged_expert_tensor(&cfg, &base, &ad, 0, 0).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Expert weight stores: the paper's **virtual weight tensor** plus the
+//! two baselines it is evaluated against.
+//!
+//! * [`store::WeightStore`] with [`store::StoreMode::Virtual`] — the
+//!   ExpertWeave design: virtual span of `G = M + N·E_max` slots per
+//!   (layer, projection), physical pages only under loaded experts
+//!   (via [`crate::vmm::expert_manager`]).
+//! * [`store::StoreMode::Padding`] — the section-3 baseline: the whole
+//!   padded tensor is physically committed at initialization.
+//! * [`merged`] — the vLLM-Ascend (Merged) baseline: one full standalone
+//!   model per adapter.
+//! * [`base_gen`] — seeded generation of base-model weights (the stand-in
+//!   for the unavailable 16B checkpoint; see DESIGN.md section 7).
+
+pub mod base_gen;
+pub mod merged;
+pub mod params;
+pub mod store;
+
+pub use base_gen::BaseWeights;
+pub use params::{BaseOnlyParams, MergedParams, StoreParams};
+pub use store::{StoreMode, WeightStore};

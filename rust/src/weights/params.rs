@@ -1,0 +1,92 @@
+//! [`ParamSource`] implementations bridging weight stores to the PJRT
+//! runtime's upload path.
+
+use crate::adapters::format::Adapter;
+use crate::model::ModelConfig;
+use crate::runtime::engine::ParamSource;
+use crate::weights::base_gen::BaseWeights;
+use crate::weights::merged::merged_expert_tensor;
+use crate::weights::store::WeightStore;
+use anyhow::{bail, Result};
+
+/// ExpertWeave deployment: base params + the virtual weight tensor
+/// (adapter slots included) from a [`WeightStore`].
+pub struct StoreParams<'a> {
+    pub base: &'a BaseWeights,
+    pub store: &'a WeightStore,
+    scratch: Vec<f32>,
+}
+
+impl<'a> StoreParams<'a> {
+    pub fn new(base: &'a BaseWeights, store: &'a WeightStore) -> Self {
+        StoreParams { base, store, scratch: Vec::new() }
+    }
+}
+
+impl ParamSource for StoreParams<'_> {
+    fn named(&self, name: &str) -> Option<&[f32]> {
+        self.base.named(name)
+    }
+
+    fn expert_tensor(&mut self, layer: usize, proj: usize, len: usize) -> Result<&[f32]> {
+        self.store.materialize_proj(layer, proj, &mut self.scratch)?;
+        if self.scratch.len() != len {
+            bail!(
+                "expert tensor (layer {layer}, proj {proj}): {} != {len}",
+                self.scratch.len()
+            );
+        }
+        Ok(&self.scratch)
+    }
+}
+
+/// Base-only deployment (vLLM-Ascend Base-Only): just the M base experts.
+pub struct BaseOnlyParams<'a> {
+    pub base: &'a BaseWeights,
+}
+
+impl ParamSource for BaseOnlyParams<'_> {
+    fn named(&self, name: &str) -> Option<&[f32]> {
+        self.base.named(name)
+    }
+
+    fn expert_tensor(&mut self, layer: usize, proj: usize, len: usize) -> Result<&[f32]> {
+        let t = self.base.experts(layer, proj);
+        if t.len() != len {
+            bail!("base expert tensor (layer {layer}, proj {proj}): {} != {len}", t.len());
+        }
+        Ok(t)
+    }
+}
+
+/// Merged deployment (vLLM-Ascend Merged): base experts with one adapter's
+/// fine-tuned rows substituted offline.
+pub struct MergedParams<'a> {
+    pub cfg: &'a ModelConfig,
+    pub base: &'a BaseWeights,
+    pub adapter: &'a Adapter,
+    scratch: Vec<f32>,
+}
+
+impl<'a> MergedParams<'a> {
+    pub fn new(cfg: &'a ModelConfig, base: &'a BaseWeights, adapter: &'a Adapter) -> Self {
+        MergedParams { cfg, base, adapter, scratch: Vec::new() }
+    }
+}
+
+impl ParamSource for MergedParams<'_> {
+    fn named(&self, name: &str) -> Option<&[f32]> {
+        self.base.named(name)
+    }
+
+    fn expert_tensor(&mut self, layer: usize, proj: usize, len: usize) -> Result<&[f32]> {
+        self.scratch = merged_expert_tensor(self.cfg, self.base, self.adapter, layer, proj)?;
+        if self.scratch.len() != len {
+            bail!(
+                "merged expert tensor (layer {layer}, proj {proj}): {} != {len}",
+                self.scratch.len()
+            );
+        }
+        Ok(&self.scratch)
+    }
+}

@@ -1,0 +1,477 @@
+//! The virtual weight tensor store (and its padding baseline).
+//!
+//! One [`WeightStore`] owns, per (MoE layer, projection), an
+//! [`ExpertMemoryManager`] over a `G = M + N·E_max`-slot virtual span:
+//!
+//! ```text
+//! slots:   [0 .. M)                      base-model experts (init time)
+//!          [Δ_i .. Δ_i + e_i^(l))        adapter i's fine-tuned experts
+//!          [Δ_i + e_i^(l) .. Δ_i+E_max)  padding — never physically backed
+//! ```
+//!
+//! * `StoreMode::Virtual` (ExpertWeave): pages are mapped only under the
+//!   loaded sub-ranges; padding costs address space only.
+//! * `StoreMode::Padding` (section-3 baseline): loading adapter `i`
+//!   commits its full `E_max` window regardless of `e_i^(l)`.
+//!
+//! A [`DeviceMemory`] ledger tracks simulated device bytes; page-level
+//! map/unmap deltas are charged after every operation so KV-capacity
+//! accounting (Fig. 9) sees weights and cache from one budget.
+
+use crate::adapters::format::Adapter;
+use crate::memsim::DeviceMemory;
+use crate::model::ModelConfig;
+use crate::vmm::expert_manager::{ExpertMemoryManager, MemStats};
+use crate::vmm::page_pool::PagePool;
+use crate::weights::base_gen::BaseWeights;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Physical commitment policy for adapter windows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreMode {
+    /// ExpertWeave: commit only `e_i^(l)` slots per layer.
+    Virtual,
+    /// Baseline: commit the full `E_max` window per layer.
+    Padding,
+}
+
+/// Per-device store of all expert weights behind the GMM operator.
+pub struct WeightStore {
+    cfg: ModelConfig,
+    mode: StoreMode,
+    device: Arc<Mutex<DeviceMemory>>,
+    /// `[layer * 3 + proj]`
+    managers: Vec<ExpertMemoryManager>,
+    /// adapter slot -> per-layer fine-tuned expert counts
+    loaded: HashMap<usize, Vec<usize>>,
+    base_loaded: bool,
+    ledger_bytes: usize,
+}
+
+impl WeightStore {
+    /// Create an empty store; `pool` supplies physical pages (shared by
+    /// all managers of this device), `device` is the simulated budget.
+    pub fn new(
+        cfg: &ModelConfig,
+        mode: StoreMode,
+        pool: Arc<Mutex<PagePool>>,
+        device: Arc<Mutex<DeviceMemory>>,
+    ) -> Result<Self> {
+        let mut managers = Vec::with_capacity(cfg.layers * 3);
+        for _l in 0..cfg.layers {
+            for _p in 0..3 {
+                managers.push(ExpertMemoryManager::new_real(
+                    cfg.expert_proj_bytes(),
+                    cfg.total_expert_slots(),
+                    pool.clone(),
+                )?);
+            }
+        }
+        Ok(WeightStore {
+            cfg: cfg.clone(),
+            mode,
+            device,
+            managers,
+            loaded: HashMap::new(),
+            base_loaded: false,
+            ledger_bytes: 0,
+        })
+    }
+
+    pub fn mode(&self) -> StoreMode {
+        self.mode
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn mgr(&mut self, layer: usize, proj: usize) -> &mut ExpertMemoryManager {
+        &mut self.managers[layer * 3 + proj]
+    }
+
+    fn total_mapped_bytes(&self) -> usize {
+        self.managers.iter().map(|m| m.stats().mapped_bytes).sum()
+    }
+
+    /// Charge/release the mapped-bytes delta on the device ledger;
+    /// on ledger OOM run `rollback` and propagate the error.
+    fn settle_ledger(&mut self, rollback: impl FnOnce(&mut Self)) -> Result<()> {
+        let now = self.total_mapped_bytes();
+        let res = if now > self.ledger_bytes {
+            self.device.lock().unwrap().alloc(now - self.ledger_bytes)
+        } else {
+            self.device.lock().unwrap().release(self.ledger_bytes - now);
+            Ok(())
+        };
+        match res {
+            Ok(()) => {
+                self.ledger_bytes = now;
+                Ok(())
+            }
+            Err(e) => {
+                rollback(self);
+                let after = self.total_mapped_bytes();
+                debug_assert_eq!(after, self.ledger_bytes);
+                Err(e).context("device budget exceeded loading weights")
+            }
+        }
+    }
+
+    /// Load the base model's M experts into slots `[0, M)` of every
+    /// (layer, projection) tensor. Done once at engine start.
+    pub fn load_base(&mut self, base: &BaseWeights) -> Result<()> {
+        if self.base_loaded {
+            bail!("base already loaded");
+        }
+        let m = self.cfg.num_experts;
+        let per = self.cfg.hidden * self.cfg.expert_inter;
+        for l in 0..self.cfg.layers {
+            for p in 0..3 {
+                self.mgr(l, p).load_range(0, m)?;
+                for e in 0..m {
+                    let w = base.expert(l, p, e);
+                    let bytes = f32_bytes(w);
+                    self.mgr(l, p).write_expert(e, bytes)?;
+                    debug_assert_eq!(w.len(), per);
+                }
+            }
+        }
+        self.base_loaded = true;
+        self.settle_ledger(|s| {
+            for l in 0..s.cfg.layers {
+                for p in 0..3 {
+                    let _ = s.mgr(l, p).unload_range(0);
+                }
+            }
+            s.base_loaded = false;
+        })
+    }
+
+    /// Load an adapter into slot window `i` (paper: map
+    /// `[Δ_i : Δ_i + e_i^(l)]` per layer; padding mode maps the full
+    /// `E_max` window). Rolled back completely on OOM.
+    pub fn load_adapter(&mut self, slot: usize, adapter: &Adapter) -> Result<()> {
+        if slot >= self.cfg.max_adapters {
+            bail!("adapter slot {slot} out of range");
+        }
+        if self.loaded.contains_key(&slot) {
+            bail!("slot {slot} already holds an adapter");
+        }
+        if adapter.layers.len() != self.cfg.layers {
+            bail!(
+                "adapter layers {} != model layers {}",
+                adapter.layers.len(),
+                self.cfg.layers
+            );
+        }
+        if adapter.hidden != self.cfg.hidden || adapter.inter != self.cfg.expert_inter {
+            bail!("adapter geometry mismatch");
+        }
+        if adapter.max_experts() > self.cfg.e_max {
+            bail!(
+                "adapter max experts {} exceeds E_max {}",
+                adapter.max_experts(),
+                self.cfg.e_max
+            );
+        }
+        let delta = self.cfg.adapter_slot_base(slot);
+        let counts: Vec<usize> =
+            adapter.layers.iter().map(|la| la.expert_count()).collect();
+        let per = self.cfg.hidden * self.cfg.expert_inter;
+
+        // map + write, tracking how far we got for rollback
+        let mut done: Vec<(usize, usize)> = Vec::new(); // (layer, proj) ranges loaded
+        let mut fail: Option<anyhow::Error> = None;
+        'outer: for (l, layer) in adapter.layers.iter().enumerate() {
+            let commit = match self.mode {
+                StoreMode::Virtual => layer.expert_count(),
+                StoreMode::Padding => self.cfg.e_max,
+            };
+            if commit == 0 {
+                continue;
+            }
+            for p in 0..3 {
+                if let Err(e) = self.mgr(l, p).load_range(delta, commit) {
+                    fail = Some(e);
+                    break 'outer;
+                }
+                done.push((l, p));
+                for (local, _id) in layer.expert_ids.iter().enumerate() {
+                    let w3 = layer.expert_weights(local, adapter.hidden, adapter.inter);
+                    let w = &w3[p * per..(p + 1) * per];
+                    self.mgr(l, p).write_expert(delta + local, f32_bytes(w))?;
+                }
+            }
+        }
+        if let Some(e) = fail {
+            for (l, p) in done {
+                let _ = self.mgr(l, p).unload_range(delta);
+            }
+            // ledger unchanged since last settle: mapped bytes rolled back
+            let _ = self.settle_ledger(|_| {});
+            return Err(e).context("loading adapter weights");
+        }
+        self.loaded.insert(slot, counts);
+        let delta_slot = delta;
+        self.settle_ledger(move |s| {
+            for l in 0..s.cfg.layers {
+                for p in 0..3 {
+                    let _ = s.mgr(l, p).unload_range(delta_slot);
+                }
+            }
+            s.loaded.remove(&slot);
+        })
+    }
+
+    /// Evict the adapter in `slot`; its pages return to the pool.
+    pub fn unload_adapter(&mut self, slot: usize) -> Result<()> {
+        let counts = match self.loaded.remove(&slot) {
+            Some(c) => c,
+            None => bail!("slot {slot} holds no adapter"),
+        };
+        let delta = self.cfg.adapter_slot_base(slot);
+        for (l, &c) in counts.iter().enumerate() {
+            let commit = match self.mode {
+                StoreMode::Virtual => c,
+                StoreMode::Padding => self.cfg.e_max,
+            };
+            if commit == 0 {
+                continue;
+            }
+            for p in 0..3 {
+                self.mgr(l, p).unload_range(delta)?;
+            }
+        }
+        self.settle_ledger(|_| {})
+    }
+
+    /// Materialize the full `[G, hidden, inter]` projection tensor for
+    /// upload: loaded slots are copied out of the virtual tensor, padding
+    /// holes become zeros (they are unreachable by construction — the
+    /// expert map never points at them).
+    pub fn materialize_proj(&self, layer: usize, proj: usize, out: &mut Vec<f32>) -> Result<()> {
+        let per = self.cfg.hidden * self.cfg.expert_inter;
+        let g = self.cfg.total_expert_slots();
+        out.clear();
+        out.resize(g * per, 0.0);
+        let mgr = &self.managers[layer * 3 + proj];
+        if self.base_loaded {
+            let s = mgr.slice_f32(0, self.cfg.num_experts)?;
+            out[..s.len()].copy_from_slice(s);
+        }
+        for (&slot, counts) in &self.loaded {
+            let delta = self.cfg.adapter_slot_base(slot);
+            let commit = match self.mode {
+                StoreMode::Virtual => counts[layer],
+                StoreMode::Padding => self.cfg.e_max,
+            };
+            if commit == 0 {
+                continue;
+            }
+            let s = mgr.slice_f32(delta, commit)?;
+            // only the real experts matter; padding-mode extra slots are
+            // whatever the pages hold (zeros), also unreachable
+            out[delta * per..delta * per + s.len()].copy_from_slice(s);
+        }
+        Ok(())
+    }
+
+    /// Aggregated memory stats across all (layer, proj) tensors.
+    pub fn stats(&self) -> MemStats {
+        let mut acc = MemStats {
+            mapped_pages: 0,
+            mapped_bytes: 0,
+            used_bytes: 0,
+            reserved_bytes: 0,
+        };
+        for m in &self.managers {
+            let s = m.stats();
+            acc.mapped_pages += s.mapped_pages;
+            acc.mapped_bytes += s.mapped_bytes;
+            acc.used_bytes += s.used_bytes;
+            acc.reserved_bytes += s.reserved_bytes;
+        }
+        acc
+    }
+
+    /// Mapped bytes attributable to adapters (beyond the base model).
+    pub fn adapter_mapped_bytes(&self) -> usize {
+        let base_pages: usize = self
+            .managers
+            .iter()
+            .map(|m| {
+                // pages covering slots [0, M)
+                if self.base_loaded {
+                    (self.cfg.num_experts * m.expert_size()).div_ceil(m.page_size())
+                } else {
+                    0
+                }
+            })
+            .sum();
+        self.stats().mapped_bytes.saturating_sub(
+            base_pages * self.managers.first().map(|m| m.page_size()).unwrap_or(0),
+        )
+    }
+
+    pub fn loaded_slots(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.loaded.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+fn f32_bytes(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::generator::{paper_adapter_profiles, synth_adapter};
+
+    fn tiny_cfg() -> ModelConfig {
+        let mut c = ModelConfig::paper16b();
+        c.name = "t".into();
+        c.vocab = 64;
+        // expert_proj_bytes = 64 * 256 * 4 B = 64 KB = exactly one test
+        // page, so adapter windows really cost pages (exercises mapping)
+        c.hidden = 64;
+        c.layers = 2;
+        c.q_heads = 2;
+        c.kv_heads = 1;
+        c.head_dim = 8;
+        c.num_experts = 8;
+        c.top_k = 2;
+        c.expert_inter = 256;
+        c.shared_inter = 16;
+        c.max_adapters = 3;
+        c.e_max = 3;
+        c
+    }
+
+    const PS: usize = 64 << 10;
+
+    fn mk(mode: StoreMode) -> (WeightStore, BaseWeights, Arc<Mutex<DeviceMemory>>) {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(Mutex::new(PagePool::new(PS, 4096).unwrap()));
+        let device = DeviceMemory::shared(usize::MAX / 2);
+        let store = WeightStore::new(&cfg, mode, pool, device.clone()).unwrap();
+        let base = BaseWeights::generate(&cfg, 1);
+        (store, base, device)
+    }
+
+    fn adapter_for(cfg: &ModelConfig, seed: u64) -> Adapter {
+        let mut p = paper_adapter_profiles()[0].clone();
+        p.max_experts = cfg.e_max;
+        p.avg_experts = 2.0;
+        synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, seed)
+    }
+
+    #[test]
+    fn base_roundtrip_through_materialize() {
+        let (mut store, base, _d) = mk(StoreMode::Virtual);
+        store.load_base(&base).unwrap();
+        let mut out = Vec::new();
+        store.materialize_proj(1, 2, &mut out).unwrap();
+        let per = 64 * 256;
+        assert_eq!(out.len(), store.cfg.total_expert_slots() * per);
+        assert_eq!(&out[..8 * per], base.experts(1, 2));
+        // adapter region is zeros
+        assert!(out[8 * per..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn adapter_weights_land_in_their_window() {
+        let (mut store, base, _d) = mk(StoreMode::Virtual);
+        store.load_base(&base).unwrap();
+        let cfg = tiny_cfg();
+        let ad = adapter_for(&cfg, 3);
+        store.load_adapter(1, &ad).unwrap();
+        let per = cfg.hidden * cfg.expert_inter;
+        for l in 0..cfg.layers {
+            let mut out = Vec::new();
+            store.materialize_proj(l, 0, &mut out).unwrap();
+            let delta = cfg.adapter_slot_base(1);
+            for (local, _) in ad.layers[l].expert_ids.iter().enumerate() {
+                let w3 = ad.layers[l].expert_weights(local, cfg.hidden, cfg.expert_inter);
+                assert_eq!(
+                    &out[(delta + local) * per..(delta + local + 1) * per],
+                    &w3[..per],
+                    "layer {l} local {local}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn virtual_maps_less_than_padding() {
+        let cfg = tiny_cfg();
+        let (mut v, base, _) = mk(StoreMode::Virtual);
+        let (mut p, _, _) = mk(StoreMode::Padding);
+        v.load_base(&base).unwrap();
+        p.load_base(&base).unwrap();
+        let base_mapped = v.stats().mapped_bytes;
+        assert_eq!(base_mapped, p.stats().mapped_bytes);
+        let ad = adapter_for(&cfg, 5);
+        assert!(ad.avg_experts() < cfg.e_max as f64); // sparse adapter
+        v.load_adapter(0, &ad).unwrap();
+        p.load_adapter(0, &ad).unwrap();
+        assert!(
+            v.stats().used_bytes < p.stats().reserved_bytes
+                || v.stats().mapped_bytes <= p.stats().mapped_bytes,
+        );
+        assert!(v.adapter_mapped_bytes() <= p.adapter_mapped_bytes());
+    }
+
+    #[test]
+    fn unload_restores_memory_and_slots() {
+        let cfg = tiny_cfg();
+        let (mut store, base, dev) = mk(StoreMode::Virtual);
+        store.load_base(&base).unwrap();
+        let before = dev.lock().unwrap().used();
+        let ad = adapter_for(&cfg, 7);
+        store.load_adapter(2, &ad).unwrap();
+        assert!(dev.lock().unwrap().used() > before);
+        store.unload_adapter(2).unwrap();
+        assert_eq!(dev.lock().unwrap().used(), before);
+        assert!(store.loaded_slots().is_empty());
+        // reload into the same slot works
+        store.load_adapter(2, &ad).unwrap();
+    }
+
+    #[test]
+    fn ledger_oom_rolls_back() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(Mutex::new(PagePool::new(PS, 4096).unwrap()));
+        // budget: base fits, adapter does not
+        let base_pages = {
+            let per_mgr = (cfg.num_experts * cfg.expert_proj_bytes()).div_ceil(PS);
+            per_mgr * cfg.layers * 3
+        };
+        let device = DeviceMemory::shared(base_pages * PS);
+        let mut store =
+            WeightStore::new(&cfg, StoreMode::Virtual, pool, device.clone()).unwrap();
+        let base = BaseWeights::generate(&cfg, 1);
+        store.load_base(&base).unwrap();
+        let ad = adapter_for(&cfg, 9);
+        let used_before = device.lock().unwrap().used();
+        assert!(store.load_adapter(0, &ad).is_err());
+        assert_eq!(device.lock().unwrap().used(), used_before);
+        assert!(store.loaded_slots().is_empty());
+    }
+
+    #[test]
+    fn double_load_and_bad_slots_rejected() {
+        let cfg = tiny_cfg();
+        let (mut store, base, _) = mk(StoreMode::Virtual);
+        store.load_base(&base).unwrap();
+        let ad = adapter_for(&cfg, 11);
+        store.load_adapter(0, &ad).unwrap();
+        assert!(store.load_adapter(0, &ad).is_err());
+        assert!(store.load_adapter(cfg.max_adapters, &ad).is_err());
+        assert!(store.unload_adapter(1).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload generation: the paper's online-serving experiments drive the
+//! system with domain-matched prompts, Poisson arrivals and power-law
+//! adapter skew (section 5.2). No datasets are available offline, so
+//! prompts are synthetic with per-domain length distributions
+//! (DESIGN.md section 7).
+
+pub mod power_law;
+pub mod prompts;
+pub mod trace;
+
+pub use power_law::power_law_shares;
+pub use prompts::PromptGen;
+pub use trace::{Trace, TraceEvent, TraceSpec};

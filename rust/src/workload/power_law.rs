@@ -1,0 +1,64 @@
+//! Power-law request shares across adapters (the S-LoRA / paper skew
+//! model): smaller `alpha` = heavier skew; `alpha = 1` = uniform.
+//!
+//! Share of adapter `i` (1-based rank) is proportional to
+//! `rank^-(1 - alpha)` normalized over `n` adapters, matching the paper's
+//! usage where alpha = 0.32 sends ~80% of traffic to the top adapter of
+//! two and lower alpha pushes it to ~95%.
+
+/// Normalized request shares for `n` adapters at skew `alpha` in (0, 1].
+pub fn power_law_shares(n: usize, alpha: f64) -> Vec<f64> {
+    assert!(n > 0);
+    assert!(alpha > 0.0 && alpha <= 1.0);
+    if n == 1 {
+        return vec![1.0];
+    }
+    // exponent chosen so alpha=1 is uniform and alpha->0 concentrates
+    // on rank 1. s = (1 - alpha) / alpha spans [0, inf).
+    let s = (1.0 - alpha) / alpha;
+    let raw: Vec<f64> = (1..=n).map(|r| (r as f64).powf(-s)).collect();
+    let total: f64 = raw.iter().sum();
+    raw.into_iter().map(|x| x / total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_at_alpha_one() {
+        let s = power_law_shares(5, 1.0);
+        for v in &s {
+            assert!((v - 0.2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn shares_sum_to_one_and_are_monotone() {
+        for &alpha in &[0.1, 0.3, 0.32, 0.7, 1.0] {
+            for &n in &[1usize, 2, 5, 10, 20] {
+                let s = power_law_shares(n, alpha);
+                assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+                assert!(s.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn lower_alpha_is_more_skewed() {
+        let a = power_law_shares(10, 0.9);
+        let b = power_law_shares(10, 0.2);
+        assert!(b[0] > a[0]);
+        assert!(b[9] < a[9]);
+    }
+
+    #[test]
+    fn paper_two_adapter_calibration() {
+        // paper: alpha = 0.32 -> ~80% to the top adapter of two;
+        // lowering alpha -> up to 95%
+        let s = power_law_shares(2, 0.32);
+        assert!((s[0] - 0.80).abs() < 0.03, "top share {}", s[0]);
+        let s = power_law_shares(2, 0.19);
+        assert!(s[0] > 0.93, "top share {}", s[0]);
+    }
+}

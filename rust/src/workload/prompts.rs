@@ -1,0 +1,129 @@
+//! Synthetic domain prompts + a deterministic toy tokenizer.
+//!
+//! The paper samples prompts from each adapter's evaluation dataset
+//! (GSM8K, intent, law, ...) and sends them only to adapters of that
+//! domain. What the serving system observes is (a) the token-length
+//! distribution and (b) the adapter affinity; we reproduce both with
+//! per-domain length models calibrated to the datasets' rough shapes.
+
+use crate::util::rng::Pcg;
+
+/// Per-domain prompt/output length model (tokens).
+#[derive(Debug, Clone, Copy)]
+pub struct DomainShape {
+    pub name: &'static str,
+    pub prompt_mean: f64,
+    pub prompt_std: f64,
+    pub prompt_max: usize,
+    pub out_mean: f64,
+    pub out_max: usize,
+}
+
+/// Length models for the paper's five domains, scaled to the CPU testbed
+/// (prompt budget <= 512-token bucket; see EXPERIMENTS.md "testbed scale").
+pub const DOMAINS: [DomainShape; 5] = [
+    DomainShape { name: "math", prompt_mean: 96.0, prompt_std: 32.0, prompt_max: 384, out_mean: 48.0, out_max: 96 },
+    DomainShape { name: "intent", prompt_mean: 48.0, prompt_std: 16.0, prompt_max: 192, out_mean: 12.0, out_max: 24 },
+    DomainShape { name: "summary", prompt_mean: 224.0, prompt_std: 64.0, prompt_max: 448, out_mean: 40.0, out_max: 80 },
+    DomainShape { name: "law", prompt_mean: 160.0, prompt_std: 48.0, prompt_max: 416, out_mean: 56.0, out_max: 96 },
+    DomainShape { name: "translation", prompt_mean: 80.0, prompt_std: 24.0, prompt_max: 320, out_mean: 64.0, out_max: 112 },
+];
+
+pub fn domain_shape(name: &str) -> &'static DomainShape {
+    DOMAINS
+        .iter()
+        .find(|d| d.name == name)
+        .unwrap_or(&DOMAINS[0])
+}
+
+/// Deterministic prompt generator over a model vocabulary.
+#[derive(Debug)]
+pub struct PromptGen {
+    vocab: usize,
+    rng: Pcg,
+}
+
+impl PromptGen {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        PromptGen { vocab, rng: Pcg::with_stream(seed, 42) }
+    }
+
+    /// Sample `(prompt_tokens, max_new_tokens)` for a domain.
+    pub fn sample(&mut self, domain: &str) -> (Vec<i32>, usize) {
+        let d = domain_shape(domain);
+        let plen = self.trunc_normal(d.prompt_mean, d.prompt_std, 4, d.prompt_max);
+        let olen = self.trunc_normal(d.out_mean, d.out_mean * 0.4, 1, d.out_max);
+        // domain-flavoured token stream: each domain draws from its own
+        // band of the vocabulary plus common tokens, mimicking topical
+        // vocabulary concentration
+        let band = fx(domain) as usize % 7;
+        let band_lo = (self.vocab / 8) * (band % 8);
+        let band_w = (self.vocab / 8).max(1);
+        let toks = (0..plen)
+            .map(|_| {
+                if self.rng.below(3) == 0 {
+                    // common tokens (ids 0..vocab/8)
+                    (self.rng.below((self.vocab / 8).max(2) as u64)) as i32
+                } else {
+                    (band_lo as u64 + self.rng.below(band_w as u64)) as i32
+                }
+            })
+            .collect();
+        (toks, olen)
+    }
+
+    fn trunc_normal(&mut self, mean: f64, std: f64, lo: usize, hi: usize) -> usize {
+        let x = mean + std * self.rng.normal();
+        (x.round().max(lo as f64) as usize).min(hi)
+    }
+}
+
+fn fx(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lengths_within_bounds() {
+        let mut g = PromptGen::new(8192, 1);
+        for d in DOMAINS {
+            for _ in 0..200 {
+                let (p, o) = g.sample(d.name);
+                assert!(p.len() >= 4 && p.len() <= d.prompt_max);
+                assert!(o >= 1 && o <= d.out_max);
+                assert!(p.iter().all(|&t| (t as usize) < 8192 && t >= 0));
+            }
+        }
+    }
+
+    #[test]
+    fn domain_means_roughly_hit() {
+        let mut g = PromptGen::new(8192, 2);
+        let d = domain_shape("summary");
+        let n = 400;
+        let mean: f64 = (0..n).map(|_| g.sample("summary").0.len() as f64).sum::<f64>() / n as f64;
+        assert!((mean - d.prompt_mean).abs() < d.prompt_std, "mean {mean}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = PromptGen::new(128, 7);
+        let mut b = PromptGen::new(128, 7);
+        assert_eq!(a.sample("law"), b.sample("law"));
+    }
+
+    #[test]
+    fn unknown_domain_falls_back() {
+        let mut g = PromptGen::new(128, 3);
+        let (p, _) = g.sample("nope");
+        assert!(!p.is_empty());
+    }
+}

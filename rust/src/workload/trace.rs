@@ -1,0 +1,149 @@
+//! Arrival traces: per-adapter Poisson processes whose rates follow the
+//! power-law share split, executed concurrently over a horizon
+//! (paper section 5.2 workload construction).
+
+use super::power_law::power_law_shares;
+use super::prompts::PromptGen;
+use crate::util::rng::Pcg;
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Seconds from trace start.
+    pub at: f64,
+    /// Adapter name (None = base model request).
+    pub adapter: Option<String>,
+    pub domain: String,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Trace generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// (adapter name, domain) pairs — adapter `i` gets share `i` of traffic.
+    pub adapters: Vec<(String, String)>,
+    /// Aggregate arrival rate λ (req/s) across all adapters.
+    pub lambda: f64,
+    /// Power-law shape α (1 = uniform across adapters).
+    pub alpha: f64,
+    /// Trace horizon in seconds.
+    pub horizon: f64,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+/// A generated trace, sorted by arrival time.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    pub spec_lambda: f64,
+}
+
+impl Trace {
+    /// One independent Poisson process per adapter with rate
+    /// `λ_i = share_i * λ`, merged and sorted (the paper's construction).
+    pub fn generate(spec: &TraceSpec) -> Trace {
+        let shares = power_law_shares(spec.adapters.len(), spec.alpha);
+        let mut prompts = PromptGen::new(spec.vocab, spec.seed);
+        let mut events = Vec::new();
+        for (i, (name, domain)) in spec.adapters.iter().enumerate() {
+            let lam_i = shares[i] * spec.lambda;
+            if lam_i <= 0.0 {
+                continue;
+            }
+            let mut rng = Pcg::with_stream(spec.seed, 9000 + i as u64);
+            let mut t = rng.exp(lam_i);
+            while t < spec.horizon {
+                let (prompt, max_new) = prompts.sample(domain);
+                events.push(TraceEvent {
+                    at: t,
+                    adapter: Some(name.clone()),
+                    domain: domain.clone(),
+                    prompt,
+                    max_new_tokens: max_new,
+                });
+                t += rng.exp(lam_i);
+            }
+        }
+        events.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+        Trace { events, spec_lambda: spec.lambda }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Requests per adapter name (skew inspection).
+    pub fn per_adapter_counts(&self) -> std::collections::BTreeMap<String, usize> {
+        let mut m = std::collections::BTreeMap::new();
+        for e in &self.events {
+            *m.entry(e.adapter.clone().unwrap_or_else(|| "<base>".into()))
+                .or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Scale all arrival times by `factor` (testbed slow-down).
+    pub fn dilate(&mut self, factor: f64) {
+        for e in &mut self.events {
+            e.at *= factor;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(n: usize, lambda: f64, alpha: f64) -> TraceSpec {
+        TraceSpec {
+            adapters: (0..n)
+                .map(|i| (format!("a{i}"), "math".to_string()))
+                .collect(),
+            lambda,
+            alpha,
+            horizon: 100.0,
+            vocab: 8192,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn aggregate_rate_close_to_lambda() {
+        let t = Trace::generate(&spec(5, 4.0, 1.0));
+        let rate = t.len() as f64 / 100.0;
+        assert!((rate - 4.0).abs() < 0.5, "rate {rate}");
+    }
+
+    #[test]
+    fn sorted_by_time_within_horizon() {
+        let t = Trace::generate(&spec(10, 2.0, 0.3));
+        assert!(t.events.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(t.events.iter().all(|e| e.at >= 0.0 && e.at < 100.0));
+    }
+
+    #[test]
+    fn skew_shows_up_in_counts() {
+        let t = Trace::generate(&spec(10, 10.0, 0.1));
+        let counts = t.per_adapter_counts();
+        let top = counts.get("a0").copied().unwrap_or(0);
+        let total: usize = counts.values().sum();
+        assert!(top as f64 / total as f64 > 0.5, "top share {top}/{total}");
+    }
+
+    #[test]
+    fn deterministic_and_dilatable() {
+        let a = Trace::generate(&spec(3, 3.0, 0.5));
+        let b = Trace::generate(&spec(3, 3.0, 0.5));
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.events[0].prompt, b.events[0].prompt);
+        let mut c = a.clone();
+        c.dilate(2.0);
+        assert!((c.events[5].at - 2.0 * a.events[5].at).abs() < 1e-9);
+    }
+}

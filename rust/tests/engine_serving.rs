@@ -1,0 +1,157 @@
+//! Serving-engine integration over the tiny artifacts: request lifecycle,
+//! continuous batching across adapters, greedy-output agreement between
+//! ExpertWeave and merged instances (Table 3), and trace replay.
+
+use expertweave::adapters::format::Adapter;
+use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
+use expertweave::engine::{Engine, EngineOptions, RequestSpec};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{ArtifactSet, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::server;
+use expertweave::weights::StoreMode;
+use expertweave::workload::trace::{Trace, TraceSpec};
+use std::path::PathBuf;
+
+fn artifacts() -> Option<ArtifactSet> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    d.join("meta.json")
+        .exists()
+        .then(|| ArtifactSet::load(&d).unwrap())
+}
+
+fn adapter(cfg: &ModelConfig, name: &'static str, seed: u64) -> Adapter {
+    let mut p = paper_adapter_profiles()[0].clone();
+    p.name = name;
+    p.max_experts = cfg.e_max;
+    p.avg_experts = cfg.e_max as f64;
+    synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, seed)
+}
+
+fn opts() -> EngineOptions {
+    EngineOptions { page_size: 64 << 10, chunk: 8, ..Default::default() }
+}
+
+fn req(adapter: Option<&str>, prompt: Vec<i32>, n: usize) -> RequestSpec {
+    RequestSpec {
+        adapter: adapter.map(str::to_string),
+        prompt,
+        max_new_tokens: n,
+        sampling: Sampling::Greedy,
+    }
+}
+
+#[test]
+fn engine_serving_end_to_end() {
+    let Some(set) = artifacts() else {
+        eprintln!("SKIP: artifacts/tiny missing");
+        return;
+    };
+    let cfg = set.config.clone();
+    let ad_a = adapter(&cfg, "math", 3);
+    let ad_b = adapter(&cfg, "law", 4);
+
+    // --- ExpertWeave engine with two adapters ---------------------------
+    let mut weave = Engine::new_weave(
+        &set,
+        &[ad_a.clone(), ad_b.clone()],
+        Variant::Weave,
+        StoreMode::Virtual,
+        opts(),
+    )
+    .unwrap();
+
+    // 1) interleaved multi-adapter + base requests complete
+    let prompts: Vec<Vec<i32>> = (0..6)
+        .map(|i| (1..=(5 + i as i32 * 3)).map(|t| t % cfg.vocab as i32).collect())
+        .collect();
+    let mut ids = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let who = match i % 3 {
+            0 => Some("math"),
+            1 => Some("law"),
+            _ => None,
+        };
+        ids.push(weave.submit(req(who, p.clone(), 4)).unwrap());
+    }
+    let done = weave.run_to_completion().unwrap();
+    assert_eq!(done.len(), 6);
+    for c in &done {
+        assert_eq!(c.output.len(), 4);
+        assert!(c.output.iter().all(|&t| t >= 0 && (t as usize) < cfg.vocab));
+    }
+    assert_eq!(weave.kv_free_slots(), cfg.kv_cap, "KV slots must drain");
+    let report = weave.report();
+    assert_eq!(report.requests, 6);
+    assert!(report.ttft.median > 0.0);
+
+    // 2) unknown adapter rejected
+    assert!(weave.submit(req(Some("nope"), vec![1, 2], 1)).is_err());
+
+    // 3) greedy agreement with the merged instance (Table 3 mechanism):
+    // same prompt through weave/math and through a merged math engine
+    // must yield the same tokens.
+    let p: Vec<i32> = (1..=10).collect();
+    let w_id = weave.submit(req(Some("math"), p.clone(), 6)).unwrap();
+    let w_out = weave
+        .run_to_completion()
+        .unwrap()
+        .into_iter()
+        .find(|c| c.id == w_id)
+        .unwrap();
+
+    let mut merged = Engine::new_merged(&set, ad_a.clone(), opts()).unwrap();
+    let m_id = merged.submit(req(Some("math"), p.clone(), 6)).unwrap();
+    let m_out = merged
+        .run_to_completion()
+        .unwrap()
+        .into_iter()
+        .find(|c| c.id == m_id)
+        .unwrap();
+    assert_eq!(w_out.output, m_out.output, "weave must match merged greedily");
+
+    // 4) ...and the base-only engine disagrees (the adapter does matter)
+    let mut base = Engine::new_base_only(&set, opts()).unwrap();
+    let b_id = base.submit(req(None, p.clone(), 6)).unwrap();
+    let b_out = base
+        .run_to_completion()
+        .unwrap()
+        .into_iter()
+        .find(|c| c.id == b_id)
+        .unwrap();
+    assert_ne!(w_out.output, b_out.output, "adapter output should differ from base");
+
+    // 5) dynamic adapter lifecycle
+    let ad_c = adapter(&cfg, "intent", 5);
+    weave.load_adapter(&ad_c).unwrap();
+    let id = weave.submit(req(Some("intent"), p.clone(), 2)).unwrap();
+    let out = weave.run_to_completion().unwrap();
+    assert!(out.iter().any(|c| c.id == id));
+    weave.evict_adapter("intent").unwrap();
+    assert!(weave.submit(req(Some("intent"), p, 1)).is_err());
+
+    // 6) trace replay (short horizon, both adapters)
+    let trace = Trace::generate(&TraceSpec {
+        adapters: vec![
+            ("math".into(), "math".into()),
+            ("law".into(), "law".into()),
+        ],
+        lambda: 20.0,
+        alpha: 0.5,
+        horizon: 0.5,
+        vocab: cfg.vocab,
+        seed: 7,
+    });
+    // tiny model: clip prompts to the bucket budget
+    let mut trace = trace;
+    for e in &mut trace.events {
+        e.prompt.truncate(12);
+        e.max_new_tokens = e.max_new_tokens.min(3);
+    }
+    let n = trace.len();
+    assert!(n > 0);
+    let outcome = server::replay(&mut weave, &trace).unwrap();
+    assert_eq!(outcome.completions.len(), n);
+    assert_eq!(outcome.rejected, 0);
+    assert!(outcome.report.decode_throughput > 0.0);
+}

@@ -1,0 +1,12 @@
+// De-risk probe: can xla_extension 0.5.1 parse jax-0.8-generated HLO text
+// containing while loops, scatter, pallas-interpret output and
+// input_output_alias? Run: cargo test --test hlo_probe -- --ignored
+#[test]
+#[ignore]
+fn parse_and_run_probe4() {
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file("/tmp/probe4.hlo.txt").unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let _exe = client.compile(&comp).unwrap();
+    println!("probe4 compiled OK");
+}

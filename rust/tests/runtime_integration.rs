@@ -1,0 +1,228 @@
+//! Integration tests over the tiny artifacts: PJRT compile + execute,
+//! KV-cache chaining, and the end-to-end ExpertWeave≡merged equivalence
+//! (the Table-3 mechanism) through the real runtime.
+//!
+//! Requires `make artifacts` (artifacts/tiny). All tests share one process
+//! (single PJRT client requirement) via serialized sub-tests.
+
+use expertweave::adapters::format::Adapter;
+use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
+use expertweave::adapters::registry::AdapterRegistry;
+use expertweave::memsim::DeviceMemory;
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{ArtifactSet, Runtime, StepInputs, Variant};
+use expertweave::vmm::page_pool::PagePool;
+use expertweave::weights::{
+    BaseOnlyParams, BaseWeights, MergedParams, StoreMode, StoreParams, WeightStore,
+};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    d.join("meta.json").exists().then_some(d)
+}
+
+fn adapter_for(cfg: &ModelConfig, name: &'static str, seed: u64) -> Adapter {
+    let mut p = paper_adapter_profiles()[0].clone();
+    p.name = name;
+    p.max_experts = cfg.e_max;
+    p.avg_experts = cfg.e_max as f64; // dense: every layer fine-tunes E_max
+    synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, seed)
+}
+
+/// A simple single-sequence prefill batch over the first `n` tokens.
+fn prefill_batch(cfg: &ModelConfig, bucket: usize, out_rows: usize, toks: &[i32], aid: i32) -> StepInputs {
+    let n = toks.len();
+    assert!(n <= bucket);
+    let mut b = StepInputs::blank(cfg, bucket, out_rows);
+    for (i, &t) in toks.iter().enumerate() {
+        b.token_ids[i] = t;
+        b.positions[i] = i as i32;
+        b.seg_ids[i] = 0;
+        b.slot_idx[i] = i as i32;
+        b.cache_seg[i] = 0;
+        b.cache_pos[i] = i as i32;
+        b.aid[i] = aid;
+    }
+    for r in b.out_rows.iter_mut() {
+        *r = (n - 1) as i32;
+    }
+    b
+}
+
+#[test]
+fn runtime_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts/tiny missing (run `make artifacts`)");
+        return;
+    };
+    let set = ArtifactSet::load(&dir).unwrap();
+    let cfg = set.config.clone();
+    let base = BaseWeights::generate(&cfg, 11);
+
+    // --- weave runtime over a virtual weight store with one adapter ----
+    let pool = Arc::new(Mutex::new(PagePool::new(64 << 10, 1 << 14).unwrap()));
+    let device = DeviceMemory::shared(usize::MAX / 2);
+    let mut store = WeightStore::new(&cfg, StoreMode::Virtual, pool, device).unwrap();
+    store.load_base(&base).unwrap();
+    let mut registry = AdapterRegistry::new(&cfg);
+    let ad = adapter_for(&cfg, "math", 3);
+    registry.load(&mut store, &ad).unwrap();
+
+    let mut weave = Runtime::new(&set, Variant::Weave).unwrap();
+    {
+        let mut src = StoreParams::new(&base, &store);
+        weave.upload_params(&mut src, 1).unwrap();
+    }
+    weave
+        .upload_expert_maps(registry.maps().as_slice(), registry.maps_version())
+        .unwrap();
+
+    let bucket = *weave.buckets().last().unwrap(); // widest batch: the
+    // router reliably hits fine-tuned experts (tiny M, top-2)
+    let out_rows = weave.out_rows(bucket).unwrap();
+    let toks: Vec<i32> = (1..=bucket as i32).collect();
+
+    // 1) logits well-formed
+    let b = prefill_batch(&cfg, bucket, out_rows, &toks, -1);
+    let out = weave.step(bucket, &b).unwrap();
+    assert_eq!(out.logits.len(), out_rows * cfg.vocab);
+    assert!(out.logits.iter().all(|x| x.is_finite()), "non-finite logits");
+
+    // 2) KV persistence: decoding after prefill differs from decoding on
+    // an empty cache
+    weave.reset_kv();
+    let _ = weave.step(bucket, &b).unwrap(); // prefill fills slots 0..bucket
+    let mut dec = StepInputs::blank(&cfg, bucket, out_rows);
+    dec.token_ids[0] = 7;
+    dec.positions[0] = bucket as i32;
+    dec.seg_ids[0] = 0;
+    dec.slot_idx[0] = bucket as i32 % cfg.kv_cap as i32;
+    for i in 0..bucket.min(cfg.kv_cap) {
+        dec.cache_seg[i] = 0;
+        dec.cache_pos[i] = i as i32;
+    }
+    dec.cache_seg[bucket % cfg.kv_cap] = 0;
+    dec.cache_pos[bucket % cfg.kv_cap] = bucket as i32;
+    let with_ctx = weave.step(bucket, &dec).unwrap();
+    weave.reset_kv();
+    let without_ctx = weave.step(bucket, &dec).unwrap();
+    assert_ne!(with_ctx.logits, without_ctx.logits, "KV cache must persist");
+
+    // 3) ExpertWeave == merged model, exactly (Table 3 mechanism):
+    // serve the adapter through rerouting, compare with a base-variant
+    // runtime holding offline-merged weights.
+    let mut merged_rt = Runtime::new(&set, Variant::Base).unwrap();
+    {
+        let mut src = MergedParams::new(&cfg, &base, &ad);
+        merged_rt.upload_params(&mut src, 1).unwrap();
+    }
+    let aid = registry.aid_of("math").unwrap();
+    let bw = prefill_batch(&cfg, bucket, out_rows, &toks, aid);
+    weave.reset_kv();
+    let lw = weave.step(bucket, &bw).unwrap();
+    let bm = prefill_batch(&cfg, bucket, out_rows, &toks, -1);
+    let lm = merged_rt.step(bucket, &bm).unwrap();
+    let max_diff = lw
+        .logits
+        .iter()
+        .zip(&lm.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 5e-4, "weave vs merged max diff {max_diff}");
+
+    // 4) base tokens through the weave runtime == pure base model
+    let mut base_rt = Runtime::new(&set, Variant::Base).unwrap();
+    {
+        let mut src = BaseOnlyParams { base: &base };
+        base_rt.upload_params(&mut src, 1).unwrap();
+    }
+    weave.reset_kv();
+    let lb_w = weave.step(bucket, &bm).unwrap(); // aid = -1 everywhere
+    let lb = base_rt.step(bucket, &bm).unwrap();
+    let max_diff = lb_w
+        .logits
+        .iter()
+        .zip(&lb.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 5e-4, "weave(base tokens) vs base max diff {max_diff}");
+    // and the adapter path must actually differ from base
+    assert_ne!(lw.logits, lb.logits, "adapter must change outputs");
+
+    // 5) mixed batch: adapter tokens and base tokens interleaved in one
+    // step give the same logits as the two homogeneous runs
+    let half = bucket / 2;
+    if half >= 1 {
+        let mut mixed = StepInputs::blank(&cfg, bucket, out_rows);
+        for i in 0..half {
+            // seq 0: adapter tokens; seq 1: base tokens
+            mixed.token_ids[i] = toks[i];
+            mixed.positions[i] = i as i32;
+            mixed.seg_ids[i] = 0;
+            mixed.slot_idx[i] = i as i32;
+            mixed.aid[i] = aid;
+            let j = half + i;
+            mixed.token_ids[j] = toks[i];
+            mixed.positions[j] = i as i32;
+            mixed.seg_ids[j] = 1;
+            mixed.slot_idx[j] = j as i32;
+            mixed.aid[j] = -1;
+        }
+        for i in 0..bucket {
+            mixed.cache_seg[i] = if i < half { 0 } else { 1 };
+            mixed.cache_pos[i] = (i % half) as i32;
+        }
+        mixed.out_rows[0] = (half - 1) as i32; // adapter seq last token
+        if out_rows > 1 {
+            mixed.out_rows[1] = (bucket - 1) as i32; // base seq last token
+        }
+        weave.reset_kv();
+        let lmix = weave.step(bucket, &mixed).unwrap();
+
+        // homogeneous reference runs over `half` tokens
+        weave.reset_kv();
+        let ra = weave
+            .step(bucket, &prefill_batch(&cfg, bucket, out_rows, &toks[..half], aid))
+            .unwrap();
+        weave.reset_kv();
+        let rb = weave
+            .step(bucket, &prefill_batch(&cfg, bucket, out_rows, &toks[..half], -1))
+            .unwrap();
+        let d_a = lmix.logits[..cfg.vocab]
+            .iter()
+            .zip(&ra.logits[..cfg.vocab])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(d_a < 5e-4, "mixed-batch adapter row diff {d_a}");
+        if out_rows > 1 {
+            let d_b = lmix.logits[cfg.vocab..2 * cfg.vocab]
+                .iter()
+                .zip(&rb.logits[..cfg.vocab])
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(d_b < 5e-4, "mixed-batch base row diff {d_b}");
+        }
+    }
+
+    // 6) singleop variant gives identical results to the fused kernel
+    let mut single = Runtime::new(&set, Variant::SingleOp).unwrap();
+    {
+        let mut src = StoreParams::new(&base, &store);
+        single.upload_params(&mut src, 1).unwrap();
+    }
+    single
+        .upload_expert_maps(registry.maps().as_slice(), registry.maps_version())
+        .unwrap();
+    let ls = single.step(bucket, &bw).unwrap();
+    weave.reset_kv();
+    let lw2 = weave.step(bucket, &bw).unwrap();
+    let max_diff = ls
+        .logits
+        .iter()
+        .zip(&lw2.logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 5e-4, "singleop vs fused max diff {max_diff}");
+}

@@ -1,0 +1,23 @@
+// check whether execute outputs are untupled by PJRT
+#[test]
+fn untuple_check() {
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file("/tmp/probe4.hlo.txt").unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+    // build literals per probe4 signature: kv[32,8]f32, xs[16,16]f32, ws[12,16,8]f32,
+    // offs[13]i32, ids[8,2]i32, aid[8]i32, emap[3,6]i32
+    let kv = xla::Literal::vec1(&vec![0f32; 32*8]).reshape(&[32,8]).unwrap();
+    let xs = xla::Literal::vec1(&vec![1f32; 16*16]).reshape(&[16,16]).unwrap();
+    let ws = xla::Literal::vec1(&vec![1f32; 12*16*8]).reshape(&[12,16,8]).unwrap();
+    let offs = xla::Literal::vec1(&{let mut v=vec![0i32;13]; for i in 0..13 {v[i]= (i as i32).min(16)} ; for i in 0..13 { v[i] = std::cmp::min(16, (i*2) as i32)} v}).reshape(&[13]).unwrap();
+    let ids = xla::Literal::vec1(&vec![0i32; 16]).reshape(&[8,2]).unwrap();
+    let aid = xla::Literal::vec1(&vec![-1i32; 8]).reshape(&[8]).unwrap();
+    let emap = xla::Literal::vec1(&vec![0i32; 18]).reshape(&[3,6]).unwrap();
+    let out = exe.execute::<xla::Literal>(&[kv, xs, ws, offs, ids, aid, emap]).unwrap();
+    println!("replicas={} outputs_per_replica={}", out.len(), out[0].len());
+    for (i, b) in out[0].iter().enumerate() {
+        let shape = b.on_device_shape().unwrap();
+        println!("out[{i}]: {shape:?}");
+    }
+}
