@@ -139,6 +139,38 @@ pub fn synth_adapter(
     }
 }
 
+/// Synthesize `n` Table-1-profile adapters fitted to a model geometry
+/// (the shared recipe of the CLI, fleet benches and tests): profiles
+/// cycle through the 10 paper rows with expert counts clamped to the
+/// config's `e_max`, and names are uniqued once `n` exceeds the
+/// profile set so registries and fleet directories never collide.
+pub fn synth_fleet_adapters(
+    cfg: &crate::model::ModelConfig,
+    n: usize,
+    seed: u64,
+) -> Vec<Adapter> {
+    let profiles = paper_adapter_profiles();
+    (0..n)
+        .map(|i| {
+            let mut p = profiles[i % profiles.len()].clone();
+            p.max_experts = p.max_experts.min(cfg.e_max);
+            p.avg_experts = p.avg_experts.min(p.max_experts as f64);
+            let mut ad = synth_adapter(
+                &p,
+                cfg.layers,
+                cfg.num_experts,
+                cfg.hidden,
+                cfg.expert_inter,
+                seed + i as u64,
+            );
+            if i >= profiles.len() {
+                ad.name = format!("{}+{}", ad.name, i / profiles.len());
+            }
+            ad
+        })
+        .collect()
+}
+
 /// Memory fragmentation factor F_mem of the padding approach for a set of
 /// adapters (paper section 3.1):
 /// `L * (M + N*E_max) / Σ_l (M + Σ_i e_i^(l))`.

@@ -15,5 +15,7 @@ pub mod registry;
 
 pub use expert_map::ExpertMaps;
 pub use format::{Adapter, AdapterLayer};
-pub use generator::{paper_adapter_profiles, synth_adapter, AdapterProfile};
+pub use generator::{
+    paper_adapter_profiles, synth_adapter, synth_fleet_adapters, AdapterProfile,
+};
 pub use registry::AdapterRegistry;

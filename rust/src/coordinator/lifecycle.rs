@@ -1,0 +1,177 @@
+//! Fleet-level adapter lifecycle state: who holds which adapter, which
+//! resident is the eviction candidate, and how hot each adapter is.
+//!
+//! The coordinator is the only issuer of load/evict commands, so this
+//! directory is authoritative (replica engines double-check evictions as
+//! a safety net). All state is plain data — no channels — so the
+//! placement logic is unit-testable.
+
+use std::collections::HashMap;
+
+/// Residency map: adapter placements per replica with per-placement LRU
+/// ticks.
+#[derive(Debug)]
+pub struct AdapterDirectory {
+    capacity: usize,
+    /// Per replica: adapter name → last-use tick.
+    resident: Vec<HashMap<String, u64>>,
+    clock: u64,
+}
+
+impl AdapterDirectory {
+    /// `capacity` = adapter slots per replica (N of the virtual weight
+    /// tensor, or a tighter policy cap).
+    pub fn new(replicas: usize, capacity: usize) -> AdapterDirectory {
+        AdapterDirectory {
+            capacity,
+            resident: (0..replicas).map(|_| HashMap::new()).collect(),
+            clock: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn is_resident(&self, replica: usize, name: &str) -> bool {
+        self.resident[replica].contains_key(name)
+    }
+
+    /// Replicas currently holding `name`, ascending.
+    pub fn replicas_of(&self, name: &str) -> Vec<usize> {
+        (0..self.resident.len())
+            .filter(|&r| self.is_resident(r, name))
+            .collect()
+    }
+
+    /// How many replicas hold `name`.
+    pub fn copies(&self, name: &str) -> usize {
+        self.resident.iter().filter(|m| m.contains_key(name)).count()
+    }
+
+    /// Resident adapters on one replica.
+    pub fn count(&self, replica: usize) -> usize {
+        self.resident[replica].len()
+    }
+
+    pub fn has_free_slot(&self, replica: usize) -> bool {
+        self.count(replica) < self.capacity
+    }
+
+    /// Record a placement (load issued) and mark it most-recently used.
+    pub fn insert(&mut self, replica: usize, name: &str) {
+        self.clock += 1;
+        self.resident[replica].insert(name.to_string(), self.clock);
+    }
+
+    /// Record an eviction (or a failed load rollback).
+    pub fn remove(&mut self, replica: usize, name: &str) {
+        self.resident[replica].remove(name);
+    }
+
+    /// Bump the LRU tick of a placement (a request was routed to it).
+    pub fn touch(&mut self, replica: usize, name: &str) {
+        self.clock += 1;
+        if let Some(t) = self.resident[replica].get_mut(name) {
+            *t = self.clock;
+        }
+    }
+
+    /// Least-recently-used resident on `replica` among those `idle`
+    /// accepts (callers pass "no in-flight requests and not the adapter
+    /// being placed").
+    pub fn lru_evictable<F: Fn(&str) -> bool>(&self, replica: usize, idle: F) -> Option<String> {
+        self.resident[replica]
+            .iter()
+            .filter(|e| idle(e.0))
+            .min_by_key(|e| *e.1)
+            .map(|e| e.0.clone())
+    }
+}
+
+/// Per-adapter arrival-rate estimator: an exponentially decayed arrival
+/// counter with configurable half-life. At steady state a Poisson
+/// stream of rate λ holds weight `λ·h/ln2`, so the estimate is
+/// `w·ln2/h` — reactive to bursts, cheap to update, no window storage.
+#[derive(Debug)]
+pub struct RateTracker {
+    halflife: f64,
+    /// name → (decayed weight, last observation time).
+    w: HashMap<String, (f64, f64)>,
+}
+
+impl RateTracker {
+    pub fn new(halflife: f64) -> RateTracker {
+        RateTracker { halflife: halflife.max(1e-3), w: HashMap::new() }
+    }
+
+    /// Record an arrival for `name` at trace-time `t` (seconds,
+    /// monotone); returns the smoothed req/s estimate.
+    pub fn observe(&mut self, name: &str, t: f64) -> f64 {
+        let (w, last) = self
+            .w
+            .get(name)
+            .copied()
+            .unwrap_or((0.0, t));
+        let dt = (t - last).max(0.0);
+        let decayed = w * 0.5f64.powf(dt / self.halflife) + 1.0;
+        self.w.insert(name.to_string(), (decayed, t));
+        decayed * std::f64::consts::LN_2 / self.halflife
+    }
+
+    /// Current estimate without recording an arrival.
+    pub fn rate(&self, name: &str, t: f64) -> f64 {
+        match self.w.get(name) {
+            Some(&(w, last)) => {
+                let dt = (t - last).max(0.0);
+                w * 0.5f64.powf(dt / self.halflife) * std::f64::consts::LN_2 / self.halflife
+            }
+            None => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directory_lifecycle_and_lru() {
+        let mut d = AdapterDirectory::new(2, 2);
+        assert!(d.has_free_slot(0));
+        d.insert(0, "a");
+        d.insert(0, "b");
+        assert!(!d.has_free_slot(0));
+        assert_eq!(d.count(0), 2);
+        assert_eq!(d.replicas_of("a"), vec![0]);
+        d.insert(1, "a");
+        assert_eq!(d.copies("a"), 2);
+
+        // "a" was placed first but touch makes "b" older
+        d.touch(0, "a");
+        assert_eq!(d.lru_evictable(0, |_| true).unwrap(), "b");
+        // filter excludes the only candidate -> none
+        assert!(d.lru_evictable(0, |n| n != "b" && n != "a").is_none());
+
+        d.remove(0, "b");
+        assert!(d.has_free_slot(0));
+        assert!(!d.is_resident(0, "b"));
+    }
+
+    #[test]
+    fn rate_tracker_converges_and_decays() {
+        let mut r = RateTracker::new(1.0);
+        // 10 req/s for 5 seconds
+        let mut rate = 0.0;
+        for i in 0..50 {
+            rate = r.observe("hot", i as f64 * 0.1);
+        }
+        assert!((rate - 10.0).abs() < 2.5, "steady-state estimate {rate}");
+        // a cold adapter stays cold
+        let cold = r.observe("cold", 5.0);
+        assert!(cold < 1.5, "single arrival {cold}");
+        // decay: after 10 halflives the hot adapter is near zero
+        assert!(r.rate("hot", 15.0) < 0.2);
+        assert_eq!(r.rate("never", 0.0), 0.0);
+    }
+}

@@ -1,1 +1,577 @@
-// paper's L3 coordination contribution
+//! Fleet coordinator — the layer above single engines (the paper's L3
+//! coordination role): adapter-aware request routing across N engine
+//! replicas, fleet-level adapter lifecycle, and admission control.
+//!
+//! One ExpertWeave engine already serves ~20 adapters with single-digit
+//! overhead; a production fleet runs many such replicas, and the win
+//! over one-merged-engine-per-adapter deployments (ESFT-style,
+//! [`crate::server::replay_multi`]) is decided a layer up: *which
+//! replica serves which adapter*. This module owns that decision.
+//!
+//! # Architecture
+//!
+//! ```text
+//!   Trace ──▶ Coordinator ──(FIFO cmd channel per replica)──▶ replica-0 [Engine]
+//!              │  ▲                                      └──▶ replica-1 [Engine]
+//!              │  └──(shared event channel: completions,      ...
+//!              │      load/evict acks, reports)
+//!              ├─ AdapterDirectory  (residency + per-placement LRU)
+//!              ├─ RateTracker      (per-adapter EWMA arrival rates)
+//!              └─ RoutingPolicy    (pure scoring over ReplicaViews)
+//! ```
+//!
+//! Each replica is an [`Engine`] on its own thread (PJRT handles are not
+//! `Send`; engines are built inside their threads). Per-replica command
+//! channels are FIFO, which makes `Load(A); Submit(req-for-A)` safe
+//! without waiting for acknowledgements.
+//!
+//! # Routing policies ([`RoutingPolicy`])
+//!
+//! * **RoundRobin** — stateless cycling. Fair in request count, blind to
+//!   both load and adapter residency: under a skewed adapter mix every
+//!   replica eventually needs every adapter, so small per-replica
+//!   adapter capacity turns into continuous load/evict churn (each miss
+//!   costs a weight re-sync) and shed requests once nothing idle is
+//!   left to evict.
+//! * **JoinShortestQueue** — route to the replica with the fewest
+//!   outstanding requests (ties: most free KV slots). Evens out queue
+//!   depth and so protects TTFT tails, but it is adapter-blind and
+//!   inherits RoundRobin's churn under skew.
+//! * **AdapterAffinity** — the coordinator's reason to exist: prefer
+//!   replicas where the adapter is already resident, scored by queue
+//!   depth then free KV slots; miss only when no copy is resident, then
+//!   place on the least-loaded replica that can host one (free slot or
+//!   idle LRU victim). Keeps hot adapters pinned, confines churn to the
+//!   cold tail, and — combined with rate-triggered replication — turns
+//!   a hot adapter into multiple copies instead of one hot replica.
+//!
+//! # Lifecycle
+//!
+//! Load-on-miss with per-replica capacity
+//! ([`CoordinatorConfig::adapter_capacity`]) and LRU eviction; an
+//! adapter with in-flight
+//! requests on a replica is never chosen as victim (and
+//! [`Engine::evict_adapter`] enforces the same invariant). When an
+//! adapter's smoothed arrival rate crosses
+//! [`CoordinatorConfig::replicate_rps`], it is proactively replicated to
+//! the least-loaded replica with a free slot, up to
+//! [`CoordinatorConfig::max_copies`] copies.
+//!
+//! # Admission control
+//!
+//! Per-adapter outstanding-request budgets
+//! ([`CoordinatorConfig::queue_cap`]) shed excess arrivals at the door
+//! instead of letting one hot adapter monopolize every queue; requests
+//! whose adapter no replica can host are shed likewise. Shed and
+//! rejected counts surface in [`Report::shed`] / [`Report::rejected`]
+//! and in [`FleetStats`].
+
+mod lifecycle;
+mod replica;
+mod router;
+
+pub use lifecycle::{AdapterDirectory, RateTracker};
+pub use replica::{ReplicaGauges, ReplicaHandle};
+pub use router::{choose, ReplicaView, RouteDecision, RoutingPolicy};
+
+use crate::adapters::format::Adapter;
+use crate::engine::{Completion, Engine, RequestSpec};
+use crate::metrics::Report;
+use crate::sampler::Sampling;
+use crate::server::Pacer;
+use crate::util::stats::Samples;
+use crate::workload::trace::Trace;
+use anyhow::{bail, Result};
+use replica::{spawn_replica, ReplicaCmd, ReplicaEvent};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Fleet-level tuning knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Engine replicas in the fleet.
+    pub replicas: usize,
+    pub policy: RoutingPolicy,
+    /// Resident-adapter budget per replica (≤ the model's `max_adapters`;
+    /// smaller values model device-memory pressure).
+    pub adapter_capacity: usize,
+    /// Max outstanding (routed, uncompleted) requests per adapter across
+    /// the fleet; arrivals beyond it are shed. 0 = unbounded.
+    pub queue_cap: usize,
+    /// Smoothed arrival rate (req/s) above which a hot adapter is
+    /// replicated to another replica. `f64::INFINITY` disables.
+    pub replicate_rps: f64,
+    /// Half-life (seconds) of the arrival-rate EWMA.
+    pub rate_halflife: f64,
+    /// Max replicas any single adapter may be resident on. Enforced on
+    /// both proactive replication and load-on-miss: an adapter-blind
+    /// policy (RoundRobin/JSQ) that targets a replica without the
+    /// adapter sheds the request once the copy budget is spent, rather
+    /// than silently exceeding it.
+    pub max_copies: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            replicas: 2,
+            policy: RoutingPolicy::AdapterAffinity,
+            adapter_capacity: 4,
+            queue_cap: 64,
+            replicate_rps: f64::INFINITY,
+            rate_halflife: 2.0,
+            max_copies: 2,
+        }
+    }
+}
+
+/// Routing / lifecycle / admission counters for one fleet run.
+#[derive(Debug, Clone, Default)]
+pub struct FleetStats {
+    /// Requests submitted to some replica.
+    pub routed: usize,
+    /// Adapter requests landing on a replica that already held the
+    /// adapter.
+    pub affinity_hits: usize,
+    /// Adapter requests that required a load-on-miss.
+    pub affinity_misses: usize,
+    /// Load commands issued (initial placement + misses + replication).
+    pub loads: usize,
+    /// Loads the engine refused (capacity race, duplicate).
+    pub load_failures: usize,
+    /// Evictions issued to make room.
+    pub evictions: usize,
+    /// Evictions the engine refused (in-flight safety net).
+    pub evict_rejected: usize,
+    /// Proactive hot-adapter replications.
+    pub replications: usize,
+    /// Shed: per-adapter queue budget exhausted.
+    pub shed_queue_full: usize,
+    /// Shed: no replica could host the adapter.
+    pub shed_no_capacity: usize,
+    /// Engine-level submit rejections after routing.
+    pub submit_rejected: usize,
+}
+
+impl FleetStats {
+    pub fn shed_total(&self) -> usize {
+        self.shed_queue_full + self.shed_no_capacity
+    }
+
+    /// Fraction of routed adapter requests that hit a resident copy;
+    /// `NaN` when no adapter-bound request was routed (a base-only run
+    /// has no residency to measure).
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.affinity_hits + self.affinity_misses;
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.affinity_hits as f64 / n as f64
+    }
+
+    /// One-line summary for bench output.
+    pub fn row(&self) -> String {
+        let hit = if self.affinity_hits + self.affinity_misses == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.0}%", self.hit_rate() * 100.0)
+        };
+        format!(
+            "routed={} hit={hit} loads={} evict={} repl={} \
+             shed_q={} shed_cap={} rej={}",
+            self.routed,
+            self.loads,
+            self.evictions,
+            self.replications,
+            self.shed_queue_full,
+            self.shed_no_capacity,
+            self.submit_rejected,
+        )
+    }
+}
+
+/// Result of one fleet replay.
+#[derive(Debug)]
+pub struct FleetOutcome {
+    /// Fleet-level aggregate (rejected/shed filled from [`FleetStats`]).
+    pub report: Report,
+    /// Per-replica serving reports, by replica index.
+    pub per_replica: Vec<Report>,
+    pub completions: Vec<Completion>,
+    pub stats: FleetStats,
+}
+
+/// The fleet coordinator. Build with [`Coordinator::launch`], then drive
+/// a workload with [`Coordinator::replay`] (which consumes the fleet and
+/// joins its threads).
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    replicas: Vec<ReplicaHandle>,
+    events: Receiver<ReplicaEvent>,
+    directory: AdapterDirectory,
+    rates: RateTracker,
+    /// Host-cached adapter checkpoints available for loading (shared
+    /// refs: a load command ships an `Arc`, not a weight copy).
+    host_adapters: HashMap<String, Arc<Adapter>>,
+    /// Outstanding requests per replica (exact, event-driven).
+    inflight: Vec<usize>,
+    /// Outstanding requests per adapter across the fleet.
+    inflight_adapter: HashMap<String, usize>,
+    /// Outstanding requests per (replica, adapter).
+    inflight_ra: Vec<HashMap<String, usize>>,
+    rr_next: usize,
+    stats: FleetStats,
+}
+
+impl Coordinator {
+    /// Spawn `cfg.replicas` engine threads (`spawn(i)` supplies each
+    /// factory; engines are built in-thread), wait until all are ready,
+    /// and place `adapters` round-robin up to per-replica capacity.
+    pub fn launch<F>(
+        cfg: CoordinatorConfig,
+        spawn: F,
+        adapters: Vec<Adapter>,
+    ) -> Result<Coordinator>
+    where
+        F: Fn(usize) -> Box<dyn FnOnce() -> Result<Engine> + Send>,
+    {
+        if cfg.replicas == 0 {
+            bail!("fleet needs at least one replica");
+        }
+        if cfg.adapter_capacity == 0 {
+            bail!("adapter_capacity must be at least 1");
+        }
+        if cfg.max_copies == 0 {
+            bail!("max_copies must be at least 1");
+        }
+        let (ev_tx, ev_rx) = std::sync::mpsc::channel();
+        let replicas: Vec<ReplicaHandle> = (0..cfg.replicas)
+            .map(|i| spawn_replica(i, spawn(i), ev_tx.clone()))
+            .collect();
+        drop(ev_tx); // only replica threads hold senders now
+
+        let mut ready = 0usize;
+        while ready < cfg.replicas {
+            match ev_rx.recv_timeout(Duration::from_secs(600)) {
+                Ok(ReplicaEvent::Ready { replica, err: None }) => {
+                    crate::log_debug!("coordinator", "replica {replica} ready");
+                    ready += 1;
+                }
+                Ok(ReplicaEvent::Ready { replica, err: Some(e) }) => {
+                    bail!("replica {replica} failed to start: {e}");
+                }
+                Ok(_) => {}
+                Err(e) => bail!("fleet startup failed: {e}"),
+            }
+        }
+
+        let n = cfg.replicas;
+        let names: Vec<String> = adapters.iter().map(|a| a.name.clone()).collect();
+        let mut coord = Coordinator {
+            directory: AdapterDirectory::new(n, cfg.adapter_capacity),
+            rates: RateTracker::new(cfg.rate_halflife),
+            host_adapters: adapters
+                .into_iter()
+                .map(|a| (a.name.clone(), Arc::new(a)))
+                .collect(),
+            inflight: vec![0; n],
+            inflight_adapter: HashMap::new(),
+            inflight_ra: (0..n).map(|_| HashMap::new()).collect(),
+            rr_next: 0,
+            stats: FleetStats::default(),
+            events: ev_rx,
+            replicas,
+            cfg,
+        };
+
+        // initial placement: adapter i starts on replica i % n (first
+        // with a free slot); overflow adapters stay host-cached and are
+        // loaded on demand
+        for (i, name) in names.iter().enumerate() {
+            let mut placed = false;
+            for off in 0..n {
+                let r = (i + off) % n;
+                if coord.directory.has_free_slot(r) && !coord.directory.is_resident(r, name) {
+                    coord.issue_load(r, name)?;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                crate::log_info!(
+                    "coordinator",
+                    "adapter {name:?} host-cached only (fleet at adapter capacity)"
+                );
+            }
+        }
+        Ok(coord)
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    pub fn directory(&self) -> &AdapterDirectory {
+        &self.directory
+    }
+
+    /// Record + send a load of a host-cached adapter to a replica.
+    fn issue_load(&mut self, r: usize, name: &str) -> Result<()> {
+        let Some(adapter) = self.host_adapters.get(name).cloned() else {
+            bail!("adapter {name:?} is not host-cached");
+        };
+        self.directory.insert(r, name);
+        self.stats.loads += 1;
+        self.replicas[r].send(ReplicaCmd::Load(adapter))
+    }
+
+    /// LRU-resident adapter on `r` that is idle (no in-flight requests)
+    /// and is not `keep`.
+    fn evictable(&self, r: usize, keep: &str) -> Option<String> {
+        let ra = &self.inflight_ra[r];
+        self.directory
+            .lru_evictable(r, |n| n != keep && ra.get(n).map_or(true, |&c| c == 0))
+    }
+
+    /// Per-replica snapshots for one routing decision.
+    fn views(&self, name: Option<&str>) -> Vec<ReplicaView> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                let resident = name.map_or(true, |n| self.directory.is_resident(i, n));
+                let can_host = name.map_or(true, |n| {
+                    self.host_adapters.contains_key(n)
+                        && self.directory.copies(n) < self.cfg.max_copies
+                        && (self.directory.has_free_slot(i) || self.evictable(i, n).is_some())
+                });
+                ReplicaView {
+                    index: i,
+                    inflight: self.inflight[i],
+                    kv_free: h.gauges.kv_free.load(Ordering::Relaxed),
+                    resident,
+                    can_host,
+                }
+            })
+            .collect()
+    }
+
+    /// Make `name` resident on `r` (no-op if it already is): evict the
+    /// LRU idle adapter when the replica is at capacity, then load.
+    fn ensure_resident(&mut self, r: usize, name: &str) -> Result<()> {
+        if self.directory.is_resident(r, name) {
+            return Ok(());
+        }
+        if !self.host_adapters.contains_key(name)
+            || self.directory.copies(name) >= self.cfg.max_copies
+        {
+            return Ok(()); // engine will reject the submit
+        }
+        if !self.directory.has_free_slot(r) {
+            let Some(victim) = self.evictable(r, name) else {
+                // capacity raced away since the routing decision; the
+                // engine rejects the submit and the event accounting
+                // picks it up
+                return Ok(());
+            };
+            self.directory.remove(r, &victim);
+            self.stats.evictions += 1;
+            self.replicas[r].send(ReplicaCmd::Evict(victim))?;
+        }
+        self.issue_load(r, name)
+    }
+
+    /// Replicate a hot adapter onto the least-loaded replica with a free
+    /// slot (replication never evicts).
+    fn try_replicate(&mut self, name: &str) -> Result<()> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.replicas.len() {
+            if self.directory.is_resident(i, name) || !self.directory.has_free_slot(i) {
+                continue;
+            }
+            if best.map_or(true, |b| self.inflight[i] < self.inflight[b]) {
+                best = Some(i);
+            }
+        }
+        if let Some(i) = best {
+            crate::log_info!(
+                "coordinator",
+                "replicating hot adapter {name:?} to replica {i}"
+            );
+            self.issue_load(i, name)?;
+            self.stats.replications += 1;
+        }
+        Ok(())
+    }
+
+    fn inflight_for(&self, name: &str) -> usize {
+        self.inflight_adapter.get(name).copied().unwrap_or(0)
+    }
+
+    /// Admit, place and submit one request (trace time `at`).
+    fn dispatch(&mut self, spec: RequestSpec, at: f64) -> Result<()> {
+        let adapter = spec.adapter.clone();
+        let name = adapter.as_deref();
+        if let Some(n) = name {
+            if self.cfg.queue_cap > 0 && self.inflight_for(n) >= self.cfg.queue_cap {
+                self.stats.shed_queue_full += 1;
+                return Ok(());
+            }
+        }
+        let views = self.views(name);
+        let Some(decision) = choose(self.cfg.policy, &views, &mut self.rr_next) else {
+            self.stats.shed_no_capacity += 1;
+            return Ok(());
+        };
+        let r = decision.replica;
+        if let Some(n) = name {
+            if decision.resident {
+                self.stats.affinity_hits += 1;
+                self.directory.touch(r, n);
+            } else {
+                self.stats.affinity_misses += 1;
+                self.ensure_resident(r, n)?;
+            }
+            *self.inflight_adapter.entry(n.to_string()).or_insert(0) += 1;
+            *self.inflight_ra[r].entry(n.to_string()).or_insert(0) += 1;
+            let rate = self.rates.observe(n, at);
+            if self.cfg.replicate_rps.is_finite()
+                && rate > self.cfg.replicate_rps
+                && self.directory.copies(n) < self.cfg.max_copies
+            {
+                self.try_replicate(n)?;
+            }
+        }
+        self.inflight[r] += 1;
+        self.stats.routed += 1;
+        self.replicas[r].send(ReplicaCmd::Submit(spec))
+    }
+
+    fn note_done(&mut self, replica: usize, adapter: Option<&str>) {
+        self.inflight[replica] = self.inflight[replica].saturating_sub(1);
+        if let Some(n) = adapter {
+            if let Some(c) = self.inflight_adapter.get_mut(n) {
+                *c = c.saturating_sub(1);
+            }
+            if let Some(c) = self.inflight_ra[replica].get_mut(n) {
+                *c = c.saturating_sub(1);
+            }
+        }
+    }
+
+    fn apply(&mut self, ev: ReplicaEvent, completions: &mut Vec<Completion>) -> Result<()> {
+        match ev {
+            ReplicaEvent::Completed { replica, completion } => {
+                self.note_done(replica, completion.adapter.as_deref());
+                completions.push(completion);
+            }
+            ReplicaEvent::SubmitRejected { replica, adapter } => {
+                self.note_done(replica, adapter.as_deref());
+                self.stats.submit_rejected += 1;
+            }
+            ReplicaEvent::LoadDone { replica, adapter, err } => {
+                if err.is_some() {
+                    self.directory.remove(replica, &adapter);
+                    self.stats.load_failures += 1;
+                }
+            }
+            ReplicaEvent::EvictDone { replica, adapter, err } => {
+                if err.is_some() {
+                    // the engine kept it (safety net); restore our view
+                    self.directory.insert(replica, &adapter);
+                    self.stats.evict_rejected += 1;
+                }
+            }
+            ReplicaEvent::Fatal { replica, err } => {
+                bail!("replica {replica} failed: {err}");
+            }
+            ReplicaEvent::Ready { .. } | ReplicaEvent::Finished { .. } => {}
+        }
+        Ok(())
+    }
+
+    fn drain_events(&mut self, completions: &mut Vec<Completion>) -> Result<()> {
+        loop {
+            match self.events.try_recv() {
+                Ok(ev) => self.apply(ev, completions)?,
+                Err(_) => return Ok(()),
+            }
+        }
+    }
+
+    /// Replay a trace against the fleet in real time, then drain every
+    /// replica and aggregate. Consumes the coordinator (threads are
+    /// joined before returning).
+    pub fn replay(mut self, trace: &Trace) -> Result<FleetOutcome> {
+        let pacer = Pacer::start();
+        let mut completions: Vec<Completion> = Vec::new();
+        for e in &trace.events {
+            pacer.wait_until(e.at);
+            self.drain_events(&mut completions)?;
+            let spec = RequestSpec {
+                adapter: e.adapter.clone(),
+                prompt: e.prompt.clone(),
+                max_new_tokens: e.max_new_tokens,
+                sampling: Sampling::Greedy,
+            };
+            self.dispatch(spec, e.at)?;
+        }
+
+        // all arrivals injected: ask every replica to drain and report
+        // (wall anchored to replay start, so per-replica throughput is
+        // comparable to the fleet aggregate)
+        for h in &self.replicas {
+            h.send(ReplicaCmd::Finish { since: pacer.started_at() })?;
+        }
+        let n = self.replicas.len();
+        let mut reports: Vec<Option<Report>> = (0..n).map(|_| None).collect();
+        let mut finished = 0usize;
+        while finished < n {
+            match self.events.recv_timeout(Duration::from_secs(600)) {
+                Ok(ReplicaEvent::Finished { replica, report }) => {
+                    if reports[replica].replace(report).is_none() {
+                        finished += 1;
+                    }
+                }
+                Ok(ev) => self.apply(ev, &mut completions)?,
+                Err(e) => bail!("fleet drain failed: {e}"),
+            }
+        }
+        let wall = pacer.elapsed().as_secs_f64().max(1e-9);
+        for h in self.replicas.drain(..) {
+            h.shutdown();
+        }
+
+        let per_replica: Vec<Report> =
+            reports.into_iter().map(|r| r.expect("replica report")).collect();
+        let mut ttft = Samples::new();
+        let mut tpot = Samples::new();
+        let mut e2e = Samples::new();
+        for c in &completions {
+            ttft.push(c.record.ttft.as_secs_f64());
+            if let Some(t) = c.record.tpot {
+                tpot.push(t.as_secs_f64());
+            }
+            e2e.push(c.record.e2e.as_secs_f64());
+        }
+        let prefill_tokens: usize = per_replica.iter().map(|r| r.prefill_tokens).sum();
+        let decode_tokens: usize = per_replica.iter().map(|r| r.decode_tokens).sum();
+        let report = Report {
+            requests: completions.len(),
+            prefill_tokens,
+            decode_tokens,
+            prefill_throughput: prefill_tokens as f64 / wall,
+            decode_throughput: decode_tokens as f64 / wall,
+            ttft: ttft.summary(),
+            tpot: tpot.summary(),
+            e2e: e2e.summary(),
+            wall,
+            rejected: self.stats.submit_rejected,
+            shed: self.stats.shed_total(),
+        };
+        Ok(FleetOutcome { report, per_replica, completions, stats: self.stats })
+    }
+}

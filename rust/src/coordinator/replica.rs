@@ -1,0 +1,247 @@
+//! One fleet replica: an [`Engine`] owned by a dedicated thread.
+//!
+//! PJRT handles are not `Send`, so the engine is *built inside* its
+//! thread from a `Send` factory and never leaves it. The coordinator
+//! talks to the replica over a FIFO command channel — which gives the
+//! crucial ordering guarantee that a `Load(adapter)` issued before a
+//! `Submit` for that adapter is applied first — and receives completions
+//! and lifecycle acknowledgements on a shared event channel.
+//!
+//! The thread publishes its KV headroom ([`ReplicaGauges`]) after every
+//! command and step; the coordinator reads it lock-free as the
+//! tie-break signal when scoring placements (queue depth it tracks
+//! itself, exactly, from submit/completion events).
+
+use crate::engine::{Completion, Engine, RequestSpec};
+use crate::metrics::Report;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Lock-free KV-pressure snapshot a replica thread keeps fresh (the
+/// coordinator's queue-depth signal is its own exact in-flight count;
+/// KV headroom is the one thing only the engine knows).
+#[derive(Debug, Default)]
+pub struct ReplicaGauges {
+    /// Free KV token slots.
+    pub kv_free: AtomicUsize,
+}
+
+/// Commands a replica executes in arrival order.
+pub(crate) enum ReplicaCmd {
+    Submit(RequestSpec),
+    Load(Arc<crate::adapters::format::Adapter>),
+    Evict(String),
+    /// Drain all queued work, report (wall time anchored to `since`,
+    /// the coordinator's replay start), and exit the thread.
+    Finish { since: Instant },
+}
+
+/// Events a replica reports back to the coordinator.
+pub(crate) enum ReplicaEvent {
+    /// Sent once after engine construction; `err` is set on failure.
+    Ready { replica: usize, err: Option<String> },
+    Completed { replica: usize, completion: Completion },
+    /// `Engine::submit` refused a routed request.
+    SubmitRejected { replica: usize, adapter: Option<String> },
+    LoadDone { replica: usize, adapter: String, err: Option<String> },
+    EvictDone { replica: usize, adapter: String, err: Option<String> },
+    /// Final per-replica serving report (response to `Finish`).
+    Finished { replica: usize, report: Report },
+    /// The engine failed mid-serve; the replica is gone.
+    Fatal { replica: usize, err: String },
+}
+
+/// Coordinator-side handle to one replica thread.
+pub struct ReplicaHandle {
+    pub index: usize,
+    pub gauges: Arc<ReplicaGauges>,
+    cmd: Sender<ReplicaCmd>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ReplicaHandle {
+    pub(crate) fn send(&self, cmd: ReplicaCmd) -> Result<()> {
+        self.cmd
+            .send(cmd)
+            .map_err(|_| anyhow::anyhow!("replica {} is no longer accepting commands", self.index))
+    }
+
+    /// Drop the command channel and wait for the thread to exit.
+    pub(crate) fn shutdown(mut self) {
+        drop(self.cmd);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Spawn a replica thread; the engine is constructed inside it.
+pub(crate) fn spawn_replica(
+    index: usize,
+    build: Box<dyn FnOnce() -> Result<Engine> + Send>,
+    events: Sender<ReplicaEvent>,
+) -> ReplicaHandle {
+    let (cmd_tx, cmd_rx) = channel::<ReplicaCmd>();
+    let gauges = Arc::new(ReplicaGauges::default());
+    let gauges_thread = gauges.clone();
+    let join = std::thread::Builder::new()
+        .name(format!("replica-{index}"))
+        .spawn(move || {
+            // a panicking replica must still surface as Fatal, or the
+            // coordinator's drain would block until its recv timeout
+            let events_panic = events.clone();
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                replica_main(index, build, cmd_rx, events, gauges_thread)
+            }));
+            if let Err(payload) = run {
+                let err = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "replica thread panicked".to_string());
+                let _ = events_panic.send(ReplicaEvent::Fatal { replica: index, err });
+            }
+        })
+        .expect("spawn replica thread");
+    ReplicaHandle { index, gauges, cmd: cmd_tx, join: Some(join) }
+}
+
+fn publish(engine: &Engine, gauges: &ReplicaGauges) {
+    gauges.kv_free.store(engine.kv_free_slots(), Ordering::Relaxed);
+}
+
+enum Flow {
+    Continue,
+    Finish(Instant),
+}
+
+fn handle_cmd(
+    index: usize,
+    engine: &mut Engine,
+    events: &Sender<ReplicaEvent>,
+    cmd: ReplicaCmd,
+) -> Flow {
+    match cmd {
+        ReplicaCmd::Submit(spec) => {
+            let adapter = spec.adapter.clone();
+            if let Err(e) = engine.submit(spec) {
+                crate::log_debug!("replica", "[{index}] submit rejected: {e:#}");
+                engine.metrics.record_rejected();
+                let _ = events.send(ReplicaEvent::SubmitRejected { replica: index, adapter });
+            }
+            Flow::Continue
+        }
+        ReplicaCmd::Load(adapter) => {
+            let name = adapter.name.clone();
+            let err = engine.load_adapter(&adapter).err().map(|e| format!("{e:#}"));
+            if let Some(e) = &err {
+                crate::log_warn!("replica", "[{index}] load {name:?} failed: {e}");
+            }
+            let _ = events.send(ReplicaEvent::LoadDone { replica: index, adapter: name, err });
+            Flow::Continue
+        }
+        ReplicaCmd::Evict(name) => {
+            let err = engine.evict_adapter(&name).err().map(|e| format!("{e:#}"));
+            let _ = events.send(ReplicaEvent::EvictDone { replica: index, adapter: name, err });
+            Flow::Continue
+        }
+        ReplicaCmd::Finish { since } => Flow::Finish(since),
+    }
+}
+
+fn replica_main(
+    index: usize,
+    build: Box<dyn FnOnce() -> Result<Engine> + Send>,
+    cmds: Receiver<ReplicaCmd>,
+    events: Sender<ReplicaEvent>,
+    gauges: Arc<ReplicaGauges>,
+) {
+    let mut engine = match build() {
+        Ok(e) => {
+            let _ = events.send(ReplicaEvent::Ready { replica: index, err: None });
+            e
+        }
+        Err(e) => {
+            let _ = events.send(ReplicaEvent::Ready {
+                replica: index,
+                err: Some(format!("{e:#}")),
+            });
+            return;
+        }
+    };
+    publish(&engine, &gauges);
+
+    let mut finishing: Option<Instant> = None;
+    'serve: while finishing.is_none() {
+        if engine.has_work() {
+            // busy: absorb whatever commands are already queued, then step
+            loop {
+                match cmds.try_recv() {
+                    Ok(cmd) => {
+                        if let Flow::Finish(since) =
+                            handle_cmd(index, &mut engine, &events, cmd)
+                        {
+                            finishing = Some(since);
+                            break;
+                        }
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break 'serve,
+                }
+            }
+            if finishing.is_none() {
+                match engine.step() {
+                    Ok(Some(done)) => {
+                        for completion in done {
+                            let _ = events
+                                .send(ReplicaEvent::Completed { replica: index, completion });
+                        }
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        let _ = events.send(ReplicaEvent::Fatal {
+                            replica: index,
+                            err: format!("{e:#}"),
+                        });
+                        return;
+                    }
+                }
+            }
+        } else {
+            // idle: block until the coordinator has something for us
+            match cmds.recv() {
+                Ok(cmd) => {
+                    if let Flow::Finish(since) = handle_cmd(index, &mut engine, &events, cmd) {
+                        finishing = Some(since);
+                    }
+                }
+                Err(_) => break 'serve,
+            }
+        }
+        publish(&engine, &gauges);
+    }
+
+    if let Some(since) = finishing {
+        // drain everything still queued, then report
+        match engine.run_to_completion() {
+            Ok(done) => {
+                for completion in done {
+                    let _ = events.send(ReplicaEvent::Completed { replica: index, completion });
+                }
+            }
+            Err(e) => {
+                let _ = events
+                    .send(ReplicaEvent::Fatal { replica: index, err: format!("{e:#}") });
+                return;
+            }
+        }
+        publish(&engine, &gauges);
+        engine.metrics.set_wall(since.elapsed());
+        let report = engine.report();
+        let _ = events.send(ReplicaEvent::Finished { replica: index, report });
+    }
+}

@@ -1,0 +1,198 @@
+//! Routing policies: pure decision functions over per-replica snapshots.
+//!
+//! The coordinator assembles a [`ReplicaView`] per replica (its own
+//! in-flight bookkeeping + the replica-published KV gauge) and asks
+//! [`choose`] for a placement. Keeping this free of channels and threads
+//! makes every policy unit-testable.
+
+use anyhow::{bail, Result};
+
+/// Fleet request-routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through replicas regardless of load or residency. The
+    /// classic stateless baseline; under adapter skew it forces constant
+    /// load-on-miss churn.
+    RoundRobin,
+    /// Least outstanding requests (ties: most free KV slots, then lowest
+    /// index). Balances load but is adapter-blind, so cold replicas
+    /// still pay adapter swaps.
+    JoinShortestQueue,
+    /// Prefer replicas where the request's adapter is already resident,
+    /// scored by queue depth then free KV slots; fall back to the least
+    /// loaded replica that *can* host it (free slot or idle LRU victim).
+    AdapterAffinity,
+}
+
+impl RoutingPolicy {
+    pub fn parse(s: &str) -> Result<RoutingPolicy> {
+        Ok(match s {
+            "rr" | "round-robin" => RoutingPolicy::RoundRobin,
+            "jsq" | "shortest-queue" => RoutingPolicy::JoinShortestQueue,
+            "affinity" | "adapter-affinity" => RoutingPolicy::AdapterAffinity,
+            other => bail!("unknown routing policy {other:?} (rr|jsq|affinity)"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round-robin",
+            RoutingPolicy::JoinShortestQueue => "shortest-queue",
+            RoutingPolicy::AdapterAffinity => "adapter-affinity",
+        }
+    }
+}
+
+impl std::fmt::Display for RoutingPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Snapshot of one replica at decision time.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    pub index: usize,
+    /// Requests routed there and not yet completed (coordinator's own
+    /// count — exact, unlike the asynchronously published gauges).
+    pub inflight: usize,
+    /// Free KV token slots, as last published by the replica thread.
+    pub kv_free: usize,
+    /// The request's adapter is resident (always true for base-model
+    /// requests).
+    pub resident: bool,
+    /// A load-on-miss could succeed: free adapter slot, or an idle
+    /// resident to evict (always true for base-model requests).
+    pub can_host: bool,
+}
+
+/// Where a request was placed and whether its adapter was already there.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub replica: usize,
+    pub resident: bool,
+}
+
+/// Lower is better: queue depth first, then KV pressure, then index for
+/// determinism.
+fn score(v: &ReplicaView) -> (usize, usize, usize) {
+    (v.inflight, usize::MAX - v.kv_free, v.index)
+}
+
+/// Pick a replica for one request, or `None` when every permissible
+/// target would be unable to serve it (the caller sheds the request).
+///
+/// `rr_next` is the round-robin wheel; it advances exactly once per
+/// RoundRobin decision and is untouched by the other policies.
+pub fn choose(
+    policy: RoutingPolicy,
+    views: &[ReplicaView],
+    rr_next: &mut usize,
+) -> Option<RouteDecision> {
+    if views.is_empty() {
+        return None;
+    }
+    let serveable = |v: &ReplicaView| v.resident || v.can_host;
+    match policy {
+        RoutingPolicy::RoundRobin => {
+            let v = &views[*rr_next % views.len()];
+            *rr_next = rr_next.wrapping_add(1);
+            serveable(v).then(|| RouteDecision { replica: v.index, resident: v.resident })
+        }
+        RoutingPolicy::JoinShortestQueue => {
+            let v = views.iter().min_by_key(|v| score(v))?;
+            serveable(v).then(|| RouteDecision { replica: v.index, resident: v.resident })
+        }
+        RoutingPolicy::AdapterAffinity => {
+            if let Some(v) = views.iter().filter(|v| v.resident).min_by_key(|v| score(v)) {
+                return Some(RouteDecision { replica: v.index, resident: true });
+            }
+            views
+                .iter()
+                .filter(|v| v.can_host)
+                .min_by_key(|v| score(v))
+                .map(|v| RouteDecision { replica: v.index, resident: false })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(index: usize, inflight: usize, resident: bool) -> ReplicaView {
+        ReplicaView { index, inflight, kv_free: 1000, resident, can_host: true }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::JoinShortestQueue,
+            RoutingPolicy::AdapterAffinity,
+        ] {
+            assert_eq!(RoutingPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert_eq!(RoutingPolicy::parse("rr").unwrap(), RoutingPolicy::RoundRobin);
+        assert!(RoutingPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles_and_sheds_unhostable() {
+        let mut rr = 0;
+        let views = vec![view(0, 9, false), view(1, 0, true), view(2, 3, false)];
+        let picks: Vec<usize> = (0..6)
+            .map(|_| choose(RoutingPolicy::RoundRobin, &views, &mut rr).unwrap().replica)
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        // a replica that can neither serve nor host sheds, but the wheel
+        // still advances past it
+        let mut blocked = views.clone();
+        blocked[0].can_host = false;
+        let mut rr = 0;
+        assert!(choose(RoutingPolicy::RoundRobin, &blocked, &mut rr).is_none());
+        assert_eq!(
+            choose(RoutingPolicy::RoundRobin, &blocked, &mut rr).unwrap().replica,
+            1
+        );
+    }
+
+    #[test]
+    fn jsq_picks_least_loaded_ignoring_residency() {
+        let mut rr = 0;
+        let views = vec![view(0, 5, true), view(1, 2, false), view(2, 7, true)];
+        let d = choose(RoutingPolicy::JoinShortestQueue, &views, &mut rr).unwrap();
+        assert_eq!(d.replica, 1);
+        assert!(!d.resident);
+        assert_eq!(rr, 0, "jsq must not advance the rr wheel");
+    }
+
+    #[test]
+    fn jsq_breaks_ties_by_kv_free() {
+        let mut rr = 0;
+        let mut views = vec![view(0, 2, true), view(1, 2, true)];
+        views[1].kv_free = 2000;
+        let d = choose(RoutingPolicy::JoinShortestQueue, &views, &mut rr).unwrap();
+        assert_eq!(d.replica, 1);
+    }
+
+    #[test]
+    fn affinity_prefers_resident_even_when_busier() {
+        let mut rr = 0;
+        let views = vec![view(0, 4, true), view(1, 0, false), view(2, 2, true)];
+        let d = choose(RoutingPolicy::AdapterAffinity, &views, &mut rr).unwrap();
+        assert_eq!(d.replica, 2, "least-loaded resident wins");
+        assert!(d.resident);
+    }
+
+    #[test]
+    fn affinity_falls_back_to_hostable_then_sheds() {
+        let mut rr = 0;
+        let mut views = vec![view(0, 4, false), view(1, 1, false)];
+        let d = choose(RoutingPolicy::AdapterAffinity, &views, &mut rr).unwrap();
+        assert_eq!(d, RouteDecision { replica: 1, resident: false });
+        views[0].can_host = false;
+        views[1].can_host = false;
+        assert!(choose(RoutingPolicy::AdapterAffinity, &views, &mut rr).is_none());
+    }
+}

@@ -1,7 +1,7 @@
 //! The serving engine: one deployment of the model on one (simulated)
-//! device, tying together the PJRT runtime, the weight store + adapter
-//! registry, the continuous-batching scheduler, the KV cache and the
-//! sampler.
+//! device, tying together an execution backend, the weight store +
+//! adapter registry, the continuous-batching scheduler, the KV cache and
+//! the sampler.
 //!
 //! Deployment flavours mirror the paper's systems under test:
 //! * [`Engine::new_weave`] — **ExpertWeave**: shared base model +
@@ -10,6 +10,11 @@
 //! * [`Engine::new_base_only`] — *vLLM-Ascend (Base-Only)*.
 //! * [`Engine::new_merged`] — *vLLM-Ascend (Merged)*: one engine instance
 //!   per adapter, serving its merged checkpoint in isolation.
+//!
+//! Each flavour also has a `sim_*` constructor that runs on the
+//! [`SimRuntime`] backend instead of PJRT — same scheduler, weight
+//! store, registry and metrics, but no AOT artifacts required. The fleet
+//! [`crate::coordinator`] and artifact-free tests/benches use these.
 
 use crate::adapters::format::Adapter;
 use crate::adapters::registry::AdapterRegistry;
@@ -17,7 +22,9 @@ use crate::kvcache::KvCache;
 use crate::memsim::DeviceMemory;
 use crate::metrics::{MetricsCollector, Report, RequestRecord};
 use crate::model::ModelConfig;
-use crate::runtime::{ArtifactSet, Runtime, Variant};
+use crate::runtime::{
+    ArtifactSet, ParamSource, Runtime, SimPerf, SimRuntime, StepInputs, StepOutput, Variant,
+};
 use crate::sampler::{sample, Sampling};
 use crate::scheduler::{SchedConfig, Scheduler, SeqState, SlotMeta};
 use crate::util::rng::Pcg;
@@ -89,10 +96,54 @@ enum Weights {
     Merged { adapter: Adapter },
 }
 
+/// Execution backend: the real PJRT runtime over AOT artifacts, or the
+/// wall-clock-calibrated simulation. Both honour the same step ABI.
+enum Backend {
+    Pjrt(Runtime),
+    Sim(SimRuntime),
+}
+
+impl Backend {
+    fn variant(&self) -> Variant {
+        match self {
+            Backend::Pjrt(r) => r.variant(),
+            Backend::Sim(s) => s.variant(),
+        }
+    }
+
+    fn upload_params<S: ParamSource>(&mut self, source: &mut S, version: u64) -> Result<()> {
+        match self {
+            Backend::Pjrt(r) => r.upload_params(source, version),
+            Backend::Sim(s) => s.upload_params(source, version),
+        }
+    }
+
+    fn upload_expert_maps(&mut self, maps: &[i32], version: u64) -> Result<()> {
+        match self {
+            Backend::Pjrt(r) => r.upload_expert_maps(maps, version),
+            Backend::Sim(s) => s.upload_expert_maps(maps, version),
+        }
+    }
+
+    fn step(&mut self, bucket: usize, inputs: &StepInputs) -> Result<StepOutput> {
+        match self {
+            Backend::Pjrt(r) => r.step(bucket, inputs),
+            Backend::Sim(s) => s.step(bucket, inputs),
+        }
+    }
+
+    fn reset_kv(&mut self) {
+        match self {
+            Backend::Pjrt(r) => r.reset_kv(),
+            Backend::Sim(s) => s.reset_kv(),
+        }
+    }
+}
+
 /// One model deployment.
 pub struct Engine {
     cfg: ModelConfig,
-    runtime: Runtime,
+    backend: Backend,
     base: BaseWeights,
     weights: Weights,
     scheduler: Scheduler,
@@ -110,10 +161,64 @@ impl Engine {
     fn sched_config(cfg: &ModelConfig, opts: &EngineOptions) -> SchedConfig {
         SchedConfig {
             max_seqs: cfg.max_seqs.min(opts.max_seqs),
+            // out_rows length is part of the step ABI: always the
+            // config's max_seqs, even when admission is capped lower
+            abi_max_seqs: cfg.max_seqs,
             chunk: opts.chunk.min(*cfg.buckets.last().unwrap()),
             buckets: cfg.buckets.clone(),
             kv_cap: cfg.kv_cap,
         }
+    }
+
+    /// Common tail of every constructor: scheduler/KV/metrics plumbing
+    /// around an already-built backend + weight state.
+    fn assemble(
+        cfg: ModelConfig,
+        backend: Backend,
+        base: BaseWeights,
+        weights: Weights,
+        device: Arc<Mutex<DeviceMemory>>,
+        opts: &EngineOptions,
+    ) -> Result<Engine> {
+        let mut engine = Engine {
+            scheduler: Scheduler::new(Self::sched_config(&cfg, opts)),
+            kv: KvCache::new(cfg.kv_cap),
+            slot_meta: SlotMeta::new(cfg.kv_cap),
+            metrics: MetricsCollector::new(),
+            rng: Pcg::with_stream(opts.seed, 555),
+            next_seq: 1,
+            weights_version: 1,
+            device,
+            cfg,
+            backend,
+            base,
+            compute_share: opts.compute_share.clamp(0.05, 1.0),
+            weights,
+        };
+        engine.sync_device_state()?;
+        Ok(engine)
+    }
+
+    /// Build the weave-flavour weight state (store + registry, adapters
+    /// preloaded) against a fresh page pool on `device`.
+    fn weave_weights(
+        cfg: &ModelConfig,
+        base: &BaseWeights,
+        adapters: &[Adapter],
+        mode: StoreMode,
+        device: &Arc<Mutex<DeviceMemory>>,
+        opts: &EngineOptions,
+    ) -> Result<Weights> {
+        // pool sized to the device budget (pages are the real constraint)
+        let pool_pages = (opts.device_capacity / opts.page_size).min(1 << 20);
+        let pool = Arc::new(Mutex::new(PagePool::new(opts.page_size, pool_pages)?));
+        let mut store = WeightStore::new(cfg, mode, pool, device.clone())?;
+        store.load_base(base)?;
+        let mut registry = AdapterRegistry::new(cfg);
+        for a in adapters {
+            registry.load(&mut store, a)?;
+        }
+        Ok(Weights::Weave { store, registry })
     }
 
     /// ExpertWeave deployment: shared base + adapters.
@@ -133,41 +238,36 @@ impl Engine {
             bail!("weave deployment needs an adapter-aware variant");
         }
         let cfg = set.config.clone();
-        let runtime = Runtime::new(set, variant)?;
+        let backend = Backend::Pjrt(Runtime::new(set, variant)?);
         let base = BaseWeights::generate(&cfg, opts.seed);
         let device = DeviceMemory::shared(opts.device_capacity);
-        // pool sized to the device budget (pages are the real constraint)
-        let pool_pages = (opts.device_capacity / opts.page_size).min(1 << 20);
-        let pool = Arc::new(Mutex::new(PagePool::new(opts.page_size, pool_pages)?));
-        let mut store = WeightStore::new(&cfg, mode, pool, device.clone())?;
-        store.load_base(&base)?;
-        let mut registry = AdapterRegistry::new(&cfg);
-        for a in adapters {
-            registry.load(&mut store, a)?;
+        let weights = Self::weave_weights(&cfg, &base, adapters, mode, &device, &opts)?;
+        Self::assemble(cfg, backend, base, weights, device, &opts)
+    }
+
+    /// ExpertWeave deployment on the simulated backend (no artifacts).
+    pub fn sim_weave(
+        cfg: &ModelConfig,
+        perf: SimPerf,
+        adapters: &[Adapter],
+        variant: Variant,
+        mode: StoreMode,
+        opts: EngineOptions,
+    ) -> Result<Engine> {
+        if !variant.is_adapter_aware() {
+            bail!("weave deployment needs an adapter-aware variant");
         }
-        let mut engine = Engine {
-            scheduler: Scheduler::new(Self::sched_config(&cfg, &opts)),
-            kv: KvCache::new(cfg.kv_cap),
-            slot_meta: SlotMeta::new(cfg.kv_cap),
-            metrics: MetricsCollector::new(),
-            rng: Pcg::with_stream(opts.seed, 555),
-            next_seq: 1,
-            weights_version: 1,
-            device,
-            cfg,
-            runtime,
-            base,
-            compute_share: opts.compute_share.clamp(0.05, 1.0),
-            weights: Weights::Weave { store, registry },
-        };
-        engine.sync_device_state()?;
-        Ok(engine)
+        let backend = Backend::Sim(SimRuntime::new(cfg, variant, perf, opts.seed)?);
+        let base = BaseWeights::generate(cfg, opts.seed);
+        let device = DeviceMemory::shared(opts.device_capacity);
+        let weights = Self::weave_weights(cfg, &base, adapters, mode, &device, &opts)?;
+        Self::assemble(cfg.clone(), backend, base, weights, device, &opts)
     }
 
     /// vLLM-Ascend (Base-Only) baseline.
     pub fn new_base_only(set: &ArtifactSet, opts: EngineOptions) -> Result<Engine> {
         let cfg = set.config.clone();
-        let runtime = Runtime::new(set, Variant::Base)?;
+        let backend = Backend::Pjrt(Runtime::new(set, Variant::Base)?);
         let base = BaseWeights::generate(&cfg, opts.seed);
         let device = DeviceMemory::shared(opts.device_capacity);
         device
@@ -175,30 +275,27 @@ impl Engine {
             .unwrap()
             .alloc(cfg.base_model_bytes())
             .context("base model exceeds device budget")?;
-        let mut engine = Engine {
-            scheduler: Scheduler::new(Self::sched_config(&cfg, &opts)),
-            kv: KvCache::new(cfg.kv_cap),
-            slot_meta: SlotMeta::new(cfg.kv_cap),
-            metrics: MetricsCollector::new(),
-            rng: Pcg::with_stream(opts.seed, 555),
-            next_seq: 1,
-            weights_version: 1,
-            device,
-            cfg,
-            runtime,
-            base,
-            compute_share: opts.compute_share.clamp(0.05, 1.0),
-            weights: Weights::BaseOnly,
-        };
-        engine.sync_device_state()?;
-        Ok(engine)
+        Self::assemble(cfg, backend, base, Weights::BaseOnly, device, &opts)
+    }
+
+    /// Base-only baseline on the simulated backend.
+    pub fn sim_base_only(cfg: &ModelConfig, perf: SimPerf, opts: EngineOptions) -> Result<Engine> {
+        let backend = Backend::Sim(SimRuntime::new(cfg, Variant::Base, perf, opts.seed)?);
+        let base = BaseWeights::generate(cfg, opts.seed);
+        let device = DeviceMemory::shared(opts.device_capacity);
+        device
+            .lock()
+            .unwrap()
+            .alloc(cfg.base_model_bytes())
+            .context("base model exceeds device budget")?;
+        Self::assemble(cfg.clone(), backend, base, Weights::BaseOnly, device, &opts)
     }
 
     /// vLLM-Ascend (Merged) baseline: serves exactly one adapter's merged
     /// checkpoint.
     pub fn new_merged(set: &ArtifactSet, adapter: Adapter, opts: EngineOptions) -> Result<Engine> {
         let cfg = set.config.clone();
-        let runtime = Runtime::new(set, Variant::Base)?;
+        let backend = Backend::Pjrt(Runtime::new(set, Variant::Base)?);
         let base = BaseWeights::generate(&cfg, opts.seed);
         let device = DeviceMemory::shared(opts.device_capacity);
         device
@@ -206,23 +303,32 @@ impl Engine {
             .unwrap()
             .alloc(cfg.base_model_bytes())
             .context("merged model exceeds device budget")?;
-        let mut engine = Engine {
-            scheduler: Scheduler::new(Self::sched_config(&cfg, &opts)),
-            kv: KvCache::new(cfg.kv_cap),
-            slot_meta: SlotMeta::new(cfg.kv_cap),
-            metrics: MetricsCollector::new(),
-            rng: Pcg::with_stream(opts.seed, 555),
-            next_seq: 1,
-            weights_version: 1,
-            device,
-            cfg,
-            runtime,
+        Self::assemble(cfg, backend, base, Weights::Merged { adapter }, device, &opts)
+    }
+
+    /// Merged baseline on the simulated backend.
+    pub fn sim_merged(
+        cfg: &ModelConfig,
+        perf: SimPerf,
+        adapter: Adapter,
+        opts: EngineOptions,
+    ) -> Result<Engine> {
+        let backend = Backend::Sim(SimRuntime::new(cfg, Variant::Base, perf, opts.seed)?);
+        let base = BaseWeights::generate(cfg, opts.seed);
+        let device = DeviceMemory::shared(opts.device_capacity);
+        device
+            .lock()
+            .unwrap()
+            .alloc(cfg.base_model_bytes())
+            .context("merged model exceeds device budget")?;
+        Self::assemble(
+            cfg.clone(),
+            backend,
             base,
-            compute_share: opts.compute_share.clamp(0.05, 1.0),
-            weights: Weights::Merged { adapter },
-        };
-        engine.sync_device_state()?;
-        Ok(engine)
+            Weights::Merged { adapter },
+            device,
+            &opts,
+        )
     }
 
     /// Upload weights + expert maps if stale.
@@ -230,17 +336,17 @@ impl Engine {
         match &self.weights {
             Weights::Weave { store, registry } => {
                 let mut src = StoreParams::new(&self.base, store);
-                self.runtime.upload_params(&mut src, self.weights_version)?;
-                self.runtime
+                self.backend.upload_params(&mut src, self.weights_version)?;
+                self.backend
                     .upload_expert_maps(registry.maps().as_slice(), registry.maps_version())?;
             }
             Weights::BaseOnly => {
                 let mut src = BaseOnlyParams { base: &self.base };
-                self.runtime.upload_params(&mut src, self.weights_version)?;
+                self.backend.upload_params(&mut src, self.weights_version)?;
             }
             Weights::Merged { adapter } => {
                 let mut src = MergedParams::new(&self.cfg, &self.base, adapter);
-                self.runtime.upload_params(&mut src, self.weights_version)?;
+                self.backend.upload_params(&mut src, self.weights_version)?;
             }
         }
         Ok(())
@@ -251,7 +357,7 @@ impl Engine {
     }
 
     pub fn variant(&self) -> Variant {
-        self.runtime.variant()
+        self.backend.variant()
     }
 
     pub fn device(&self) -> Arc<Mutex<DeviceMemory>> {
@@ -260,6 +366,50 @@ impl Engine {
 
     pub fn kv_free_slots(&self) -> usize {
         self.kv.free_slots()
+    }
+
+    /// Is this a weave deployment (dynamic adapter lifecycle available)?
+    pub fn is_weave(&self) -> bool {
+        matches!(self.weights, Weights::Weave { .. })
+    }
+
+    /// Names of the adapters currently resident (weave: registry
+    /// contents; merged: the single merged adapter; base-only: none).
+    pub fn resident_adapters(&self) -> Vec<String> {
+        match &self.weights {
+            Weights::Weave { registry, .. } => {
+                registry.resident().map(|r| r.name.clone()).collect()
+            }
+            Weights::BaseOnly => Vec::new(),
+            Weights::Merged { adapter } => vec![adapter.name.clone()],
+        }
+    }
+
+    /// Can this engine serve `name` right now without a load?
+    pub fn has_adapter(&self, name: &str) -> bool {
+        match &self.weights {
+            Weights::Weave { registry, .. } => registry.aid_of(name).is_some(),
+            Weights::BaseOnly => false,
+            Weights::Merged { adapter } => adapter.name == name,
+        }
+    }
+
+    /// Adapter slot capacity of this deployment (N of the virtual weight
+    /// tensor; 1 for merged, 0 for base-only).
+    pub fn adapter_slots_total(&self) -> usize {
+        match &self.weights {
+            Weights::Weave { .. } => self.cfg.max_adapters,
+            Weights::BaseOnly => 0,
+            Weights::Merged { .. } => 1,
+        }
+    }
+
+    /// Least-recently-used resident adapter (weave only).
+    pub fn lru_adapter(&self) -> Option<String> {
+        match &self.weights {
+            Weights::Weave { registry, .. } => registry.lru_victim().map(|r| r.name.clone()),
+            _ => None,
+        }
     }
 
     /// Load another adapter at runtime (weave deployments only).
@@ -273,8 +423,14 @@ impl Engine {
         Ok(slot)
     }
 
-    /// Evict an adapter at runtime (weave deployments only).
+    /// Evict an adapter at runtime (weave deployments only). Refused
+    /// while the adapter still has queued or running requests — evicting
+    /// live expert weights would corrupt in-flight decoding.
     pub fn evict_adapter(&mut self, name: &str) -> Result<()> {
+        let in_flight = self.scheduler.adapter_work(name);
+        if in_flight > 0 {
+            bail!("cannot evict adapter {name:?}: {in_flight} request(s) in flight");
+        }
         let Weights::Weave { store, registry } = &mut self.weights else {
             bail!("adapter evict on a non-weave deployment");
         };
@@ -338,7 +494,7 @@ impl Engine {
         let Some(batch) = self.scheduler.build_batch(&mut self.kv, &mut self.slot_meta)? else {
             return Ok(None);
         };
-        let out = self.runtime.step(batch.bucket, &batch.inputs)?;
+        let out = self.backend.step(batch.bucket, &batch.inputs)?;
         // sample every row that completed its backlog
         for &(row, seq_id) in &batch.rows {
             let logits = &out.logits[row * self.cfg.vocab..(row + 1) * self.cfg.vocab];
@@ -414,6 +570,6 @@ impl Engine {
         self.kv = KvCache::new(self.cfg.kv_cap);
         self.slot_meta = SlotMeta::new(self.cfg.kv_cap);
         self.metrics = MetricsCollector::new();
-        self.runtime.reset_kv();
+        self.backend.reset_kv();
     }
 }

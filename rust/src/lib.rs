@@ -26,11 +26,29 @@
 //! experiment substrates [`workload`], [`metrics`], [`memsim`] and
 //! [`bench`].
 //!
+//! Above the single engine sits the **fleet layer** ([`coordinator`]):
+//! N engine replicas on their own threads behind a coordinator that does
+//! adapter-aware routing (RoundRobin / JoinShortestQueue /
+//! AdapterAffinity), fleet-wide adapter lifecycle (load-on-miss,
+//! per-replica capacity with LRU eviction, rate-triggered replication of
+//! hot adapters) and admission control (bounded per-adapter queues with
+//! shed accounting). This is the scale story of the paper taken to its
+//! deployment conclusion: one shared-adapter engine beats
+//! one-merged-engine-per-adapter *within* a device, and the coordinator
+//! extends that across devices.
+//!
+//! Execution backends: the PJRT runtime consumes AOT artifacts
+//! (`make artifacts`); [`runtime::sim`] is a drop-in simulated backend
+//! with the same step ABI and a calibrated wall-clock cost model, so the
+//! serving and fleet layers run (and are tested/benchmarked) in
+//! artifact-free environments.
+//!
 //! Python/JAX runs only at build time (`make artifacts`); the request path
 //! is pure Rust + PJRT.
 
 pub mod adapters;
 pub mod bench;
+pub mod coordinator;
 pub mod engine;
 pub mod kvcache;
 pub mod memsim;

@@ -3,7 +3,11 @@
 //! Subcommands:
 //! * `serve`        — replay a synthetic workload trace against a
 //!                    deployment (weave / base-only / merged) and print
-//!                    the serving report.
+//!                    the serving report. `--backend sim` needs no
+//!                    artifacts.
+//! * `fleet`        — replay a trace against a coordinated multi-replica
+//!                    fleet (routing policy, adapter lifecycle, admission
+//!                    control) on the sim backend.
 //! * `gen-adapters` — synthesize the Table-1 ESFT adapters for a config
 //!                    and write `.esft` checkpoints.
 //! * `inspect`      — show an artifact set (config, executables, ABI).
@@ -14,15 +18,20 @@
 //! expertweave inspect --config tiny
 //! expertweave gen-adapters --config small --out /tmp/adapters
 //! expertweave serve --config tiny --adapters 2 --lambda 5 --horizon 10
+//! expertweave serve --backend sim --adapters 4 --lambda 10 --horizon 5
+//! expertweave fleet --replicas 3 --adapters 6 --policy affinity --horizon 6
 //! ```
 
 use anyhow::{bail, Context, Result};
 use expertweave::adapters::generator::{
     adapter_fragmentation_factor, fragmentation_factor, paper_adapter_profiles, synth_adapter,
+    synth_fleet_adapters,
 };
 use expertweave::bench::Table;
+use expertweave::coordinator::{CoordinatorConfig, RoutingPolicy};
 use expertweave::engine::{Engine, EngineOptions};
-use expertweave::runtime::{ArtifactSet, Variant};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{ArtifactSet, SimPerf, Variant};
 use expertweave::server;
 use expertweave::util::args::Args;
 use expertweave::util::logging::{set_level, Level};
@@ -33,12 +42,13 @@ use std::path::PathBuf;
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: expertweave <serve|gen-adapters|inspect|sparsity> [options]");
+        eprintln!("usage: expertweave <serve|fleet|gen-adapters|inspect|sparsity> [options]");
         std::process::exit(2);
     }
     let cmd = argv.remove(0);
     let result = match cmd.as_str() {
         "serve" => serve(argv),
+        "fleet" => fleet(argv),
         "gen-adapters" => gen_adapters(argv),
         "inspect" => inspect(argv),
         "sparsity" => sparsity(argv),
@@ -60,7 +70,8 @@ fn artifact_set(config: &str) -> Result<ArtifactSet> {
 
 fn serve(argv: Vec<String>) -> Result<()> {
     let a = Args::new("expertweave serve", "replay a synthetic trace")
-        .opt("config", Some("tiny"), "artifact config (tiny|small)")
+        .opt("backend", Some("pjrt"), "execution backend (pjrt|sim)")
+        .opt("config", Some("tiny"), "artifact config (tiny|small); pjrt only")
         .opt("deployment", Some("weave"), "weave|singleop|padding|base-only")
         .opt("adapters", Some("2"), "number of Table-1 adapters to load")
         .opt("lambda", Some("2.0"), "aggregate arrival rate (req/s)")
@@ -74,35 +85,64 @@ fn serve(argv: Vec<String>) -> Result<()> {
     if a.has_flag("verbose") {
         set_level(Level::Debug);
     }
-    let set = artifact_set(&a.get_or("config", "tiny"))?;
-    let cfg = set.config.clone();
+    let backend = a.get_or("backend", "pjrt");
+    let set = match backend.as_str() {
+        "pjrt" => Some(artifact_set(&a.get_or("config", "tiny"))?),
+        "sim" => None,
+        other => bail!("unknown backend {other:?} (pjrt|sim)"),
+    };
+    let cfg = match &set {
+        Some(s) => s.config.clone(),
+        None => ModelConfig::sim_default(),
+    };
     let n: usize = a.get_usize("adapters").map_err(anyhow::Error::msg)?;
     if n > cfg.max_adapters {
         bail!("config supports at most {} adapters", cfg.max_adapters);
     }
-    let profiles = paper_adapter_profiles();
-    let adapters: Vec<_> = (0..n)
-        .map(|i| {
-            let mut p = profiles[i % profiles.len()].clone();
-            p.max_experts = p.max_experts.min(cfg.e_max);
-            p.avg_experts = p.avg_experts.min(p.max_experts as f64);
-            synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, 42 + i as u64)
-        })
-        .collect();
+    let adapters = synth_fleet_adapters(&cfg, n, 42);
 
     let opts = EngineOptions {
         chunk: a.get_usize("chunk").map_err(anyhow::Error::msg)?,
         ..Default::default()
     };
     let deployment = a.get_or("deployment", "weave");
-    let mut engine = match deployment.as_str() {
-        "weave" => Engine::new_weave(&set, &adapters, Variant::Weave, StoreMode::Virtual, opts)?,
-        "singleop" => {
-            Engine::new_weave(&set, &adapters, Variant::SingleOp, StoreMode::Virtual, opts)?
+    let mut engine = match (&set, deployment.as_str()) {
+        (Some(set), "weave") => {
+            Engine::new_weave(set, &adapters, Variant::Weave, StoreMode::Virtual, opts)?
         }
-        "padding" => Engine::new_weave(&set, &adapters, Variant::Weave, StoreMode::Padding, opts)?,
-        "base-only" => Engine::new_base_only(&set, opts)?,
-        other => bail!("unknown deployment {other:?}"),
+        (Some(set), "singleop") => {
+            Engine::new_weave(set, &adapters, Variant::SingleOp, StoreMode::Virtual, opts)?
+        }
+        (Some(set), "padding") => {
+            Engine::new_weave(set, &adapters, Variant::Weave, StoreMode::Padding, opts)?
+        }
+        (Some(set), "base-only") => Engine::new_base_only(set, opts)?,
+        (None, "weave") => Engine::sim_weave(
+            &cfg,
+            SimPerf::default(),
+            &adapters,
+            Variant::Weave,
+            StoreMode::Virtual,
+            opts,
+        )?,
+        (None, "singleop") => Engine::sim_weave(
+            &cfg,
+            SimPerf::default(),
+            &adapters,
+            Variant::SingleOp,
+            StoreMode::Virtual,
+            opts,
+        )?,
+        (None, "padding") => Engine::sim_weave(
+            &cfg,
+            SimPerf::default(),
+            &adapters,
+            Variant::Weave,
+            StoreMode::Padding,
+            opts,
+        )?,
+        (None, "base-only") => Engine::sim_base_only(&cfg, SimPerf::default(), opts)?,
+        (_, other) => bail!("unknown deployment {other:?}"),
     };
 
     let trace_adapters: Vec<(String, String)> = if deployment == "base-only" {
@@ -139,13 +179,9 @@ fn serve(argv: Vec<String>) -> Result<()> {
     };
     // keep prompts + outputs within the model's bucket/KV budget
     let max_prompt = cfg.buckets.last().copied().unwrap_or(64).min(cfg.kv_cap / 2);
-    let max_new = (cfg.kv_cap / 8).max(1);
-    for e in &mut trace.events {
-        e.prompt.truncate(max_prompt);
-        e.max_new_tokens = e.max_new_tokens.clamp(1, max_new);
-    }
+    trace.clip(max_prompt, (cfg.kv_cap / 8).max(1));
     println!(
-        "replaying {} requests over {:.1}s against {deployment} ({})...",
+        "replaying {} requests over {:.1}s against {deployment} ({}, {backend})...",
         trace.len(),
         a.get_f64("horizon").map_err(anyhow::Error::msg)?,
         cfg.name
@@ -155,6 +191,107 @@ fn serve(argv: Vec<String>) -> Result<()> {
     if outcome.rejected > 0 {
         println!("rejected: {}", outcome.rejected);
     }
+    Ok(())
+}
+
+fn fleet(argv: Vec<String>) -> Result<()> {
+    let a = Args::new(
+        "expertweave fleet",
+        "coordinated multi-replica replay (sim backend)",
+    )
+    .opt("replicas", Some("3"), "engine replicas")
+    .opt("adapters", Some("6"), "distinct adapters in the workload")
+    .opt("capacity", Some("3"), "resident-adapter budget per replica")
+    .opt("policy", Some("affinity"), "rr|jsq|affinity")
+    .opt("lambda", Some("24.0"), "aggregate arrival rate (req/s)")
+    .opt("alpha", Some("0.3"), "power-law skew (1 = uniform)")
+    .opt("horizon", Some("6.0"), "trace horizon (s)")
+    .opt("queue-cap", Some("32"), "per-adapter outstanding cap (0 = off)")
+    .opt("replicate-rps", Some("0"), "hot-adapter replication threshold (0 = off)")
+    .opt("chunk", Some("64"), "chunked-prefill budget per seq")
+    .opt("seed", Some("0"), "workload seed")
+    .flag("verbose", "debug logging")
+    .parse(argv)
+    .map_err(anyhow::Error::msg)?;
+    if a.has_flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let replicas: usize = a.get_usize("replicas").map_err(anyhow::Error::msg)?;
+    let n_adapters: usize = a.get_usize("adapters").map_err(anyhow::Error::msg)?;
+    let capacity: usize = a.get_usize("capacity").map_err(anyhow::Error::msg)?;
+    let policy = RoutingPolicy::parse(&a.get_or("policy", "affinity"))?;
+    let seed: u64 = a.get_usize("seed").map_err(anyhow::Error::msg)? as u64;
+    let replicate_rps: f64 = a.get_f64("replicate-rps").map_err(anyhow::Error::msg)?;
+
+    let mut cfg = ModelConfig::sim_default();
+    cfg.max_adapters = capacity.max(1);
+    let adapters = synth_fleet_adapters(&cfg, n_adapters, 42);
+
+    let mut trace = Trace::generate(&TraceSpec {
+        adapters: adapters
+            .iter()
+            .map(|ad| (ad.name.clone(), ad.domain.clone()))
+            .collect(),
+        lambda: a.get_f64("lambda").map_err(anyhow::Error::msg)?,
+        alpha: a.get_f64("alpha").map_err(anyhow::Error::msg)?,
+        horizon: a.get_f64("horizon").map_err(anyhow::Error::msg)?,
+        vocab: cfg.vocab,
+        seed,
+    });
+    let max_prompt = cfg.buckets.last().copied().unwrap_or(64).min(cfg.kv_cap / 2);
+    trace.clip(max_prompt, (cfg.kv_cap / 16).max(1));
+
+    let coord_cfg = CoordinatorConfig {
+        replicas,
+        policy,
+        adapter_capacity: capacity,
+        queue_cap: a.get_usize("queue-cap").map_err(anyhow::Error::msg)?,
+        replicate_rps: if replicate_rps > 0.0 { replicate_rps } else { f64::INFINITY },
+        max_copies: replicas.min(2).max(1),
+        ..Default::default()
+    };
+    let opts = EngineOptions {
+        chunk: a.get_usize("chunk").map_err(anyhow::Error::msg)?,
+        page_size: 64 << 10,
+        ..Default::default()
+    };
+    println!(
+        "fleet: {} replicas x capacity {} | {} adapters | policy {policy} | {} requests",
+        replicas,
+        capacity,
+        n_adapters,
+        trace.len()
+    );
+    let spawn_cfg = cfg.clone();
+    let outcome = server::replay_fleet(
+        coord_cfg,
+        move |i| {
+            let cfg = spawn_cfg.clone();
+            let opts = EngineOptions { seed: i as u64, ..opts.clone() };
+            Box::new(move || {
+                Engine::sim_weave(
+                    &cfg,
+                    SimPerf::default(),
+                    &[],
+                    Variant::Weave,
+                    StoreMode::Virtual,
+                    opts,
+                )
+            })
+        },
+        adapters,
+        &trace,
+    )?;
+    println!("{}", outcome.report.row(&format!("fleet/{policy}")));
+    for (i, r) in outcome.per_replica.iter().enumerate() {
+        println!("{}", r.row(&format!("  replica-{i}")));
+    }
+    println!("  {}", outcome.stats.row());
+    println!(
+        "  goodput: {:.2} completions/s over {:.1}s",
+        outcome.report.goodput(),
+        outcome.report.wall
+    );
     Ok(())
 }
 

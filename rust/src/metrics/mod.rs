@@ -30,9 +30,10 @@ pub struct MetricsCollector {
     pub execute_time: Samples,
     pub batched_tokens: Samples,
     run_wall: Option<Duration>,
+    rejected: usize,
 }
 
-/// Final report of a serving run (one Fig. 5/6 data point).
+/// Final report of a serving run (one Fig. 5/6/10 data point).
 #[derive(Debug, Clone)]
 pub struct Report {
     pub requests: usize,
@@ -45,6 +46,12 @@ pub struct Report {
     pub tpot: Summary,
     pub e2e: Summary,
     pub wall: f64,
+    /// Requests refused at submit time (unknown adapter, over KV
+    /// capacity, ...).
+    pub rejected: usize,
+    /// Requests shed by admission control before reaching an engine
+    /// (bounded per-adapter queues, no replica with capacity).
+    pub shed: usize,
 }
 
 impl MetricsCollector {
@@ -65,6 +72,15 @@ impl MetricsCollector {
 
     pub fn set_wall(&mut self, wall: Duration) {
         self.run_wall = Some(wall);
+    }
+
+    /// Count a request refused at submit time.
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.rejected
     }
 
     pub fn completed(&self) -> usize {
@@ -103,14 +119,24 @@ impl MetricsCollector {
             tpot: tpot.summary(),
             e2e: e2e.summary(),
             wall,
+            rejected: self.rejected,
+            // admission control lives above single engines: the fleet
+            // coordinator fills this on its aggregate report
+            shed: 0,
         }
     }
 }
 
 impl Report {
+    /// Completed requests per second of wall time — the fleet
+    /// experiments' headline number (Fig. 10).
+    pub fn goodput(&self) -> f64 {
+        self.requests as f64 / self.wall.max(1e-9)
+    }
+
     /// One bench-output row (fixed-width, paper-style).
     pub fn row(&self, label: &str) -> String {
-        format!(
+        let mut row = format!(
             "{label:<28} req={:<4} prefill={:>8.1} tok/s decode={:>7.1} tok/s \
              TTFT p50={:>7.1} ms TPOT p50={:>7.1} ms",
             self.requests,
@@ -118,7 +144,14 @@ impl Report {
             self.decode_throughput,
             self.ttft.median * 1e3,
             self.tpot.median * 1e3,
-        )
+        );
+        if self.rejected > 0 || self.shed > 0 {
+            row.push_str(&format!(
+                " rejected={} shed={}",
+                self.rejected, self.shed
+            ));
+        }
+        row
     }
 }
 
@@ -141,13 +174,18 @@ mod tests {
             });
         }
         m.set_wall(Duration::from_secs(2));
-        let r = m.report();
+        m.record_rejected();
+        let mut r = m.report();
         assert_eq!(r.requests, 4);
         assert_eq!(r.prefill_tokens, 400);
         assert!((r.prefill_throughput - 200.0).abs() < 1e-9);
         assert!((r.decode_throughput - 20.0).abs() < 1e-9);
         assert!((r.ttft.median - 0.065).abs() < 1e-9);
-        assert!(!r.row("x").is_empty());
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.shed, 0);
+        assert!((r.goodput() - 2.0).abs() < 1e-9);
+        r.shed = 2; // what a coordinator-filled aggregate carries
+        assert!(r.row("x").contains("rejected=1 shed=2"));
     }
 
     #[test]

@@ -114,6 +114,33 @@ impl ModelConfig {
         })
     }
 
+    /// Small self-contained geometry for the simulated backend
+    /// ([`crate::runtime::sim`]): no artifacts required, cheap host-side
+    /// weight generation, and token buckets sized for serving/fleet
+    /// experiments. Callers tune `max_adapters`/`kv_cap` per scenario.
+    pub fn sim_default() -> Self {
+        ModelConfig {
+            name: "sim".into(),
+            vocab: 512,
+            hidden: 64,
+            layers: 4,
+            q_heads: 4,
+            kv_heads: 2,
+            head_dim: 16,
+            num_experts: 16,
+            top_k: 2,
+            expert_inter: 32,
+            shared_inter: 64,
+            max_adapters: 8,
+            e_max: 4,
+            kv_cap: 4096,
+            max_seqs: 16,
+            buckets: vec![16, 64, 256],
+            rope_theta: 10000.0,
+            rms_eps: 1e-6,
+        }
+    }
+
     /// Paper-scale geometry (16B ESFT-vanilla / DeepSeek-V2-Lite) used by
     /// the Fig. 9 / Table 1 accounting experiments. Mirrors
     /// `configs.PAPER16B`; no artifacts exist for it.

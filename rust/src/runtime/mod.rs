@@ -4,9 +4,14 @@
 //!
 //! This is the only module that touches the `xla` crate. Everything above
 //! it (scheduler, engine, server) sees plain Rust types.
+//!
+//! [`sim`] provides a drop-in simulated backend with the same step
+//! contract for artifact-free environments (serving/fleet experiments).
 
 pub mod artifacts;
 pub mod engine;
+pub mod sim;
 
 pub use artifacts::{ArtifactSet, ExecutableMeta, TensorSpec, Variant};
 pub use engine::{ParamSource, Runtime, StepInputs, StepOutput};
+pub use sim::{SimPerf, SimRuntime};

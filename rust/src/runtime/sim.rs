@@ -1,0 +1,268 @@
+//! Simulated execution backend: the PJRT runtime's step contract without
+//! PJRT.
+//!
+//! [`SimRuntime`] accepts the exact same [`StepInputs`] the scheduler
+//! packs for the compiled executables, burns a calibrated amount of wall
+//! time per step (so real-time trace replay, queueing and
+//! `compute_share` partitioning behave like they do against the real
+//! runtime), and produces deterministic pseudo-logits — a pure function
+//! of the sampled row's `(token, position, AID)` and the engine seed, so
+//! greedy decoding is reproducible across runs and replicas.
+//!
+//! What it is for: serving-layer experiments — the scheduler, engine,
+//! server and the fleet [`crate::coordinator`] — in environments without
+//! AOT artifacts or an `xla_extension` build (CI, the offline testbed).
+//! What it is *not*: a model. Logits carry no semantics beyond
+//! determinism, so accuracy experiments (Table 3) still require the PJRT
+//! backend.
+
+use super::engine::{ParamSource, StepInputs, StepOutput};
+use crate::model::ModelConfig;
+use crate::runtime::Variant;
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// Wall-time cost model of one simulated device.
+///
+/// Step latency is `step_base + per_token * bucket` — bucket-shaped, not
+/// token-shaped, because the compiled executables the simulation stands
+/// in for always execute the full padded bucket.
+#[derive(Debug, Clone, Copy)]
+pub struct SimPerf {
+    /// Fixed per-step overhead (dispatch, sampling, bookkeeping).
+    pub step_base: Duration,
+    /// Compute per bucket token.
+    pub per_token: Duration,
+    /// Weight-upload latency charged when the weights version changes
+    /// after startup (an adapter load/evict re-sync).
+    pub adapter_swap: Duration,
+}
+
+impl Default for SimPerf {
+    fn default() -> Self {
+        SimPerf {
+            step_base: Duration::from_micros(500),
+            per_token: Duration::from_micros(20),
+            adapter_swap: Duration::from_millis(25),
+        }
+    }
+}
+
+impl SimPerf {
+    /// A faster profile for unit tests (keeps replay horizons short).
+    pub fn fast() -> Self {
+        SimPerf {
+            step_base: Duration::from_micros(100),
+            per_token: Duration::from_micros(2),
+            adapter_swap: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Simulated runtime for one engine (device) — see module docs.
+pub struct SimRuntime {
+    cfg: ModelConfig,
+    variant: Variant,
+    perf: SimPerf,
+    seed: u64,
+    weights_version: u64,
+    maps_version: u64,
+    params_uploaded: bool,
+}
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+impl SimRuntime {
+    pub fn new(cfg: &ModelConfig, variant: Variant, perf: SimPerf, seed: u64) -> Result<SimRuntime> {
+        if cfg.buckets.is_empty() {
+            bail!("sim runtime needs token buckets in the config");
+        }
+        if cfg.vocab == 0 || cfg.kv_cap == 0 || cfg.max_seqs == 0 {
+            bail!("sim runtime needs vocab/kv_cap/max_seqs > 0");
+        }
+        Ok(SimRuntime {
+            cfg: cfg.clone(),
+            variant,
+            perf,
+            seed,
+            weights_version: 0,
+            maps_version: 0,
+            params_uploaded: false,
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    pub fn buckets(&self) -> Vec<usize> {
+        self.cfg.buckets.clone()
+    }
+
+    /// Logits rows per bucket; must mirror `SchedConfig::out_rows`.
+    pub fn out_rows(&self, bucket: usize) -> Option<usize> {
+        self.cfg
+            .buckets
+            .contains(&bucket)
+            .then(|| bucket.min(self.cfg.max_seqs))
+    }
+
+    /// Accepts any [`ParamSource`] for signature parity with the PJRT
+    /// runtime; the data is not read. A version bump after the initial
+    /// upload models an adapter load/evict weight re-sync and costs
+    /// [`SimPerf::adapter_swap`] of wall time.
+    pub fn upload_params<S: ParamSource>(&mut self, _source: &mut S, version: u64) -> Result<()> {
+        if version == self.weights_version && self.params_uploaded {
+            return Ok(());
+        }
+        if self.params_uploaded && !self.perf.adapter_swap.is_zero() {
+            std::thread::sleep(self.perf.adapter_swap);
+        }
+        self.weights_version = version;
+        self.params_uploaded = true;
+        Ok(())
+    }
+
+    pub fn upload_expert_maps(&mut self, maps: &[i32], version: u64) -> Result<()> {
+        if !self.variant.is_adapter_aware() {
+            return Ok(());
+        }
+        let want = self.cfg.layers * (self.cfg.max_adapters + 1) * self.cfg.num_experts;
+        if maps.len() != want {
+            bail!("expert maps length {} != {want}", maps.len());
+        }
+        self.maps_version = version;
+        Ok(())
+    }
+
+    pub fn reset_kv(&mut self) {
+        // the simulation keeps no device KV state
+    }
+
+    /// One simulated step: validate the batch like the PJRT runtime,
+    /// sleep the modelled latency, emit deterministic pseudo-logits.
+    pub fn step(&mut self, bucket: usize, inputs: &StepInputs) -> Result<StepOutput> {
+        let Some(out_rows) = self.out_rows(bucket) else {
+            bail!("no executable for bucket {bucket}");
+        };
+        if !self.params_uploaded {
+            bail!("params not uploaded");
+        }
+        for (name, v, want) in [
+            ("token_ids", inputs.token_ids.len(), bucket),
+            ("positions", inputs.positions.len(), bucket),
+            ("seg_ids", inputs.seg_ids.len(), bucket),
+            ("slot_idx", inputs.slot_idx.len(), bucket),
+            ("cache_seg", inputs.cache_seg.len(), self.cfg.kv_cap),
+            ("cache_pos", inputs.cache_pos.len(), self.cfg.kv_cap),
+            ("out_rows", inputs.out_rows.len(), out_rows),
+            ("aid", inputs.aid.len(), bucket),
+        ] {
+            if v != want {
+                bail!("step input {name}: {v} elements, bucket wants {want}");
+            }
+        }
+
+        let latency = self.perf.step_base + self.perf.per_token * bucket as u32;
+        if !latency.is_zero() {
+            std::thread::sleep(latency);
+        }
+
+        let vocab = self.cfg.vocab;
+        let mut logits = vec![0.0f32; out_rows * vocab];
+        for r in 0..out_rows {
+            let t = (inputs.out_rows[r].max(0) as usize).min(bucket - 1);
+            let mut h = splitmix(
+                self.seed
+                    ^ (inputs.token_ids[t] as u64).wrapping_mul(0x9e3779b1)
+                    ^ ((inputs.positions[t] as u64) << 24)
+                    ^ (((inputs.aid[t] as i64) as u64) << 48),
+            );
+            let row = &mut logits[r * vocab..(r + 1) * vocab];
+            for v in row.iter_mut() {
+                h = splitmix(h);
+                // map to [-4, 4): enough spread for distinct greedy argmax
+                *v = ((h >> 11) as f64 / (1u64 << 53) as f64 * 8.0 - 4.0) as f32;
+            }
+        }
+        Ok(StepOutput { logits, out_rows, execute_time: latency })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct NoParams;
+    impl ParamSource for NoParams {
+        fn named(&self, _name: &str) -> Option<&[f32]> {
+            None
+        }
+        fn expert_tensor(&mut self, _l: usize, _p: usize, _len: usize) -> Result<&[f32]> {
+            bail!("sim never reads params")
+        }
+    }
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::sim_default()
+    }
+
+    fn rt(seed: u64) -> SimRuntime {
+        let mut rt =
+            SimRuntime::new(&cfg(), Variant::Weave, SimPerf::fast(), seed).unwrap();
+        rt.upload_params(&mut NoParams, 1).unwrap();
+        rt
+    }
+
+    #[test]
+    fn step_is_deterministic_and_shaped() {
+        let c = cfg();
+        let bucket = c.buckets[0];
+        let out_rows = bucket.min(c.max_seqs);
+        let mut inputs = StepInputs::blank(&c, bucket, out_rows);
+        inputs.token_ids[0] = 7;
+        inputs.seg_ids[0] = 0;
+        inputs.aid[0] = 2;
+        let a = rt(42).step(bucket, &inputs).unwrap();
+        let b = rt(42).step(bucket, &inputs).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.out_rows, out_rows);
+        assert_eq!(a.logits.len(), out_rows * c.vocab);
+        // different adapter -> different greedy token for the same prompt
+        inputs.aid[0] = -1;
+        let base = rt(42).step(bucket, &inputs).unwrap();
+        assert_ne!(&a.logits[..c.vocab], &base.logits[..c.vocab]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_unknown_buckets() {
+        let c = cfg();
+        let bucket = c.buckets[0];
+        let inputs = StepInputs::blank(&c, bucket, bucket.min(c.max_seqs));
+        let mut r = rt(0);
+        assert!(r.step(bucket + 1, &inputs).is_err());
+        let mut short = inputs.clone();
+        short.aid.pop();
+        assert!(r.step(bucket, &short).is_err());
+    }
+
+    #[test]
+    fn params_required_before_step() {
+        let c = cfg();
+        let mut r = SimRuntime::new(&c, Variant::Weave, SimPerf::fast(), 0).unwrap();
+        let bucket = c.buckets[0];
+        let inputs = StepInputs::blank(&c, bucket, bucket.min(c.max_seqs));
+        assert!(r.step(bucket, &inputs).is_err());
+        r.upload_params(&mut NoParams, 1).unwrap();
+        assert!(r.step(bucket, &inputs).is_ok());
+    }
+}

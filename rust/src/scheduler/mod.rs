@@ -22,8 +22,13 @@ use std::time::Instant;
 /// Scheduler limits (derived from the artifact ABI + engine policy).
 #[derive(Debug, Clone)]
 pub struct SchedConfig {
-    /// Max concurrently running sequences (≤ artifact `max_seqs`).
+    /// Max concurrently running sequences (≤ artifact `max_seqs`;
+    /// engine policy may cap it below the ABI).
     pub max_seqs: usize,
+    /// The model's `max_seqs` as compiled into the step executables.
+    /// Determines the `out_rows` tensor length, which must match the
+    /// ABI even when `max_seqs` is policy-capped lower.
+    pub abi_max_seqs: usize,
     /// Max prefill tokens per sequence per step (chunked prefill).
     pub chunk: usize,
     /// Token buckets, ascending (from the artifact set).
@@ -33,9 +38,11 @@ pub struct SchedConfig {
 }
 
 impl SchedConfig {
-    /// Logits rows available for a bucket (must mirror the ABI).
+    /// Logits rows available for a bucket (mirrors the ABI: the
+    /// executables are compiled against the config's `max_seqs`, not
+    /// the engine's possibly-lower admission cap).
     pub fn out_rows(&self, bucket: usize) -> usize {
-        bucket.min(self.max_seqs)
+        bucket.min(self.abi_max_seqs)
     }
 
     pub fn max_bucket(&self) -> usize {
@@ -181,6 +188,16 @@ impl Scheduler {
 
     pub fn running(&self) -> &[SeqState] {
         &self.running
+    }
+
+    /// Queued + running sequences bound to adapter `name` (the engine
+    /// refuses to evict an adapter while this is non-zero).
+    pub fn adapter_work(&self, name: &str) -> usize {
+        self.waiting
+            .iter()
+            .chain(self.running.iter())
+            .filter(|s| s.adapter.as_deref() == Some(name))
+            .count()
     }
 
     /// Upper bound on KV slots a sequence will still consume.
@@ -336,7 +353,7 @@ mod tests {
     use super::*;
 
     fn cfg() -> SchedConfig {
-        SchedConfig { max_seqs: 4, chunk: 8, buckets: vec![4, 16], kv_cap: 64 }
+        SchedConfig { max_seqs: 4, abi_max_seqs: 4, chunk: 8, buckets: vec![4, 16], kv_cap: 64 }
     }
 
     fn seq(id: u64, prompt_len: usize, max_new: usize) -> SeqState {
@@ -413,7 +430,7 @@ mod tests {
 
         // KV-constrained admission: capacity 64, each seq reserves 6
         let (mut s, mut kv, mut meta) = (
-            Scheduler::new(SchedConfig { max_seqs: 64, ..cfg() }),
+            Scheduler::new(SchedConfig { max_seqs: 64, abi_max_seqs: 64, ..cfg() }),
             KvCache::new(16),
             SlotMeta::new(16),
         );
@@ -450,10 +467,37 @@ mod tests {
     }
 
     #[test]
+    fn adapter_work_counts_waiting_and_running() {
+        let (mut s, mut kv, mut meta) = setup();
+        let mut with = |id: u64, name: &str| {
+            s.submit(SeqState::new(
+                id,
+                0,
+                Some(name.to_string()),
+                vec![1, 2, 3],
+                2,
+                Sampling::Greedy,
+            ));
+        };
+        with(1, "math");
+        with(2, "law");
+        with(3, "math");
+        assert_eq!(s.adapter_work("math"), 2);
+        assert_eq!(s.adapter_work("law"), 1);
+        assert_eq!(s.adapter_work("none"), 0);
+        // admission moves them to running; counts must not change
+        let _ = s.build_batch(&mut kv, &mut meta).unwrap();
+        assert_eq!(s.adapter_work("math"), 2);
+        assert_eq!(s.adapter_work("law"), 1);
+    }
+
+    #[test]
     fn property_token_budget_and_row_capacity_hold() {
         crate::util::prop::check(707, 30, |rng| {
+            let max_seqs = 1 + rng.below(6) as usize;
             let cfg = SchedConfig {
-                max_seqs: 1 + rng.below(6) as usize,
+                max_seqs,
+                abi_max_seqs: max_seqs,
                 chunk: 1 + rng.below(12) as usize,
                 buckets: vec![4, 16, 64],
                 kv_cap: 256,

@@ -94,6 +94,39 @@ impl Trace {
             e.at *= factor;
         }
     }
+
+    /// Clamp prompts/outputs to a model's bucket + KV budget (every
+    /// replayer needs this before driving a small-geometry config).
+    pub fn clip(&mut self, max_prompt: usize, max_new: usize) {
+        for e in &mut self.events {
+            e.prompt.truncate(max_prompt.max(1));
+            e.max_new_tokens = e.max_new_tokens.clamp(1, max_new.max(1));
+        }
+    }
+
+    /// Split into per-adapter traces (insertion order = first arrival),
+    /// the input of a merged per-adapter deployment. Base-model events
+    /// (`adapter == None`) are dropped — a merged instance cannot serve
+    /// them.
+    pub fn split_by_adapter(&self) -> Vec<(String, Trace)> {
+        let mut order: Vec<String> = Vec::new();
+        let mut by: std::collections::HashMap<String, Vec<TraceEvent>> =
+            std::collections::HashMap::new();
+        for e in &self.events {
+            let Some(name) = &e.adapter else { continue };
+            if !by.contains_key(name) {
+                order.push(name.clone());
+            }
+            by.entry(name.clone()).or_default().push(e.clone());
+        }
+        order
+            .into_iter()
+            .map(|name| {
+                let events = by.remove(&name).unwrap_or_default();
+                (name, Trace { events, spec_lambda: self.spec_lambda })
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -134,6 +167,27 @@ mod tests {
         let top = counts.get("a0").copied().unwrap_or(0);
         let total: usize = counts.values().sum();
         assert!(top as f64 / total as f64 > 0.5, "top share {top}/{total}");
+    }
+
+    #[test]
+    fn clip_and_split_by_adapter() {
+        let mut t = Trace::generate(&spec(3, 5.0, 0.5));
+        t.clip(4, 2);
+        assert!(t.events.iter().all(|e| e.prompt.len() <= 4));
+        assert!(t.events.iter().all(|e| (1..=2).contains(&e.max_new_tokens)));
+
+        let n = t.len();
+        let parts = t.split_by_adapter();
+        assert_eq!(parts.len(), 3);
+        let total: usize = parts.iter().map(|(_, p)| p.len()).sum();
+        assert_eq!(total, n);
+        for (name, part) in &parts {
+            assert!(part
+                .events
+                .iter()
+                .all(|e| e.adapter.as_deref() == Some(name.as_str())));
+            assert!(part.events.windows(2).all(|w| w[0].at <= w[1].at));
+        }
     }
 
     #[test]

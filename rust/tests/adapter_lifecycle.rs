@@ -1,0 +1,139 @@
+//! Adapter lifecycle under capacity pressure, end to end through the
+//! engine (sim backend — no artifacts): registry + weight store
+//! round-trips, LRU ordering, double-load rejection, and the
+//! evict-while-running safety net.
+
+use expertweave::adapters::format::Adapter;
+use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
+use expertweave::engine::{Engine, EngineOptions, RequestSpec};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{SimPerf, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::weights::StoreMode;
+
+fn cfg() -> ModelConfig {
+    let mut c = ModelConfig::sim_default();
+    c.max_adapters = 2; // tight capacity: pressure by construction
+    c
+}
+
+fn adapter(cfg: &ModelConfig, name: &str, seed: u64) -> Adapter {
+    let mut p = paper_adapter_profiles()[0].clone();
+    p.max_experts = cfg.e_max;
+    p.avg_experts = cfg.e_max as f64;
+    let mut ad =
+        synth_adapter(&p, cfg.layers, cfg.num_experts, cfg.hidden, cfg.expert_inter, seed);
+    ad.name = name.to_string();
+    ad
+}
+
+fn engine(cfg: &ModelConfig, adapters: &[Adapter]) -> Engine {
+    Engine::sim_weave(
+        cfg,
+        SimPerf::fast(),
+        adapters,
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions { page_size: 64 << 10, chunk: 32, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn req(adapter: &str, n: usize) -> RequestSpec {
+    RequestSpec {
+        adapter: Some(adapter.to_string()),
+        prompt: vec![1, 2, 3, 4],
+        max_new_tokens: n,
+        sampling: Sampling::Greedy,
+    }
+}
+
+#[test]
+fn load_evict_round_trip_under_capacity_pressure() {
+    let c = cfg();
+    let (a, b, x) = (adapter(&c, "a", 1), adapter(&c, "b", 2), adapter(&c, "x", 3));
+    let mut e = engine(&c, &[a.clone(), b.clone()]);
+    assert_eq!(e.adapter_slots_total(), 2);
+    assert!(e.has_adapter("a") && e.has_adapter("b"));
+
+    // full: a third load must fail until something is evicted
+    assert!(e.load_adapter(&x).is_err());
+    assert_eq!(e.resident_adapters().len(), 2);
+
+    // double-load of a resident adapter is rejected
+    assert!(e.load_adapter(&a).is_err());
+
+    // evict + reload round-trip frees and reuses the slot
+    e.evict_adapter("a").unwrap();
+    assert!(!e.has_adapter("a"));
+    e.load_adapter(&x).unwrap();
+    assert!(e.has_adapter("x"));
+    // serving through the reloaded slot works
+    e.submit(req("x", 2)).unwrap();
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].output.len(), 2);
+}
+
+#[test]
+fn policy_capped_max_seqs_matches_step_abi() {
+    // regression: the out_rows tensor length is part of the step ABI
+    // (config max_seqs), independent of a lower engine admission cap
+    let c = cfg();
+    let a = adapter(&c, "a", 1);
+    let mut e = Engine::sim_weave(
+        &c,
+        SimPerf::fast(),
+        &[a],
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions { page_size: 64 << 10, max_seqs: 2, ..Default::default() },
+    )
+    .unwrap();
+    for _ in 0..4 {
+        e.submit(req("a", 2)).unwrap();
+    }
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 4);
+}
+
+#[test]
+fn lru_order_follows_request_traffic() {
+    let c = cfg();
+    let (a, b) = (adapter(&c, "a", 1), adapter(&c, "b", 2));
+    let mut e = engine(&c, &[a, b]);
+    // traffic touches "a" most recently -> "b" is the LRU victim
+    e.submit(req("b", 1)).unwrap();
+    e.submit(req("a", 1)).unwrap();
+    e.run_to_completion().unwrap();
+    assert_eq!(e.lru_adapter().as_deref(), Some("b"));
+    // new traffic to "b" flips the order
+    e.submit(req("b", 1)).unwrap();
+    e.run_to_completion().unwrap();
+    assert_eq!(e.lru_adapter().as_deref(), Some("a"));
+}
+
+#[test]
+fn evict_while_running_is_rejected() {
+    let c = cfg();
+    let (a, b) = (adapter(&c, "a", 1), adapter(&c, "b", 2));
+    let mut e = engine(&c, &[a, b]);
+    e.submit(req("a", 4)).unwrap();
+
+    // queued (not yet stepped): eviction must already be refused
+    let err = e.evict_adapter("a").unwrap_err();
+    assert!(format!("{err:#}").contains("in flight"), "{err:#}");
+
+    // mid-decode: still refused
+    e.step().unwrap();
+    assert!(e.evict_adapter("a").is_err());
+    // the idle adapter can go at any time
+    e.evict_adapter("b").unwrap();
+
+    // after draining, the eviction goes through
+    e.run_to_completion().unwrap();
+    e.evict_adapter("a").unwrap();
+    assert!(e.resident_adapters().is_empty());
+    // and requests for it are rejected at submit
+    assert!(e.submit(req("a", 1)).is_err());
+}

@@ -1,0 +1,244 @@
+//! Fleet coordinator end to end over the sim backend: routing,
+//! load-on-miss lifecycle, admission control and accounting invariants.
+
+use expertweave::adapters::format::Adapter;
+use expertweave::adapters::generator::synth_fleet_adapters;
+use expertweave::coordinator::{Coordinator, CoordinatorConfig, RoutingPolicy};
+use expertweave::engine::{Engine, EngineOptions};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{SimPerf, Variant};
+use expertweave::weights::StoreMode;
+use expertweave::workload::trace::{Trace, TraceEvent, TraceSpec};
+
+fn cfg(capacity: usize) -> ModelConfig {
+    let mut c = ModelConfig::sim_default();
+    c.max_adapters = capacity;
+    c
+}
+
+fn adapters(c: &ModelConfig, n: usize) -> Vec<Adapter> {
+    synth_fleet_adapters(c, n, 42)
+}
+
+fn launch(c: &ModelConfig, coord_cfg: CoordinatorConfig, ads: Vec<Adapter>) -> Coordinator {
+    let c = c.clone();
+    Coordinator::launch(
+        coord_cfg,
+        move |i| {
+            let cfg = c.clone();
+            Box::new(move || {
+                Engine::sim_weave(
+                    &cfg,
+                    SimPerf::fast(),
+                    &[],
+                    Variant::Weave,
+                    StoreMode::Virtual,
+                    EngineOptions { page_size: 64 << 10, chunk: 32, seed: i as u64, ..Default::default() },
+                )
+            })
+        },
+        ads,
+    )
+    .unwrap()
+}
+
+/// Hand-built trace: `burst` simultaneous arrivals for `name` at t=0
+/// (arrivals outpace any possible completion, deterministically).
+fn burst_trace(name: &str, domain: &str, burst: usize, vocab: usize) -> Trace {
+    let events = (0..burst)
+        .map(|_| TraceEvent {
+            at: 0.0,
+            adapter: Some(name.to_string()),
+            domain: domain.to_string(),
+            prompt: (1..=16).map(|t| t % vocab as i32).collect(),
+            max_new_tokens: 8,
+        })
+        .collect();
+    Trace { events, spec_lambda: 0.0 }
+}
+
+#[test]
+fn fleet_serves_skewed_trace_with_full_accounting() {
+    let c = cfg(2);
+    let ads = adapters(&c, 4);
+    let coord = launch(
+        &c,
+        CoordinatorConfig {
+            replicas: 2,
+            policy: RoutingPolicy::AdapterAffinity,
+            adapter_capacity: 2,
+            queue_cap: 0, // unbounded: everything must complete
+            replicate_rps: f64::INFINITY,
+            rate_halflife: 1.0,
+            max_copies: 2,
+        },
+        ads.clone(),
+    );
+    let mut trace = Trace::generate(&TraceSpec {
+        adapters: ads.iter().map(|a| (a.name.clone(), a.domain.clone())).collect(),
+        lambda: 30.0,
+        alpha: 0.4,
+        horizon: 1.0,
+        vocab: c.vocab,
+        seed: 3,
+    });
+    trace.clip(24, 4);
+    let n = trace.len();
+    assert!(n > 5, "trace too short: {n}");
+
+    let outcome = coord.replay(&trace).unwrap();
+    // conservation: every arrival is completed, shed, or rejected
+    assert_eq!(
+        outcome.completions.len() + outcome.stats.shed_total() + outcome.stats.submit_rejected,
+        n
+    );
+    // 4 adapters over 2x2 slots: everything placeable, nothing shed
+    assert_eq!(outcome.stats.shed_total(), 0);
+    assert_eq!(outcome.stats.submit_rejected, 0);
+    assert_eq!(outcome.completions.len(), n);
+    assert_eq!(outcome.report.requests, n);
+    assert_eq!(outcome.per_replica.len(), 2);
+    let per_replica_sum: usize = outcome.per_replica.iter().map(|r| r.requests).sum();
+    assert_eq!(per_replica_sum, n);
+    // affinity on a fully-placed fleet: hits dominate
+    assert!(outcome.stats.affinity_hits > 0);
+    assert!(outcome.stats.hit_rate() > 0.8, "hit rate {}", outcome.stats.hit_rate());
+    // initial placement loaded each adapter exactly once
+    assert_eq!(outcome.stats.loads, 4);
+    assert!(outcome.report.goodput() > 0.0);
+}
+
+#[test]
+fn bounded_queues_shed_and_unknown_adapters_are_refused() {
+    let c = cfg(2);
+    let ads = adapters(&c, 2);
+    let coord = launch(
+        &c,
+        CoordinatorConfig {
+            replicas: 2,
+            policy: RoutingPolicy::AdapterAffinity,
+            adapter_capacity: 2,
+            queue_cap: 2, // tiny budget against a burst
+            replicate_rps: f64::INFINITY,
+            rate_halflife: 1.0,
+            max_copies: 2,
+        },
+        ads.clone(),
+    );
+    let mut trace = burst_trace(&ads[0].name, &ads[0].domain, 12, c.vocab);
+    // one request for an adapter nobody hosts
+    trace.events.push(TraceEvent {
+        at: 0.02,
+        adapter: Some("ghost".into()),
+        domain: "math".into(),
+        prompt: vec![1, 2, 3],
+        max_new_tokens: 2,
+    });
+    let n = trace.len();
+    let outcome = coord.replay(&trace).unwrap();
+    assert_eq!(
+        outcome.completions.len() + outcome.stats.shed_total() + outcome.stats.submit_rejected,
+        n
+    );
+    assert!(
+        outcome.stats.shed_queue_full > 0,
+        "burst of 12 against queue_cap=2 must shed: {:?}",
+        outcome.stats
+    );
+    assert!(outcome.stats.shed_no_capacity >= 1, "ghost adapter must be shed");
+    assert_eq!(outcome.report.shed, outcome.stats.shed_total());
+}
+
+#[test]
+fn hot_adapter_gets_replicated() {
+    let c = cfg(2);
+    let ads = adapters(&c, 2);
+    let coord = launch(
+        &c,
+        CoordinatorConfig {
+            replicas: 2,
+            policy: RoutingPolicy::AdapterAffinity,
+            adapter_capacity: 2, // one free slot per replica after placement
+            queue_cap: 0,
+            replicate_rps: 2.0, // trip the threshold quickly
+            rate_halflife: 0.5,
+            max_copies: 2,
+        },
+        ads.clone(),
+    );
+    // a burst of 20 simultaneous arrivals on one adapter: the rate
+    // estimate crosses the threshold on the second arrival, and the
+    // remaining requests spread across both copies (least-inflight)
+    let events = (0..20)
+        .map(|_| TraceEvent {
+            at: 0.0,
+            adapter: Some(ads[0].name.clone()),
+            domain: ads[0].domain.clone(),
+            prompt: vec![1, 2, 3, 4],
+            max_new_tokens: 4,
+        })
+        .collect();
+    let trace = Trace { events, spec_lambda: 20.0 };
+    let outcome = coord.replay(&trace).unwrap();
+    assert!(
+        outcome.stats.replications >= 1,
+        "20 req/s vs threshold 2 req/s must replicate: {:?}",
+        outcome.stats
+    );
+    assert_eq!(outcome.completions.len(), 20);
+    // both replicas ended up serving it
+    let served: usize = outcome
+        .per_replica
+        .iter()
+        .filter(|r| r.requests > 0)
+        .count();
+    assert_eq!(served, 2, "replication must spread the hot adapter");
+}
+
+#[test]
+fn round_robin_thrashes_where_affinity_holds() {
+    // 4 adapters, 2 replicas with capacity 2: affinity can keep its
+    // initial placement perfect; round-robin must load-on-miss.
+    let c = cfg(2);
+    let ads = adapters(&c, 4);
+    let trace = {
+        let mut t = Trace::generate(&TraceSpec {
+            adapters: ads.iter().map(|a| (a.name.clone(), a.domain.clone())).collect(),
+            lambda: 25.0,
+            alpha: 1.0, // uniform: every adapter active
+            horizon: 1.0,
+            vocab: c.vocab,
+            seed: 11,
+        });
+        t.clip(16, 3);
+        t
+    };
+    let run = |policy: RoutingPolicy| {
+        let coord = launch(
+            &c,
+            CoordinatorConfig {
+                replicas: 2,
+                policy,
+                adapter_capacity: 2,
+                queue_cap: 0,
+                replicate_rps: f64::INFINITY,
+                rate_halflife: 1.0,
+                max_copies: 2,
+            },
+            ads.clone(),
+        );
+        coord.replay(&trace).unwrap()
+    };
+    let affinity = run(RoutingPolicy::AdapterAffinity);
+    let rr = run(RoutingPolicy::RoundRobin);
+    // affinity never needs a load beyond initial placement here
+    assert_eq!(affinity.stats.loads, 4, "{:?}", affinity.stats);
+    assert_eq!(affinity.stats.evictions, 0);
+    assert!(
+        rr.stats.loads > affinity.stats.loads,
+        "rr loads {} vs affinity {}",
+        rr.stats.loads,
+        affinity.stats.loads
+    );
+    assert!(rr.stats.evictions > 0, "{:?}", rr.stats);
+}

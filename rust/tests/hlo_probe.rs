@@ -1,12 +1,23 @@
 // De-risk probe: can xla_extension 0.5.1 parse jax-0.8-generated HLO text
 // containing while loops, scatter, pallas-interpret output and
 // input_output_alias? Run: cargo test --test hlo_probe -- --ignored
+// Skips itself when the probe artifact or a real PJRT build is absent
+// (the vendored `xla` stub cannot compile HLO).
 #[test]
 #[ignore]
 fn parse_and_run_probe4() {
+    if !std::path::Path::new("/tmp/probe4.hlo.txt").exists() {
+        eprintln!("SKIP: /tmp/probe4.hlo.txt missing (python AOT probe not run)");
+        return;
+    }
     let client = xla::PjRtClient::cpu().unwrap();
     let proto = xla::HloModuleProto::from_text_file("/tmp/probe4.hlo.txt").unwrap();
     let comp = xla::XlaComputation::from_proto(&proto);
-    let _exe = client.compile(&comp).unwrap();
-    println!("probe4 compiled OK");
+    match client.compile(&comp) {
+        Ok(_) => println!("probe4 compiled OK"),
+        // the vendored stub cannot compile anything: skip. A real
+        // xla_extension failing to parse/compile is the probe's finding.
+        Err(e) if e.to_string().contains("xla stub") => eprintln!("SKIP: {e}"),
+        Err(e) => panic!("probe4 failed to compile: {e}"),
+    }
 }

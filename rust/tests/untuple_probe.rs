@@ -1,10 +1,27 @@
-// check whether execute outputs are untupled by PJRT
+// De-risk probe: check whether execute outputs are untupled by PJRT.
+// Requires a real xla_extension build plus /tmp/probe4.hlo.txt (emitted
+// by the python AOT pipeline); skips itself everywhere else — the
+// vendored `xla` stub cannot execute, and CI has no probe artifact.
 #[test]
 fn untuple_check() {
+    if !std::path::Path::new("/tmp/probe4.hlo.txt").exists() {
+        eprintln!("SKIP: /tmp/probe4.hlo.txt missing (python AOT probe not run)");
+        return;
+    }
     let client = xla::PjRtClient::cpu().unwrap();
     let proto = xla::HloModuleProto::from_text_file("/tmp/probe4.hlo.txt").unwrap();
     let comp = xla::XlaComputation::from_proto(&proto);
-    let exe = client.compile(&comp).unwrap();
+    let exe = match client.compile(&comp) {
+        Ok(exe) => exe,
+        // only the vendored stub's canned error is a skip; a compile
+        // failure from a real xla_extension is exactly the regression
+        // this probe exists to catch
+        Err(e) if e.to_string().contains("xla stub") => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+        Err(e) => panic!("PJRT compile failed: {e}"),
+    };
     // build literals per probe4 signature: kv[32,8]f32, xs[16,16]f32, ws[12,16,8]f32,
     // offs[13]i32, ids[8,2]i32, aid[8]i32, emap[3,6]i32
     let kv = xla::Literal::vec1(&vec![0f32; 32*8]).reshape(&[32,8]).unwrap();

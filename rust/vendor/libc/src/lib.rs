@@ -1,0 +1,57 @@
+//! Vendored minimal subset of the `libc` crate (Linux).
+//!
+//! The offline build has no crates.io access; the vmm layer only needs
+//! the mmap/memfd surface below, so that is all this shim declares.
+//! Values are the Linux generic ones (identical on x86_64 and aarch64
+//! for every constant here).
+
+#![allow(non_camel_case_types)]
+
+pub type c_char = std::ffi::c_char;
+pub type c_void = std::ffi::c_void;
+pub type c_int = i32;
+pub type c_uint = u32;
+pub type c_long = i64;
+pub type size_t = usize;
+pub type off_t = i64;
+
+pub const PROT_NONE: c_int = 0;
+pub const PROT_READ: c_int = 1;
+pub const PROT_WRITE: c_int = 2;
+
+pub const MAP_SHARED: c_int = 0x0001;
+pub const MAP_PRIVATE: c_int = 0x0002;
+pub const MAP_FIXED: c_int = 0x0010;
+pub const MAP_ANONYMOUS: c_int = 0x0020;
+pub const MAP_NORESERVE: c_int = 0x4000;
+
+pub const MAP_FAILED: *mut c_void = !0 as *mut c_void;
+
+pub const MFD_CLOEXEC: c_uint = 0x0001;
+
+pub const _SC_PAGESIZE: c_int = 30;
+
+extern "C" {
+    pub fn mmap(
+        addr: *mut c_void,
+        len: size_t,
+        prot: c_int,
+        flags: c_int,
+        fd: c_int,
+        offset: off_t,
+    ) -> *mut c_void;
+    pub fn munmap(addr: *mut c_void, len: size_t) -> c_int;
+    pub fn memfd_create(name: *const c_char, flags: c_uint) -> c_int;
+    pub fn ftruncate(fd: c_int, length: off_t) -> c_int;
+    pub fn sysconf(name: c_int) -> c_long;
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn sysconf_pagesize_is_sane() {
+        let ps = unsafe { super::sysconf(super::_SC_PAGESIZE) };
+        assert!(ps >= 4096, "page size {ps}");
+        assert_eq!(ps & (ps - 1), 0, "page size must be a power of two");
+    }
+}

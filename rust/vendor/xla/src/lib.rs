@@ -1,0 +1,269 @@
+//! Stub of the `xla` (xla_extension) PJRT bindings.
+//!
+//! The offline build environment has no `xla_extension` shared library,
+//! so this crate provides the exact API surface `expertweave::runtime`
+//! consumes, compiled everywhere. Host-side pieces (literals, buffers)
+//! are functional; anything that would need a real XLA compiler or PJRT
+//! device — [`PjRtClient::compile`], executable execution — returns a
+//! descriptive error. Callers are expected to skip PJRT paths when the
+//! AOT artifacts are absent (which is always true when this stub is in
+//! use); the in-repo simulation backend (`expertweave::runtime::sim`)
+//! covers serving experiments instead.
+
+use std::fmt;
+
+const STUB_MSG: &str =
+    "xla stub: PJRT runtime unavailable in this build (no xla_extension); \
+     use the sim backend or link the real xla crate";
+
+/// Error type mirroring `xla::Error` closely enough for `?` + context.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>() -> Result<T> {
+    Err(Error(STUB_MSG.to_string()))
+}
+
+/// Element types a [`Literal`] / device buffer can hold.
+#[derive(Debug, Clone)]
+enum Elements {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    U32(Vec<u32>),
+}
+
+impl Elements {
+    fn len(&self) -> usize {
+        match self {
+            Elements::F32(v) => v.len(),
+            Elements::F64(v) => v.len(),
+            Elements::I32(v) => v.len(),
+            Elements::I64(v) => v.len(),
+            Elements::U32(v) => v.len(),
+        }
+    }
+}
+
+/// Sealed-by-convention marker for supported element types.
+pub trait ArrayElement: Sized {
+    fn wrap(data: Vec<Self>) -> Elements2;
+    fn unwrap(e: &Elements2) -> Option<Vec<Self>>;
+}
+
+/// Public alias so `ArrayElement` signatures don't leak the private enum.
+pub struct Elements2(Elements);
+
+macro_rules! impl_element {
+    ($t:ty, $variant:ident) => {
+        impl ArrayElement for $t {
+            fn wrap(data: Vec<Self>) -> Elements2 {
+                Elements2(Elements::$variant(data))
+            }
+            fn unwrap(e: &Elements2) -> Option<Vec<Self>> {
+                match &e.0 {
+                    Elements::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+impl_element!(f32, F32);
+impl_element!(f64, F64);
+impl_element!(i32, I32);
+impl_element!(i64, I64);
+impl_element!(u32, U32);
+
+/// Array shape (dims only; the stub tracks no layouts).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shape {
+    pub dims: Vec<i64>,
+}
+
+/// Host literal: typed elements + shape. Fully functional in the stub.
+pub struct Literal {
+    data: Elements2,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: ArrayElement + Clone>(data: &[T]) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal { data: T::wrap(data.to_vec()), dims }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count != self.data.0.len() as i64 {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.0.len()
+            )));
+        }
+        Ok(Literal { data: Elements2(self.data.0.clone()), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+
+    /// Destructure a 2-tuple literal. The stub never produces tuples
+    /// (execution is unavailable), so this always errors.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        stub_err()
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape { dims: self.dims.clone() })
+    }
+}
+
+/// Parsed HLO module text. The stub only records the source path.
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    /// Reads the file (so missing-artifact errors surface naturally) but
+    /// performs no parsing.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read(path).map_err(|e| Error(format!("read {path}: {e}")))?;
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _path: proto.path.clone() }
+    }
+}
+
+/// Device buffer. In the stub it is a host literal in disguise.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(Literal {
+            data: Elements2(self.lit.data.0.clone()),
+            dims: self.lit.dims.clone(),
+        })
+    }
+
+    pub fn on_device_shape(&self) -> Result<Shape> {
+        self.lit.shape()
+    }
+}
+
+/// Compiled executable handle. Unobtainable from the stub client
+/// (compilation errors out), so execution methods are unreachable; they
+/// still exist so dependent code type-checks.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+}
+
+/// PJRT client. Construction succeeds (cheap); compilation reports the
+/// stub condition.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err()
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement + Clone>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let count: usize = dims.iter().product();
+        if count != data.len() {
+            return Err(Error(format!(
+                "buffer_from_host_buffer: {} elements into dims {dims:?}",
+                data.len()
+            )));
+        }
+        Ok(PjRtBuffer {
+            lit: Literal {
+                data: T::wrap(data.to_vec()),
+                dims: dims.iter().map(|&d| d as i64).collect(),
+            },
+        })
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer {
+            lit: Literal {
+                data: Elements2(lit.data.0.clone()),
+                dims: lit.dims.clone(),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape().unwrap().dims, vec![2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn compile_reports_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { path: "unused".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
