@@ -65,6 +65,18 @@
 //! whose adapter no replica can host are shed likewise. Shed and
 //! rejected counts surface in [`Report::shed`] / [`Report::rejected`]
 //! and in [`FleetStats`].
+//!
+//! # Serving API
+//!
+//! The coordinator implements [`ServingBackend`] — the same typed
+//! boundary as a single [`Engine`]: `submit` admits/routes and returns
+//! a [`RequestHandle`] whose [`TokenEvent`] stream is fed by the routed
+//! replica (tokens incrementally, then `Done`/`Aborted`); `cancel`
+//! relays to the owning replica; `drain` completes in-flight work and
+//! then refuses submits with [`SubmitError::ShuttingDown`]. Admission
+//! failures are typed: `UnknownAdapter` (nobody host-caches it),
+//! `QueueFull` (per-adapter budget), `Shed` (no replica with capacity).
+//! [`Coordinator::replay`] is a thin client of this API.
 
 mod lifecycle;
 mod replica;
@@ -75,19 +87,20 @@ pub use replica::{ReplicaGauges, ReplicaHandle};
 pub use router::{choose, ReplicaView, RouteDecision, RoutingPolicy};
 
 use crate::adapters::format::Adapter;
-use crate::engine::{Completion, Engine, RequestSpec};
+use crate::engine::{Completion, Engine};
 use crate::metrics::Report;
-use crate::sampler::Sampling;
 use crate::server::Pacer;
-use crate::util::stats::Samples;
+use crate::serving::{
+    AbortReason, RequestHandle, RequestId, ServeRequest, ServingBackend, SubmitError, TokenEvent,
+};
 use crate::workload::trace::Trace;
 use anyhow::{bail, Result};
 use replica::{spawn_replica, ReplicaCmd, ReplicaEvent};
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Fleet-level tuning knobs.
 #[derive(Debug, Clone)]
@@ -152,7 +165,9 @@ pub struct FleetStats {
     pub shed_queue_full: usize,
     /// Shed: no replica could host the adapter.
     pub shed_no_capacity: usize,
-    /// Engine-level submit rejections after routing.
+    /// Typed rejections: unknown adapters refused at the door
+    /// ([`SubmitError::UnknownAdapter`]) plus engine-level submit
+    /// rejections after routing (residency races).
     pub submit_rejected: usize,
 }
 
@@ -224,6 +239,20 @@ pub struct Coordinator {
     inflight_ra: Vec<HashMap<String, usize>>,
     rr_next: usize,
     stats: FleetStats,
+    /// Fleet request-id allocator (ids are fleet-scoped, not per-replica).
+    next_rid: RequestId,
+    /// rid → client token-stream sender (the fleet half of each
+    /// [`RequestHandle`]).
+    clients: HashMap<RequestId, Sender<TokenEvent>>,
+    /// rid → (replica it was routed to, adapter name) for cancel routing
+    /// and terminal-event accounting.
+    routes: HashMap<RequestId, (usize, Option<String>)>,
+    /// Serving-time origin for the arrival-rate EWMA.
+    clock: Instant,
+    /// Draining: every new submit fails with `ShuttingDown`.
+    shutting_down: bool,
+    /// A replica died; surfaced as an error on the next pump.
+    fatal: Option<String>,
 }
 
 impl Coordinator {
@@ -282,6 +311,12 @@ impl Coordinator {
             inflight_ra: (0..n).map(|_| HashMap::new()).collect(),
             rr_next: 0,
             stats: FleetStats::default(),
+            next_rid: 1,
+            clients: HashMap::new(),
+            routes: HashMap::new(),
+            clock: Instant::now(),
+            shutting_down: false,
+            fatal: None,
             events: ev_rx,
             replicas,
             cfg,
@@ -411,45 +446,6 @@ impl Coordinator {
         self.inflight_adapter.get(name).copied().unwrap_or(0)
     }
 
-    /// Admit, place and submit one request (trace time `at`).
-    fn dispatch(&mut self, spec: RequestSpec, at: f64) -> Result<()> {
-        let adapter = spec.adapter.clone();
-        let name = adapter.as_deref();
-        if let Some(n) = name {
-            if self.cfg.queue_cap > 0 && self.inflight_for(n) >= self.cfg.queue_cap {
-                self.stats.shed_queue_full += 1;
-                return Ok(());
-            }
-        }
-        let views = self.views(name);
-        let Some(decision) = choose(self.cfg.policy, &views, &mut self.rr_next) else {
-            self.stats.shed_no_capacity += 1;
-            return Ok(());
-        };
-        let r = decision.replica;
-        if let Some(n) = name {
-            if decision.resident {
-                self.stats.affinity_hits += 1;
-                self.directory.touch(r, n);
-            } else {
-                self.stats.affinity_misses += 1;
-                self.ensure_resident(r, n)?;
-            }
-            *self.inflight_adapter.entry(n.to_string()).or_insert(0) += 1;
-            *self.inflight_ra[r].entry(n.to_string()).or_insert(0) += 1;
-            let rate = self.rates.observe(n, at);
-            if self.cfg.replicate_rps.is_finite()
-                && rate > self.cfg.replicate_rps
-                && self.directory.copies(n) < self.cfg.max_copies
-            {
-                self.try_replicate(n)?;
-            }
-        }
-        self.inflight[r] += 1;
-        self.stats.routed += 1;
-        self.replicas[r].send(ReplicaCmd::Submit(spec))
-    }
-
     fn note_done(&mut self, replica: usize, adapter: Option<&str>) {
         self.inflight[replica] = self.inflight[replica].saturating_sub(1);
         if let Some(n) = adapter {
@@ -462,15 +458,41 @@ impl Coordinator {
         }
     }
 
-    fn apply(&mut self, ev: ReplicaEvent, completions: &mut Vec<Completion>) -> Result<()> {
+    /// Total requests routed and not yet terminal.
+    fn inflight_total(&self) -> usize {
+        self.inflight.iter().sum()
+    }
+
+    /// Fold one replica event into coordinator state, forwarding stream
+    /// events to the owning client handle. Replica failure is stashed in
+    /// `self.fatal` (surfaced by the next `pump`), not thrown, so the
+    /// typed submit path never has to smuggle an internal error.
+    fn apply(&mut self, ev: ReplicaEvent) {
         match ev {
-            ReplicaEvent::Completed { replica, completion } => {
-                self.note_done(replica, completion.adapter.as_deref());
-                completions.push(completion);
+            ReplicaEvent::Stream { replica, event } => {
+                let rid = event.id();
+                let terminal = event.is_terminal();
+                if terminal {
+                    let adapter = self.routes.remove(&rid).and_then(|(_, a)| a);
+                    self.note_done(replica, adapter.as_deref());
+                }
+                if let Some(tx) = self.clients.get(&rid) {
+                    let _ = tx.send(event);
+                }
+                if terminal {
+                    self.clients.remove(&rid);
+                }
             }
-            ReplicaEvent::SubmitRejected { replica, adapter } => {
+            ReplicaEvent::SubmitRejected { replica, rid, adapter, err } => {
                 self.note_done(replica, adapter.as_deref());
                 self.stats.submit_rejected += 1;
+                self.routes.remove(&rid);
+                if let Some(tx) = self.clients.remove(&rid) {
+                    let _ = tx.send(TokenEvent::Aborted {
+                        id: rid,
+                        reason: AbortReason::Rejected(err),
+                    });
+                }
             }
             ReplicaEvent::LoadDone { replica, adapter, err } => {
                 if err.is_some() {
@@ -486,45 +508,111 @@ impl Coordinator {
                 }
             }
             ReplicaEvent::Fatal { replica, err } => {
-                bail!("replica {replica} failed: {err}");
+                self.fatal = Some(format!("replica {replica} failed: {err}"));
             }
             ReplicaEvent::Ready { .. } | ReplicaEvent::Finished { .. } => {}
         }
-        Ok(())
     }
 
-    fn drain_events(&mut self, completions: &mut Vec<Completion>) -> Result<()> {
-        loop {
-            match self.events.try_recv() {
-                Ok(ev) => self.apply(ev, completions)?,
-                Err(_) => return Ok(()),
+    /// Non-blocking: fold every already-delivered replica event.
+    fn absorb_events(&mut self) {
+        while let Ok(ev) = self.events.try_recv() {
+            self.apply(ev);
+        }
+    }
+
+    /// Admit, place and submit one request through the typed serving
+    /// boundary. Sheds/rejections update [`FleetStats`] (and therefore
+    /// the fleet report) — this is the single accounting point.
+    fn route(&mut self, req: ServeRequest) -> Result<RequestHandle, SubmitError> {
+        // fold finished work first so routing scores are fresh
+        self.absorb_events();
+        if self.shutting_down || self.fatal.is_some() {
+            self.stats.submit_rejected += 1;
+            return Err(SubmitError::ShuttingDown);
+        }
+        let adapter = req.adapter.clone();
+        let name = adapter.as_deref();
+        if let Some(n) = name {
+            if !self.host_adapters.contains_key(n) {
+                self.stats.submit_rejected += 1;
+                return Err(SubmitError::UnknownAdapter(n.to_string()));
+            }
+            if self.cfg.queue_cap > 0 && self.inflight_for(n) >= self.cfg.queue_cap {
+                self.stats.shed_queue_full += 1;
+                return Err(SubmitError::QueueFull);
             }
         }
+        let views = self.views(name);
+        let Some(decision) = choose(self.cfg.policy, &views, &mut self.rr_next) else {
+            self.stats.shed_no_capacity += 1;
+            return Err(SubmitError::Shed);
+        };
+        let r = decision.replica;
+        if let Some(n) = name {
+            if decision.resident {
+                self.stats.affinity_hits += 1;
+                self.directory.touch(r, n);
+            } else {
+                self.stats.affinity_misses += 1;
+                if let Err(e) = self.ensure_resident(r, n) {
+                    self.fatal = Some(format!("{e:#}"));
+                    self.stats.submit_rejected += 1;
+                    return Err(SubmitError::ShuttingDown);
+                }
+            }
+            let at = self.clock.elapsed().as_secs_f64();
+            let rate = self.rates.observe(n, at);
+            if self.cfg.replicate_rps.is_finite()
+                && rate > self.cfg.replicate_rps
+                && self.directory.copies(n) < self.cfg.max_copies
+            {
+                if let Err(e) = self.try_replicate(n) {
+                    self.fatal = Some(format!("{e:#}"));
+                    self.stats.submit_rejected += 1;
+                    return Err(SubmitError::ShuttingDown);
+                }
+            }
+            // book the request as in-flight only after every fallible
+            // step above — an error return must leave the books clean
+            *self.inflight_adapter.entry(n.to_string()).or_insert(0) += 1;
+            *self.inflight_ra[r].entry(n.to_string()).or_insert(0) += 1;
+        }
+        self.inflight[r] += 1;
+        self.stats.routed += 1;
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        let (handle, tx) = RequestHandle::new(rid);
+        self.clients.insert(rid, tx);
+        self.routes.insert(rid, (r, adapter));
+        if self.replicas[r].send(ReplicaCmd::Submit { rid, req }).is_err() {
+            // the replica is gone; roll the request back out
+            self.clients.remove(&rid);
+            if let Some((r, a)) = self.routes.remove(&rid) {
+                self.note_done(r, a.as_deref());
+            }
+            self.stats.routed -= 1;
+            self.stats.submit_rejected += 1;
+            self.fatal = Some(format!("replica {r} is no longer accepting commands"));
+            return Err(SubmitError::ShuttingDown);
+        }
+        Ok(handle)
     }
 
-    /// Replay a trace against the fleet in real time, then drain every
-    /// replica and aggregate. Consumes the coordinator (threads are
-    /// joined before returning).
-    pub fn replay(mut self, trace: &Trace) -> Result<FleetOutcome> {
-        let pacer = Pacer::start();
-        let mut completions: Vec<Completion> = Vec::new();
-        for e in &trace.events {
-            pacer.wait_until(e.at);
-            self.drain_events(&mut completions)?;
-            let spec = RequestSpec {
-                adapter: e.adapter.clone(),
-                prompt: e.prompt.clone(),
-                max_new_tokens: e.max_new_tokens,
-                sampling: Sampling::Greedy,
-            };
-            self.dispatch(spec, e.at)?;
+    /// Ask every replica to drain, collect the per-replica reports (wall
+    /// anchored to `since`), and join the threads. Consumes the fleet.
+    /// Callers driving the fleet through [`ServingBackend`] directly
+    /// (instead of [`Coordinator::replay`]) end a serving session with
+    /// `drain()` followed by `finish(started_at)`.
+    pub fn finish(mut self, since: Instant) -> Result<(Vec<Report>, FleetStats)> {
+        // surface a stashed replica failure with its root cause rather
+        // than the generic send error the dead channel would produce
+        self.absorb_events();
+        if let Some(e) = self.fatal.take() {
+            bail!("{e}");
         }
-
-        // all arrivals injected: ask every replica to drain and report
-        // (wall anchored to replay start, so per-replica throughput is
-        // comparable to the fleet aggregate)
         for h in &self.replicas {
-            h.send(ReplicaCmd::Finish { since: pacer.started_at() })?;
+            h.send(ReplicaCmd::Finish { since })?;
         }
         let n = self.replicas.len();
         let mut reports: Vec<Option<Report>> = (0..n).map(|_| None).collect();
@@ -536,42 +624,93 @@ impl Coordinator {
                         finished += 1;
                     }
                 }
-                Ok(ev) => self.apply(ev, &mut completions)?,
+                Ok(ev) => self.apply(ev),
                 Err(e) => bail!("fleet drain failed: {e}"),
             }
+            if let Some(e) = self.fatal.take() {
+                bail!("{e}");
+            }
         }
-        let wall = pacer.elapsed().as_secs_f64().max(1e-9);
         for h in self.replicas.drain(..) {
             h.shutdown();
         }
-
         let per_replica: Vec<Report> =
             reports.into_iter().map(|r| r.expect("replica report")).collect();
-        let mut ttft = Samples::new();
-        let mut tpot = Samples::new();
-        let mut e2e = Samples::new();
-        for c in &completions {
-            ttft.push(c.record.ttft.as_secs_f64());
-            if let Some(t) = c.record.tpot {
-                tpot.push(t.as_secs_f64());
-            }
-            e2e.push(c.record.e2e.as_secs_f64());
+        Ok((per_replica, self.stats))
+    }
+
+    /// Replay a trace against the fleet in real time — a thin client of
+    /// the serving API ([`ServingBackend`] submit/pump via
+    /// [`crate::server::replay_backend`]) — then drain every replica and
+    /// aggregate with [`Report::merge`]. Consumes the coordinator
+    /// (threads are joined before returning).
+    pub fn replay(mut self, trace: &Trace) -> Result<FleetOutcome> {
+        let pacer = Pacer::start();
+        self.clock = pacer.started_at();
+        let (completions, _rejected) =
+            crate::server::replay_backend(&mut self, trace, &pacer)?;
+        let wall = pacer.elapsed().as_secs_f64().max(1e-9);
+        let since = pacer.started_at();
+        let (per_replica, stats) = self.finish(since)?;
+        let mut report = Report::merge(
+            per_replica.iter(),
+            completions.iter().map(|c| &c.record),
+            Some(wall),
+        );
+        // the fleet's admission books are authoritative for the
+        // aggregate (per-replica reports only see post-routing rejects)
+        report.requests = completions.len();
+        report.rejected = stats.submit_rejected;
+        report.shed = stats.shed_total();
+        Ok(FleetOutcome { report, per_replica, completions, stats })
+    }
+}
+
+/// The fleet serving backend: `pump` folds replica events (blocking
+/// briefly when none are pending) and forwards token streams to client
+/// handles.
+impl ServingBackend for Coordinator {
+    fn submit(&mut self, req: ServeRequest) -> Result<RequestHandle, SubmitError> {
+        self.route(req)
+    }
+
+    fn pump(&mut self) -> Result<bool> {
+        if let Some(e) = self.fatal.take() {
+            bail!("{e}");
         }
-        let prefill_tokens: usize = per_replica.iter().map(|r| r.prefill_tokens).sum();
-        let decode_tokens: usize = per_replica.iter().map(|r| r.decode_tokens).sum();
-        let report = Report {
-            requests: completions.len(),
-            prefill_tokens,
-            decode_tokens,
-            prefill_throughput: prefill_tokens as f64 / wall,
-            decode_throughput: decode_tokens as f64 / wall,
-            ttft: ttft.summary(),
-            tpot: tpot.summary(),
-            e2e: e2e.summary(),
-            wall,
-            rejected: self.stats.submit_rejected,
-            shed: self.stats.shed_total(),
+        match self.events.recv_timeout(Duration::from_millis(2)) {
+            Ok(ev) => {
+                self.apply(ev);
+                self.absorb_events();
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => bail!("every fleet replica has exited"),
+        }
+        if let Some(e) = self.fatal.take() {
+            bail!("{e}");
+        }
+        Ok(self.inflight_total() > 0)
+    }
+
+    fn cancel(&mut self, id: RequestId) -> bool {
+        let Some(r) = self.routes.get(&id).map(|(r, _)| *r) else {
+            return false;
         };
-        Ok(FleetOutcome { report, per_replica, completions, stats: self.stats })
+        self.replicas[r].send(ReplicaCmd::Cancel { rid: id }).is_ok()
+    }
+
+    fn has_work(&self) -> bool {
+        // a stashed replica failure counts as work: it forces the
+        // driving loop to pump, which surfaces the root-cause error
+        // instead of silently rejecting everything that follows
+        self.fatal.is_some() || self.inflight_total() > 0
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        self.shutting_down = true;
+        while ServingBackend::has_work(self) {
+            ServingBackend::pump(self)?;
+        }
+        Ok(())
     }
 }

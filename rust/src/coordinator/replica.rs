@@ -4,17 +4,27 @@
 //! thread from a `Send` factory and never leaves it. The coordinator
 //! talks to the replica over a FIFO command channel — which gives the
 //! crucial ordering guarantee that a `Load(adapter)` issued before a
-//! `Submit` for that adapter is applied first — and receives completions
-//! and lifecycle acknowledgements on a shared event channel.
+//! `Submit` for that adapter is applied first — and receives token
+//! streams and lifecycle acknowledgements on a shared event channel.
+//!
+//! The replica drives its engine through the serving API
+//! ([`Engine::submit_request`] / [`Engine::cancel_request`]): each
+//! routed request is held as a [`RequestHandle`], and every
+//! [`TokenEvent`] the engine emits is re-addressed from the
+//! engine-local sequence id to the coordinator's fleet request id and
+//! forwarded upstream ([`ReplicaEvent::Stream`]) — so fleet clients see
+//! the same incremental stream single-engine clients do.
 //!
 //! The thread publishes its KV headroom ([`ReplicaGauges`]) after every
 //! command and step; the coordinator reads it lock-free as the
 //! tie-break signal when scoring placements (queue depth it tracks
-//! itself, exactly, from submit/completion events).
+//! itself, exactly, from submit/terminal events).
 
-use crate::engine::{Completion, Engine, RequestSpec};
+use crate::engine::Engine;
 use crate::metrics::Report;
+use crate::serving::{RequestHandle, ServeRequest, SubmitError, TokenEvent};
 use anyhow::Result;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
@@ -32,7 +42,10 @@ pub struct ReplicaGauges {
 
 /// Commands a replica executes in arrival order.
 pub(crate) enum ReplicaCmd {
-    Submit(RequestSpec),
+    /// Submit a routed request under fleet request id `rid`.
+    Submit { rid: u64, req: ServeRequest },
+    /// Cancel fleet request `rid` (queued or mid-decode).
+    Cancel { rid: u64 },
     Load(Arc<crate::adapters::format::Adapter>),
     Evict(String),
     /// Drain all queued work, report (wall time anchored to `since`,
@@ -44,9 +57,18 @@ pub(crate) enum ReplicaCmd {
 pub(crate) enum ReplicaEvent {
     /// Sent once after engine construction; `err` is set on failure.
     Ready { replica: usize, err: Option<String> },
-    Completed { replica: usize, completion: Completion },
-    /// `Engine::submit` refused a routed request.
-    SubmitRejected { replica: usize, adapter: Option<String> },
+    /// A token-stream event, already re-addressed to the fleet rid.
+    /// `Done`/`Aborted` are terminal (the coordinator's in-flight
+    /// accounting keys off them).
+    Stream { replica: usize, event: TokenEvent },
+    /// [`Engine::submit_request`] refused a routed request (e.g. the
+    /// adapter raced away between routing and arrival).
+    SubmitRejected {
+        replica: usize,
+        rid: u64,
+        adapter: Option<String>,
+        err: SubmitError,
+    },
     LoadDone { replica: usize, adapter: String, err: Option<String> },
     EvictDone { replica: usize, adapter: String, err: Option<String> },
     /// Final per-replica serving report (response to `Finish`).
@@ -114,6 +136,39 @@ fn publish(engine: &Engine, gauges: &ReplicaGauges) {
     gauges.kv_free.store(engine.kv_free_slots(), Ordering::Relaxed);
 }
 
+/// In-flight request bookkeeping inside one replica thread.
+#[derive(Default)]
+struct Streams {
+    /// fleet rid → the engine-side token stream.
+    handles: HashMap<u64, RequestHandle>,
+    /// fleet rid → engine-local sequence id (cancel routing).
+    engine_id: HashMap<u64, u64>,
+}
+
+impl Streams {
+    /// Forward every buffered engine event upstream, re-addressed to
+    /// fleet rids; drop streams that reached a terminal event.
+    fn forward(&mut self, index: usize, events: &Sender<ReplicaEvent>) {
+        let mut finished: Vec<u64> = Vec::new();
+        for (&rid, handle) in &self.handles {
+            for ev in handle.drain_events() {
+                let terminal = ev.is_terminal();
+                let _ = events.send(ReplicaEvent::Stream {
+                    replica: index,
+                    event: ev.reid(rid),
+                });
+                if terminal {
+                    finished.push(rid);
+                }
+            }
+        }
+        for rid in finished {
+            self.handles.remove(&rid);
+            self.engine_id.remove(&rid);
+        }
+    }
+}
+
 enum Flow {
     Continue,
     Finish(Instant),
@@ -122,16 +177,35 @@ enum Flow {
 fn handle_cmd(
     index: usize,
     engine: &mut Engine,
+    streams: &mut Streams,
     events: &Sender<ReplicaEvent>,
     cmd: ReplicaCmd,
 ) -> Flow {
     match cmd {
-        ReplicaCmd::Submit(spec) => {
-            let adapter = spec.adapter.clone();
-            if let Err(e) = engine.submit(spec) {
-                crate::log_debug!("replica", "[{index}] submit rejected: {e:#}");
-                engine.metrics.record_rejected();
-                let _ = events.send(ReplicaEvent::SubmitRejected { replica: index, adapter });
+        ReplicaCmd::Submit { rid, req } => {
+            let adapter = req.adapter.clone();
+            match engine.submit_request(req) {
+                Ok(handle) => {
+                    streams.engine_id.insert(rid, handle.id);
+                    streams.handles.insert(rid, handle);
+                }
+                Err(err) => {
+                    crate::log_debug!("replica", "[{index}] submit rejected: {err}");
+                    let _ = events.send(ReplicaEvent::SubmitRejected {
+                        replica: index,
+                        rid,
+                        adapter,
+                        err,
+                    });
+                }
+            }
+            Flow::Continue
+        }
+        ReplicaCmd::Cancel { rid } => {
+            if let Some(&eid) = streams.engine_id.get(&rid) {
+                // the Aborted event flows back through the handle and is
+                // forwarded upstream like any other stream event
+                engine.cancel_request(eid);
             }
             Flow::Continue
         }
@@ -174,6 +248,7 @@ fn replica_main(
         }
     };
     publish(&engine, &gauges);
+    let mut streams = Streams::default();
 
     let mut finishing: Option<Instant> = None;
     'serve: while finishing.is_none() {
@@ -183,7 +258,7 @@ fn replica_main(
                 match cmds.try_recv() {
                     Ok(cmd) => {
                         if let Flow::Finish(since) =
-                            handle_cmd(index, &mut engine, &events, cmd)
+                            handle_cmd(index, &mut engine, &mut streams, &events, cmd)
                         {
                             finishing = Some(since);
                             break;
@@ -194,51 +269,38 @@ fn replica_main(
                 }
             }
             if finishing.is_none() {
-                match engine.step() {
-                    Ok(Some(done)) => {
-                        for completion in done {
-                            let _ = events
-                                .send(ReplicaEvent::Completed { replica: index, completion });
-                        }
-                    }
-                    Ok(None) => {}
-                    Err(e) => {
-                        let _ = events.send(ReplicaEvent::Fatal {
-                            replica: index,
-                            err: format!("{e:#}"),
-                        });
-                        return;
-                    }
+                if let Err(e) = engine.step() {
+                    let _ = events.send(ReplicaEvent::Fatal {
+                        replica: index,
+                        err: format!("{e:#}"),
+                    });
+                    return;
                 }
             }
         } else {
             // idle: block until the coordinator has something for us
             match cmds.recv() {
                 Ok(cmd) => {
-                    if let Flow::Finish(since) = handle_cmd(index, &mut engine, &events, cmd) {
+                    if let Flow::Finish(since) =
+                        handle_cmd(index, &mut engine, &mut streams, &events, cmd)
+                    {
                         finishing = Some(since);
                     }
                 }
                 Err(_) => break 'serve,
             }
         }
+        streams.forward(index, &events);
         publish(&engine, &gauges);
     }
 
     if let Some(since) = finishing {
         // drain everything still queued, then report
-        match engine.run_to_completion() {
-            Ok(done) => {
-                for completion in done {
-                    let _ = events.send(ReplicaEvent::Completed { replica: index, completion });
-                }
-            }
-            Err(e) => {
-                let _ = events
-                    .send(ReplicaEvent::Fatal { replica: index, err: format!("{e:#}") });
-                return;
-            }
+        if let Err(e) = engine.drain_requests() {
+            let _ = events.send(ReplicaEvent::Fatal { replica: index, err: format!("{e:#}") });
+            return;
         }
+        streams.forward(index, &events);
         publish(&engine, &gauges);
         engine.metrics.set_wall(since.elapsed());
         let report = engine.report();

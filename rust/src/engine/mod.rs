@@ -27,12 +27,17 @@ use crate::runtime::{
 };
 use crate::sampler::{sample, Sampling};
 use crate::scheduler::{SchedConfig, Scheduler, SeqState, SlotMeta};
+use crate::serving::{
+    AbortReason, RequestHandle, RequestId, ServeRequest, ServingBackend, SubmitError, TokenEvent,
+};
 use crate::util::rng::Pcg;
 use crate::vmm::page_pool::PagePool;
 use crate::weights::{
     BaseOnlyParams, BaseWeights, MergedParams, StoreMode, StoreParams, WeightStore,
 };
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -75,6 +80,9 @@ pub struct EngineOptions {
     /// devices runs at half speed even when its neighbours are idle
     /// (the Fig. 6 merged-deployment setup; see DESIGN.md section 7).
     pub compute_share: f64,
+    /// Admission-queue bound: submits beyond this many *waiting*
+    /// requests fail with [`SubmitError::QueueFull`]. 0 = unbounded.
+    pub queue_cap: usize,
 }
 
 impl Default for EngineOptions {
@@ -86,6 +94,7 @@ impl Default for EngineOptions {
             page_size: 2 << 20,
             device_capacity: usize::MAX / 2,
             compute_share: 1.0,
+            queue_cap: 0,
         }
     }
 }
@@ -155,6 +164,14 @@ pub struct Engine {
     weights_version: u64,
     device: Arc<Mutex<DeviceMemory>>,
     compute_share: f64,
+    queue_cap: usize,
+    /// Per-request token-event subscribers ([`ServingBackend::submit`]).
+    streams: HashMap<RequestId, Sender<TokenEvent>>,
+    /// Draining: every new submit fails with `ShuttingDown`.
+    shutting_down: bool,
+    /// Any in-flight request carries a deadline (skips the per-step
+    /// expiry scan on the deadline-free replay hot path).
+    has_deadlines: bool,
 }
 
 impl Engine {
@@ -193,6 +210,10 @@ impl Engine {
             backend,
             base,
             compute_share: opts.compute_share.clamp(0.05, 1.0),
+            queue_cap: opts.queue_cap,
+            streams: HashMap::new(),
+            shutting_down: false,
+            has_deadlines: false,
             weights,
         };
         engine.sync_device_state()?;
@@ -439,44 +460,143 @@ impl Engine {
         self.sync_device_state()
     }
 
-    /// Submit a request; returns the sequence id.
+    /// Submit a request (legacy convenience): the typed
+    /// [`Engine::submit_request`] with the handle reduced to its id.
+    /// Token events are discarded; completions are still returned by
+    /// [`Engine::step`] / [`Engine::run_to_completion`].
     pub fn submit(&mut self, req: RequestSpec) -> Result<u64> {
-        let aid = match (&mut self.weights, &req.adapter) {
-            (Weights::Weave { registry, .. }, name) => registry.resolve(name.as_deref())?,
+        match self.submit_request(req.into()) {
+            Ok(handle) => Ok(handle.id),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Typed admission check; does not allocate an id or touch metrics.
+    fn admit(&mut self, req: &ServeRequest) -> Result<i32, SubmitError> {
+        if self.shutting_down {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if self.queue_cap > 0 && self.scheduler.waiting_len() >= self.queue_cap {
+            return Err(SubmitError::QueueFull);
+        }
+        let aid = match (&mut self.weights, req.adapter.as_deref()) {
+            (Weights::Weave { registry, .. }, name) => match registry.resolve(name) {
+                Ok(aid) => aid,
+                Err(_) => {
+                    return Err(SubmitError::UnknownAdapter(
+                        name.unwrap_or_default().to_string(),
+                    ))
+                }
+            },
             (Weights::BaseOnly, None) => -1,
             (Weights::BaseOnly, Some(n)) => {
-                bail!("base-only deployment cannot serve adapter {n:?}")
+                return Err(SubmitError::UnknownAdapter(n.to_string()))
             }
-            (Weights::Merged { adapter }, Some(n)) if *n == adapter.name => -1,
+            (Weights::Merged { adapter }, Some(n)) if n == adapter.name => -1,
             (Weights::Merged { .. }, None) => -1,
-            (Weights::Merged { adapter }, Some(n)) => bail!(
-                "merged instance serves {:?}, got request for {n:?}",
-                adapter.name
-            ),
+            (Weights::Merged { .. }, Some(n)) => {
+                return Err(SubmitError::UnknownAdapter(n.to_string()))
+            }
         };
         if req.prompt.is_empty() {
-            bail!("empty prompt");
+            return Err(SubmitError::Invalid("empty prompt".into()));
         }
-        if req.prompt.len() + req.max_new_tokens.max(1) > self.cfg.kv_cap {
-            bail!(
-                "request needs {} KV slots (prompt {} + output {}), capacity is {}",
-                req.prompt.len() + req.max_new_tokens.max(1),
+        let need = req.prompt.len() + req.max_new_tokens.max(1);
+        if need > self.cfg.kv_cap {
+            return Err(SubmitError::Invalid(format!(
+                "request needs {need} KV slots (prompt {} + output {}), capacity is {}",
                 req.prompt.len(),
                 req.max_new_tokens.max(1),
                 self.cfg.kv_cap
-            );
+            )));
         }
+        Ok(aid)
+    }
+
+    /// Submit through the serving API: typed errors, and a
+    /// [`RequestHandle`] streaming [`TokenEvent`]s as the engine steps.
+    /// Rejections are recorded in this engine's own metrics
+    /// ([`crate::metrics::Report::rejected`]) — callers keep no separate
+    /// rejection books.
+    pub fn submit_request(
+        &mut self,
+        req: ServeRequest,
+    ) -> Result<RequestHandle, SubmitError> {
+        let aid = match self.admit(&req) {
+            Ok(aid) => aid,
+            Err(e) => {
+                self.metrics.record_rejected();
+                return Err(e);
+            }
+        };
         let id = self.next_seq;
         self.next_seq += 1;
-        self.scheduler.submit(SeqState::new(
+        let mut seq = SeqState::new(
             id,
             aid,
             req.adapter,
             req.prompt,
             req.max_new_tokens.max(1),
             req.sampling,
-        ));
-        Ok(id)
+        );
+        if let Some(d) = req.deadline {
+            seq.deadline = Some(Instant::now() + d);
+            self.has_deadlines = true;
+        }
+        self.scheduler.submit(seq);
+        let (handle, tx) = RequestHandle::new(id);
+        self.streams.insert(id, tx);
+        Ok(handle)
+    }
+
+    /// Cancel a queued or running request: its KV slots are freed
+    /// immediately and its stream receives a terminal
+    /// [`TokenEvent::Aborted`] (`Cancelled`). Returns `false` when the
+    /// id is not in flight.
+    pub fn cancel_request(&mut self, id: RequestId) -> bool {
+        match self.scheduler.cancel(id, &mut self.kv, &mut self.slot_meta) {
+            Some(_) => {
+                self.metrics.record_aborted(false);
+                self.finish_stream(id, AbortReason::Cancelled);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Finish all queued and running work, then refuse new submits with
+    /// [`SubmitError::ShuttingDown`].
+    pub fn drain_requests(&mut self) -> Result<()> {
+        self.shutting_down = true;
+        while self.step()?.is_some() {}
+        Ok(())
+    }
+
+    /// Send a terminal abort on a request's stream and drop it.
+    fn finish_stream(&mut self, id: RequestId, reason: AbortReason) {
+        if let Some(tx) = self.streams.remove(&id) {
+            let _ = tx.send(TokenEvent::Aborted { id, reason });
+        }
+    }
+
+    /// Expire deadline-passed requests (queued ones before they can
+    /// occupy a batch slot; running ones free their KV).
+    fn process_expiries(&mut self) {
+        if !self.has_deadlines {
+            return;
+        }
+        let expired = self.scheduler.expire_deadlines(
+            Instant::now(),
+            &mut self.kv,
+            &mut self.slot_meta,
+        );
+        for seq in expired {
+            self.metrics.record_aborted(true);
+            self.finish_stream(seq.id, AbortReason::DeadlineExceeded);
+        }
+        // un-latch once no in-flight request carries a deadline, so the
+        // deadline-free hot path stays scan-free on long-lived sessions
+        self.has_deadlines = self.scheduler.deadline_work();
     }
 
     pub fn has_work(&self) -> bool {
@@ -490,6 +610,7 @@ impl Engine {
     /// Run one engine iteration (one packed batch through the model).
     /// Returns completions finished this step; `None` if idle.
     pub fn step(&mut self) -> Result<Option<Vec<Completion>>> {
+        self.process_expiries();
         let t0 = Instant::now();
         let Some(batch) = self.scheduler.build_batch(&mut self.kv, &mut self.slot_meta)? else {
             return Ok(None);
@@ -506,7 +627,21 @@ impl Engine {
                 .map(|s| s.sampling)
                 .unwrap_or(Sampling::Greedy);
             let tok = sample(logits, sampling, &mut self.rng);
-            self.scheduler.push_token(seq_id, tok)?;
+            let first = self.scheduler.push_token(seq_id, tok)?;
+            // stream the token while the request is still in flight —
+            // TTFT is only real if the first token leaves the engine now
+            if let Some(tx) = self.streams.get(&seq_id) {
+                let ev = if first {
+                    TokenEvent::First { id: seq_id, token: tok }
+                } else {
+                    TokenEvent::Token { id: seq_id, token: tok }
+                };
+                if tx.send(ev).is_err() {
+                    // client hung up: stop streaming (the request itself
+                    // keeps running; use `cancel_request` to abort it)
+                    self.streams.remove(&seq_id);
+                }
+            }
         }
         // device-partitioning emulation: idle out the unowned share
         if self.compute_share < 1.0 {
@@ -536,12 +671,19 @@ impl Engine {
                     e2e: end - seq.arrival,
                 };
                 self.metrics.complete_request(record.clone());
-                Completion {
+                let completion = Completion {
                     id: seq.id,
                     adapter: seq.adapter,
                     output: seq.tokens[seq.prompt_len..].to_vec(),
                     record,
+                };
+                if let Some(tx) = self.streams.remove(&seq.id) {
+                    let _ = tx.send(TokenEvent::Done {
+                        id: seq.id,
+                        completion: completion.clone(),
+                    });
                 }
+                completion
             })
             .collect();
         Ok(Some(completions))
@@ -565,11 +707,43 @@ impl Engine {
     /// stay resident). Benches reuse one engine across sweep cells to
     /// amortize PJRT compilation.
     pub fn reset_session(&mut self) {
-        assert!(self.scheduler.is_idle() || true);
+        // resetting mid-flight would drop live requests with no terminal
+        // event on their streams — refuse it loudly
+        assert!(
+            self.scheduler.is_idle(),
+            "reset_session with requests in flight"
+        );
         self.scheduler = Scheduler::new(Scheduler::rebuild_config(&self.scheduler));
         self.kv = KvCache::new(self.cfg.kv_cap);
         self.slot_meta = SlotMeta::new(self.cfg.kv_cap);
         self.metrics = MetricsCollector::new();
+        self.streams.clear();
+        self.shutting_down = false;
+        self.has_deadlines = false;
         self.backend.reset_kv();
+    }
+}
+
+/// The single-replica serving backend: `pump` runs one engine step.
+impl ServingBackend for Engine {
+    fn submit(&mut self, req: ServeRequest) -> Result<RequestHandle, SubmitError> {
+        self.submit_request(req)
+    }
+
+    fn pump(&mut self) -> Result<bool> {
+        self.step()?;
+        Ok(Engine::has_work(self))
+    }
+
+    fn cancel(&mut self, id: RequestId) -> bool {
+        self.cancel_request(id)
+    }
+
+    fn has_work(&self) -> bool {
+        Engine::has_work(self)
+    }
+
+    fn drain(&mut self) -> Result<()> {
+        self.drain_requests()
     }
 }

@@ -22,9 +22,19 @@
 //! The crate is organised like a serving framework (vLLM-role), because the
 //! paper's system is one: [`scheduler`] (continuous batching + chunked
 //! prefill), [`kvcache`], [`sampler`], [`runtime`] (PJRT execution of
-//! AOT-lowered JAX/Pallas artifacts), [`server`] (request loop), plus the
+//! AOT-lowered JAX/Pallas artifacts), [`server`] (trace replay), plus the
 //! experiment substrates [`workload`], [`metrics`], [`memsim`] and
 //! [`bench`].
+//!
+//! The online request/response boundary is the [`serving`] API:
+//! [`serving::ServingBackend`] (submit / pump / cancel / drain,
+//! implemented by both the single [`engine::Engine`] and the fleet
+//! [`coordinator::Coordinator`]), per-request token streams
+//! ([`serving::RequestHandle`] delivering [`serving::TokenEvent`]s),
+//! typed admission errors ([`serving::SubmitError`]), and a std-only
+//! NDJSON-over-TCP frontend ([`serving::frontend`], exposed as
+//! `expertweave serve --listen`). The trace replayers in [`server`] are
+//! thin clients of this API.
 //!
 //! Above the single engine sits the **fleet layer** ([`coordinator`]):
 //! N engine replicas on their own threads behind a coordinator that does
@@ -58,6 +68,7 @@ pub mod runtime;
 pub mod sampler;
 pub mod scheduler;
 pub mod server;
+pub mod serving;
 pub mod util;
 pub mod vmm;
 pub mod weights;

@@ -4,7 +4,9 @@
 //! * `serve`        — replay a synthetic workload trace against a
 //!                    deployment (weave / base-only / merged) and print
 //!                    the serving report. `--backend sim` needs no
-//!                    artifacts.
+//!                    artifacts. With `--listen <addr>` it serves
+//!                    NDJSON requests over TCP instead (token streams,
+//!                    cancel, drain) — see `serving::frontend`.
 //! * `fleet`        — replay a trace against a coordinated multi-replica
 //!                    fleet (routing policy, adapter lifecycle, admission
 //!                    control) on the sim backend.
@@ -19,6 +21,7 @@
 //! expertweave gen-adapters --config small --out /tmp/adapters
 //! expertweave serve --config tiny --adapters 2 --lambda 5 --horizon 10
 //! expertweave serve --backend sim --adapters 4 --lambda 10 --horizon 5
+//! expertweave serve --backend sim --adapters 2 --listen 127.0.0.1:7070
 //! expertweave fleet --replicas 3 --adapters 6 --policy affinity --horizon 6
 //! ```
 
@@ -69,11 +72,13 @@ fn artifact_set(config: &str) -> Result<ArtifactSet> {
 }
 
 fn serve(argv: Vec<String>) -> Result<()> {
-    let a = Args::new("expertweave serve", "replay a synthetic trace")
+    let a = Args::new("expertweave serve", "replay a synthetic trace, or serve NDJSON over TCP")
         .opt("backend", Some("pjrt"), "execution backend (pjrt|sim)")
         .opt("config", Some("tiny"), "artifact config (tiny|small); pjrt only")
         .opt("deployment", Some("weave"), "weave|singleop|padding|base-only")
         .opt("adapters", Some("2"), "number of Table-1 adapters to load")
+        .opt("listen", None, "serve NDJSON requests on this TCP addr instead of replaying")
+        .opt("queue-cap", Some("0"), "admission queue bound (0 = unbounded); listen mode")
         .opt("lambda", Some("2.0"), "aggregate arrival rate (req/s)")
         .opt("alpha", Some("1.0"), "power-law skew (1 = uniform)")
         .opt("horizon", Some("10.0"), "trace horizon (s)")
@@ -103,6 +108,7 @@ fn serve(argv: Vec<String>) -> Result<()> {
 
     let opts = EngineOptions {
         chunk: a.get_usize("chunk").map_err(anyhow::Error::msg)?,
+        queue_cap: a.get_usize("queue-cap").map_err(anyhow::Error::msg)?,
         ..Default::default()
     };
     let deployment = a.get_or("deployment", "weave");
@@ -144,6 +150,23 @@ fn serve(argv: Vec<String>) -> Result<()> {
         (None, "base-only") => Engine::sim_base_only(&cfg, SimPerf::default(), opts)?,
         (_, other) => bail!("unknown deployment {other:?}"),
     };
+
+    // --listen: online NDJSON-over-TCP serving instead of trace replay
+    if let Some(addr) = a.get("listen") {
+        let frontend = expertweave::serving::frontend::NdjsonServer::bind(&addr)?;
+        println!(
+            "serving {deployment}/{} ({backend}) on {} — NDJSON per line; \
+             {{\"op\":\"drain\"}} to stop",
+            cfg.name,
+            frontend.local_addr()?
+        );
+        for name in engine.resident_adapters() {
+            println!("  adapter: {name}");
+        }
+        frontend.run(&mut engine)?;
+        println!("{}", engine.report().row(&format!("{deployment}/{}", cfg.name)));
+        return Ok(());
+    }
 
     let trace_adapters: Vec<(String, String)> = if deployment == "base-only" {
         vec![]

@@ -31,6 +31,8 @@ pub struct MetricsCollector {
     pub batched_tokens: Samples,
     run_wall: Option<Duration>,
     rejected: usize,
+    aborted: usize,
+    deadline_missed: usize,
 }
 
 /// Final report of a serving run (one Fig. 5/6/10 data point).
@@ -52,6 +54,12 @@ pub struct Report {
     /// Requests shed by admission control before reaching an engine
     /// (bounded per-adapter queues, no replica with capacity).
     pub shed: usize,
+    /// Admitted requests that did not complete: client cancellations
+    /// plus deadline expiries.
+    pub aborted: usize,
+    /// Subset of `aborted` that hit their deadline (queued requests past
+    /// deadline are dropped before ever occupying a batch slot).
+    pub deadline_missed: usize,
 }
 
 impl MetricsCollector {
@@ -81,6 +89,19 @@ impl MetricsCollector {
 
     pub fn rejected(&self) -> usize {
         self.rejected
+    }
+
+    /// Count an admitted request that ended without completing.
+    /// `deadline` marks deadline expiries (vs client cancellations).
+    pub fn record_aborted(&mut self, deadline: bool) {
+        self.aborted += 1;
+        if deadline {
+            self.deadline_missed += 1;
+        }
+    }
+
+    pub fn aborted(&self) -> usize {
+        self.aborted
     }
 
     pub fn completed(&self) -> usize {
@@ -123,11 +144,75 @@ impl MetricsCollector {
             // admission control lives above single engines: the fleet
             // coordinator fills this on its aggregate report
             shed: 0,
+            aborted: self.aborted,
+            deadline_missed: self.deadline_missed,
         }
     }
 }
 
 impl Report {
+    /// Merge per-source reports into one system-level view: requests,
+    /// tokens and failure counters add; wall time is the longest source
+    /// (or `wall_override`, e.g. the coordinator's replay clock);
+    /// throughputs are recomputed over the merged wall; latency
+    /// summaries are rebuilt request-weighted from `records`.
+    ///
+    /// This is the single merge used by both
+    /// [`crate::server::aggregate`] (isolated instances) and the fleet
+    /// coordinator's aggregate — they previously re-implemented it
+    /// independently. Safe on empty input: zero counts, epsilon wall,
+    /// NaN latency summaries.
+    pub fn merge<'a>(
+        parts: impl IntoIterator<Item = &'a Report>,
+        records: impl IntoIterator<Item = &'a RequestRecord>,
+        wall_override: Option<f64>,
+    ) -> Report {
+        let mut requests = 0;
+        let mut prefill_tokens = 0;
+        let mut decode_tokens = 0;
+        let mut rejected = 0;
+        let mut shed = 0;
+        let mut aborted = 0;
+        let mut deadline_missed = 0;
+        let mut wall: f64 = 0.0;
+        for r in parts {
+            requests += r.requests;
+            prefill_tokens += r.prefill_tokens;
+            decode_tokens += r.decode_tokens;
+            rejected += r.rejected;
+            shed += r.shed;
+            aborted += r.aborted;
+            deadline_missed += r.deadline_missed;
+            wall = wall.max(r.wall);
+        }
+        let wall = wall_override.unwrap_or(wall).max(1e-9);
+        let mut ttft = Samples::new();
+        let mut tpot = Samples::new();
+        let mut e2e = Samples::new();
+        for rec in records {
+            ttft.push(rec.ttft.as_secs_f64());
+            if let Some(t) = rec.tpot {
+                tpot.push(t.as_secs_f64());
+            }
+            e2e.push(rec.e2e.as_secs_f64());
+        }
+        Report {
+            requests,
+            prefill_tokens,
+            decode_tokens,
+            prefill_throughput: prefill_tokens as f64 / wall,
+            decode_throughput: decode_tokens as f64 / wall,
+            ttft: ttft.summary(),
+            tpot: tpot.summary(),
+            e2e: e2e.summary(),
+            wall,
+            rejected,
+            shed,
+            aborted,
+            deadline_missed,
+        }
+    }
+
     /// Completed requests per second of wall time — the fleet
     /// experiments' headline number (Fig. 10).
     pub fn goodput(&self) -> f64 {
@@ -149,6 +234,12 @@ impl Report {
             row.push_str(&format!(
                 " rejected={} shed={}",
                 self.rejected, self.shed
+            ));
+        }
+        if self.aborted > 0 {
+            row.push_str(&format!(
+                " aborted={} (deadline={})",
+                self.aborted, self.deadline_missed
             ));
         }
         row
@@ -186,6 +277,67 @@ mod tests {
         assert!((r.goodput() - 2.0).abs() < 1e-9);
         r.shed = 2; // what a coordinator-filled aggregate carries
         assert!(r.row("x").contains("rejected=1 shed=2"));
+    }
+
+    #[test]
+    fn aborted_counters_flow_to_report() {
+        let mut m = MetricsCollector::new();
+        m.record_aborted(false); // cancellation
+        m.record_aborted(true); // deadline expiry
+        let r = m.report();
+        assert_eq!(r.aborted, 2);
+        assert_eq!(r.deadline_missed, 1);
+        assert!(r.row("x").contains("aborted=2 (deadline=1)"));
+    }
+
+    #[test]
+    fn merge_is_request_weighted_and_empty_safe() {
+        let rec = |ttft_ms: u64| RequestRecord {
+            id: 0,
+            adapter: None,
+            prompt_tokens: 10,
+            output_tokens: 5,
+            ttft: Duration::from_millis(ttft_ms),
+            tpot: Some(Duration::from_millis(20)),
+            e2e: Duration::from_millis(100),
+        };
+        let mk = |n: usize, wall: f64| {
+            let mut m = MetricsCollector::new();
+            for _ in 0..n {
+                m.complete_request(rec(10));
+            }
+            m.set_wall(Duration::from_secs_f64(wall));
+            m.report()
+        };
+        let a = mk(3, 2.0);
+        let b = mk(1, 4.0);
+        let records: Vec<RequestRecord> =
+            (0..3).map(|_| rec(10)).chain(std::iter::once(rec(50))).collect();
+        let merged = Report::merge([&a, &b], records.iter(), None);
+        assert_eq!(merged.requests, 4);
+        assert_eq!(merged.prefill_tokens, 40);
+        assert!((merged.wall - 4.0).abs() < 1e-9, "wall = max of parts");
+        assert!((merged.prefill_throughput - 10.0).abs() < 1e-9);
+        // request-weighted: 3x 10ms + 1x 50ms -> mean 20ms
+        assert!((merged.ttft.mean - 0.020).abs() < 1e-9);
+        // wall override wins
+        let w = Report::merge([&a, &b], records.iter(), Some(8.0));
+        assert!((w.wall - 8.0).abs() < 1e-9);
+        assert!((w.prefill_throughput - 5.0).abs() < 1e-9);
+
+        // empty merge: no parts, no records -> zeroes, finite wall, no
+        // panic rendering the row (regression: empty-run edge cases)
+        let empty = Report::merge(
+            std::iter::empty::<&Report>(),
+            std::iter::empty::<&RequestRecord>(),
+            None,
+        );
+        assert_eq!(empty.requests, 0);
+        assert!(empty.wall > 0.0);
+        assert!(empty.ttft.mean.is_nan());
+        assert!(empty.ttft.min.is_nan(), "empty min must not be +inf");
+        assert_eq!(empty.goodput(), 0.0);
+        let _ = empty.row("empty");
     }
 
     #[test]

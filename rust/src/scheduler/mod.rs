@@ -65,6 +65,10 @@ pub struct SeqState {
     pub max_new: usize,
     pub sampling: Sampling,
     pub arrival: Instant,
+    /// Absolute completion deadline; past it the sequence is expired by
+    /// [`Scheduler::expire_deadlines`] (queued sequences are dropped
+    /// before ever occupying a batch slot).
+    pub deadline: Option<Instant>,
     pub first_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
 }
@@ -89,6 +93,7 @@ impl SeqState {
             max_new,
             sampling,
             arrival: Instant::now(),
+            deadline: None,
             first_token_at: None,
             finished_at: None,
         }
@@ -188,6 +193,15 @@ impl Scheduler {
 
     pub fn running(&self) -> &[SeqState] {
         &self.running
+    }
+
+    /// Is any queued or running sequence carrying a deadline? (The
+    /// engine skips the per-step expiry scan when this is false.)
+    pub fn deadline_work(&self) -> bool {
+        self.waiting
+            .iter()
+            .chain(self.running.iter())
+            .any(|s| s.deadline.is_some())
     }
 
     /// Queued + running sequences bound to adapter `name` (the engine
@@ -314,16 +328,28 @@ impl Scheduler {
         Ok(Some(Batch { bucket, inputs, rows, prefill_tokens, decode_tokens }))
     }
 
-    /// Append a sampled token to a running sequence.
-    pub fn push_token(&mut self, seq_id: u64, token: i32) -> Result<()> {
+    /// Append a sampled token to a running sequence. Returns `true` when
+    /// it was the sequence's *first* generated token (the TTFT edge —
+    /// the engine emits [`crate::serving::TokenEvent::First`] on it).
+    pub fn push_token(&mut self, seq_id: u64, token: i32) -> Result<bool> {
         let Some(seq) = self.running.iter_mut().find(|s| s.id == seq_id) else {
             bail!("push_token: unknown sequence {seq_id}");
         };
         seq.tokens.push(token);
-        if seq.first_token_at.is_none() {
+        let first = seq.first_token_at.is_none();
+        if first {
             seq.first_token_at = Some(Instant::now());
         }
-        Ok(())
+        Ok(first)
+    }
+
+    /// Free a sequence's KV slots and clear its device-visible metadata.
+    fn release(seq: &SeqState, kv: &mut KvCache, meta: &mut SlotMeta) {
+        if let Some(slots) = kv.slots_of(seq.id) {
+            let slots = slots.to_vec();
+            meta.clear_slots(&slots);
+        }
+        kv.free_seq(seq.id);
     }
 
     /// Remove finished sequences, freeing their KV slots; returns them.
@@ -334,11 +360,54 @@ impl Scheduler {
             if self.running[i].done() {
                 let mut seq = self.running.swap_remove(i);
                 seq.finished_at = Some(Instant::now());
-                if let Some(slots) = kv.slots_of(seq.id) {
-                    let slots = slots.to_vec();
-                    meta.clear_slots(&slots);
-                }
-                kv.free_seq(seq.id);
+                Self::release(&seq, kv, meta);
+                out.push(seq);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Remove a sequence wherever it is (queued or running), freeing any
+    /// KV slots it holds. Returns it, or `None` if unknown (already
+    /// finished, or never submitted).
+    pub fn cancel(&mut self, id: u64, kv: &mut KvCache, meta: &mut SlotMeta) -> Option<SeqState> {
+        if let Some(pos) = self.waiting.iter().position(|s| s.id == id) {
+            return self.waiting.remove(pos);
+        }
+        if let Some(pos) = self.running.iter().position(|s| s.id == id) {
+            let seq = self.running.swap_remove(pos);
+            Self::release(&seq, kv, meta);
+            return Some(seq);
+        }
+        None
+    }
+
+    /// Remove every sequence whose deadline is at or before `now`.
+    /// Queued sequences are dropped without ever occupying a batch slot;
+    /// running ones free their KV slots. The engine calls this ahead of
+    /// each batch build so an expired request cannot be admitted.
+    pub fn expire_deadlines(
+        &mut self,
+        now: Instant,
+        kv: &mut KvCache,
+        meta: &mut SlotMeta,
+    ) -> Vec<SeqState> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.waiting.len() {
+            if self.waiting[i].deadline.is_some_and(|d| d <= now) {
+                out.extend(self.waiting.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].deadline.is_some_and(|d| d <= now) {
+                let seq = self.running.swap_remove(i);
+                Self::release(&seq, kv, meta);
                 out.push(seq);
             } else {
                 i += 1;
@@ -489,6 +558,66 @@ mod tests {
         let _ = s.build_batch(&mut kv, &mut meta).unwrap();
         assert_eq!(s.adapter_work("math"), 2);
         assert_eq!(s.adapter_work("law"), 1);
+    }
+
+    #[test]
+    fn cancel_frees_kv_wherever_the_seq_is() {
+        let (mut s, mut kv, mut meta) = setup();
+        s.submit(seq(1, 4, 8));
+        // queued cancel: no KV held, just drops from waiting
+        assert_eq!(s.cancel(1, &mut kv, &mut meta).unwrap().id, 1);
+        assert!(s.is_idle());
+        assert!(s.cancel(1, &mut kv, &mut meta).is_none(), "idempotent");
+
+        // running cancel: KV slots must come back
+        s.submit(seq(2, 4, 8));
+        let _ = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        assert!(kv.used_slots() > 0);
+        let got = s.cancel(2, &mut kv, &mut meta).unwrap();
+        assert_eq!(got.id, 2);
+        assert_eq!(kv.used_slots(), 0);
+        assert!(s.is_idle());
+        // cleared slot metadata is device-consistent
+        assert!(meta.seg.iter().all(|&x| x == -1));
+    }
+
+    #[test]
+    fn expired_deadline_never_reaches_a_batch() {
+        let (mut s, mut kv, mut meta) = setup();
+        let mut dead = seq(1, 4, 2);
+        dead.deadline = Some(Instant::now() - std::time::Duration::from_millis(1));
+        s.submit(dead);
+        s.submit(seq(2, 4, 2));
+        let expired = s.expire_deadlines(Instant::now(), &mut kv, &mut meta);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].id, 1);
+        assert_eq!(expired[0].prefilled, 0, "expired while queued: no tokens fed");
+        // the live sequence still runs
+        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        assert_eq!(b.rows.len(), 1);
+        assert_eq!(b.rows[0].1, 2);
+
+        // a running sequence past deadline frees its KV on expiry
+        let mut dead = seq(3, 4, 8);
+        s.submit(seq(9, 2, 1));
+        dead.deadline = Some(Instant::now());
+        s.submit(dead);
+        let _ = s.build_batch(&mut kv, &mut meta).unwrap();
+        let used_before = kv.used_slots();
+        let expired = s.expire_deadlines(Instant::now(), &mut kv, &mut meta);
+        assert_eq!(expired.iter().filter(|e| e.id == 3).count(), 1);
+        assert!(used_before > 0);
+        assert!(kv.used_slots() < used_before);
+    }
+
+    #[test]
+    fn push_token_reports_ttft_edge() {
+        let (mut s, mut kv, mut meta) = setup();
+        s.submit(seq(1, 2, 3));
+        let _ = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        assert!(s.push_token(1, 5).unwrap(), "first generated token");
+        let _ = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        assert!(!s.push_token(1, 6).unwrap(), "second token is not First");
     }
 
     #[test]

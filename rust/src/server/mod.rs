@@ -1,10 +1,20 @@
 //! Online serving loop: real-time trace replay against one or more
 //! engine instances (the paper's section-5.2 experiment harness).
 //!
+//! Every replayer here is a *thin client* of the serving API
+//! ([`crate::serving::ServingBackend`]): requests are submitted as
+//! [`ServeRequest`]s, completions are gathered from each
+//! [`RequestHandle`]'s token stream, and rejection accounting lives in
+//! the backend. Benches and examples therefore exercise exactly the
+//! path a network frontend does.
+//!
 //! * [`Pacer`] — wall-clock pacing of trace arrival times, shared by
 //!   every replayer (including [`crate::coordinator::Coordinator`]).
-//! * [`replay`] — drive one engine with a [`Trace`], injecting requests at
-//!   their arrival times and stepping the engine whenever it has work.
+//! * [`replay_backend`] — drive *any* [`ServingBackend`] with a
+//!   [`Trace`]: inject arrivals on schedule, pump whenever the backend
+//!   has work, and collect streamed completions.
+//! * [`replay`] — single-engine wrapper that also finalizes the
+//!   engine's serving report.
 //! * [`replay_multi`] — run several isolated instances concurrently on
 //!   threads (the *vLLM-Ascend (Merged)* deployment of Fig. 6: one engine
 //!   per adapter, each receiving only its domain's requests). Engines are
@@ -14,9 +24,10 @@
 //!   [`crate::coordinator::Coordinator`]'s routing and admission control
 //!   instead of a static per-adapter split.
 
-use crate::engine::{Completion, Engine, RequestSpec};
+use crate::engine::{Completion, Engine};
 use crate::metrics::Report;
 use crate::sampler::Sampling;
+use crate::serving::{RequestHandle, ServeRequest, ServingBackend, TokenEvent};
 use crate::workload::trace::Trace;
 use anyhow::Result;
 use std::time::{Duration, Instant};
@@ -72,43 +83,75 @@ pub struct ReplayOutcome {
     pub rejected: usize,
 }
 
-/// Replay a trace against one engine in real time.
+/// Replay a trace against any serving backend in real time: inject each
+/// arrival at its trace time via [`ServingBackend::submit`], pump while
+/// the backend has work (sleeping until the next arrival when idle), and
+/// collect the completions streamed over each request's handle.
 ///
-/// The loop steps the engine whenever work is queued; with an idle
-/// engine it sleeps until the next arrival via [`Pacer::wait_until`].
+/// Returns `(completions, rejected)` where `rejected` counts submits the
+/// backend refused (typed [`crate::serving::SubmitError`]s — the
+/// backend's own report carries the authoritative rejected/shed split).
 /// Requests are greedy-sampled (accuracy experiments rely on
 /// determinism).
-pub fn replay(engine: &mut Engine, trace: &Trace) -> Result<ReplayOutcome> {
-    let pacer = Pacer::start();
+pub fn replay_backend<B: ServingBackend>(
+    backend: &mut B,
+    trace: &Trace,
+    pacer: &Pacer,
+) -> Result<(Vec<Completion>, usize)> {
     let mut next = 0usize;
-    let mut completions = Vec::new();
     let mut rejected = 0usize;
+    let mut handles: Vec<RequestHandle> = Vec::new();
+    let mut completions = Vec::new();
+    // drain each live stream, keep completions, drop finished handles —
+    // called inside the loop so token events are consumed as they are
+    // produced instead of accumulating for the whole run
+    let sweep = |handles: &mut Vec<RequestHandle>, completions: &mut Vec<Completion>| {
+        handles.retain(|h| {
+            let mut terminal = false;
+            for ev in h.drain_events() {
+                terminal = terminal || ev.is_terminal();
+                if let TokenEvent::Done { completion, .. } = ev {
+                    completions.push(completion);
+                }
+            }
+            !terminal
+        });
+    };
     loop {
         let now = pacer.now();
         while next < trace.events.len() && trace.events[next].at <= now {
             let e = &trace.events[next];
-            let spec = RequestSpec {
+            let req = ServeRequest {
                 adapter: e.adapter.clone(),
                 prompt: e.prompt.clone(),
                 max_new_tokens: e.max_new_tokens,
                 sampling: Sampling::Greedy,
+                deadline: None,
             };
-            if engine.submit(spec).is_err() {
-                engine.metrics.record_rejected();
-                rejected += 1;
+            match backend.submit(req) {
+                Ok(h) => handles.push(h),
+                Err(_) => rejected += 1,
             }
             next += 1;
         }
-        if engine.has_work() {
-            if let Some(mut done) = engine.step()? {
-                completions.append(&mut done);
-            }
+        if backend.has_work() {
+            backend.pump()?;
+            sweep(&mut handles, &mut completions);
         } else if next < trace.events.len() {
             pacer.wait_until(trace.events[next].at);
         } else {
             break;
         }
     }
+    sweep(&mut handles, &mut completions);
+    Ok((completions, rejected))
+}
+
+/// Replay a trace against one engine in real time (thin client of
+/// [`replay_backend`]), finalizing the engine's serving report.
+pub fn replay(engine: &mut Engine, trace: &Trace) -> Result<ReplayOutcome> {
+    let pacer = Pacer::start();
+    let (completions, rejected) = replay_backend(engine, trace, &pacer)?;
     engine.metrics.set_wall(pacer.elapsed());
     Ok(ReplayOutcome { report: engine.report(), completions, rejected })
 }
@@ -162,45 +205,16 @@ where
 
 /// Aggregate reports of isolated instances into one system-level view
 /// (throughputs add; latency summaries are merged request-weighted).
+/// Thin wrapper over [`Report::merge`] — the same merge the fleet
+/// coordinator uses for its aggregate.
 pub fn aggregate(outcomes: &[ReplayOutcome]) -> Report {
-    let mut requests = 0;
-    let mut prefill_tokens = 0;
-    let mut decode_tokens = 0;
-    let mut rejected = 0;
-    let mut shed = 0;
-    let mut wall: f64 = 0.0;
-    let mut ttft = crate::util::stats::Samples::new();
-    let mut tpot = crate::util::stats::Samples::new();
-    let mut e2e = crate::util::stats::Samples::new();
-    for o in outcomes {
-        requests += o.report.requests;
-        prefill_tokens += o.report.prefill_tokens;
-        decode_tokens += o.report.decode_tokens;
-        rejected += o.report.rejected;
-        shed += o.report.shed;
-        wall = wall.max(o.report.wall);
-        for c in &o.completions {
-            ttft.push(c.record.ttft.as_secs_f64());
-            if let Some(t) = c.record.tpot {
-                tpot.push(t.as_secs_f64());
-            }
-            e2e.push(c.record.e2e.as_secs_f64());
-        }
-    }
-    let wall = wall.max(1e-9);
-    Report {
-        requests,
-        prefill_tokens,
-        decode_tokens,
-        prefill_throughput: prefill_tokens as f64 / wall,
-        decode_throughput: decode_tokens as f64 / wall,
-        ttft: ttft.summary(),
-        tpot: tpot.summary(),
-        e2e: e2e.summary(),
-        wall,
-        rejected,
-        shed,
-    }
+    Report::merge(
+        outcomes.iter().map(|o| &o.report),
+        outcomes
+            .iter()
+            .flat_map(|o| o.completions.iter().map(|c| &c.record)),
+        None,
+    )
 }
 
 #[cfg(test)]
@@ -233,6 +247,20 @@ mod tests {
         let t0 = pacer.now();
         pacer.wait_until(0.0);
         assert!(pacer.now() - t0 < 0.005);
+    }
+
+    /// Aggregating zero outcomes (e.g. a trace with no adapter-bound
+    /// events split into zero per-adapter instances) must yield an
+    /// empty, renderable report — not ±inf/panic (regression).
+    #[test]
+    fn aggregate_of_nothing_is_empty_not_broken() {
+        let agg = aggregate(&[]);
+        assert_eq!(agg.requests, 0);
+        assert_eq!(agg.rejected + agg.shed + agg.aborted, 0);
+        assert!(agg.wall > 0.0 && agg.wall.is_finite());
+        assert_eq!(agg.goodput(), 0.0);
+        assert!(agg.ttft.median.is_nan());
+        let _ = agg.row("empty");
     }
 
     /// End-to-end replay over the simulated backend: every trace event

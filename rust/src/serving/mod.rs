@@ -1,0 +1,338 @@
+//! The online serving API: the typed request/response boundary every
+//! frontend (trace replay, the NDJSON TCP server, tests) talks to.
+//!
+//! The paper's value proposition is *online* multi-adapter serving, and
+//! the previous surface — `Engine::submit -> anyhow::Result<u64>` plus
+//! buffered completions out of `step()` — could not express the things
+//! an online boundary needs: incremental token delivery (TTFT is only
+//! observable if the first token leaves the engine when it is sampled),
+//! client-side cancellation, per-request deadlines, and machine-readable
+//! rejection reasons. This module owns those contracts:
+//!
+//! * [`ServeRequest`] — one request, addressed to an adapter by name
+//!   (the ESFT serving shape: the adapter *is* the routing key), with an
+//!   optional relative deadline.
+//! * [`ServingBackend`] — the trait implemented by both the
+//!   single-replica [`Engine`] and the fleet
+//!   [`Coordinator`]: `submit` / `pump` / `cancel` / `drain`.
+//! * [`RequestHandle`] — per-request stream of [`TokenEvent`]s over a
+//!   channel: `First` (TTFT edge), `Token`, then exactly one terminal
+//!   `Done` or `Aborted`.
+//! * [`SubmitError`] — typed admission failures (`UnknownAdapter`,
+//!   `QueueFull`, `Shed`, `ShuttingDown`, `Invalid`) instead of stringly
+//!   `anyhow` errors at the boundary.
+//!
+//! The trace replayers ([`crate::server::replay`] and friends) are thin
+//! clients of this API, so every bench and example exercises the same
+//! path a network frontend does. The NDJSON-over-TCP frontend lives in
+//! [`frontend`].
+//!
+//! [`Engine`]: crate::engine::Engine
+//! [`Coordinator`]: crate::coordinator::Coordinator
+
+pub mod frontend;
+
+use crate::engine::{Completion, RequestSpec};
+use crate::sampler::Sampling;
+use std::fmt;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// Backend-assigned request identifier, unique within one backend.
+pub type RequestId = u64;
+
+/// One online request as submitted through [`ServingBackend::submit`].
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Adapter name; `None` = base model.
+    pub adapter: Option<String>,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    /// Relative deadline from submission. A request that has not
+    /// *completed* by its deadline is aborted with
+    /// [`AbortReason::DeadlineExceeded`]; a request whose deadline
+    /// expires while still queued is dropped before ever occupying a
+    /// batch slot.
+    pub deadline: Option<Duration>,
+}
+
+impl From<RequestSpec> for ServeRequest {
+    fn from(spec: RequestSpec) -> ServeRequest {
+        ServeRequest {
+            adapter: spec.adapter,
+            prompt: spec.prompt,
+            max_new_tokens: spec.max_new_tokens,
+            sampling: spec.sampling,
+            deadline: None,
+        }
+    }
+}
+
+/// Why a request was admitted but not completed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AbortReason {
+    /// The client cancelled it ([`ServingBackend::cancel`]).
+    Cancelled,
+    /// Its deadline expired before completion.
+    DeadlineExceeded,
+    /// A post-routing engine rejection (fleet path: the routed replica
+    /// refused the submit, e.g. the adapter raced away after the
+    /// routing decision).
+    Rejected(SubmitError),
+}
+
+impl AbortReason {
+    /// Stable wire-format tag (the NDJSON frontend's `reason` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AbortReason::Cancelled => "cancelled",
+            AbortReason::DeadlineExceeded => "deadline",
+            AbortReason::Rejected(_) => "rejected",
+        }
+    }
+}
+
+/// One event in a request's token stream.
+///
+/// Ordering contract: zero or one `First`, then zero or more `Token`,
+/// then exactly one terminal event (`Done` or `Aborted`). A request
+/// aborted before its first token emits only `Aborted`.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// The first generated token (the TTFT edge).
+    First { id: RequestId, token: i32 },
+    /// A subsequent generated token.
+    Token { id: RequestId, token: i32 },
+    /// Terminal: the request completed; full output + latency record.
+    Done { id: RequestId, completion: Completion },
+    /// Terminal: the request was cancelled, deadline-expired, or
+    /// rejected after routing.
+    Aborted { id: RequestId, reason: AbortReason },
+}
+
+impl TokenEvent {
+    pub fn id(&self) -> RequestId {
+        match self {
+            TokenEvent::First { id, .. }
+            | TokenEvent::Token { id, .. }
+            | TokenEvent::Done { id, .. }
+            | TokenEvent::Aborted { id, .. } => *id,
+        }
+    }
+
+    /// Does this event end the stream?
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TokenEvent::Done { .. } | TokenEvent::Aborted { .. })
+    }
+
+    /// The same event re-addressed to `id` (the fleet coordinator maps
+    /// replica-local sequence ids to fleet request ids). `Done` payloads
+    /// are re-addressed too — `completion.id` must agree with the
+    /// stream's id, or per-replica sequence ids would collide fleet-wide.
+    pub fn reid(self, id: RequestId) -> TokenEvent {
+        match self {
+            TokenEvent::First { token, .. } => TokenEvent::First { id, token },
+            TokenEvent::Token { token, .. } => TokenEvent::Token { id, token },
+            TokenEvent::Done { mut completion, .. } => {
+                completion.id = id;
+                completion.record.id = id;
+                TokenEvent::Done { id, completion }
+            }
+            TokenEvent::Aborted { reason, .. } => TokenEvent::Aborted { id, reason },
+        }
+    }
+}
+
+/// Typed submission failure at the serving boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No deployment (or no fleet replica) can serve this adapter.
+    UnknownAdapter(String),
+    /// The admission queue budget for this backend (or this adapter's
+    /// fleet-wide outstanding budget) is exhausted; retry later.
+    QueueFull,
+    /// Admission control shed the request (no replica with capacity).
+    Shed,
+    /// The backend is draining and accepts no new work.
+    ShuttingDown,
+    /// The request itself is malformed (empty prompt, exceeds KV
+    /// capacity, ...).
+    Invalid(String),
+}
+
+impl SubmitError {
+    /// Stable wire-format tag (the NDJSON frontend's `code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            SubmitError::UnknownAdapter(_) => "unknown_adapter",
+            SubmitError::QueueFull => "queue_full",
+            SubmitError::Shed => "shed",
+            SubmitError::ShuttingDown => "shutting_down",
+            SubmitError::Invalid(_) => "invalid",
+        }
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownAdapter(n) => write!(f, "adapter {n:?} is not served here"),
+            SubmitError::QueueFull => write!(f, "admission queue is full"),
+            SubmitError::Shed => write!(f, "request shed by admission control"),
+            SubmitError::ShuttingDown => write!(f, "backend is shutting down"),
+            SubmitError::Invalid(why) => write!(f, "invalid request: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Client-side handle to one submitted request: the receive half of its
+/// [`TokenEvent`] stream plus the backend-assigned id (pass it to
+/// [`ServingBackend::cancel`]).
+///
+/// Events arrive when the backend is pumped. With an in-process
+/// [`Engine`] backend the submitting thread is also the pumping thread,
+/// so use the non-blocking accessors between pumps; with a threaded
+/// backend (fleet coordinator behind a pumping loop, or the TCP
+/// frontend) [`RequestHandle::recv_timeout`] can block.
+///
+/// [`Engine`]: crate::engine::Engine
+#[derive(Debug)]
+pub struct RequestHandle {
+    pub id: RequestId,
+    rx: Receiver<TokenEvent>,
+}
+
+impl RequestHandle {
+    /// Create a handle and the sender the backend feeds.
+    pub(crate) fn new(id: RequestId) -> (RequestHandle, Sender<TokenEvent>) {
+        let (tx, rx) = channel();
+        (RequestHandle { id, rx }, tx)
+    }
+
+    /// Next buffered event, if any (non-blocking).
+    pub fn try_event(&self) -> Option<TokenEvent> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Wait up to `timeout` for the next event (threaded backends).
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<TokenEvent, RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
+    }
+
+    /// Drain every buffered event (non-blocking).
+    pub fn drain_events(&self) -> Vec<TokenEvent> {
+        let mut out = Vec::new();
+        while let Some(ev) = self.try_event() {
+            out.push(ev);
+        }
+        out
+    }
+}
+
+/// A serving backend: something that admits requests, produces token
+/// streams, and can cancel and drain. Implemented by the single-replica
+/// [`Engine`] and the fleet [`Coordinator`].
+///
+/// [`Engine`]: crate::engine::Engine
+/// [`Coordinator`]: crate::coordinator::Coordinator
+pub trait ServingBackend {
+    /// Admit one request. On success the request is queued and its
+    /// events will flow through the returned handle as the backend is
+    /// pumped. On failure the typed reason is returned immediately and
+    /// the backend's `rejected`/`shed` accounting is updated — callers
+    /// do not keep their own rejection books.
+    fn submit(&mut self, req: ServeRequest) -> Result<RequestHandle, SubmitError>;
+
+    /// Advance work: run one engine step (in-process engine) or process
+    /// pending replica events (fleet). Returns whether work remains.
+    fn pump(&mut self) -> anyhow::Result<bool>;
+
+    /// Cancel a request by id. Queued requests are dropped before ever
+    /// occupying a batch slot; running requests are aborted and their KV
+    /// slots freed. Returns `false` for ids not in flight (already
+    /// terminal, or never admitted). The stream receives
+    /// [`TokenEvent::Aborted`] with [`AbortReason::Cancelled`].
+    fn cancel(&mut self, id: RequestId) -> bool;
+
+    /// Is any admitted request still queued or running?
+    fn has_work(&self) -> bool;
+
+    /// Finish all in-flight work, then stop admitting: every subsequent
+    /// `submit` fails with [`SubmitError::ShuttingDown`]. Pumps
+    /// internally until idle.
+    fn drain(&mut self) -> anyhow::Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_error_codes_are_stable() {
+        let cases = [
+            (SubmitError::UnknownAdapter("x".into()), "unknown_adapter"),
+            (SubmitError::QueueFull, "queue_full"),
+            (SubmitError::Shed, "shed"),
+            (SubmitError::ShuttingDown, "shutting_down"),
+            (SubmitError::Invalid("y".into()), "invalid"),
+        ];
+        for (e, code) in cases {
+            assert_eq!(e.code(), code);
+            assert!(!e.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn token_event_reid_and_terminality() {
+        let ev = TokenEvent::First { id: 1, token: 7 };
+        assert!(!ev.is_terminal());
+        let ev = ev.reid(42);
+        assert_eq!(ev.id(), 42);
+        let done = TokenEvent::Aborted { id: 3, reason: AbortReason::Cancelled };
+        assert!(done.is_terminal());
+        assert_eq!(done.reid(9).id(), 9);
+        // Done payloads are re-addressed too (fleet rid mapping)
+        let completion = Completion {
+            id: 3,
+            adapter: None,
+            output: vec![],
+            record: crate::metrics::RequestRecord {
+                id: 3,
+                adapter: None,
+                prompt_tokens: 1,
+                output_tokens: 0,
+                ttft: Duration::ZERO,
+                tpot: None,
+                e2e: Duration::ZERO,
+            },
+        };
+        let TokenEvent::Done { id, completion } =
+            (TokenEvent::Done { id: 3, completion }).reid(42)
+        else {
+            panic!("reid must preserve the variant");
+        };
+        assert_eq!(id, 42);
+        assert_eq!(completion.id, 42);
+        assert_eq!(completion.record.id, 42);
+        assert_eq!(AbortReason::DeadlineExceeded.as_str(), "deadline");
+        assert_eq!(
+            AbortReason::Rejected(SubmitError::QueueFull).as_str(),
+            "rejected"
+        );
+    }
+
+    #[test]
+    fn handle_streams_in_order() {
+        let (h, tx) = RequestHandle::new(5);
+        assert!(h.try_event().is_none());
+        tx.send(TokenEvent::First { id: 5, token: 1 }).unwrap();
+        tx.send(TokenEvent::Token { id: 5, token: 2 }).unwrap();
+        let evs = h.drain_events();
+        assert_eq!(evs.len(), 2);
+        assert!(matches!(evs[0], TokenEvent::First { token: 1, .. }));
+        assert!(matches!(evs[1], TokenEvent::Token { token: 2, .. }));
+    }
+}

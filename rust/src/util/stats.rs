@@ -87,8 +87,24 @@ impl Samples {
         self.percentile(99.0)
     }
 
-    /// `(mean, median, p99, min, max)` summary tuple.
+    /// `(mean, median, p99, min, max)` summary tuple. An empty sample
+    /// set yields NaN statistics across the board (not the fold
+    /// identities ±inf for min/max), so empty-run reports render as
+    /// "NaN" rather than pseudo-values — regression guard for
+    /// aggregation over zero outcomes.
     pub fn summary(&mut self) -> Summary {
+        if self.values.is_empty() {
+            return Summary {
+                n: 0,
+                mean: f64::NAN,
+                median: f64::NAN,
+                p90: f64::NAN,
+                p99: f64::NAN,
+                min: f64::NAN,
+                max: f64::NAN,
+                std: 0.0,
+            };
+        }
         Summary {
             n: self.len(),
             mean: self.mean(),
@@ -216,6 +232,11 @@ mod tests {
         let mut s = Samples::new();
         assert!(s.mean().is_nan());
         assert!(s.median().is_nan());
+        let sum = s.summary();
+        assert_eq!(sum.n, 0);
+        assert!(sum.mean.is_nan());
+        assert!(sum.min.is_nan() && sum.max.is_nan(), "no ±inf fold identities");
+        assert_eq!(sum.std, 0.0);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Fleet coordinator end to end over the sim backend: routing,
-//! load-on-miss lifecycle, admission control and accounting invariants.
+//! load-on-miss lifecycle, admission control, accounting invariants,
+//! and the fleet's serving-API surface (streaming, cancel, drain).
 
 use expertweave::adapters::format::Adapter;
 use expertweave::adapters::generator::synth_fleet_adapters;
@@ -7,6 +8,10 @@ use expertweave::coordinator::{Coordinator, CoordinatorConfig, RoutingPolicy};
 use expertweave::engine::{Engine, EngineOptions};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{SimPerf, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::serving::{
+    AbortReason, ServeRequest, ServingBackend, SubmitError, TokenEvent,
+};
 use expertweave::weights::StoreMode;
 use expertweave::workload::trace::{Trace, TraceEvent, TraceSpec};
 
@@ -145,8 +150,13 @@ fn bounded_queues_shed_and_unknown_adapters_are_refused() {
         "burst of 12 against queue_cap=2 must shed: {:?}",
         outcome.stats
     );
-    assert!(outcome.stats.shed_no_capacity >= 1, "ghost adapter must be shed");
+    assert!(
+        outcome.stats.submit_rejected >= 1,
+        "ghost adapter must be a typed UnknownAdapter rejection: {:?}",
+        outcome.stats
+    );
     assert_eq!(outcome.report.shed, outcome.stats.shed_total());
+    assert_eq!(outcome.report.rejected, outcome.stats.submit_rejected);
 }
 
 #[test]
@@ -193,6 +203,99 @@ fn hot_adapter_gets_replicated() {
         .filter(|r| r.requests > 0)
         .count();
     assert_eq!(served, 2, "replication must spread the hot adapter");
+}
+
+/// The fleet's serving-API surface used directly (no trace replay):
+/// typed submits, per-token streaming across the replica boundary,
+/// cancel relayed to the owning replica, drain + finish.
+#[test]
+fn fleet_serving_backend_streams_cancels_and_drains() {
+    let c = cfg(2);
+    let ads = adapters(&c, 2);
+    let mut coord = launch(
+        &c,
+        CoordinatorConfig {
+            replicas: 2,
+            policy: RoutingPolicy::AdapterAffinity,
+            adapter_capacity: 2,
+            queue_cap: 0,
+            replicate_rps: f64::INFINITY,
+            rate_halflife: 1.0,
+            max_copies: 2,
+        },
+        ads.clone(),
+    );
+    let started = std::time::Instant::now();
+    let req = |name: &str, max_new: usize| ServeRequest {
+        adapter: Some(name.to_string()),
+        prompt: (1..=8).collect(),
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        deadline: None,
+    };
+
+    // unknown adapter: typed rejection at the fleet door
+    match coord.submit(req("ghost", 1)) {
+        Err(SubmitError::UnknownAdapter(n)) => assert_eq!(n, "ghost"),
+        other => panic!("expected UnknownAdapter, got {other:?}"),
+    }
+
+    // a long request streams tokens across the replica boundary
+    let long = coord.submit(req(&ads[0].name, 2000)).unwrap();
+    let mut events = Vec::new();
+    for _ in 0..2000 {
+        coord.pump().unwrap();
+        events.extend(long.drain_events());
+        if events.iter().any(|ev| matches!(ev, TokenEvent::First { .. })) {
+            break;
+        }
+    }
+    assert!(
+        events.iter().any(|ev| matches!(ev, TokenEvent::First { .. })),
+        "no First token streamed from the replica"
+    );
+
+    // cancel mid-decode: relayed to the replica, stream ends Aborted
+    assert!(coord.cancel(long.id), "cancel must route to the replica");
+    for _ in 0..2000 {
+        coord.pump().unwrap();
+        events.extend(long.drain_events());
+        if events.iter().any(|ev| matches!(ev, TokenEvent::Aborted { .. })) {
+            break;
+        }
+    }
+    assert!(
+        matches!(
+            events.last(),
+            Some(TokenEvent::Aborted { reason: AbortReason::Cancelled, .. })
+        ),
+        "stream must end Aborted(Cancelled): {} events",
+        events.len()
+    );
+
+    // a short request completes with Done; drain waits for it
+    let short = coord.submit(req(&ads[1].name, 3)).unwrap();
+    coord.drain().unwrap();
+    assert!(short
+        .drain_events()
+        .iter()
+        .any(|ev| matches!(ev, TokenEvent::Done { .. })));
+    match coord.submit(req(&ads[0].name, 1)) {
+        Err(SubmitError::ShuttingDown) => {}
+        other => panic!("post-drain submit must be ShuttingDown, got {other:?}"),
+    }
+
+    let (per_replica, stats) = coord.finish(started).unwrap();
+    assert_eq!(per_replica.len(), 2);
+    let aborted: usize = per_replica.iter().map(|r| r.aborted).sum();
+    let completed: usize = per_replica.iter().map(|r| r.requests).sum();
+    assert_eq!(aborted, 1, "the cancelled request is booked on its replica");
+    assert_eq!(completed, 1);
+    assert_eq!(stats.routed, 2);
+    assert_eq!(
+        stats.submit_rejected, 2,
+        "ghost + the post-drain ShuttingDown refusal"
+    );
 }
 
 #[test]

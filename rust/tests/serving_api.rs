@@ -1,0 +1,301 @@
+//! Serving-API integration over the sim backend: token streaming,
+//! cancellation (KV reclaim), deadlines (no batch slot for expired
+//! requests), drain semantics, typed submit errors — and the NDJSON
+//! TCP frontend end to end (submit, stream, cancel, drain).
+
+use expertweave::adapters::generator::synth_fleet_adapters;
+use expertweave::engine::{Engine, EngineOptions};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{SimPerf, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::serving::frontend::NdjsonServer;
+use expertweave::serving::{
+    AbortReason, ServeRequest, ServingBackend, SubmitError, TokenEvent,
+};
+use expertweave::weights::StoreMode;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn sim_engine(opts: EngineOptions) -> (Engine, Vec<String>) {
+    let cfg = ModelConfig::sim_default();
+    let adapters = synth_fleet_adapters(&cfg, 2, 42);
+    let names = adapters.iter().map(|a| a.name.clone()).collect();
+    let engine = Engine::sim_weave(
+        &cfg,
+        SimPerf::fast(),
+        &adapters,
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions { page_size: 64 << 10, ..opts },
+    )
+    .unwrap();
+    (engine, names)
+}
+
+fn req(adapter: Option<&str>, prompt_len: usize, max_new: usize) -> ServeRequest {
+    ServeRequest {
+        adapter: adapter.map(str::to_string),
+        prompt: (1..=prompt_len as i32).collect(),
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        deadline: None,
+    }
+}
+
+#[test]
+fn stream_orders_first_tokens_done() {
+    let (mut e, names) = sim_engine(EngineOptions::default());
+    let h = e.submit_request(req(Some(&names[0]), 6, 4)).unwrap();
+    while ServingBackend::pump(&mut e).unwrap() {}
+    let evs = h.drain_events();
+    assert_eq!(evs.len(), 5, "First + 3 Token + Done");
+    assert!(matches!(evs[0], TokenEvent::First { .. }));
+    for ev in &evs[1..4] {
+        assert!(matches!(ev, TokenEvent::Token { .. }));
+    }
+    let TokenEvent::Done { completion, .. } = &evs[4] else {
+        panic!("last event must be Done: {:?}", evs[4]);
+    };
+    // the streamed tokens ARE the completion's output, in order
+    let streamed: Vec<i32> = evs[..4]
+        .iter()
+        .map(|ev| match ev {
+            TokenEvent::First { token, .. } | TokenEvent::Token { token, .. } => *token,
+            other => panic!("unexpected {other:?}"),
+        })
+        .collect();
+    assert_eq!(streamed, completion.output);
+    assert_eq!(completion.record.output_tokens, 4);
+}
+
+#[test]
+fn cancel_mid_decode_frees_kv_and_marks_aborted() {
+    let (mut e, names) = sim_engine(EngineOptions::default());
+    let kv_cap = e.config().kv_cap;
+    let h = e.submit_request(req(Some(&names[0]), 8, 512)).unwrap();
+    // pump until the request is decoding (First token seen)
+    let mut first_seen = false;
+    for _ in 0..64 {
+        ServingBackend::pump(&mut e).unwrap();
+        if h.drain_events().iter().any(|ev| matches!(ev, TokenEvent::First { .. })) {
+            first_seen = true;
+            break;
+        }
+    }
+    assert!(first_seen, "request never started decoding");
+    assert!(e.kv_free_slots() < kv_cap, "mid-decode: KV slots held");
+
+    assert!(ServingBackend::cancel(&mut e, h.id), "cancel must find it");
+    assert_eq!(e.kv_free_slots(), kv_cap, "cancel frees KV immediately");
+    assert!(!ServingBackend::has_work(&e));
+    let evs = h.drain_events();
+    assert!(
+        matches!(
+            evs.last(),
+            Some(TokenEvent::Aborted { reason: AbortReason::Cancelled, .. })
+        ),
+        "stream must end Aborted(Cancelled): {evs:?}"
+    );
+    assert!(!ServingBackend::cancel(&mut e, h.id), "idempotent");
+    let report = e.report();
+    assert_eq!(report.aborted, 1);
+    assert_eq!(report.deadline_missed, 0);
+    assert_eq!(report.requests, 0, "aborted request is not a completion");
+}
+
+#[test]
+fn expired_deadline_never_occupies_a_batch_slot() {
+    let (mut e, names) = sim_engine(EngineOptions::default());
+    let mut dead = req(Some(&names[0]), 8, 8);
+    dead.deadline = Some(Duration::ZERO); // expired before the first pump
+    let h_dead = e.submit_request(dead).unwrap();
+    let h_live = e.submit_request(req(Some(&names[1]), 8, 2)).unwrap();
+    while ServingBackend::pump(&mut e).unwrap() {}
+
+    let evs = h_dead.drain_events();
+    assert_eq!(evs.len(), 1, "no token may precede the abort: {evs:?}");
+    assert!(matches!(
+        evs[0],
+        TokenEvent::Aborted { reason: AbortReason::DeadlineExceeded, .. }
+    ));
+    assert!(h_live
+        .drain_events()
+        .iter()
+        .any(|ev| matches!(ev, TokenEvent::Done { .. })));
+    let report = e.report();
+    assert_eq!(report.deadline_missed, 1);
+    assert_eq!(report.aborted, 1);
+    assert_eq!(report.requests, 1, "only the live request completed");
+}
+
+#[test]
+fn drain_completes_in_flight_then_rejects_new_submits() {
+    let (mut e, names) = sim_engine(EngineOptions::default());
+    let h1 = e.submit_request(req(Some(&names[0]), 6, 3)).unwrap();
+    let h2 = e.submit_request(req(None, 4, 2)).unwrap();
+    ServingBackend::drain(&mut e).unwrap();
+    for h in [&h1, &h2] {
+        assert!(
+            h.drain_events().iter().any(|ev| matches!(ev, TokenEvent::Done { .. })),
+            "drain must complete in-flight work"
+        );
+    }
+    assert!(!ServingBackend::has_work(&e));
+    match ServingBackend::submit(&mut e, req(None, 4, 1)) {
+        Err(SubmitError::ShuttingDown) => {}
+        other => panic!("post-drain submit must be ShuttingDown, got {other:?}"),
+    }
+    let report = e.report();
+    assert_eq!(report.requests, 2);
+    assert_eq!(report.rejected, 1, "ShuttingDown rejections are counted");
+}
+
+#[test]
+fn typed_submit_errors_and_internal_rejection_accounting() {
+    let (mut e, _names) = sim_engine(EngineOptions { queue_cap: 1, ..Default::default() });
+    match e.submit_request(req(Some("ghost"), 4, 1)) {
+        Err(SubmitError::UnknownAdapter(n)) => assert_eq!(n, "ghost"),
+        other => panic!("expected UnknownAdapter, got {other:?}"),
+    }
+    match e.submit_request(ServeRequest { prompt: vec![], ..req(None, 1, 1) }) {
+        Err(SubmitError::Invalid(_)) => {}
+        other => panic!("expected Invalid, got {other:?}"),
+    }
+    let kv_cap = e.config().kv_cap;
+    match e.submit_request(req(None, 8, kv_cap)) {
+        Err(SubmitError::Invalid(_)) => {}
+        other => panic!("expected Invalid (KV overflow), got {other:?}"),
+    }
+    // queue_cap = 1: the second queued submit is QueueFull
+    let _h = e.submit_request(req(None, 4, 1)).unwrap();
+    match e.submit_request(req(None, 4, 1)) {
+        Err(SubmitError::QueueFull) => {}
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    while ServingBackend::pump(&mut e).unwrap() {}
+    // every rejection above was booked by the engine itself
+    let report = e.report();
+    assert_eq!(report.rejected, 4);
+    assert_eq!(report.requests, 1);
+}
+
+// ---------------------------------------------------------------------
+// NDJSON TCP frontend, end to end on the sim backend.
+// ---------------------------------------------------------------------
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        let writer = stream.try_clone().unwrap();
+        Client { reader: BufReader::new(stream), writer }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").unwrap();
+    }
+
+    fn next_event(&mut self) -> expertweave::util::json::Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "server closed the connection unexpectedly");
+        expertweave::util::json::Json::parse(line.trim()).unwrap()
+    }
+
+    /// Read events until one matches `event` for request `id`.
+    fn wait_for(&mut self, id: &str, event: &str) -> expertweave::util::json::Json {
+        for _ in 0..10_000 {
+            let ev = self.next_event();
+            if ev.get("id").and_then(|i| i.as_str()) == Some(id)
+                && ev.get("event").and_then(|e| e.as_str()) == Some(event)
+            {
+                return ev;
+            }
+        }
+        panic!("no {event:?} event for {id:?}");
+    }
+}
+
+#[test]
+fn ndjson_tcp_serve_stream_cancel_drain() {
+    let server = NdjsonServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let serving = std::thread::spawn(move || {
+        // the engine lives entirely on the serving thread (same rule as
+        // fleet replicas: engines never cross threads)
+        let (mut engine, names) = sim_engine(EngineOptions::default());
+        server.run(&mut engine).unwrap();
+        let report = engine.report();
+        (report, names)
+    });
+
+    // discover the adapter names the same way the serving thread does
+    let adapter = {
+        let cfg = ModelConfig::sim_default();
+        synth_fleet_adapters(&cfg, 2, 42)[0].name.clone()
+    };
+
+    let mut c = Client::connect(addr);
+
+    // 1) submit and stream to completion
+    c.send(&format!(
+        r#"{{"id":"r1","adapter":"{adapter}","prompt":[1,2,3,4],"max_new_tokens":3}}"#
+    ));
+    let first = c.wait_for("r1", "first");
+    assert!(first.get("token").and_then(|t| t.as_i64()).is_some());
+    let done = c.wait_for("r1", "done");
+    let tokens = done.get("tokens").and_then(|t| t.as_arr()).unwrap();
+    assert_eq!(tokens.len(), 3);
+    assert!(done.get("ttft_ms").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+
+    // 2) cancel one mid-stream
+    c.send(r#"{"id":"r2","prompt":[5,6,7],"max_new_tokens":4000}"#);
+    let _ = c.wait_for("r2", "first");
+    c.send(r#"{"op":"cancel","id":"r2"}"#);
+    let aborted = c.wait_for("r2", "aborted");
+    assert_eq!(
+        aborted.get("reason").and_then(|r| r.as_str()),
+        Some("cancelled")
+    );
+
+    // 3) typed error for an unknown adapter
+    c.send(r#"{"id":"r3","adapter":"ghost","prompt":[1],"max_new_tokens":1}"#);
+    let err = c.wait_for("r3", "error");
+    assert_eq!(
+        err.get("code").and_then(|c| c.as_str()),
+        Some("unknown_adapter")
+    );
+
+    // 4) a second connection is served concurrently
+    let mut c2 = Client::connect(addr);
+    c2.send(r#"{"id":"x","prompt":[9,8],"max_new_tokens":2}"#);
+    let done2 = c2.wait_for("x", "done");
+    assert_eq!(
+        done2.get("tokens").and_then(|t| t.as_arr()).unwrap().len(),
+        2
+    );
+
+    // 5) graceful drain: ack on every connection, then server exit
+    c.send(r#"{"op":"drain"}"#);
+    loop {
+        let ev = c.next_event();
+        if ev.get("event").and_then(|e| e.as_str()) == Some("drained") {
+            break;
+        }
+    }
+    drop(c);
+    drop(c2);
+    let (report, _names) = serving.join().unwrap();
+    // r1 + x completed; r2 cancelled; r3 rejected
+    assert_eq!(report.requests, 2);
+    assert_eq!(report.aborted, 1);
+    assert_eq!(report.rejected, 1);
+}
