@@ -1,0 +1,224 @@
+//! Figure 11 — step-pipeline hot path: steady-state decode steps/sec
+//! (and, with the `alloc-counter` feature, allocations per step) for the
+//! zero-allocation fast path (persistent `StepWorkspace` + greedy-token
+//! read-off) vs the legacy-equivalent full-logits path
+//! (`EngineOptions::sim_full_logits`, which materializes the whole
+//! `out_rows × vocab` tensor every step like the pre-workspace pipeline
+//! did).
+//!
+//! Runs on the sim backend with `SimPerf::instant()` — no latency
+//! injection — so the measurement is pure pipeline overhead: scheduler
+//! packing, KV slot allocation, fused batched reroute, output delivery.
+//!
+//! Emits `target/bench_results/BENCH_hotpath.json` — the first point of
+//! the repo's perf trajectory; later PRs append comparable runs.
+//!
+//! `cargo bench --bench fig11_hotpath [-- --seqs 16 --steps 512 --reps 3]`
+
+use expertweave::adapters::format::Adapter;
+use expertweave::adapters::generator::synth_fleet_adapters;
+use expertweave::bench::Table;
+use expertweave::engine::{Engine, EngineOptions, RequestSpec};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{SimPerf, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::util::args::Args;
+use expertweave::util::json::{obj, Json};
+use expertweave::weights::StoreMode;
+use std::io::Write;
+use std::time::Instant;
+
+#[cfg(feature = "alloc-counter")]
+mod counting {
+    use expertweave::util::alloc_counter::{allocations as count, CountingAlloc};
+
+    #[global_allocator]
+    static GLOBAL: CountingAlloc = CountingAlloc;
+
+    pub fn allocations() -> Option<u64> {
+        Some(count())
+    }
+}
+
+#[cfg(not(feature = "alloc-counter"))]
+mod counting {
+    pub fn allocations() -> Option<u64> {
+        None
+    }
+}
+
+struct RunResult {
+    steps_per_sec: f64,
+    ns_per_step: f64,
+    allocs_per_step: Option<f64>,
+}
+
+/// Drive one engine into steady-state decode and time `steps` steps.
+fn run_decode(
+    cfg: &ModelConfig,
+    adapters: &[Adapter],
+    full_logits: bool,
+    seqs: usize,
+    warmup: usize,
+    steps: usize,
+) -> anyhow::Result<RunResult> {
+    let mut e = Engine::sim_weave(
+        cfg,
+        SimPerf::instant(),
+        adapters,
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions {
+            page_size: 64 << 10,
+            sim_full_logits: full_logits,
+            ..Default::default()
+        },
+    )?;
+    e.metrics.reserve_steps(warmup + steps + 16);
+    for i in 0..seqs {
+        let who = (i % 2 == 0).then(|| adapters[0].name.clone());
+        e.submit(RequestSpec {
+            adapter: who,
+            prompt: (1..=8).collect(),
+            max_new_tokens: warmup + steps + 8,
+            sampling: Sampling::Greedy,
+        })?;
+    }
+    for _ in 0..warmup {
+        e.step()?;
+    }
+    let (waiting, running) = e.queue_depth();
+    anyhow::ensure!(
+        waiting == 0 && running == seqs,
+        "not in steady decode: {waiting} waiting, {running}/{seqs} running"
+    );
+    let a0 = counting::allocations();
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        e.step()?;
+    }
+    let dt = t0.elapsed().as_secs_f64().max(1e-12);
+    let allocs_per_step = a0
+        .zip(counting::allocations())
+        .map(|(before, after)| (after - before) as f64 / steps as f64);
+    e.run_to_completion()?;
+    Ok(RunResult {
+        steps_per_sec: steps as f64 / dt,
+        ns_per_step: dt * 1e9 / steps as f64,
+        allocs_per_step,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::new("fig11_hotpath", "steady-state step pipeline microbench")
+        .opt("seqs", Some("16"), "decoding sequences (= decode batch)")
+        .opt("steps", Some("512"), "timed steps per run")
+        .opt("warmup", Some("64"), "untimed steps before measuring")
+        .opt("reps", Some("3"), "repetitions (best-of reported)")
+        .parse_env()
+        .map_err(anyhow::Error::msg)?;
+    let seqs: usize = a.get_usize("seqs").map_err(anyhow::Error::msg)?;
+    let steps: usize = a.get_usize("steps").map_err(anyhow::Error::msg)?;
+    let warmup: usize = a.get_usize("warmup").map_err(anyhow::Error::msg)?;
+    let reps: usize = a.get_usize("reps").map_err(anyhow::Error::msg)?.max(1);
+
+    let mut cfg = ModelConfig::sim_default();
+    cfg.max_seqs = cfg.max_seqs.max(seqs);
+    // room for every sequence's full lifetime (conservative reservation)
+    cfg.kv_cap = seqs * (8 + warmup + steps + 16);
+    anyhow::ensure!(
+        seqs <= *cfg.buckets.last().unwrap(),
+        "--seqs exceeds the largest token bucket"
+    );
+    let adapters = synth_fleet_adapters(&cfg, 2, 42);
+
+    let mut fast = None::<RunResult>;
+    let mut full = None::<RunResult>;
+    for _ in 0..reps {
+        // interleave so host drift cancels
+        let f = run_decode(&cfg, &adapters, false, seqs, warmup, steps)?;
+        let l = run_decode(&cfg, &adapters, true, seqs, warmup, steps)?;
+        if fast.as_ref().is_none_or(|b| f.steps_per_sec > b.steps_per_sec) {
+            fast = Some(f);
+        }
+        if full.as_ref().is_none_or(|b| l.steps_per_sec > b.steps_per_sec) {
+            full = Some(l);
+        }
+    }
+    let fast = fast.unwrap();
+    let full = full.unwrap();
+    anyhow::ensure!(fast.steps_per_sec > 0.0, "fast path measured zero steps/sec");
+    let speedup = fast.steps_per_sec / full.steps_per_sec.max(1e-12);
+
+    let fmt_allocs = |a: Option<f64>| match a {
+        Some(v) => format!("{v:.2}"),
+        None => "n/a (build with --features alloc-counter)".into(),
+    };
+    let mut t = Table::new(&["path", "steps/s", "ns/step", "allocs/step"]);
+    t.row(&[
+        "fastpath (workspace+tokens)".into(),
+        format!("{:.0}", fast.steps_per_sec),
+        format!("{:.0}", fast.ns_per_step),
+        fmt_allocs(fast.allocs_per_step),
+    ]);
+    t.row(&[
+        "full-logits (legacy-equiv)".into(),
+        format!("{:.0}", full.steps_per_sec),
+        format!("{:.0}", full.ns_per_step),
+        fmt_allocs(full.allocs_per_step),
+    ]);
+    t.print(&format!(
+        "Figure 11 — steady-state decode hot path ({seqs}-seq batch, \
+         {steps} steps, no latency injection): {speedup:.1}x"
+    ));
+    t.write_csv("fig11_hotpath").ok();
+    if speedup < 5.0 {
+        eprintln!("[fig11] WARNING: speedup {speedup:.1}x below the 5x target");
+    }
+
+    let json = obj(vec![
+        ("bench", Json::Str("fig11_hotpath".into())),
+        (
+            "config",
+            obj(vec![
+                ("seqs", Json::Int(seqs as i64)),
+                ("steps", Json::Int(steps as i64)),
+                ("warmup", Json::Int(warmup as i64)),
+                ("reps", Json::Int(reps as i64)),
+                ("vocab", Json::Int(cfg.vocab as i64)),
+                ("layers", Json::Int(cfg.layers as i64)),
+                ("top_k", Json::Int(cfg.top_k as i64)),
+            ]),
+        ),
+        (
+            "fastpath",
+            obj(vec![
+                ("steps_per_sec", Json::Num(fast.steps_per_sec)),
+                ("ns_per_step", Json::Num(fast.ns_per_step)),
+                (
+                    "allocs_per_step",
+                    fast.allocs_per_step.map_or(Json::Null, Json::Num),
+                ),
+            ]),
+        ),
+        (
+            "full_logits",
+            obj(vec![
+                ("steps_per_sec", Json::Num(full.steps_per_sec)),
+                ("ns_per_step", Json::Num(full.ns_per_step)),
+                (
+                    "allocs_per_step",
+                    full.allocs_per_step.map_or(Json::Null, Json::Num),
+                ),
+            ]),
+        ),
+        ("speedup", Json::Num(speedup)),
+    ]);
+    let dir = std::path::Path::new("target/bench_results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_hotpath.json");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{json}")?;
+    eprintln!("[fig11] wrote {}", path.display());
+    Ok(())
+}

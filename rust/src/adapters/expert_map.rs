@@ -42,6 +42,26 @@ impl ExpertMaps {
         ExpertMaps { layers: l, n_adapters: n, m, e_max: cfg.e_max, data }
     }
 
+    /// Rebuild a host map from its flattened `[L, N+1, M]` device image
+    /// (the simulated runtime reconstructs the uploaded tensor this way).
+    pub fn from_flat(
+        layers: usize,
+        n_adapters: usize,
+        m: usize,
+        e_max: usize,
+        data: Vec<i32>,
+    ) -> Result<Self> {
+        let want = layers * (n_adapters + 1) * m;
+        if data.len() != want {
+            bail!(
+                "expert map image has {} elements, [{layers}, {}, {m}] wants {want}",
+                data.len(),
+                n_adapters + 1
+            );
+        }
+        Ok(ExpertMaps { layers, n_adapters, m, e_max, data })
+    }
+
     /// Flattened `[L, N+1, M]` i32 view (device upload).
     pub fn as_slice(&self) -> &[i32] {
         &self.data
@@ -120,13 +140,64 @@ impl ExpertMaps {
         Ok(())
     }
 
-    /// Host-side rerouting (reference + scheduler-side validation):
-    /// `TopK'(x) = { Π[A(x), j] : j ∈ TopK(x) }`.
+    /// Host-side rerouting of one token's top-k (reference semantics):
+    /// `TopK'(x) = { Π[A(x), j] : j ∈ TopK(x) }`. Allocates; the hot
+    /// path is the fused [`ExpertMaps::reroute_batch`].
     pub fn reroute(&self, layer: usize, aid: i32, top_k: &[i32]) -> Vec<i32> {
         top_k
             .iter()
             .map(|&j| self.lookup(layer, aid, j as usize))
             .collect()
+    }
+
+    /// Fused batched rerouting: rewrite a whole batch's top-k expert ids
+    /// in one pass into a caller-owned buffer — the host analogue of the
+    /// paper's fused rerouting kernel (one gather per element, no
+    /// per-token dispatch, no allocation).
+    ///
+    /// `aids[i]` is token `i`'s adapter id (-1 = base); `top_k` is the
+    /// `[tokens, K]`-flattened base-expert ids (so `K = top_k.len() /
+    /// aids.len()`); `out` receives the rerouted virtual-tensor slots in
+    /// the same layout.
+    pub fn reroute_batch(
+        &self,
+        layer: usize,
+        aids: &[i32],
+        top_k: &[i32],
+        out: &mut [i32],
+    ) -> Result<()> {
+        if layer >= self.layers {
+            bail!("layer {layer} out of range (L = {})", self.layers);
+        }
+        if aids.is_empty() {
+            if !top_k.is_empty() || !out.is_empty() {
+                bail!("empty batch with non-empty top_k/out");
+            }
+            return Ok(());
+        }
+        if top_k.len() % aids.len() != 0 || out.len() != top_k.len() {
+            bail!(
+                "shape mismatch: {} aids, {} top_k, {} out",
+                aids.len(),
+                top_k.len(),
+                out.len()
+            );
+        }
+        let k = top_k.len() / aids.len();
+        for (i, &aid) in aids.iter().enumerate() {
+            if aid < -1 || aid >= self.n_adapters as i32 {
+                bail!("token {i}: adapter id {aid} out of range (N = {})", self.n_adapters);
+            }
+            let base = (layer * (self.n_adapters + 1) + (aid + 1) as usize) * self.m;
+            for j in 0..k {
+                let e = top_k[i * k + j];
+                if e < 0 || e as usize >= self.m {
+                    bail!("token {i}: expert id {e} out of range (M = {})", self.m);
+                }
+                out[i * k + j] = self.data[base + e as usize];
+            }
+        }
+        Ok(())
     }
 }
 
@@ -201,6 +272,48 @@ mod tests {
         let delta = 8 + 2 * 3;
         assert_eq!(out, vec![delta as i32, 5, delta as i32]);
         assert_eq!(maps.reroute(0, -1, &[3, 5]), vec![3, 5]);
+    }
+
+    #[test]
+    fn reroute_batch_matches_per_token_reference() {
+        let c = cfg();
+        let mut maps = ExpertMaps::new(&c);
+        maps.install(0, &[vec![1, 4], vec![7]]).unwrap();
+        maps.install(2, &[vec![3], vec![0, 5]]).unwrap();
+        let aids = [-1, 0, 2, 0];
+        let top_k = [3, 5, 1, 4, 3, 7, 4, 1]; // [4 tokens, K=2]
+        let mut out = [0i32; 8];
+        for layer in 0..2 {
+            maps.reroute_batch(layer, &aids, &top_k, &mut out).unwrap();
+            for (i, &aid) in aids.iter().enumerate() {
+                let reference = maps.reroute(layer, aid, &top_k[i * 2..(i + 1) * 2]);
+                assert_eq!(&out[i * 2..(i + 1) * 2], &reference[..], "token {i} layer {layer}");
+            }
+        }
+        // shape / domain validation
+        assert!(maps.reroute_batch(9, &aids, &top_k, &mut out).is_err());
+        assert!(maps.reroute_batch(0, &aids, &top_k[..7], &mut out[..7]).is_err());
+        assert!(maps.reroute_batch(0, &[-2], &[0], &mut out[..1]).is_err());
+        assert!(maps.reroute_batch(0, &[0], &[99], &mut out[..1]).is_err());
+        // empty batch is a no-op
+        maps.reroute_batch(0, &[], &[], &mut []).unwrap();
+    }
+
+    #[test]
+    fn from_flat_round_trips() {
+        let c = cfg();
+        let mut maps = ExpertMaps::new(&c);
+        maps.install(1, &[vec![2, 6], vec![0]]).unwrap();
+        let rebuilt = ExpertMaps::from_flat(
+            c.layers,
+            c.max_adapters,
+            c.num_experts,
+            c.e_max,
+            maps.as_slice().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt, maps);
+        assert!(ExpertMaps::from_flat(1, 1, 1, 1, vec![0; 3]).is_err());
     }
 
     #[test]

@@ -23,10 +23,11 @@ use crate::memsim::DeviceMemory;
 use crate::metrics::{MetricsCollector, Report, RequestRecord};
 use crate::model::ModelConfig;
 use crate::runtime::{
-    ArtifactSet, ParamSource, Runtime, SimPerf, SimRuntime, StepInputs, StepOutput, Variant,
+    ArtifactSet, ParamSource, Runtime, SimPerf, SimRuntime, StepInputs, StepOutput, StepYield,
+    Variant,
 };
 use crate::sampler::{sample, Sampling};
-use crate::scheduler::{SchedConfig, Scheduler, SeqState, SlotMeta};
+use crate::scheduler::{SchedConfig, Scheduler, SeqState, StepWorkspace};
 use crate::serving::{
     AbortReason, RequestHandle, RequestId, ServeRequest, ServingBackend, SubmitError, TokenEvent,
 };
@@ -83,6 +84,10 @@ pub struct EngineOptions {
     /// Admission-queue bound: submits beyond this many *waiting*
     /// requests fail with [`SubmitError::QueueFull`]. 0 = unbounded.
     pub queue_cap: usize,
+    /// Sim backend only: always materialize the full logits tensor
+    /// instead of taking the greedy-token fast path (accuracy-style
+    /// experiments; see [`SimRuntime::set_full_logits`]).
+    pub sim_full_logits: bool,
 }
 
 impl Default for EngineOptions {
@@ -95,6 +100,7 @@ impl Default for EngineOptions {
             device_capacity: usize::MAX / 2,
             compute_share: 1.0,
             queue_cap: 0,
+            sim_full_logits: false,
         }
     }
 }
@@ -134,10 +140,21 @@ impl Backend {
         }
     }
 
-    fn step(&mut self, bucket: usize, inputs: &StepInputs) -> Result<StepOutput> {
+    /// Hot-path step into the engine-owned output buffer. `live_rows` is
+    /// the number of rows the engine will sample; `want_tokens` signals
+    /// that every live row is greedy (the sim backend may then skip
+    /// logits entirely).
+    fn step_into(
+        &mut self,
+        bucket: usize,
+        inputs: &StepInputs,
+        live_rows: usize,
+        want_tokens: bool,
+        out: &mut StepOutput,
+    ) -> Result<()> {
         match self {
-            Backend::Pjrt(r) => r.step(bucket, inputs),
-            Backend::Sim(s) => s.step(bucket, inputs),
+            Backend::Pjrt(r) => r.step_into(bucket, inputs, live_rows, want_tokens, out),
+            Backend::Sim(s) => s.step_into(bucket, inputs, live_rows, want_tokens, out),
         }
     }
 
@@ -157,10 +174,19 @@ pub struct Engine {
     weights: Weights,
     scheduler: Scheduler,
     kv: KvCache,
-    slot_meta: SlotMeta,
+    /// Persistent step buffers: batch tensors (incl. the authoritative
+    /// per-slot cache metadata) refilled in place every step.
+    ws: StepWorkspace,
+    /// Persistent step output buffer (logits or greedy tokens).
+    step_out: StepOutput,
     pub metrics: MetricsCollector,
     rng: Pcg,
     next_seq: u64,
+    /// EWMA of recent step wall time (seconds); 0 until the first step.
+    /// Drives deadline-aware admission: a submit whose deadline is
+    /// already shorter than `ewma_step × queue depth` is rejected at the
+    /// door instead of expiring in the queue.
+    ewma_step: f64,
     weights_version: u64,
     device: Arc<Mutex<DeviceMemory>>,
     compute_share: f64,
@@ -197,13 +223,16 @@ impl Engine {
         device: Arc<Mutex<DeviceMemory>>,
         opts: &EngineOptions,
     ) -> Result<Engine> {
+        let sched_cfg = Self::sched_config(&cfg, opts);
         let mut engine = Engine {
-            scheduler: Scheduler::new(Self::sched_config(&cfg, opts)),
+            ws: StepWorkspace::new(&sched_cfg),
+            scheduler: Scheduler::new(sched_cfg),
             kv: KvCache::new(cfg.kv_cap),
-            slot_meta: SlotMeta::new(cfg.kv_cap),
+            step_out: StepOutput::new(),
             metrics: MetricsCollector::new(),
             rng: Pcg::with_stream(opts.seed, 555),
             next_seq: 1,
+            ewma_step: 0.0,
             weights_version: 1,
             device,
             cfg,
@@ -278,7 +307,9 @@ impl Engine {
         if !variant.is_adapter_aware() {
             bail!("weave deployment needs an adapter-aware variant");
         }
-        let backend = Backend::Sim(SimRuntime::new(cfg, variant, perf, opts.seed)?);
+        let mut rt = SimRuntime::new(cfg, variant, perf, opts.seed)?;
+        rt.set_full_logits(opts.sim_full_logits);
+        let backend = Backend::Sim(rt);
         let base = BaseWeights::generate(cfg, opts.seed);
         let device = DeviceMemory::shared(opts.device_capacity);
         let weights = Self::weave_weights(cfg, &base, adapters, mode, &device, &opts)?;
@@ -301,7 +332,9 @@ impl Engine {
 
     /// Base-only baseline on the simulated backend.
     pub fn sim_base_only(cfg: &ModelConfig, perf: SimPerf, opts: EngineOptions) -> Result<Engine> {
-        let backend = Backend::Sim(SimRuntime::new(cfg, Variant::Base, perf, opts.seed)?);
+        let mut rt = SimRuntime::new(cfg, Variant::Base, perf, opts.seed)?;
+        rt.set_full_logits(opts.sim_full_logits);
+        let backend = Backend::Sim(rt);
         let base = BaseWeights::generate(cfg, opts.seed);
         let device = DeviceMemory::shared(opts.device_capacity);
         device
@@ -334,7 +367,9 @@ impl Engine {
         adapter: Adapter,
         opts: EngineOptions,
     ) -> Result<Engine> {
-        let backend = Backend::Sim(SimRuntime::new(cfg, Variant::Base, perf, opts.seed)?);
+        let mut rt = SimRuntime::new(cfg, Variant::Base, perf, opts.seed)?;
+        rt.set_full_logits(opts.sim_full_logits);
+        let backend = Backend::Sim(rt);
         let base = BaseWeights::generate(cfg, opts.seed);
         let device = DeviceMemory::shared(opts.device_capacity);
         device
@@ -396,14 +431,19 @@ impl Engine {
 
     /// Names of the adapters currently resident (weave: registry
     /// contents; merged: the single merged adapter; base-only: none).
-    pub fn resident_adapters(&self) -> Vec<String> {
-        match &self.weights {
+    /// Borrows — no per-call allocation; collect if you need ownership.
+    pub fn resident_adapters(&self) -> impl Iterator<Item = &str> + '_ {
+        let weave = match &self.weights {
             Weights::Weave { registry, .. } => {
-                registry.resident().map(|r| r.name.clone()).collect()
+                Some(registry.resident().map(|r| r.name.as_str()))
             }
-            Weights::BaseOnly => Vec::new(),
-            Weights::Merged { adapter } => vec![adapter.name.clone()],
-        }
+            _ => None,
+        };
+        let merged = match &self.weights {
+            Weights::Merged { adapter } => Some(adapter.name.as_str()),
+            _ => None,
+        };
+        weave.into_iter().flatten().chain(merged)
     }
 
     /// Can this engine serve `name` right now without a load?
@@ -478,6 +518,21 @@ impl Engine {
         }
         if self.queue_cap > 0 && self.scheduler.waiting_len() >= self.queue_cap {
             return Err(SubmitError::QueueFull);
+        }
+        // deadline-aware admission: if the queue's expected wait (EWMA
+        // step time × queue depth) already exceeds the request's
+        // deadline, reject at the door instead of letting it expire in
+        // the queue (it would never occupy a batch slot anyway).
+        // Known coarseness: the EWMA mixes prefill-heavy and decode
+        // steps, so right after a heavy-prefill phase a borderline
+        // deadline can be over-rejected until ~5 steps re-converge the
+        // estimate (ROADMAP tracks a phase-aware estimator). An empty
+        // queue never rejects (expected = 0).
+        if let Some(d) = req.deadline {
+            let expected = self.ewma_step * self.scheduler.waiting_len() as f64;
+            if self.ewma_step > 0.0 && expected > d.as_secs_f64() {
+                return Err(SubmitError::DeadlineUnmeetable);
+            }
         }
         let aid = match (&mut self.weights, req.adapter.as_deref()) {
             (Weights::Weave { registry, .. }, name) => match registry.resolve(name) {
@@ -554,7 +609,7 @@ impl Engine {
     /// [`TokenEvent::Aborted`] (`Cancelled`). Returns `false` when the
     /// id is not in flight.
     pub fn cancel_request(&mut self, id: RequestId) -> bool {
-        match self.scheduler.cancel(id, &mut self.kv, &mut self.slot_meta) {
+        match self.scheduler.cancel(id, &mut self.kv, &mut self.ws) {
             Some(_) => {
                 self.metrics.record_aborted(false);
                 self.finish_stream(id, AbortReason::Cancelled);
@@ -588,7 +643,7 @@ impl Engine {
         let expired = self.scheduler.expire_deadlines(
             Instant::now(),
             &mut self.kv,
-            &mut self.slot_meta,
+            &mut self.ws,
         );
         for seq in expired {
             self.metrics.record_aborted(true);
@@ -609,37 +664,50 @@ impl Engine {
 
     /// Run one engine iteration (one packed batch through the model).
     /// Returns completions finished this step; `None` if idle.
+    ///
+    /// The steady-state decode iteration is allocation-free: the batch is
+    /// built into the persistent [`StepWorkspace`], the backend refills
+    /// the persistent [`StepOutput`], and all-greedy batches skip logits
+    /// materialization entirely on the sim backend
+    /// (`tests/hotpath_alloc.rs` asserts the zero-allocation property).
     pub fn step(&mut self) -> Result<Option<Vec<Completion>>> {
         self.process_expiries();
         let t0 = Instant::now();
-        let Some(batch) = self.scheduler.build_batch(&mut self.kv, &mut self.slot_meta)? else {
+        let Some(batch) = self.scheduler.build_batch(&mut self.kv, &mut self.ws)? else {
             return Ok(None);
         };
-        let out = self.backend.step(batch.bucket, &batch.inputs)?;
-        // sample every row that completed its backlog
-        for &(row, seq_id) in &batch.rows {
-            let logits = &out.logits[row * self.cfg.vocab..(row + 1) * self.cfg.vocab];
-            let sampling = self
-                .scheduler
-                .running()
-                .iter()
-                .find(|s| s.id == seq_id)
-                .map(|s| s.sampling)
-                .unwrap_or(Sampling::Greedy);
-            let tok = sample(logits, sampling, &mut self.rng);
-            let first = self.scheduler.push_token(seq_id, tok)?;
+        let want_tokens = self.ws.all_greedy();
+        self.backend.step_into(
+            batch.bucket,
+            &self.ws.inputs,
+            self.ws.rows.len(),
+            want_tokens,
+            &mut self.step_out,
+        )?;
+        // sample every row that completed its backlog (disjoint field
+        // borrows: rows are read while scheduler/streams/rng mutate)
+        for &r in self.ws.rows.iter() {
+            let tok = match self.step_out.kind {
+                StepYield::GreedyTokens => self.step_out.tokens[r.row],
+                StepYield::Logits => sample(
+                    self.step_out.row_logits(r.row, self.cfg.vocab),
+                    r.sampling,
+                    &mut self.rng,
+                ),
+            };
+            let first = self.scheduler.push_token(r.seq, tok)?;
             // stream the token while the request is still in flight —
             // TTFT is only real if the first token leaves the engine now
-            if let Some(tx) = self.streams.get(&seq_id) {
+            if let Some(tx) = self.streams.get(&r.seq) {
                 let ev = if first {
-                    TokenEvent::First { id: seq_id, token: tok }
+                    TokenEvent::First { id: r.seq, token: tok }
                 } else {
-                    TokenEvent::Token { id: seq_id, token: tok }
+                    TokenEvent::Token { id: r.seq, token: tok }
                 };
                 if tx.send(ev).is_err() {
                     // client hung up: stop streaming (the request itself
                     // keeps running; use `cancel_request` to abort it)
-                    self.streams.remove(&seq_id);
+                    self.streams.remove(&r.seq);
                 }
             }
         }
@@ -648,10 +716,16 @@ impl Engine {
             let extra = t0.elapsed().mul_f64(1.0 / self.compute_share - 1.0);
             std::thread::sleep(extra);
         }
-        let finished = self.scheduler.reap(&mut self.kv, &mut self.slot_meta);
+        let finished = self.scheduler.reap(&mut self.kv, &mut self.ws);
+        let wall = t0.elapsed();
+        self.ewma_step = if self.ewma_step == 0.0 {
+            wall.as_secs_f64()
+        } else {
+            0.8 * self.ewma_step + 0.2 * wall.as_secs_f64()
+        };
         self.metrics.record_step(
-            t0.elapsed(),
-            out.execute_time,
+            wall,
+            self.step_out.execute_time,
             batch.prefill_tokens + batch.decode_tokens,
         );
         let completions: Vec<Completion> = finished
@@ -713,13 +787,16 @@ impl Engine {
             self.scheduler.is_idle(),
             "reset_session with requests in flight"
         );
-        self.scheduler = Scheduler::new(Scheduler::rebuild_config(&self.scheduler));
+        let sched_cfg = Scheduler::rebuild_config(&self.scheduler);
+        self.ws = StepWorkspace::new(&sched_cfg);
+        self.scheduler = Scheduler::new(sched_cfg);
         self.kv = KvCache::new(self.cfg.kv_cap);
-        self.slot_meta = SlotMeta::new(self.cfg.kv_cap);
+        self.step_out = StepOutput::new();
         self.metrics = MetricsCollector::new();
         self.streams.clear();
         self.shutting_down = false;
         self.has_deadlines = false;
+        self.ewma_step = 0.0;
         self.backend.reset_kv();
     }
 }

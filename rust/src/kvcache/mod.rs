@@ -10,7 +10,7 @@ use anyhow::{bail, Result};
 use std::collections::HashMap;
 
 /// Slot-granular KV cache allocator for one engine.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct KvCache {
     cap: usize,
     free: Vec<u32>,
@@ -52,6 +52,18 @@ impl KvCache {
     /// Append `n` slots to sequence `seq` (created on first call).
     /// Returns the new slots in position order.
     pub fn alloc(&mut self, seq: u64, n: usize) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(n);
+        self.alloc_into(seq, n, &mut out)?;
+        Ok(out)
+    }
+
+    /// Hot-path allocation: append `n` slots to sequence `seq`, writing
+    /// them (in position order) into the caller-owned `out` buffer, which
+    /// is cleared first. With the per-sequence list pre-sized via
+    /// [`KvCache::reserve_seq`], the steady-state decode path performs no
+    /// heap allocation here.
+    pub fn alloc_into(&mut self, seq: u64, n: usize, out: &mut Vec<u32>) -> Result<()> {
+        out.clear();
         if n > self.free.len() {
             bail!(
                 "KV cache full: need {n} slots, {} free of {}",
@@ -60,10 +72,20 @@ impl KvCache {
             );
         }
         let at = self.free.len() - n;
-        let slots = self.free.split_off(at);
-        self.seqs.entry(seq).or_default().extend(&slots);
+        out.extend_from_slice(&self.free[at..]);
+        self.free.truncate(at);
+        self.seqs.entry(seq).or_default().extend_from_slice(out);
         self.peak_used = self.peak_used.max(self.used_slots());
-        Ok(slots)
+        Ok(())
+    }
+
+    /// Pre-size sequence `seq`'s slot list for `cap` total slots so later
+    /// [`KvCache::alloc_into`] calls never reallocate it. The scheduler
+    /// calls this once at admission with the sequence's worst-case token
+    /// count (prompt + max_new).
+    pub fn reserve_seq(&mut self, seq: u64, cap: usize) {
+        let held = self.seqs.entry(seq).or_default();
+        held.reserve(cap.saturating_sub(held.len()));
     }
 
     /// All slots of a sequence, in position order.
@@ -135,6 +157,32 @@ mod tests {
         all.sort_unstable();
         all.dedup();
         assert_eq!(all.len(), 40);
+    }
+
+    #[test]
+    fn alloc_into_matches_alloc_and_reuses_buffers() {
+        let mut a = KvCache::new(16);
+        let mut b = KvCache::new(16);
+        let mut buf = Vec::new();
+        for (seq, n) in [(1u64, 5usize), (2, 3), (1, 2)] {
+            let v = a.alloc(seq, n).unwrap();
+            b.alloc_into(seq, n, &mut buf).unwrap();
+            assert_eq!(v, buf, "alloc and alloc_into must assign identical slots");
+        }
+        assert_eq!(a.free_slots(), b.free_slots());
+        assert_eq!(a.slots_of(1), b.slots_of(1));
+        // reserve_seq pre-sizes so the hot path never grows the list
+        b.reserve_seq(9, 4);
+        let held_ptr = b.seqs.get(&9).unwrap().as_ptr();
+        let cap = b.seqs.get(&9).unwrap().capacity();
+        assert!(cap >= 4);
+        for _ in 0..4 {
+            b.alloc_into(9, 1, &mut buf).unwrap();
+        }
+        assert_eq!(b.seqs.get(&9).unwrap().as_ptr(), held_ptr, "no realloc");
+        // over-capacity request still fails cleanly and leaves out empty
+        assert!(b.alloc_into(9, 64, &mut buf).is_err());
+        assert!(buf.is_empty());
     }
 
     #[test]

@@ -71,6 +71,15 @@ impl MetricsCollector {
         self.records.push(rec);
     }
 
+    /// Pre-size the per-step sample buffers for `n` more steps so the
+    /// steady-state step loop never reallocates them (the hot-path
+    /// zero-allocation test and benches call this before measuring).
+    pub fn reserve_steps(&mut self, n: usize) {
+        self.step_time.reserve(n);
+        self.execute_time.reserve(n);
+        self.batched_tokens.reserve(n);
+    }
+
     pub fn record_step(&mut self, wall: Duration, execute: Duration, tokens: usize) {
         self.step_count += 1;
         self.step_time.push(wall.as_secs_f64());

@@ -27,7 +27,7 @@ pub trait ParamSource {
 }
 
 /// One packed step batch (already bucket-padded by the scheduler).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StepInputs {
     pub token_ids: Vec<i32>,
     pub positions: Vec<i32>,
@@ -56,14 +56,54 @@ impl StepInputs {
     }
 }
 
-/// Result of one step.
+/// What a backend produced for the sampled rows of one step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepYield {
+    /// `StepOutput::logits` holds `filled_rows * vocab` row-major f32.
+    Logits,
+    /// `StepOutput::tokens[r]` is row `r`'s greedy token (sim fast path;
+    /// no logits were materialized).
+    GreedyTokens,
+}
+
+/// Reusable output buffer of one step. The engine owns one instance and
+/// every backend refills it in place (`step_into`), so the steady-state
+/// loop never allocates a fresh logits tensor.
 #[derive(Debug)]
 pub struct StepOutput {
-    /// `[O, vocab]` row-major logits for the requested rows.
+    pub kind: StepYield,
+    /// `[filled_rows, vocab]` row-major logits (`kind == Logits`).
     pub logits: Vec<f32>,
-    pub out_rows: usize,
-    /// Wall time inside PJRT execute (the XLA part of the step).
+    /// Greedy token per row (`kind == GreedyTokens`).
+    pub tokens: Vec<i32>,
+    /// Rows actually filled. PJRT always fills the full ABI `out_rows`;
+    /// the sim backend fills only the batch's live rows.
+    pub filled_rows: usize,
+    /// Wall time inside the backend execute (the XLA part of the step).
     pub execute_time: std::time::Duration,
+}
+
+impl StepOutput {
+    pub fn new() -> StepOutput {
+        StepOutput {
+            kind: StepYield::Logits,
+            logits: Vec::new(),
+            tokens: Vec::new(),
+            filled_rows: 0,
+            execute_time: std::time::Duration::ZERO,
+        }
+    }
+
+    /// Row `row`'s logits slice (`kind == Logits`, `row < filled_rows`).
+    pub fn row_logits(&self, row: usize, vocab: usize) -> &[f32] {
+        &self.logits[row * vocab..(row + 1) * vocab]
+    }
+}
+
+impl Default for StepOutput {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 struct CompiledStep {
@@ -77,6 +117,9 @@ pub struct Runtime {
     cfg: ModelConfig,
     variant: Variant,
     steps: BTreeMap<usize, CompiledStep>,
+    /// Compiled token buckets, ascending (cached so [`Runtime::buckets`]
+    /// returns a slice instead of re-collecting per call).
+    bucket_list: Vec<usize>,
     /// Device buffers for `params`, ordered per the ABI manifest.
     param_bufs: Vec<xla::PjRtBuffer>,
     /// Host KV cache image between steps (see module docs).
@@ -126,11 +169,13 @@ impl Runtime {
         if steps.is_empty() {
             bail!("no {} executables in {}", variant.as_str(), set.dir.display());
         }
+        let bucket_list: Vec<usize> = steps.keys().copied().collect();
         Ok(Runtime {
             client,
             cfg: set.config.clone(),
             variant,
             steps,
+            bucket_list,
             param_bufs: Vec::new(),
             kv_literal: None,
             expert_maps_buf: None,
@@ -149,8 +194,8 @@ impl Runtime {
     }
 
     /// Available token buckets, ascending.
-    pub fn buckets(&self) -> Vec<usize> {
-        self.steps.keys().copied().collect()
+    pub fn buckets(&self) -> &[usize] {
+        &self.bucket_list
     }
 
     /// Smallest bucket that fits `tokens`.
@@ -238,9 +283,31 @@ impl Runtime {
         ]
     }
 
-    /// Execute one step on the smallest bucket `>= inputs.token_ids.len()`
-    /// (the caller pads; lengths must match the chosen bucket exactly).
+    /// Execute one step, returning a freshly allocated output (tests and
+    /// one-shot callers; the engine hot path uses [`Runtime::step_into`]).
     pub fn step(&mut self, bucket: usize, inputs: &StepInputs) -> Result<StepOutput> {
+        let mut out = StepOutput::new();
+        let rows = self.out_rows(bucket).unwrap_or(0);
+        self.step_into(bucket, inputs, rows, false, &mut out)?;
+        Ok(out)
+    }
+
+    /// Execute one step into the caller-owned `out` buffer.
+    ///
+    /// `live_rows` / `want_tokens` are hot-path hints the compiled
+    /// executables cannot exploit (the device always computes the full
+    /// `[out_rows, vocab]` block and the fused rerouting runs in-graph),
+    /// so this backend ignores them and always yields
+    /// [`StepYield::Logits`] for every ABI row. The signature matches the
+    /// sim backend so the engine drives both identically.
+    pub fn step_into(
+        &mut self,
+        bucket: usize,
+        inputs: &StepInputs,
+        _live_rows: usize,
+        _want_tokens: bool,
+        out: &mut StepOutput,
+    ) -> Result<()> {
         let Some(step) = self.steps.get(&bucket) else {
             bail!("no executable for bucket {bucket}");
         };
@@ -316,7 +383,14 @@ impl Runtime {
         let logits = logits_lit.to_vec::<f32>()?;
         debug_assert_eq!(logits.len(), meta.out_rows * self.cfg.vocab);
         self.kv_literal = Some(kv_lit);
-        Ok(StepOutput { logits, out_rows: meta.out_rows, execute_time })
+        out.kind = StepYield::Logits;
+        // move the readback buffer in rather than memcpy it (to_vec
+        // already allocated; see ROADMAP for the borrowed-literal plan)
+        out.logits = logits;
+        out.tokens.clear();
+        out.filled_rows = meta.out_rows;
+        out.execute_time = execute_time;
+        Ok(())
     }
 }
 

@@ -13,5 +13,5 @@ pub mod engine;
 pub mod sim;
 
 pub use artifacts::{ArtifactSet, ExecutableMeta, TensorSpec, Variant};
-pub use engine::{ParamSource, Runtime, StepInputs, StepOutput};
+pub use engine::{ParamSource, Runtime, StepInputs, StepOutput, StepYield};
 pub use sim::{SimPerf, SimRuntime};

@@ -5,18 +5,45 @@
 //! packs for the compiled executables, burns a calibrated amount of wall
 //! time per step (so real-time trace replay, queueing and
 //! `compute_share` partitioning behave like they do against the real
-//! runtime), and produces deterministic pseudo-logits — a pure function
-//! of the sampled row's `(token, position, AID)` and the engine seed, so
-//! greedy decoding is reproducible across runs and replicas.
+//! runtime), and produces deterministic pseudo-outputs — a pure function
+//! of the sampled row's `(token, position, AID, rerouted experts)` and
+//! the engine seed, so greedy decoding is reproducible across runs and
+//! replicas.
+//!
+//! ## Hot path
+//!
+//! The step is written for the zero-allocation steady state:
+//!
+//! * `step_into` refills a caller-owned [`StepOutput`] — no fresh logits
+//!   tensor per step.
+//! * When the engine signals that every live row samples greedily
+//!   (`want_tokens`), the backend yields [`StepYield::GreedyTokens`]:
+//!   one token per live row read directly off the row hash, O(1) per
+//!   row, instead of materializing an `out_rows × vocab` logits block.
+//!   The full-logits path stays available behind
+//!   [`SimRuntime::set_full_logits`] for accuracy-style experiments that
+//!   want the whole tensor. The two paths agree exactly: the
+//!   pseudo-logits row is constructed with its argmax pinned to the
+//!   fast-path token, so a greedy stream never changes when the engine
+//!   switches modes (e.g. when a temperature-sampled request joins the
+//!   batch mid-generation).
+//! * Adapter-aware variants run the host analogue of the paper's fused
+//!   batched-rerouting kernel each step:
+//!   [`ExpertMaps::reroute_batch`] rewrites the batch's (simulated)
+//!   top-k expert ids in one pass per layer into persistent buffers, and
+//!   the rerouted ids are folded into the row hash — so outputs react to
+//!   expert-map changes (load/evict) exactly like the real kernel's
+//!   would, at O(live_rows · K) per layer with no allocation.
 //!
 //! What it is for: serving-layer experiments — the scheduler, engine,
 //! server and the fleet [`crate::coordinator`] — in environments without
 //! AOT artifacts or an `xla_extension` build (CI, the offline testbed).
-//! What it is *not*: a model. Logits carry no semantics beyond
+//! What it is *not*: a model. Outputs carry no semantics beyond
 //! determinism, so accuracy experiments (Table 3) still require the PJRT
 //! backend.
 
-use super::engine::{ParamSource, StepInputs, StepOutput};
+use super::engine::{ParamSource, StepInputs, StepOutput, StepYield};
+use crate::adapters::expert_map::ExpertMaps;
 use crate::model::ModelConfig;
 use crate::runtime::Variant;
 use anyhow::{bail, Result};
@@ -57,6 +84,18 @@ impl SimPerf {
             adapter_swap: Duration::from_millis(2),
         }
     }
+
+    /// No latency injection at all: steps run as fast as the host can
+    /// drive them. This is the profile the hot-path microbench
+    /// (`benches/fig11_hotpath.rs`) uses to measure pipeline overhead
+    /// rather than the simulated device.
+    pub fn instant() -> Self {
+        SimPerf {
+            step_base: Duration::ZERO,
+            per_token: Duration::ZERO,
+            adapter_swap: Duration::ZERO,
+        }
+    }
 }
 
 /// Simulated runtime for one engine (device) — see module docs.
@@ -68,6 +107,16 @@ pub struct SimRuntime {
     weights_version: u64,
     maps_version: u64,
     params_uploaded: bool,
+    /// Always materialize the full `[out_rows, vocab]` logits block,
+    /// even when the engine only needs greedy tokens.
+    full_logits: bool,
+    /// Host copy of the uploaded expert maps (adapter-aware variants).
+    maps: Option<ExpertMaps>,
+    // persistent per-step scratch (zero-allocation steady state)
+    aid_buf: Vec<i32>,
+    topk_buf: Vec<i32>,
+    route_buf: Vec<i32>,
+    fold_buf: Vec<u64>,
 }
 
 fn splitmix(mut x: u64) -> u64 {
@@ -93,6 +142,12 @@ impl SimRuntime {
             weights_version: 0,
             maps_version: 0,
             params_uploaded: false,
+            full_logits: false,
+            maps: None,
+            aid_buf: Vec::new(),
+            topk_buf: Vec::new(),
+            route_buf: Vec::new(),
+            fold_buf: Vec::new(),
         })
     }
 
@@ -104,8 +159,14 @@ impl SimRuntime {
         self.variant
     }
 
-    pub fn buckets(&self) -> Vec<usize> {
-        self.cfg.buckets.clone()
+    pub fn buckets(&self) -> &[usize] {
+        &self.cfg.buckets
+    }
+
+    /// Force the full-logits path even for all-greedy batches (accuracy
+    /// experiments that want the whole tensor; see module docs).
+    pub fn set_full_logits(&mut self, on: bool) {
+        self.full_logits = on;
     }
 
     /// Logits rows per bucket; must mirror `SchedConfig::out_rows`.
@@ -132,14 +193,22 @@ impl SimRuntime {
         Ok(())
     }
 
+    /// Keep a host copy of the expert maps so the per-step fused reroute
+    /// (the rows' routing signature) reflects the resident adapters.
     pub fn upload_expert_maps(&mut self, maps: &[i32], version: u64) -> Result<()> {
         if !self.variant.is_adapter_aware() {
             return Ok(());
         }
-        let want = self.cfg.layers * (self.cfg.max_adapters + 1) * self.cfg.num_experts;
-        if maps.len() != want {
-            bail!("expert maps length {} != {want}", maps.len());
+        if version == self.maps_version && self.maps.is_some() {
+            return Ok(());
         }
+        self.maps = Some(ExpertMaps::from_flat(
+            self.cfg.layers,
+            self.cfg.max_adapters,
+            self.cfg.num_experts,
+            self.cfg.e_max,
+            maps.to_vec(),
+        )?);
         self.maps_version = version;
         Ok(())
     }
@@ -148,9 +217,102 @@ impl SimRuntime {
         // the simulation keeps no device KV state
     }
 
-    /// One simulated step: validate the batch like the PJRT runtime,
-    /// sleep the modelled latency, emit deterministic pseudo-logits.
+    /// Token index a logits row points at (clamped like the device
+    /// gather would be).
+    #[inline]
+    fn row_token(inputs: &StepInputs, bucket: usize, r: usize) -> usize {
+        (inputs.out_rows[r].max(0) as usize).min(bucket - 1)
+    }
+
+    /// Base hash of row `r`: the pure function of
+    /// `(seed, token, position, AID)` every output derives from.
+    #[inline]
+    fn row_seed(&self, inputs: &StepInputs, t: usize) -> u64 {
+        self.seed
+            ^ (inputs.token_ids[t] as u64).wrapping_mul(0x9e3779b1)
+            ^ ((inputs.positions[t] as u64) << 24)
+            ^ (((inputs.aid[t] as i64) as u64) << 48)
+    }
+
+    /// The greedy token of a row with mixed hash `h` (already folded and
+    /// splitmixed). Single source of truth for BOTH output paths: the
+    /// fast path returns it directly, the logits path pins the row's
+    /// argmax to it.
+    #[inline]
+    fn greedy_token(h: u64, vocab: usize) -> i32 {
+        ((h >> 17) % vocab as u64) as i32
+    }
+
+    /// Fused batched rerouting over the live rows: simulate each row's
+    /// per-layer top-k router picks, rewrite them through the expert maps
+    /// in one [`ExpertMaps::reroute_batch`] pass per layer (the host
+    /// analogue of the L1 Pallas kernel), and fold the rerouted slot ids
+    /// into `fold_buf[r]`. All buffers are persistent — zero allocation
+    /// in the steady state.
+    fn route_fold(&mut self, inputs: &StepInputs, bucket: usize, live: usize) -> Result<()> {
+        let SimRuntime { cfg, seed, maps, aid_buf, topk_buf, route_buf, fold_buf, .. } = self;
+        fold_buf.clear();
+        fold_buf.resize(live, 0);
+        let Some(maps) = maps else {
+            return Ok(());
+        };
+        let k = cfg.top_k.max(1);
+        let m = cfg.num_experts as u64;
+        aid_buf.clear();
+        topk_buf.clear();
+        topk_buf.resize(live * k, 0);
+        route_buf.clear();
+        route_buf.resize(live * k, 0);
+        for r in 0..live {
+            let t = Self::row_token(inputs, bucket, r);
+            aid_buf.push(inputs.aid[t]);
+        }
+        for l in 0..cfg.layers {
+            // simulated router: deterministic top-k base experts per row
+            for r in 0..live {
+                let t = Self::row_token(inputs, bucket, r);
+                let mut h = splitmix(
+                    *seed ^ (inputs.token_ids[t] as u64) ^ ((l as u64) << 40) ^ 0x7261_6e6b,
+                );
+                for j in 0..k {
+                    h = splitmix(h);
+                    topk_buf[r * k + j] = (h % m) as i32;
+                }
+            }
+            maps.reroute_batch(l, &aid_buf[..live], &topk_buf[..live * k], &mut route_buf[..live * k])?;
+            for r in 0..live {
+                for j in 0..k {
+                    fold_buf[r] = splitmix(fold_buf[r] ^ (route_buf[r * k + j] as u64) ^ ((l as u64) << 32));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One simulated step, returning a freshly allocated output (tests
+    /// and one-shot callers). Always takes the logits path over every ABI
+    /// row — the exact legacy behaviour.
     pub fn step(&mut self, bucket: usize, inputs: &StepInputs) -> Result<StepOutput> {
+        let mut out = StepOutput::new();
+        let rows = self.out_rows(bucket).unwrap_or(0);
+        self.step_into(bucket, inputs, rows, false, &mut out)?;
+        Ok(out)
+    }
+
+    /// One simulated step into the caller-owned `out` buffer: validate
+    /// the batch like the PJRT runtime, sleep the modelled latency, run
+    /// the fused batched reroute, then emit either greedy tokens
+    /// (`want_tokens`, O(1) per live row) or deterministic pseudo-logits.
+    /// `live_rows` is the number of rows the engine will actually sample
+    /// (`ws.rows.len()`); pad rows are never computed.
+    pub fn step_into(
+        &mut self,
+        bucket: usize,
+        inputs: &StepInputs,
+        live_rows: usize,
+        want_tokens: bool,
+        out: &mut StepOutput,
+    ) -> Result<()> {
         let Some(out_rows) = self.out_rows(bucket) else {
             bail!("no executable for bucket {bucket}");
         };
@@ -177,24 +339,49 @@ impl SimRuntime {
             std::thread::sleep(latency);
         }
 
+        let live = live_rows.min(out_rows);
+        self.route_fold(inputs, bucket, live)?;
+
         let vocab = self.cfg.vocab;
-        let mut logits = vec![0.0f32; out_rows * vocab];
-        for r in 0..out_rows {
-            let t = (inputs.out_rows[r].max(0) as usize).min(bucket - 1);
-            let mut h = splitmix(
-                self.seed
-                    ^ (inputs.token_ids[t] as u64).wrapping_mul(0x9e3779b1)
-                    ^ ((inputs.positions[t] as u64) << 24)
-                    ^ (((inputs.aid[t] as i64) as u64) << 48),
-            );
-            let row = &mut logits[r * vocab..(r + 1) * vocab];
+        out.execute_time = latency;
+        if want_tokens && !self.full_logits {
+            // greedy fast path: one token per live row, straight off the
+            // row hash — no vocab-wide logits materialized
+            out.kind = StepYield::GreedyTokens;
+            out.logits.clear();
+            out.tokens.clear();
+            for r in 0..live {
+                let t = Self::row_token(inputs, bucket, r);
+                let h = splitmix(self.row_seed(inputs, t) ^ self.fold_buf[r]);
+                out.tokens.push(Self::greedy_token(h, vocab));
+            }
+            out.filled_rows = live;
+            return Ok(());
+        }
+
+        // logits path: live rows only, unless the full tensor was asked for
+        let filled = if self.full_logits { out_rows } else { live };
+        out.kind = StepYield::Logits;
+        out.tokens.clear();
+        out.logits.clear();
+        out.logits.resize(filled * vocab, 0.0);
+        for r in 0..filled {
+            let t = Self::row_token(inputs, bucket, r);
+            let fold = self.fold_buf.get(r).copied().unwrap_or(0);
+            let h0 = splitmix(self.row_seed(inputs, t) ^ fold);
+            let mut h = h0;
+            let row = &mut out.logits[r * vocab..(r + 1) * vocab];
             for v in row.iter_mut() {
                 h = splitmix(h);
-                // map to [-4, 4): enough spread for distinct greedy argmax
+                // map to [-4, 4): enough spread for distinct sampling
                 *v = ((h >> 11) as f64 / (1u64 << 53) as f64 * 8.0 - 4.0) as f32;
             }
+            // pin the argmax to the fast-path token (above the [-4, 4)
+            // range) so greedy decoding is identical under both paths
+            row[Self::greedy_token(h0, vocab) as usize] = 5.0;
         }
-        Ok(StepOutput { logits, out_rows, execute_time: latency })
+        out.filled_rows = filled;
+        Ok(())
     }
 }
 
@@ -234,13 +421,124 @@ mod tests {
         inputs.aid[0] = 2;
         let a = rt(42).step(bucket, &inputs).unwrap();
         let b = rt(42).step(bucket, &inputs).unwrap();
+        assert_eq!(a.kind, StepYield::Logits);
         assert_eq!(a.logits, b.logits);
-        assert_eq!(a.out_rows, out_rows);
+        assert_eq!(a.filled_rows, out_rows);
         assert_eq!(a.logits.len(), out_rows * c.vocab);
         // different adapter -> different greedy token for the same prompt
         inputs.aid[0] = -1;
         let base = rt(42).step(bucket, &inputs).unwrap();
         assert_ne!(&a.logits[..c.vocab], &base.logits[..c.vocab]);
+    }
+
+    #[test]
+    fn greedy_fast_path_is_deterministic_and_allocation_lean() {
+        let c = cfg();
+        let bucket = c.buckets[0];
+        let out_rows = bucket.min(c.max_seqs);
+        let mut inputs = StepInputs::blank(&c, bucket, out_rows);
+        inputs.token_ids[0] = 7;
+        inputs.seg_ids[0] = 0;
+        let mut r1 = rt(42);
+        let mut r2 = rt(42);
+        let mut o1 = StepOutput::new();
+        let mut o2 = StepOutput::new();
+        r1.step_into(bucket, &inputs, 2, true, &mut o1).unwrap();
+        r2.step_into(bucket, &inputs, 2, true, &mut o2).unwrap();
+        assert_eq!(o1.kind, StepYield::GreedyTokens);
+        assert_eq!(o1.filled_rows, 2);
+        assert_eq!(o1.tokens, o2.tokens);
+        assert!(o1.logits.is_empty(), "no logits materialized");
+        assert!(o1.tokens.iter().all(|&t| (t as usize) < c.vocab));
+        // a different seed decodes differently
+        let mut o3 = StepOutput::new();
+        rt(43).step_into(bucket, &inputs, 2, true, &mut o3).unwrap();
+        assert_ne!(o1.tokens, o3.tokens);
+        // the buffer is refilled in place across steps
+        let before = o1.tokens.as_ptr();
+        r1.step_into(bucket, &inputs, 2, true, &mut o1).unwrap();
+        assert_eq!(o1.tokens.as_ptr(), before);
+    }
+
+    #[test]
+    fn greedy_tokens_agree_with_logits_argmax() {
+        // a greedy stream must not change when the engine switches output
+        // modes (e.g. a temperature request joins the batch): the logits
+        // row's argmax is pinned to the fast-path token
+        let c = cfg();
+        let bucket = c.buckets[0];
+        let out_rows = bucket.min(c.max_seqs);
+        let mut inputs = StepInputs::blank(&c, bucket, out_rows);
+        for t in 0..4 {
+            inputs.token_ids[t] = 3 + t as i32;
+            inputs.positions[t] = t as i32;
+            inputs.seg_ids[t] = 0;
+            inputs.aid[t] = if t % 2 == 0 { 1 } else { -1 };
+            inputs.out_rows[t] = t as i32;
+        }
+        let mut r = rt(11);
+        let mut maps = ExpertMaps::new(&c);
+        maps.install(1, &vec![vec![0, 1, 2]; c.layers]).unwrap();
+        r.upload_expert_maps(maps.as_slice(), 1).unwrap();
+        let mut toks = StepOutput::new();
+        r.step_into(bucket, &inputs, 4, true, &mut toks).unwrap();
+        let mut lg = StepOutput::new();
+        r.step_into(bucket, &inputs, 4, false, &mut lg).unwrap();
+        assert_eq!(toks.kind, StepYield::GreedyTokens);
+        assert_eq!(lg.kind, StepYield::Logits);
+        for row in 0..4 {
+            let argmax = crate::sampler::argmax(lg.row_logits(row, c.vocab));
+            assert_eq!(toks.tokens[row], argmax, "row {row} diverged across modes");
+        }
+    }
+
+    #[test]
+    fn full_logits_option_overrides_the_fast_path() {
+        let c = cfg();
+        let bucket = c.buckets[0];
+        let out_rows = bucket.min(c.max_seqs);
+        let inputs = StepInputs::blank(&c, bucket, out_rows);
+        let mut r = rt(0);
+        r.set_full_logits(true);
+        let mut out = StepOutput::new();
+        r.step_into(bucket, &inputs, 1, true, &mut out).unwrap();
+        assert_eq!(out.kind, StepYield::Logits);
+        assert_eq!(out.filled_rows, out_rows, "full tensor on request");
+        assert_eq!(out.logits.len(), out_rows * c.vocab);
+    }
+
+    #[test]
+    fn expert_map_changes_change_outputs() {
+        let c = cfg();
+        let bucket = c.buckets[0];
+        let out_rows = bucket.min(c.max_seqs);
+        let mut inputs = StepInputs::blank(&c, bucket, out_rows);
+        inputs.seg_ids[0] = 0;
+        let identity = ExpertMaps::new(&c);
+        let mut routed = ExpertMaps::new(&c);
+        let experts: Vec<Vec<u32>> = vec![vec![0, 1, 2, 3]; c.layers];
+        routed.install(0, &experts).unwrap();
+        let mut a = rt(7);
+        a.upload_expert_maps(identity.as_slice(), 1).unwrap();
+        let mut b = rt(7);
+        b.upload_expert_maps(routed.as_slice(), 1).unwrap();
+        // over a handful of prompts, an adapter row (aid 0) must react to
+        // the rerouted experts; base rows (aid -1, identity map row) must
+        // not. (Each single token's simulated top-k may by chance miss
+        // the fine-tuned experts, so assert across tokens.)
+        let mut differs = false;
+        for tok in 0..8 {
+            inputs.token_ids[0] = tok;
+            inputs.aid[0] = 0;
+            let la = a.step(bucket, &inputs).unwrap();
+            let lb = b.step(bucket, &inputs).unwrap();
+            differs |= la.logits[..c.vocab] != lb.logits[..c.vocab];
+            inputs.aid[0] = -1;
+            let ba = a.step(bucket, &inputs).unwrap();
+            let bb = b.step(bucket, &inputs).unwrap();
+            assert_eq!(&ba.logits[..c.vocab], &bb.logits[..c.vocab]);
+        }
+        assert!(differs, "rerouted experts must change some adapter output");
     }
 
     #[test]

@@ -11,6 +11,19 @@
 //! requests for different ESFT adapters are freely interleaved — the
 //! batch carries the per-token AID array the rerouting kernel consumes
 //! (token-granularity batching, paper section 4.3).
+//!
+//! ## The step workspace (zero-allocation hot path)
+//!
+//! [`Scheduler::build_batch`] does not allocate: it refills a
+//! caller-owned [`StepWorkspace`] in place. The workspace owns the
+//! [`StepInputs`] tensors (bucket-sized arrays re-padded per step;
+//! `cache_seg`/`cache_pos` are `kv_cap`-sized, persistent, and updated
+//! per *dirty slot* — O(tokens touched) per step instead of O(kv_cap)
+//! clones), the out-row bindings, and the planning/slot scratch buffers.
+//! One workspace lives for the whole serving session, so the
+//! steady-state decode loop performs zero heap allocations end to end
+//! (asserted by `tests/hotpath_alloc.rs` under the `alloc-counter`
+//! feature).
 
 use crate::kvcache::KvCache;
 use crate::runtime::engine::StepInputs;
@@ -50,6 +63,15 @@ impl SchedConfig {
     }
 }
 
+/// Segment id carried to the device for a sequence (the ABI is `i32`:
+/// the id's low 31 bits). The projection is only unique among
+/// *concurrently running* sequences — admission refuses to co-schedule
+/// two sequences whose projections collide, which becomes possible once
+/// sequence ids wrap past 2^31 (see [`Scheduler`]'s admit loop).
+pub fn seg_of(id: u64) -> i32 {
+    (id & 0x7fff_ffff) as i32
+}
+
 /// One sequence moving through the engine.
 #[derive(Debug, Clone)]
 pub struct SeqState {
@@ -83,11 +105,15 @@ impl SeqState {
         sampling: Sampling,
     ) -> Self {
         let prompt_len = prompt.len();
+        // pre-size for the whole lifetime so per-step token pushes never
+        // reallocate on the decode hot path
+        let mut tokens = prompt;
+        tokens.reserve(max_new);
         SeqState {
             id,
             aid,
             adapter,
-            tokens: prompt,
+            tokens,
             prompt_len,
             prefilled: 0,
             max_new,
@@ -118,41 +144,89 @@ impl SeqState {
     }
 }
 
-/// A packed step batch plus the bookkeeping to apply its results.
-#[derive(Debug)]
+/// Summary of one packed step batch. The batch tensors themselves live
+/// in the [`StepWorkspace`] the batch was built into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Batch {
     pub bucket: usize,
-    pub inputs: StepInputs,
-    /// `(out_row index, seq id)` — rows that must be sampled after the
-    /// step (the row points at the sequence's last scheduled token).
-    pub rows: Vec<(usize, u64)>,
+    /// Logits rows the ABI returns for this bucket.
+    pub out_rows: usize,
     pub prefill_tokens: usize,
     pub decode_tokens: usize,
 }
 
-/// Per-slot cache metadata mirrored to the device each step
-/// (`cache_seg` / `cache_pos` inputs of the step executable).
-#[derive(Debug)]
-pub struct SlotMeta {
-    pub seg: Vec<i32>,
-    pub pos: Vec<i32>,
+/// Binding of one live logits row to the sequence it must be sampled
+/// for (the row points at the sequence's last scheduled token).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OutRow {
+    /// Index into `StepInputs::out_rows` / the logits block.
+    pub row: usize,
+    /// Sequence id to push the sampled token to.
+    pub seq: u64,
+    /// The sequence's sampling mode (captured at batch build so the
+    /// engine samples without re-scanning the running list).
+    pub sampling: Sampling,
 }
 
-impl SlotMeta {
-    pub fn new(cap: usize) -> Self {
-        SlotMeta { seg: vec![-1; cap], pos: vec![0; cap] }
+/// Persistent, engine-owned buffers of the step hot path.
+///
+/// One instance lives for a whole serving session; `build_batch` refills
+/// it in place so the steady-state loop allocates nothing. `cache_seg` /
+/// `cache_pos` inside [`StepWorkspace::inputs`] are the *authoritative*
+/// per-slot cache metadata mirrored to the device each step — they are
+/// updated incrementally (dirty slots only) by batch builds and by
+/// sequence release (reap/cancel/expire), never rebuilt or cloned.
+#[derive(Debug, Clone)]
+pub struct StepWorkspace {
+    /// The packed step tensors, refilled per batch.
+    pub inputs: StepInputs,
+    /// Live out-row bindings of the current batch.
+    pub rows: Vec<OutRow>,
+    /// Scratch: (running-seq index, tokens this step).
+    plan: Vec<(usize, usize)>,
+    /// Scratch for KV slot allocation.
+    slots: Vec<u32>,
+}
+
+impl StepWorkspace {
+    pub fn new(cfg: &SchedConfig) -> Self {
+        let max_bucket = cfg.max_bucket();
+        let max_rows = cfg.out_rows(max_bucket);
+        StepWorkspace {
+            inputs: StepInputs {
+                token_ids: Vec::with_capacity(max_bucket),
+                positions: Vec::with_capacity(max_bucket),
+                seg_ids: Vec::with_capacity(max_bucket),
+                slot_idx: Vec::with_capacity(max_bucket),
+                cache_seg: vec![-1; cfg.kv_cap],
+                cache_pos: vec![0; cfg.kv_cap],
+                out_rows: Vec::with_capacity(max_rows),
+                aid: Vec::with_capacity(max_bucket),
+            },
+            rows: Vec::with_capacity(max_rows),
+            plan: Vec::with_capacity(cfg.max_seqs.min(max_rows.max(16))),
+            slots: Vec::with_capacity(cfg.chunk.min(max_bucket)),
+        }
     }
 
-    pub fn clear_slots(&mut self, slots: &[u32]) {
+    /// Every live row of the current batch wants greedy sampling (the
+    /// backend may then skip materializing logits entirely).
+    pub fn all_greedy(&self) -> bool {
+        self.rows.iter().all(|r| r.sampling == Sampling::Greedy)
+    }
+
+    /// Clear the device-visible metadata of freed KV slots (dirty-slot
+    /// update of the persistent `cache_seg`/`cache_pos` arrays).
+    fn clear_slots(&mut self, slots: &[u32]) {
         for &s in slots {
-            self.seg[s as usize] = -1;
-            self.pos[s as usize] = 0;
+            self.inputs.cache_seg[s as usize] = -1;
+            self.inputs.cache_pos[s as usize] = 0;
         }
     }
 }
 
 /// The continuous-batching scheduler.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Scheduler {
     cfg: SchedConfig,
     waiting: VecDeque<SeqState>,
@@ -219,33 +293,60 @@ impl Scheduler {
         seq.pending() + seq.max_new.saturating_sub(seq.generated())
     }
 
-    fn admit(&mut self, kv: &KvCache) {
+    fn admit(&mut self, kv: &mut KvCache) {
+        if self.waiting.is_empty() {
+            return;
+        }
         // conservative reservation: pending prompt + remaining output of
         // every running sequence is already spoken for (no preemption)
         let mut reserved: usize =
             self.running.iter().map(Self::future_need).sum();
         while self.running.len() < self.cfg.max_seqs {
             let Some(seq) = self.waiting.front() else { break };
+            // seg-id safety: the attention kernel isolates sequences by
+            // the 31-bit projection of their id, so two live sequences
+            // must never share it. Hold the collider at the queue head
+            // (FCFS order preserved) until the resident one finishes.
+            let seg = seg_of(seq.id);
+            if self.running.iter().any(|r| seg_of(r.id) == seg) {
+                break;
+            }
             let need = Self::future_need(seq);
             if kv.free_slots() < reserved + need {
                 break;
             }
             reserved += need;
             let seq = self.waiting.pop_front().unwrap();
+            // pre-size the KV slot list so decode-path allocs never grow it
+            kv.reserve_seq(seq.id, seq.tokens.len() + seq.max_new);
             self.running.push(seq);
         }
     }
 
-    /// Build the next batch, allocating KV slots and updating `meta`.
-    /// Returns `None` when nothing is runnable.
-    pub fn build_batch(&mut self, kv: &mut KvCache, meta: &mut SlotMeta) -> Result<Option<Batch>> {
+    /// Build the next batch into `ws`, allocating KV slots and updating
+    /// the workspace's persistent `cache_seg`/`cache_pos` in place.
+    /// Returns `None` when nothing is runnable. Performs no heap
+    /// allocation once the workspace buffers have reached steady-state
+    /// capacity.
+    pub fn build_batch(
+        &mut self,
+        kv: &mut KvCache,
+        ws: &mut StepWorkspace,
+    ) -> Result<Option<Batch>> {
         self.admit(kv);
+        ws.rows.clear();
         if self.running.is_empty() {
             return Ok(None);
         }
+        debug_assert!(
+            self.running.iter().enumerate().all(|(i, a)| {
+                self.running[..i].iter().all(|b| seg_of(a.id) != seg_of(b.id))
+            }),
+            "duplicate seg ids among running sequences"
+        );
         let budget = self.cfg.max_bucket();
-        // (seq index, how many tokens this step)
-        let mut plan: Vec<(usize, usize)> = Vec::new();
+        let StepWorkspace { inputs, rows, plan, slots } = ws;
+        plan.clear();
         let mut total = 0usize;
 
         // decode first: one token each
@@ -274,26 +375,31 @@ impl Scheduler {
         };
         let out_rows = self.cfg.out_rows(bucket);
 
-        let mut inputs = StepInputs {
-            token_ids: vec![0; bucket],
-            positions: vec![0; bucket],
-            seg_ids: vec![-1; bucket],
-            slot_idx: vec![self.cfg.kv_cap as i32; bucket],
-            cache_seg: Vec::new(),
-            cache_pos: Vec::new(),
-            out_rows: vec![0; out_rows],
-            aid: vec![-1; bucket],
-        };
-        let mut rows: Vec<(usize, u64)> = Vec::new();
+        // re-pad the reusable bucket-sized tensors in place (clear +
+        // resize = fill; no allocation once capacity is established).
+        // cache_seg/cache_pos are persistent: only dirty slots below.
+        inputs.token_ids.clear();
+        inputs.token_ids.resize(bucket, 0);
+        inputs.positions.clear();
+        inputs.positions.resize(bucket, 0);
+        inputs.seg_ids.clear();
+        inputs.seg_ids.resize(bucket, -1);
+        inputs.slot_idx.clear();
+        inputs.slot_idx.resize(bucket, self.cfg.kv_cap as i32);
+        inputs.aid.clear();
+        inputs.aid.resize(bucket, -1);
+        inputs.out_rows.clear();
+        inputs.out_rows.resize(out_rows, 0);
+
         let mut cursor = 0usize;
         let mut prefill_tokens = 0usize;
         let mut decode_tokens = 0usize;
 
-        for &(si, take) in &plan {
+        for &(si, take) in plan.iter() {
             let seq = &mut self.running[si];
             let start = seq.prefilled;
-            let slots = kv.alloc(seq.id, take)?;
-            let seg = (seq.id & 0x7fff_ffff) as i32;
+            kv.alloc_into(seq.id, take, slots)?;
+            let seg = seg_of(seq.id);
             for (j, &slot) in slots.iter().enumerate() {
                 let pos = (start + j) as i32;
                 let t = cursor + j;
@@ -302,8 +408,8 @@ impl Scheduler {
                 inputs.seg_ids[t] = seg;
                 inputs.slot_idx[t] = slot as i32;
                 inputs.aid[t] = seq.aid;
-                meta.seg[slot as usize] = seg;
-                meta.pos[slot as usize] = pos;
+                inputs.cache_seg[slot as usize] = seg;
+                inputs.cache_pos[slot as usize] = pos;
             }
             if seq.decoding() {
                 decode_tokens += take;
@@ -319,13 +425,11 @@ impl Scheduler {
                     bail!("out_rows overflow: {row_idx} >= {out_rows}");
                 }
                 inputs.out_rows[row_idx] = (cursor + take - 1) as i32;
-                rows.push((row_idx, seq.id));
+                rows.push(OutRow { row: row_idx, seq: seq.id, sampling: seq.sampling });
             }
             cursor += take;
         }
-        inputs.cache_seg = meta.seg.clone();
-        inputs.cache_pos = meta.pos.clone();
-        Ok(Some(Batch { bucket, inputs, rows, prefill_tokens, decode_tokens }))
+        Ok(Some(Batch { bucket, out_rows, prefill_tokens, decode_tokens }))
     }
 
     /// Append a sampled token to a running sequence. Returns `true` when
@@ -344,23 +448,22 @@ impl Scheduler {
     }
 
     /// Free a sequence's KV slots and clear its device-visible metadata.
-    fn release(seq: &SeqState, kv: &mut KvCache, meta: &mut SlotMeta) {
+    fn release(seq: &SeqState, kv: &mut KvCache, ws: &mut StepWorkspace) {
         if let Some(slots) = kv.slots_of(seq.id) {
-            let slots = slots.to_vec();
-            meta.clear_slots(&slots);
+            ws.clear_slots(slots);
         }
         kv.free_seq(seq.id);
     }
 
     /// Remove finished sequences, freeing their KV slots; returns them.
-    pub fn reap(&mut self, kv: &mut KvCache, meta: &mut SlotMeta) -> Vec<SeqState> {
+    pub fn reap(&mut self, kv: &mut KvCache, ws: &mut StepWorkspace) -> Vec<SeqState> {
         let mut out = Vec::new();
         let mut i = 0;
         while i < self.running.len() {
             if self.running[i].done() {
                 let mut seq = self.running.swap_remove(i);
                 seq.finished_at = Some(Instant::now());
-                Self::release(&seq, kv, meta);
+                Self::release(&seq, kv, ws);
                 out.push(seq);
             } else {
                 i += 1;
@@ -372,13 +475,18 @@ impl Scheduler {
     /// Remove a sequence wherever it is (queued or running), freeing any
     /// KV slots it holds. Returns it, or `None` if unknown (already
     /// finished, or never submitted).
-    pub fn cancel(&mut self, id: u64, kv: &mut KvCache, meta: &mut SlotMeta) -> Option<SeqState> {
+    pub fn cancel(
+        &mut self,
+        id: u64,
+        kv: &mut KvCache,
+        ws: &mut StepWorkspace,
+    ) -> Option<SeqState> {
         if let Some(pos) = self.waiting.iter().position(|s| s.id == id) {
             return self.waiting.remove(pos);
         }
         if let Some(pos) = self.running.iter().position(|s| s.id == id) {
             let seq = self.running.swap_remove(pos);
-            Self::release(&seq, kv, meta);
+            Self::release(&seq, kv, ws);
             return Some(seq);
         }
         None
@@ -392,7 +500,7 @@ impl Scheduler {
         &mut self,
         now: Instant,
         kv: &mut KvCache,
-        meta: &mut SlotMeta,
+        ws: &mut StepWorkspace,
     ) -> Vec<SeqState> {
         let mut out = Vec::new();
         let mut i = 0;
@@ -407,7 +515,7 @@ impl Scheduler {
         while i < self.running.len() {
             if self.running[i].deadline.is_some_and(|d| d <= now) {
                 let seq = self.running.swap_remove(i);
-                Self::release(&seq, kv, meta);
+                Self::release(&seq, kv, ws);
                 out.push(seq);
             } else {
                 i += 1;
@@ -436,33 +544,34 @@ mod tests {
         )
     }
 
-    fn setup() -> (Scheduler, KvCache, SlotMeta) {
-        (Scheduler::new(cfg()), KvCache::new(64), SlotMeta::new(64))
+    fn setup() -> (Scheduler, KvCache, StepWorkspace) {
+        let c = cfg();
+        (Scheduler::new(c.clone()), KvCache::new(64), StepWorkspace::new(&c))
     }
 
     #[test]
     fn single_seq_prefill_then_decode() {
-        let (mut s, mut kv, mut meta) = setup();
+        let (mut s, mut kv, mut ws) = setup();
         s.submit(seq(1, 10, 2));
         // chunk=8: first step takes 8 prompt tokens, no rows
-        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        let b = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
         assert_eq!(b.prefill_tokens, 8);
         assert_eq!(b.bucket, 16);
-        assert!(b.rows.is_empty());
+        assert!(ws.rows.is_empty());
         // second step: remaining 2 prompt tokens -> one row
-        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        let b = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
         assert_eq!(b.prefill_tokens, 2);
         assert_eq!(b.bucket, 4);
-        assert_eq!(b.rows.len(), 1);
-        assert_eq!(b.inputs.out_rows[0], 1); // last of the 2 tokens
+        assert_eq!(ws.rows.len(), 1);
+        assert_eq!(ws.inputs.out_rows[0], 1); // last of the 2 tokens
         s.push_token(1, 42).unwrap();
         // decode step: 1 token
-        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        let b = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
         assert_eq!(b.decode_tokens, 1);
-        assert_eq!(b.inputs.token_ids[0], 42);
-        assert_eq!(b.inputs.positions[0], 10);
+        assert_eq!(ws.inputs.token_ids[0], 42);
+        assert_eq!(ws.inputs.positions[0], 10);
         s.push_token(1, 43).unwrap();
-        let done = s.reap(&mut kv, &mut meta);
+        let done = s.reap(&mut kv, &mut ws);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].tokens.len(), 12);
         assert_eq!(kv.used_slots(), 0);
@@ -471,73 +580,74 @@ mod tests {
 
     #[test]
     fn decode_has_priority_and_mixed_batches_pack() {
-        let (mut s, mut kv, mut meta) = setup();
+        let (mut s, mut kv, mut ws) = setup();
         s.submit(seq(1, 3, 4));
-        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
-        assert_eq!(b.rows.len(), 1);
+        let b = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
+        assert_eq!(b.prefill_tokens, 3);
+        assert_eq!(ws.rows.len(), 1);
         s.push_token(1, 9).unwrap();
         // now submit a long-prompt request; batch = 1 decode + prefill chunk
         s.submit(seq(2, 12, 1));
-        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        let b = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
         assert_eq!(b.decode_tokens, 1);
         assert_eq!(b.prefill_tokens, 8);
         // decode token sits at index 0
-        assert_eq!(b.inputs.positions[0], 3);
+        assert_eq!(ws.inputs.positions[0], 3);
         // seg ids differ per sequence
-        assert_ne!(b.inputs.seg_ids[0], b.inputs.seg_ids[1]);
+        assert_ne!(ws.inputs.seg_ids[0], ws.inputs.seg_ids[1]);
     }
 
     #[test]
     fn admission_respects_max_seqs_and_kv_room() {
-        let (mut s, mut kv, mut meta) = setup();
+        let (mut s, mut kv, mut ws) = setup();
         for i in 0..6 {
             s.submit(seq(i, 4, 2));
         }
-        let _ = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
         assert_eq!(s.running_len(), 4); // max_seqs
         assert_eq!(s.waiting_len(), 2);
 
-        // KV-constrained admission: capacity 64, each seq reserves 6
-        let (mut s, mut kv, mut meta) = (
-            Scheduler::new(SchedConfig { max_seqs: 64, abi_max_seqs: 64, ..cfg() }),
-            KvCache::new(16),
-            SlotMeta::new(16),
-        );
+        // KV-constrained admission: capacity 16, each seq reserves 6
+        let c = SchedConfig { max_seqs: 64, abi_max_seqs: 64, kv_cap: 16, ..cfg() };
+        let (mut s, mut kv, mut ws) =
+            (Scheduler::new(c.clone()), KvCache::new(16), StepWorkspace::new(&c));
         for i in 0..5 {
             s.submit(seq(i, 4, 2)); // needs 6 reserved
         }
-        let _ = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
         assert_eq!(s.running_len(), 2, "16 slots / 6 per seq -> 2 admitted");
     }
 
     #[test]
     fn batch_arrays_are_consistent() {
-        let (mut s, mut kv, mut meta) = setup();
+        let (mut s, mut kv, mut ws) = setup();
         s.submit(seq(7, 5, 3));
         s.submit(seq(8, 2, 3));
-        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        let b = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
         // every non-pad token has a valid slot; pads point out of range
         for t in 0..b.bucket {
-            if b.inputs.seg_ids[t] >= 0 {
-                let slot = b.inputs.slot_idx[t] as usize;
+            if ws.inputs.seg_ids[t] >= 0 {
+                let slot = ws.inputs.slot_idx[t] as usize;
                 assert!(slot < 64);
-                assert_eq!(meta.seg[slot], b.inputs.seg_ids[t]);
-                assert_eq!(meta.pos[slot], b.inputs.positions[t]);
+                assert_eq!(ws.inputs.cache_seg[slot], ws.inputs.seg_ids[t]);
+                assert_eq!(ws.inputs.cache_pos[slot], ws.inputs.positions[t]);
             } else {
-                assert_eq!(b.inputs.slot_idx[t], 64);
+                assert_eq!(ws.inputs.slot_idx[t], 64);
             }
         }
-        // rows reference in-batch positions
-        for &(row, _) in &b.rows {
-            let r = b.inputs.out_rows[row] as usize;
-            assert!(r < b.bucket);
-            assert!(b.inputs.seg_ids[r] >= 0);
+        // rows reference in-batch positions and carry the sampling mode
+        for r in &ws.rows {
+            let t = ws.inputs.out_rows[r.row] as usize;
+            assert!(t < b.bucket);
+            assert!(ws.inputs.seg_ids[t] >= 0);
+            assert_eq!(r.sampling, Sampling::Greedy);
         }
+        assert!(ws.all_greedy());
     }
 
     #[test]
     fn adapter_work_counts_waiting_and_running() {
-        let (mut s, mut kv, mut meta) = setup();
+        let (mut s, mut kv, mut ws) = setup();
         let mut with = |id: u64, name: &str| {
             s.submit(SeqState::new(
                 id,
@@ -555,56 +665,56 @@ mod tests {
         assert_eq!(s.adapter_work("law"), 1);
         assert_eq!(s.adapter_work("none"), 0);
         // admission moves them to running; counts must not change
-        let _ = s.build_batch(&mut kv, &mut meta).unwrap();
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap();
         assert_eq!(s.adapter_work("math"), 2);
         assert_eq!(s.adapter_work("law"), 1);
     }
 
     #[test]
     fn cancel_frees_kv_wherever_the_seq_is() {
-        let (mut s, mut kv, mut meta) = setup();
+        let (mut s, mut kv, mut ws) = setup();
         s.submit(seq(1, 4, 8));
         // queued cancel: no KV held, just drops from waiting
-        assert_eq!(s.cancel(1, &mut kv, &mut meta).unwrap().id, 1);
+        assert_eq!(s.cancel(1, &mut kv, &mut ws).unwrap().id, 1);
         assert!(s.is_idle());
-        assert!(s.cancel(1, &mut kv, &mut meta).is_none(), "idempotent");
+        assert!(s.cancel(1, &mut kv, &mut ws).is_none(), "idempotent");
 
         // running cancel: KV slots must come back
         s.submit(seq(2, 4, 8));
-        let _ = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
         assert!(kv.used_slots() > 0);
-        let got = s.cancel(2, &mut kv, &mut meta).unwrap();
+        let got = s.cancel(2, &mut kv, &mut ws).unwrap();
         assert_eq!(got.id, 2);
         assert_eq!(kv.used_slots(), 0);
         assert!(s.is_idle());
         // cleared slot metadata is device-consistent
-        assert!(meta.seg.iter().all(|&x| x == -1));
+        assert!(ws.inputs.cache_seg.iter().all(|&x| x == -1));
     }
 
     #[test]
     fn expired_deadline_never_reaches_a_batch() {
-        let (mut s, mut kv, mut meta) = setup();
+        let (mut s, mut kv, mut ws) = setup();
         let mut dead = seq(1, 4, 2);
         dead.deadline = Some(Instant::now() - std::time::Duration::from_millis(1));
         s.submit(dead);
         s.submit(seq(2, 4, 2));
-        let expired = s.expire_deadlines(Instant::now(), &mut kv, &mut meta);
+        let expired = s.expire_deadlines(Instant::now(), &mut kv, &mut ws);
         assert_eq!(expired.len(), 1);
         assert_eq!(expired[0].id, 1);
         assert_eq!(expired[0].prefilled, 0, "expired while queued: no tokens fed");
         // the live sequence still runs
-        let b = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
-        assert_eq!(b.rows.len(), 1);
-        assert_eq!(b.rows[0].1, 2);
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
+        assert_eq!(ws.rows.len(), 1);
+        assert_eq!(ws.rows[0].seq, 2);
 
         // a running sequence past deadline frees its KV on expiry
         let mut dead = seq(3, 4, 8);
         s.submit(seq(9, 2, 1));
         dead.deadline = Some(Instant::now());
         s.submit(dead);
-        let _ = s.build_batch(&mut kv, &mut meta).unwrap();
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap();
         let used_before = kv.used_slots();
-        let expired = s.expire_deadlines(Instant::now(), &mut kv, &mut meta);
+        let expired = s.expire_deadlines(Instant::now(), &mut kv, &mut ws);
         assert_eq!(expired.iter().filter(|e| e.id == 3).count(), 1);
         assert!(used_before > 0);
         assert!(kv.used_slots() < used_before);
@@ -612,12 +722,51 @@ mod tests {
 
     #[test]
     fn push_token_reports_ttft_edge() {
-        let (mut s, mut kv, mut meta) = setup();
+        let (mut s, mut kv, mut ws) = setup();
         s.submit(seq(1, 2, 3));
-        let _ = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
         assert!(s.push_token(1, 5).unwrap(), "first generated token");
-        let _ = s.build_batch(&mut kv, &mut meta).unwrap().unwrap();
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
         assert!(!s.push_token(1, 6).unwrap(), "second token is not First");
+    }
+
+    #[test]
+    fn colliding_seg_ids_are_never_co_scheduled() {
+        let (mut s, mut kv, mut ws) = setup();
+        let low = 5u64;
+        let high = low + (1u64 << 31); // same 31-bit projection
+        assert_eq!(seg_of(low), seg_of(high));
+        s.submit(seq(low, 2, 1));
+        s.submit(seq(high, 2, 1));
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
+        assert_eq!(s.running_len(), 1, "collider must wait");
+        assert_eq!(s.waiting_len(), 1);
+        assert_eq!(s.running()[0].id, low);
+        // finish the first; the collider is then admitted
+        s.push_token(low, 1).unwrap();
+        s.reap(&mut kv, &mut ws);
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
+        assert_eq!(s.running_len(), 1);
+        assert_eq!(s.running()[0].id, high);
+        s.push_token(high, 1).unwrap();
+        s.reap(&mut kv, &mut ws);
+        assert!(s.is_idle());
+        assert_eq!(kv.used_slots(), 0);
+    }
+
+    #[test]
+    fn rows_capture_per_sequence_sampling() {
+        let (mut s, mut kv, mut ws) = setup();
+        let mut t = seq(1, 2, 2);
+        t.sampling = Sampling::Temperature(0.7);
+        s.submit(t);
+        s.submit(seq(2, 2, 2));
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
+        assert_eq!(ws.rows.len(), 2);
+        assert!(!ws.all_greedy());
+        let by_seq = |id: u64| ws.rows.iter().find(|r| r.seq == id).unwrap().sampling;
+        assert_eq!(by_seq(1), Sampling::Temperature(0.7));
+        assert_eq!(by_seq(2), Sampling::Greedy);
     }
 
     #[test]
@@ -633,33 +782,32 @@ mod tests {
             };
             let mut s = Scheduler::new(cfg.clone());
             let mut kv = KvCache::new(256);
-            let mut meta = SlotMeta::new(256);
+            let mut ws = StepWorkspace::new(&cfg);
             let mut next_id = 0u64;
             for _ in 0..30 {
                 if rng.below(2) == 0 {
                     next_id += 1;
                     s.submit(seq_with(next_id, 1 + rng.below(40) as usize, 1 + rng.below(5) as usize));
                 }
-                if let Some(b) = s.build_batch(&mut kv, &mut meta).unwrap() {
+                if let Some(b) = s.build_batch(&mut kv, &mut ws).unwrap() {
                     let used = b.prefill_tokens + b.decode_tokens;
                     assert!(used <= b.bucket);
                     assert!(b.bucket <= 64);
-                    assert!(b.rows.len() <= cfg.out_rows(b.bucket));
-                    for (row, seq_id) in &b.rows {
-                        let _ = row;
-                        s.push_token(*seq_id, 1).unwrap();
+                    assert!(ws.rows.len() <= cfg.out_rows(b.bucket));
+                    for r in &ws.rows {
+                        s.push_token(r.seq, 1).unwrap();
                     }
-                    s.reap(&mut kv, &mut meta);
+                    s.reap(&mut kv, &mut ws);
                 }
             }
             // drain: everything eventually terminates
             for _ in 0..500 {
-                match s.build_batch(&mut kv, &mut meta).unwrap() {
-                    Some(b) => {
-                        for (_, seq_id) in &b.rows {
-                            s.push_token(*seq_id, 1).unwrap();
+                match s.build_batch(&mut kv, &mut ws).unwrap() {
+                    Some(_) => {
+                        for r in &ws.rows {
+                            s.push_token(r.seq, 1).unwrap();
                         }
-                        s.reap(&mut kv, &mut meta);
+                        s.reap(&mut kv, &mut ws);
                     }
                     None => break,
                 }

@@ -156,6 +156,10 @@ pub enum SubmitError {
     Shed,
     /// The backend is draining and accepts no new work.
     ShuttingDown,
+    /// Deadline-aware admission: the queue's expected wait (EWMA step
+    /// time × queue depth) already exceeds the request's deadline, so it
+    /// would expire before ever occupying a batch slot.
+    DeadlineUnmeetable,
     /// The request itself is malformed (empty prompt, exceeds KV
     /// capacity, ...).
     Invalid(String),
@@ -169,6 +173,7 @@ impl SubmitError {
             SubmitError::QueueFull => "queue_full",
             SubmitError::Shed => "shed",
             SubmitError::ShuttingDown => "shutting_down",
+            SubmitError::DeadlineUnmeetable => "deadline_unmeetable",
             SubmitError::Invalid(_) => "invalid",
         }
     }
@@ -181,6 +186,9 @@ impl fmt::Display for SubmitError {
             SubmitError::QueueFull => write!(f, "admission queue is full"),
             SubmitError::Shed => write!(f, "request shed by admission control"),
             SubmitError::ShuttingDown => write!(f, "backend is shutting down"),
+            SubmitError::DeadlineUnmeetable => {
+                write!(f, "deadline shorter than the queue's expected wait")
+            }
             SubmitError::Invalid(why) => write!(f, "invalid request: {why}"),
         }
     }
@@ -277,6 +285,7 @@ mod tests {
             (SubmitError::QueueFull, "queue_full"),
             (SubmitError::Shed, "shed"),
             (SubmitError::ShuttingDown, "shutting_down"),
+            (SubmitError::DeadlineUnmeetable, "deadline_unmeetable"),
             (SubmitError::Invalid("y".into()), "invalid"),
         ];
         for (e, code) in cases {

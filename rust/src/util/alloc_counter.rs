@@ -1,0 +1,51 @@
+//! Counting wrapper around the system allocator, used to *prove* the
+//! step pipeline's zero-allocation steady state (`tests/hotpath_alloc.rs`
+//! asserts it; `benches/fig11_hotpath.rs` reports it). Compiled only
+//! under the test-only `alloc-counter` feature so normal builds keep the
+//! system allocator untouched.
+//!
+//! The counter is global to the process: binaries that want it install
+//! it themselves with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static GLOBAL: expertweave::util::alloc_counter::CountingAlloc =
+//!     expertweave::util::alloc_counter::CountingAlloc;
+//! ```
+//!
+//! and read [`allocations`] before/after the region under test.
+//! Deallocations are not counted — the contract under test is "no new
+//! heap blocks on the hot path", and frees of pre-existing blocks are
+//! fine.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// See module docs. Every `alloc`/`alloc_zeroed`/`realloc` bumps the
+/// global counter, then defers to [`System`].
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Total heap allocations observed process-wide since start.
+pub fn allocations() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}

@@ -2,6 +2,8 @@
 //! (no serde/clap/criterion/tokio): JSON, CLI args, PRNG, stats,
 //! logging and a tiny property-testing helper.
 
+#[cfg(feature = "alloc-counter")]
+pub mod alloc_counter;
 pub mod args;
 pub mod json;
 pub mod logging;

@@ -19,6 +19,12 @@ impl Samples {
         self.sorted = false;
     }
 
+    /// Pre-size for `additional` more samples (hot loops that must not
+    /// reallocate mid-measurement, e.g. the zero-allocation step test).
+    pub fn reserve(&mut self, additional: usize) {
+        self.values.reserve(additional);
+    }
+
     pub fn len(&self) -> usize {
         self.values.len()
     }

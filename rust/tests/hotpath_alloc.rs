@@ -1,0 +1,97 @@
+//! The zero-allocation contract of the step pipeline: once a serving
+//! session reaches steady-state decode (all sequences admitted and past
+//! prefill, buffers at capacity), `Engine::step` must perform ZERO heap
+//! allocations — the batch is packed into the persistent
+//! [`StepWorkspace`], KV slots come out of `alloc_into`, the sim backend
+//! reads greedy tokens straight off the row hash into the persistent
+//! [`StepOutput`], and metrics push into pre-reserved sample buffers.
+//!
+//! Gated behind the `alloc-counter` feature (Cargo `required-features`)
+//! so the counting global allocator never leaks into normal test runs:
+//!
+//! ```text
+//! cargo test --features alloc-counter --test hotpath_alloc -- --nocapture
+//! ```
+//!
+//! This file holds exactly one #[test] so no concurrent test can pollute
+//! the global allocation counter.
+
+use expertweave::adapters::generator::synth_fleet_adapters;
+use expertweave::engine::{Engine, EngineOptions, RequestSpec};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{SimPerf, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::util::alloc_counter::{allocations, CountingAlloc};
+use expertweave::weights::StoreMode;
+use std::time::Instant;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_decode_performs_zero_allocations() {
+    const SEQS: usize = 8;
+    const PROMPT: usize = 4;
+    const WARMUP: usize = 32;
+    const MEASURE: usize = 64;
+    const MAX_NEW: usize = WARMUP + MEASURE + 32;
+
+    let mut cfg = ModelConfig::sim_default();
+    cfg.kv_cap = SEQS * (PROMPT + MAX_NEW + 8);
+    let adapters = synth_fleet_adapters(&cfg, 2, 42);
+    let mut e = Engine::sim_weave(
+        &cfg,
+        SimPerf::instant(),
+        &adapters,
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions { page_size: 64 << 10, ..Default::default() },
+    )
+    .unwrap();
+    e.metrics.reserve_steps(WARMUP + MEASURE + 16);
+    for i in 0..SEQS {
+        // mix adapter and base traffic so the fused reroute runs on a
+        // heterogeneous AID batch, like real serving
+        let who = (i % 2 == 0).then(|| adapters[i / 2 % 2].name.clone());
+        e.submit(RequestSpec {
+            adapter: who,
+            prompt: (1..=PROMPT as i32).collect(),
+            max_new_tokens: MAX_NEW,
+            sampling: Sampling::Greedy,
+        })
+        .unwrap();
+    }
+    // warmup: prefill completes, dead token streams detach, every
+    // workspace/output/KV buffer reaches steady-state capacity
+    for _ in 0..WARMUP {
+        e.step().unwrap();
+    }
+    let (waiting, running) = e.queue_depth();
+    assert_eq!(waiting, 0, "all sequences must be admitted");
+    assert_eq!(running, SEQS, "all sequences must still be decoding");
+
+    let before = allocations();
+    let t0 = Instant::now();
+    for _ in 0..MEASURE {
+        e.step().unwrap();
+    }
+    let elapsed = t0.elapsed();
+    let after = allocations();
+
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state decode must not allocate (got {} allocations over {MEASURE} steps)",
+        after - before
+    );
+    let steps_per_sec = MEASURE as f64 / elapsed.as_secs_f64().max(1e-12);
+    assert!(steps_per_sec > 0.0, "steps/sec must be nonzero");
+    println!(
+        "hotpath: {steps_per_sec:.0} steps/s, 0 allocations over {MEASURE} steady steps"
+    );
+
+    // sanity: the session still drains and completes everything
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), SEQS);
+    assert!(done.iter().all(|c| c.output.len() == MAX_NEW));
+}

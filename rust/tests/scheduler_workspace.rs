@@ -1,0 +1,139 @@
+//! Differential property test for the workspace-based batch builder:
+//! across randomized submit / cancel / expire / build interleavings, a
+//! `build_batch` into a *reused* [`StepWorkspace`] must be byte-identical
+//! to the same build performed on a cloned scheduler + KV cache into a
+//! *fresh* workspace (the fresh-allocation reference) — i.e. no stale
+//! state from previous batches may ever leak through the reused buffers.
+//!
+//! The persistent `cache_seg` / `cache_pos` arrays are cumulative, so
+//! they are checked against an independent first-principles
+//! reconstruction from the per-sequence KV slot lists instead.
+
+use expertweave::kvcache::KvCache;
+use expertweave::sampler::Sampling;
+use expertweave::scheduler::{seg_of, SchedConfig, Scheduler, SeqState, StepWorkspace};
+use expertweave::util::prop;
+use std::time::{Duration, Instant};
+
+/// Rebuild the device-visible slot metadata from scratch: every running
+/// sequence's slots carry its seg id and positions 0..len; everything
+/// else is cleared (-1 / 0).
+fn reconstruct_cache(s: &Scheduler, kv: &KvCache, cap: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut seg = vec![-1; cap];
+    let mut pos = vec![0; cap];
+    for q in s.running() {
+        if let Some(slots) = kv.slots_of(q.id) {
+            for (p, &sl) in slots.iter().enumerate() {
+                seg[sl as usize] = seg_of(q.id);
+                pos[sl as usize] = p as i32;
+            }
+        }
+    }
+    (seg, pos)
+}
+
+#[test]
+fn workspace_build_matches_fresh_allocation_reference() {
+    prop::check(4242, 40, |rng| {
+        let max_seqs = 1 + rng.below(5) as usize;
+        let cfg = SchedConfig {
+            max_seqs,
+            abi_max_seqs: max_seqs,
+            chunk: 1 + rng.below(10) as usize,
+            buckets: vec![4, 16, 64],
+            kv_cap: 128,
+        };
+        let mut s = Scheduler::new(cfg.clone());
+        let mut kv = KvCache::new(cfg.kv_cap);
+        let mut ws = StepWorkspace::new(&cfg);
+        let mut next_id = 0u64;
+        let mut live: Vec<u64> = Vec::new();
+        let far_future = Instant::now() + Duration::from_secs(3600);
+
+        for _ in 0..40 {
+            match rng.below(8) {
+                0 | 1 | 2 => {
+                    next_id += 1;
+                    let mut seq = SeqState::new(
+                        next_id,
+                        if rng.below(2) == 0 { -1 } else { rng.below(4) as i32 },
+                        None,
+                        (0..(1 + rng.below(24) as i32)).collect(),
+                        1 + rng.below(4) as usize,
+                        if rng.below(3) == 0 {
+                            Sampling::Temperature(0.8)
+                        } else {
+                            Sampling::Greedy
+                        },
+                    );
+                    // some sequences carry deadlines; a third of those
+                    // are already expired and must vanish via expire
+                    seq.deadline = match rng.below(6) {
+                        0 => Some(Instant::now()),
+                        1 | 2 => Some(far_future),
+                        _ => None,
+                    };
+                    live.push(seq.id);
+                    s.submit(seq);
+                }
+                3 if !live.is_empty() => {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let id = live.swap_remove(i);
+                    s.cancel(id, &mut kv, &mut ws);
+                }
+                4 => {
+                    for gone in s.expire_deadlines(Instant::now(), &mut kv, &mut ws) {
+                        live.retain(|&x| x != gone.id);
+                    }
+                }
+                _ => {
+                    // differential build: identical state, fresh buffers
+                    let mut s_ref = s.clone();
+                    let mut kv_ref = kv.clone();
+                    let mut ws_ref = StepWorkspace::new(&cfg);
+                    let b_ref = s_ref.build_batch(&mut kv_ref, &mut ws_ref).unwrap();
+                    let b = s.build_batch(&mut kv, &mut ws).unwrap();
+                    assert_eq!(b, b_ref, "batch summaries must agree");
+                    if b.is_some() {
+                        assert_eq!(ws.inputs.token_ids, ws_ref.inputs.token_ids);
+                        assert_eq!(ws.inputs.positions, ws_ref.inputs.positions);
+                        assert_eq!(ws.inputs.seg_ids, ws_ref.inputs.seg_ids);
+                        assert_eq!(ws.inputs.slot_idx, ws_ref.inputs.slot_idx);
+                        assert_eq!(ws.inputs.aid, ws_ref.inputs.aid);
+                        assert_eq!(ws.inputs.out_rows, ws_ref.inputs.out_rows);
+                        assert_eq!(ws.rows, ws_ref.rows);
+                    }
+                    // persistent cache metadata == independent rebuild
+                    let (seg, pos) = reconstruct_cache(&s, &kv, cfg.kv_cap);
+                    assert_eq!(ws.inputs.cache_seg, seg, "cache_seg drifted");
+                    assert_eq!(ws.inputs.cache_pos, pos, "cache_pos drifted");
+
+                    for r in &ws.rows {
+                        s.push_token(r.seq, 7).unwrap();
+                    }
+                    for done in s.reap(&mut kv, &mut ws) {
+                        live.retain(|&x| x != done.id);
+                    }
+                }
+            }
+        }
+
+        // drain completely; the metadata must end fully cleared
+        for _ in 0..500 {
+            s.expire_deadlines(Instant::now(), &mut kv, &mut ws);
+            match s.build_batch(&mut kv, &mut ws).unwrap() {
+                Some(_) => {
+                    for r in &ws.rows {
+                        s.push_token(r.seq, 7).unwrap();
+                    }
+                    s.reap(&mut kv, &mut ws);
+                }
+                None => break,
+            }
+        }
+        assert!(s.is_idle(), "scheduler must drain");
+        assert_eq!(kv.used_slots(), 0);
+        assert!(ws.inputs.cache_seg.iter().all(|&x| x == -1));
+        assert!(ws.inputs.cache_pos.iter().all(|&x| x == 0));
+    });
+}

@@ -152,6 +152,55 @@ fn drain_completes_in_flight_then_rejects_new_submits() {
 }
 
 #[test]
+fn deadline_aware_admission_rejects_at_submit() {
+    // max_seqs 1 so a queue actually builds behind the running request
+    let (mut e, names) = sim_engine(EngineOptions { max_seqs: 1, ..Default::default() });
+
+    // before any step, the EWMA is unknown: even a tiny deadline must be
+    // admitted (it can still expire in the queue, but not at the door)
+    let mut tiny = req(None, 4, 1);
+    tiny.deadline = Some(Duration::from_nanos(1));
+    let h_tiny = e.submit_request(tiny).unwrap();
+    while ServingBackend::pump(&mut e).unwrap() {}
+    assert!(matches!(
+        h_tiny.drain_events().last(),
+        Some(TokenEvent::Aborted { reason: AbortReason::DeadlineExceeded, .. })
+    ));
+
+    // prime the EWMA with a completed request
+    let _h = e.submit_request(req(Some(&names[0]), 6, 3)).unwrap();
+    while ServingBackend::pump(&mut e).unwrap() {}
+
+    // occupy the engine and put one request in the waiting queue
+    let _busy = e.submit_request(req(None, 4, 200)).unwrap();
+    let _queued = e.submit_request(req(None, 4, 4)).unwrap();
+    ServingBackend::pump(&mut e).unwrap();
+
+    // expected wait = EWMA step time × queue depth >> 1ns: reject at the
+    // door instead of letting it rot in the queue
+    let mut tight = req(None, 4, 2);
+    tight.deadline = Some(Duration::from_nanos(1));
+    match e.submit_request(tight) {
+        Err(SubmitError::DeadlineUnmeetable) => {}
+        other => panic!("expected DeadlineUnmeetable, got {other:?}"),
+    }
+
+    // a generous deadline sails through the same queue
+    let mut ok = req(None, 4, 2);
+    ok.deadline = Some(Duration::from_secs(600));
+    let h_ok = e.submit_request(ok).unwrap();
+    while ServingBackend::pump(&mut e).unwrap() {}
+    assert!(h_ok
+        .drain_events()
+        .iter()
+        .any(|ev| matches!(ev, TokenEvent::Done { .. })));
+
+    let report = e.report();
+    assert_eq!(report.rejected, 1, "the unmeetable deadline was booked");
+    assert_eq!(report.deadline_missed, 1, "only the pre-EWMA tiny deadline expired");
+}
+
+#[test]
 fn typed_submit_errors_and_internal_rejection_accounting() {
     let (mut e, _names) = sim_engine(EngineOptions { queue_cap: 1, ..Default::default() });
     match e.submit_request(req(Some("ghost"), 4, 1)) {
