@@ -44,6 +44,13 @@
 //!   idle LRU victim). Keeps hot adapters pinned, confines churn to the
 //!   cold tail, and — combined with rate-triggered replication — turns
 //!   a hot adapter into multiple copies instead of one hot replica.
+//! * **DeadlineAware** — route by *expected queue wait* (each replica's
+//!   published decode-step EWMA × its in-flight count), resident copies
+//!   first among the replicas that fit the request's deadline. When no
+//!   replica can meet the deadline, refuse the submit with
+//!   [`SubmitError::DeadlineUnmeetable`] instead of queueing a request
+//!   that will expire — the fleet-level counterpart of the engine's own
+//!   deadline-aware admission.
 //!
 //! # Lifecycle
 //!
@@ -84,10 +91,10 @@ mod router;
 
 pub use lifecycle::{AdapterDirectory, RateTracker};
 pub use replica::{ReplicaGauges, ReplicaHandle};
-pub use router::{choose, ReplicaView, RouteDecision, RoutingPolicy};
+pub use router::{choose, ReplicaView, RouteDecision, RouteError, RoutingPolicy};
 
 use crate::adapters::format::Adapter;
-use crate::engine::{Completion, Engine};
+use crate::engine::{Completion, Engine, StepEwma};
 use crate::metrics::Report;
 use crate::server::Pacer;
 use crate::serving::{
@@ -165,6 +172,10 @@ pub struct FleetStats {
     pub shed_queue_full: usize,
     /// Shed: no replica could host the adapter.
     pub shed_no_capacity: usize,
+    /// Deadline-aware routing found no replica whose expected queue wait
+    /// fits the request's deadline (also counted in `submit_rejected`;
+    /// the client sees [`SubmitError::DeadlineUnmeetable`]).
+    pub deadline_unmeetable: usize,
     /// Typed rejections: unknown adapters refused at the door
     /// ([`SubmitError::UnknownAdapter`]) plus engine-level submit
     /// rejections after routing (residency races).
@@ -196,13 +207,14 @@ impl FleetStats {
         };
         format!(
             "routed={} hit={hit} loads={} evict={} repl={} \
-             shed_q={} shed_cap={} rej={}",
+             shed_q={} shed_cap={} dl={} rej={}",
             self.routed,
             self.loads,
             self.evictions,
             self.replications,
             self.shed_queue_full,
             self.shed_no_capacity,
+            self.deadline_unmeetable,
             self.submit_rejected,
         )
     }
@@ -383,10 +395,20 @@ impl Coordinator {
                         && self.directory.copies(n) < self.cfg.max_copies
                         && (self.directory.has_free_slot(i) || self.evictable(i, n).is_some())
                 });
+                // expected queue wait: the replica's published step-time
+                // estimate (decode side, same fallback the engine's own
+                // admission uses) × our exact in-flight count. 0 for an
+                // idle or not-yet-profiled replica — optimistic, like
+                // the engine's own admission.
+                let ewma = StepEwma {
+                    prefill: h.gauges.ewma_prefill_us.load(Ordering::Relaxed) as f64 * 1e-6,
+                    decode: h.gauges.ewma_decode_us.load(Ordering::Relaxed) as f64 * 1e-6,
+                };
                 ReplicaView {
                     index: i,
                     inflight: self.inflight[i],
                     kv_free: h.gauges.kv_free.load(Ordering::Relaxed),
+                    expected_wait: ewma.decode_or_any() * self.inflight[i] as f64,
                     resident,
                     can_host,
                 }
@@ -544,9 +566,17 @@ impl Coordinator {
             }
         }
         let views = self.views(name);
-        let Some(decision) = choose(self.cfg.policy, &views, &mut self.rr_next) else {
-            self.stats.shed_no_capacity += 1;
-            return Err(SubmitError::Shed);
+        let decision = match choose(self.cfg.policy, &views, req.deadline, &mut self.rr_next) {
+            Ok(d) => d,
+            Err(RouteError::NoCapacity) => {
+                self.stats.shed_no_capacity += 1;
+                return Err(SubmitError::Shed);
+            }
+            Err(RouteError::DeadlineUnmeetable) => {
+                self.stats.deadline_unmeetable += 1;
+                self.stats.submit_rejected += 1;
+                return Err(SubmitError::DeadlineUnmeetable);
+            }
         };
         let r = decision.replica;
         if let Some(n) = name {
@@ -706,10 +736,30 @@ impl ServingBackend for Coordinator {
         self.fatal.is_some() || self.inflight_total() > 0
     }
 
+    /// Drain the whole fleet: finish every in-flight request *and* wait
+    /// until every replica engine reports an idle scheduler, so a
+    /// frontend (e.g. the fleet NDJSON listener) can close knowing no
+    /// replica is still mid-step. The coordinator's own in-flight count
+    /// reaches zero when the last terminal event arrives, which can be a
+    /// beat before the emitting replica has finished its step and
+    /// republished its gauges — without the second wait, a listener
+    /// could shut down while a replica thread is still working.
     fn drain(&mut self) -> Result<()> {
         self.shutting_down = true;
-        while ServingBackend::has_work(self) {
+        loop {
+            let replica_busy = self
+                .replicas
+                .iter()
+                .any(|h| h.gauges.active.load(Ordering::Relaxed) > 0);
+            if !ServingBackend::has_work(self) && !replica_busy {
+                break;
+            }
             ServingBackend::pump(self)?;
+        }
+        // deliver any terminal events that raced the last pump
+        self.absorb_events();
+        if let Some(e) = self.fatal.take() {
+            bail!("{e}");
         }
         Ok(())
     }

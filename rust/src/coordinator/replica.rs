@@ -25,19 +25,34 @@ use crate::metrics::Report;
 use crate::serving::{RequestHandle, ServeRequest, SubmitError, TokenEvent};
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Lock-free KV-pressure snapshot a replica thread keeps fresh (the
-/// coordinator's queue-depth signal is its own exact in-flight count;
-/// KV headroom is the one thing only the engine knows).
+/// Lock-free telemetry snapshot a replica thread keeps fresh — its
+/// heartbeat to the coordinator, republished after every command and
+/// step. The coordinator's queue-depth signal is its own exact in-flight
+/// count; KV headroom and step-time estimates are the things only the
+/// engine knows.
 #[derive(Debug, Default)]
 pub struct ReplicaGauges {
     /// Free KV token slots.
     pub kv_free: AtomicUsize,
+    /// EWMA wall time of prefill-phase steps, microseconds (0 = no
+    /// estimate yet). See [`crate::engine::StepEwma`].
+    pub ewma_prefill_us: AtomicU64,
+    /// EWMA wall time of pure decode steps, microseconds (0 = no
+    /// estimate yet). [`RoutingPolicy::DeadlineAware`] scores replicas
+    /// by this × the coordinator's in-flight count.
+    ///
+    /// [`RoutingPolicy::DeadlineAware`]: crate::coordinator::RoutingPolicy::DeadlineAware
+    pub ewma_decode_us: AtomicU64,
+    /// Sequences queued or running inside the engine. The coordinator's
+    /// drain waits for this to reach zero on every replica so the fleet
+    /// listener never closes while an engine is still mid-step.
+    pub active: AtomicUsize,
 }
 
 /// Commands a replica executes in arrival order.
@@ -134,6 +149,15 @@ pub(crate) fn spawn_replica(
 
 fn publish(engine: &Engine, gauges: &ReplicaGauges) {
     gauges.kv_free.store(engine.kv_free_slots(), Ordering::Relaxed);
+    let ewma = engine.step_ewma();
+    gauges
+        .ewma_prefill_us
+        .store((ewma.prefill * 1e6) as u64, Ordering::Relaxed);
+    gauges
+        .ewma_decode_us
+        .store((ewma.decode * 1e6) as u64, Ordering::Relaxed);
+    let (waiting, running) = engine.queue_depth();
+    gauges.active.store(waiting + running, Ordering::Relaxed);
 }
 
 /// In-flight request bookkeeping inside one replica thread.

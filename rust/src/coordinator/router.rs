@@ -1,11 +1,12 @@
 //! Routing policies: pure decision functions over per-replica snapshots.
 //!
 //! The coordinator assembles a [`ReplicaView`] per replica (its own
-//! in-flight bookkeeping + the replica-published KV gauge) and asks
+//! in-flight bookkeeping + the replica-published gauges) and asks
 //! [`choose`] for a placement. Keeping this free of channels and threads
 //! makes every policy unit-testable.
 
 use anyhow::{bail, Result};
+use std::time::Duration;
 
 /// Fleet request-routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,6 +23,17 @@ pub enum RoutingPolicy {
     /// scored by queue depth then free KV slots; fall back to the least
     /// loaded replica that *can* host it (free slot or idle LRU victim).
     AdapterAffinity,
+    /// Deadline-first: prefer replicas whose expected queue wait
+    /// ([`ReplicaView::expected_wait`] — published decode-step EWMA ×
+    /// in-flight count) fits the request's deadline, resident copies
+    /// first within the fitting set. When no replica can meet the
+    /// deadline the request is refused with
+    /// [`RouteError::DeadlineUnmeetable`] instead of being placed to
+    /// expire in a queue. Requests without a deadline are routed by
+    /// least expected wait (queue depth is only the tie-break), which
+    /// distinguishes a slow-but-short queue from a fast one where
+    /// [`RoutingPolicy::JoinShortestQueue`] cannot.
+    DeadlineAware,
 }
 
 impl RoutingPolicy {
@@ -30,7 +42,8 @@ impl RoutingPolicy {
             "rr" | "round-robin" => RoutingPolicy::RoundRobin,
             "jsq" | "shortest-queue" => RoutingPolicy::JoinShortestQueue,
             "affinity" | "adapter-affinity" => RoutingPolicy::AdapterAffinity,
-            other => bail!("unknown routing policy {other:?} (rr|jsq|affinity)"),
+            "deadline" | "deadline-aware" => RoutingPolicy::DeadlineAware,
+            other => bail!("unknown routing policy {other:?} (rr|jsq|affinity|deadline)"),
         })
     }
 
@@ -39,6 +52,7 @@ impl RoutingPolicy {
             RoutingPolicy::RoundRobin => "round-robin",
             RoutingPolicy::JoinShortestQueue => "shortest-queue",
             RoutingPolicy::AdapterAffinity => "adapter-affinity",
+            RoutingPolicy::DeadlineAware => "deadline-aware",
         }
     }
 }
@@ -58,6 +72,20 @@ pub struct ReplicaView {
     pub inflight: usize,
     /// Free KV token slots, as last published by the replica thread.
     pub kv_free: usize,
+    /// Expected queue wait in seconds: the replica's published
+    /// decode-step EWMA × `inflight`. `0.0` when the replica is idle or
+    /// has no estimate yet (optimistic: an unknown replica is assumed
+    /// fast rather than rejected blind).
+    ///
+    /// Deliberately conservative: it models in-flight work as served
+    /// sequentially, while a continuous-batching replica advances up to
+    /// `max_seqs` requests per step — so a deeply batched replica's
+    /// wait is overestimated by up to that factor and DeadlineAware may
+    /// refuse a deadline the replica could have met. Erring toward
+    /// refusal (the client learns immediately) beats admitting a
+    /// request that expires in the queue; ROADMAP tracks the
+    /// service-rate model that sharpens this.
+    pub expected_wait: f64,
     /// The request's adapter is resident (always true for base-model
     /// requests).
     pub resident: bool,
@@ -73,45 +101,95 @@ pub struct RouteDecision {
     pub resident: bool,
 }
 
+/// Why no replica was chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteError {
+    /// Every permissible target is unable to serve the request (the
+    /// caller sheds it).
+    NoCapacity,
+    /// [`RoutingPolicy::DeadlineAware`] only: some replica could serve
+    /// the request, but none can meet its deadline (the caller rejects
+    /// it with [`crate::serving::SubmitError::DeadlineUnmeetable`]).
+    DeadlineUnmeetable,
+}
+
 /// Lower is better: queue depth first, then KV pressure, then index for
 /// determinism.
 fn score(v: &ReplicaView) -> (usize, usize, usize) {
     (v.inflight, usize::MAX - v.kv_free, v.index)
 }
 
-/// Pick a replica for one request, or `None` when every permissible
-/// target would be unable to serve it (the caller sheds the request).
+/// Lower is better: expected wait first (total order: NaN never occurs —
+/// waits are products of finite non-negative gauges), then [`score`].
+fn wait_then_score(a: &&ReplicaView, b: &&ReplicaView) -> std::cmp::Ordering {
+    a.expected_wait
+        .partial_cmp(&b.expected_wait)
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then_with(|| score(a).cmp(&score(b)))
+}
+
+/// Pick a replica for one request, or a typed [`RouteError`] when no
+/// permissible target works.
 ///
-/// `rr_next` is the round-robin wheel; it advances exactly once per
+/// `deadline` is consulted only by [`RoutingPolicy::DeadlineAware`];
+/// `rr_next` is the round-robin wheel — it advances exactly once per
 /// RoundRobin decision and is untouched by the other policies.
 pub fn choose(
     policy: RoutingPolicy,
     views: &[ReplicaView],
+    deadline: Option<Duration>,
     rr_next: &mut usize,
-) -> Option<RouteDecision> {
+) -> Result<RouteDecision, RouteError> {
     if views.is_empty() {
-        return None;
+        return Err(RouteError::NoCapacity);
     }
     let serveable = |v: &ReplicaView| v.resident || v.can_host;
+    let decision = |v: &ReplicaView| RouteDecision { replica: v.index, resident: v.resident };
     match policy {
         RoutingPolicy::RoundRobin => {
             let v = &views[*rr_next % views.len()];
             *rr_next = rr_next.wrapping_add(1);
-            serveable(v).then(|| RouteDecision { replica: v.index, resident: v.resident })
+            serveable(v).then(|| decision(v)).ok_or(RouteError::NoCapacity)
         }
         RoutingPolicy::JoinShortestQueue => {
-            let v = views.iter().min_by_key(|v| score(v))?;
-            serveable(v).then(|| RouteDecision { replica: v.index, resident: v.resident })
+            let v = views.iter().min_by_key(|v| score(v)).ok_or(RouteError::NoCapacity)?;
+            serveable(v).then(|| decision(v)).ok_or(RouteError::NoCapacity)
         }
         RoutingPolicy::AdapterAffinity => {
             if let Some(v) = views.iter().filter(|v| v.resident).min_by_key(|v| score(v)) {
-                return Some(RouteDecision { replica: v.index, resident: true });
+                return Ok(RouteDecision { replica: v.index, resident: true });
             }
             views
                 .iter()
                 .filter(|v| v.can_host)
                 .min_by_key(|v| score(v))
                 .map(|v| RouteDecision { replica: v.index, resident: false })
+                .ok_or(RouteError::NoCapacity)
+        }
+        RoutingPolicy::DeadlineAware => {
+            if !views.iter().any(serveable) {
+                return Err(RouteError::NoCapacity);
+            }
+            let fits =
+                |v: &&ReplicaView| deadline.map_or(true, |d| v.expected_wait < d.as_secs_f64());
+            // resident copies first within the fitting set (keeps the
+            // affinity win), then any hostable fit; least expected wait
+            // decides within each tier
+            if let Some(v) = views
+                .iter()
+                .filter(|v| v.resident)
+                .filter(&fits)
+                .min_by(wait_then_score)
+            {
+                return Ok(decision(v));
+            }
+            views
+                .iter()
+                .filter(|v| v.can_host)
+                .filter(&fits)
+                .min_by(wait_then_score)
+                .map(decision)
+                .ok_or(RouteError::DeadlineUnmeetable)
         }
     }
 }
@@ -121,7 +199,14 @@ mod tests {
     use super::*;
 
     fn view(index: usize, inflight: usize, resident: bool) -> ReplicaView {
-        ReplicaView { index, inflight, kv_free: 1000, resident, can_host: true }
+        ReplicaView {
+            index,
+            inflight,
+            kv_free: 1000,
+            expected_wait: 0.0,
+            resident,
+            can_host: true,
+        }
     }
 
     #[test]
@@ -130,10 +215,15 @@ mod tests {
             RoutingPolicy::RoundRobin,
             RoutingPolicy::JoinShortestQueue,
             RoutingPolicy::AdapterAffinity,
+            RoutingPolicy::DeadlineAware,
         ] {
             assert_eq!(RoutingPolicy::parse(p.as_str()).unwrap(), p);
         }
         assert_eq!(RoutingPolicy::parse("rr").unwrap(), RoutingPolicy::RoundRobin);
+        assert_eq!(
+            RoutingPolicy::parse("deadline").unwrap(),
+            RoutingPolicy::DeadlineAware
+        );
         assert!(RoutingPolicy::parse("nope").is_err());
     }
 
@@ -142,7 +232,11 @@ mod tests {
         let mut rr = 0;
         let views = vec![view(0, 9, false), view(1, 0, true), view(2, 3, false)];
         let picks: Vec<usize> = (0..6)
-            .map(|_| choose(RoutingPolicy::RoundRobin, &views, &mut rr).unwrap().replica)
+            .map(|_| {
+                choose(RoutingPolicy::RoundRobin, &views, None, &mut rr)
+                    .unwrap()
+                    .replica
+            })
             .collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
         // a replica that can neither serve nor host sheds, but the wheel
@@ -150,9 +244,14 @@ mod tests {
         let mut blocked = views.clone();
         blocked[0].can_host = false;
         let mut rr = 0;
-        assert!(choose(RoutingPolicy::RoundRobin, &blocked, &mut rr).is_none());
         assert_eq!(
-            choose(RoutingPolicy::RoundRobin, &blocked, &mut rr).unwrap().replica,
+            choose(RoutingPolicy::RoundRobin, &blocked, None, &mut rr),
+            Err(RouteError::NoCapacity)
+        );
+        assert_eq!(
+            choose(RoutingPolicy::RoundRobin, &blocked, None, &mut rr)
+                .unwrap()
+                .replica,
             1
         );
     }
@@ -161,7 +260,7 @@ mod tests {
     fn jsq_picks_least_loaded_ignoring_residency() {
         let mut rr = 0;
         let views = vec![view(0, 5, true), view(1, 2, false), view(2, 7, true)];
-        let d = choose(RoutingPolicy::JoinShortestQueue, &views, &mut rr).unwrap();
+        let d = choose(RoutingPolicy::JoinShortestQueue, &views, None, &mut rr).unwrap();
         assert_eq!(d.replica, 1);
         assert!(!d.resident);
         assert_eq!(rr, 0, "jsq must not advance the rr wheel");
@@ -172,7 +271,7 @@ mod tests {
         let mut rr = 0;
         let mut views = vec![view(0, 2, true), view(1, 2, true)];
         views[1].kv_free = 2000;
-        let d = choose(RoutingPolicy::JoinShortestQueue, &views, &mut rr).unwrap();
+        let d = choose(RoutingPolicy::JoinShortestQueue, &views, None, &mut rr).unwrap();
         assert_eq!(d.replica, 1);
     }
 
@@ -180,7 +279,7 @@ mod tests {
     fn affinity_prefers_resident_even_when_busier() {
         let mut rr = 0;
         let views = vec![view(0, 4, true), view(1, 0, false), view(2, 2, true)];
-        let d = choose(RoutingPolicy::AdapterAffinity, &views, &mut rr).unwrap();
+        let d = choose(RoutingPolicy::AdapterAffinity, &views, None, &mut rr).unwrap();
         assert_eq!(d.replica, 2, "least-loaded resident wins");
         assert!(d.resident);
     }
@@ -189,10 +288,110 @@ mod tests {
     fn affinity_falls_back_to_hostable_then_sheds() {
         let mut rr = 0;
         let mut views = vec![view(0, 4, false), view(1, 1, false)];
-        let d = choose(RoutingPolicy::AdapterAffinity, &views, &mut rr).unwrap();
+        let d = choose(RoutingPolicy::AdapterAffinity, &views, None, &mut rr).unwrap();
         assert_eq!(d, RouteDecision { replica: 1, resident: false });
         views[0].can_host = false;
         views[1].can_host = false;
-        assert!(choose(RoutingPolicy::AdapterAffinity, &views, &mut rr).is_none());
+        assert_eq!(
+            choose(RoutingPolicy::AdapterAffinity, &views, None, &mut rr),
+            Err(RouteError::NoCapacity)
+        );
+    }
+
+    /// The checklist scenario: replica A is busy in the EWMA sense (its
+    /// decode steps are slow, so its expected wait is long) while
+    /// replica B is effectively idle — but both carry the *same*
+    /// in-flight count, so queue depth alone cannot tell them apart.
+    /// JSQ ties on inflight and kv_free and falls back to the lowest
+    /// index (A); DeadlineAware reads the expected wait and routes to B.
+    #[test]
+    fn deadline_aware_routes_by_expected_wait_where_jsq_cannot() {
+        let mut rr = 0;
+        let mut views = vec![view(0, 1, true), view(1, 1, true)];
+        views[0].expected_wait = 0.250; // slow replica: 250 ms expected
+        views[1].expected_wait = 0.002;
+        let jsq = choose(RoutingPolicy::JoinShortestQueue, &views, None, &mut rr).unwrap();
+        assert_eq!(jsq.replica, 0, "queue depth alone cannot distinguish");
+        let d = choose(
+            RoutingPolicy::DeadlineAware,
+            &views,
+            Some(Duration::from_millis(100)),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(d.replica, 1, "deadline-aware must route around the slow replica");
+        // without a deadline it still prefers the shorter expected wait
+        let d = choose(RoutingPolicy::DeadlineAware, &views, None, &mut rr).unwrap();
+        assert_eq!(d.replica, 1);
+        assert_eq!(rr, 0, "deadline-aware must not advance the rr wheel");
+    }
+
+    #[test]
+    fn deadline_aware_prefers_fitting_resident_over_faster_nonresident() {
+        let mut rr = 0;
+        let mut views = vec![view(0, 1, true), view(1, 0, false)];
+        views[0].expected_wait = 0.010;
+        views[1].expected_wait = 0.0;
+        let d = choose(
+            RoutingPolicy::DeadlineAware,
+            &views,
+            Some(Duration::from_millis(100)),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(d.replica, 0, "a resident copy that fits the deadline wins");
+        assert!(d.resident);
+        // ...but a resident copy that cannot fit loses to a hostable one
+        let d = choose(
+            RoutingPolicy::DeadlineAware,
+            &views,
+            Some(Duration::from_millis(5)),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(d.replica, 1);
+        assert!(!d.resident);
+    }
+
+    #[test]
+    fn deadline_aware_distinguishes_unmeetable_from_no_capacity() {
+        let mut rr = 0;
+        let mut views = vec![view(0, 3, true), view(1, 2, true)];
+        views[0].expected_wait = 0.500;
+        views[1].expected_wait = 0.300;
+        // every replica could serve it, none can meet 100 ms
+        assert_eq!(
+            choose(
+                RoutingPolicy::DeadlineAware,
+                &views,
+                Some(Duration::from_millis(100)),
+                &mut rr,
+            ),
+            Err(RouteError::DeadlineUnmeetable)
+        );
+        // a generous deadline routes to the least expected wait
+        let d = choose(
+            RoutingPolicy::DeadlineAware,
+            &views,
+            Some(Duration::from_secs(5)),
+            &mut rr,
+        )
+        .unwrap();
+        assert_eq!(d.replica, 1);
+        // nobody can even host it: that is NoCapacity, not a deadline
+        // problem
+        views[0].resident = false;
+        views[0].can_host = false;
+        views[1].resident = false;
+        views[1].can_host = false;
+        assert_eq!(
+            choose(
+                RoutingPolicy::DeadlineAware,
+                &views,
+                Some(Duration::from_millis(100)),
+                &mut rr,
+            ),
+            Err(RouteError::NoCapacity)
+        );
     }
 }

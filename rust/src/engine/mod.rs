@@ -61,6 +61,31 @@ pub struct Completion {
     pub record: RequestRecord,
 }
 
+/// Smoothed step wall-time estimates (seconds), split by step shape.
+/// `0.0` means no step of that shape has been observed yet. The fleet
+/// coordinator publishes these per replica and routes deadline-bound
+/// requests by the decode estimate (see
+/// [`crate::coordinator::RoutingPolicy::DeadlineAware`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepEwma {
+    /// EWMA over steps that fed at least one prefill token.
+    pub prefill: f64,
+    /// EWMA over pure decode steps (the steady-state service rate).
+    pub decode: f64,
+}
+
+impl StepEwma {
+    /// The decode estimate, falling back to the prefill estimate when no
+    /// decode step has been observed yet; `0.0` with no estimate at all.
+    pub fn decode_or_any(&self) -> f64 {
+        if self.decode > 0.0 {
+            self.decode
+        } else {
+            self.prefill
+        }
+    }
+}
+
 /// Engine tuning knobs beyond the artifact config.
 #[derive(Debug, Clone)]
 pub struct EngineOptions {
@@ -182,11 +207,16 @@ pub struct Engine {
     pub metrics: MetricsCollector,
     rng: Pcg,
     next_seq: u64,
-    /// EWMA of recent step wall time (seconds); 0 until the first step.
-    /// Drives deadline-aware admission: a submit whose deadline is
-    /// already shorter than `ewma_step × queue depth` is rejected at the
-    /// door instead of expiring in the queue.
-    ewma_step: f64,
+    /// EWMA of recent step wall time (seconds), split by step shape:
+    /// steps that fed any prefill tokens update `ewma_prefill`, pure
+    /// decode steps update `ewma_decode`. Both are 0 until observed.
+    /// The split matters for deadline-aware admission and fleet routing:
+    /// a heavy-prefill burst inflates only the prefill estimate, so
+    /// borderline decode deadlines are no longer over-rejected for the
+    /// steps it takes a unified EWMA to re-converge after a phase
+    /// change.
+    ewma_prefill: f64,
+    ewma_decode: f64,
     weights_version: u64,
     device: Arc<Mutex<DeviceMemory>>,
     compute_share: f64,
@@ -232,7 +262,8 @@ impl Engine {
             metrics: MetricsCollector::new(),
             rng: Pcg::with_stream(opts.seed, 555),
             next_seq: 1,
-            ewma_step: 0.0,
+            ewma_prefill: 0.0,
+            ewma_decode: 0.0,
             weights_version: 1,
             device,
             cfg,
@@ -522,15 +553,15 @@ impl Engine {
         // deadline-aware admission: if the queue's expected wait (EWMA
         // step time × queue depth) already exceeds the request's
         // deadline, reject at the door instead of letting it expire in
-        // the queue (it would never occupy a batch slot anyway).
-        // Known coarseness: the EWMA mixes prefill-heavy and decode
-        // steps, so right after a heavy-prefill phase a borderline
-        // deadline can be over-rejected until ~5 steps re-converge the
-        // estimate (ROADMAP tracks a phase-aware estimator). An empty
-        // queue never rejects (expected = 0).
+        // the queue (it would never occupy a batch slot anyway). The
+        // estimate is the *decode*-step EWMA (the steady-state service
+        // rate), not the prefill one — a heavy-prefill burst inflates
+        // only `ewma_prefill`, so borderline decode deadlines are not
+        // over-rejected right after a phase change. An empty queue, or
+        // an engine with no estimate yet, never rejects.
         if let Some(d) = req.deadline {
-            let expected = self.ewma_step * self.scheduler.waiting_len() as f64;
-            if self.ewma_step > 0.0 && expected > d.as_secs_f64() {
+            let expected = self.queue_wait_estimate();
+            if expected > d.as_secs_f64() {
                 return Err(SubmitError::DeadlineUnmeetable);
             }
         }
@@ -662,6 +693,19 @@ impl Engine {
         (self.scheduler.waiting_len(), self.scheduler.running_len())
     }
 
+    /// The engine's smoothed step-time estimates (prefill vs decode).
+    pub fn step_ewma(&self) -> StepEwma {
+        StepEwma { prefill: self.ewma_prefill, decode: self.ewma_decode }
+    }
+
+    /// Expected wait (seconds) of a newly queued request before it can
+    /// occupy a batch slot: decode-step EWMA × waiting depth. `0.0` when
+    /// the queue is empty or no estimate exists yet (optimistic —
+    /// admission never rejects blind).
+    pub fn queue_wait_estimate(&self) -> f64 {
+        self.step_ewma().decode_or_any() * self.scheduler.waiting_len() as f64
+    }
+
     /// Run one engine iteration (one packed batch through the model).
     /// Returns completions finished this step; `None` if idle.
     ///
@@ -718,10 +762,17 @@ impl Engine {
         }
         let finished = self.scheduler.reap(&mut self.kv, &mut self.ws);
         let wall = t0.elapsed();
-        self.ewma_step = if self.ewma_step == 0.0 {
+        // EWMA the step wall time into the estimate matching the step's
+        // shape: any prefill tokens make it a prefill-phase step.
+        let est = if batch.prefill_tokens > 0 {
+            &mut self.ewma_prefill
+        } else {
+            &mut self.ewma_decode
+        };
+        *est = if *est == 0.0 {
             wall.as_secs_f64()
         } else {
-            0.8 * self.ewma_step + 0.2 * wall.as_secs_f64()
+            0.8 * *est + 0.2 * wall.as_secs_f64()
         };
         self.metrics.record_step(
             wall,
@@ -796,7 +847,8 @@ impl Engine {
         self.streams.clear();
         self.shutting_down = false;
         self.has_deadlines = false;
-        self.ewma_step = 0.0;
+        self.ewma_prefill = 0.0;
+        self.ewma_decode = 0.0;
         self.backend.reset_kv();
     }
 }

@@ -28,18 +28,24 @@
 //!
 //! The online request/response boundary is the [`serving`] API:
 //! [`serving::ServingBackend`] (submit / pump / cancel / drain,
-//! implemented by both the single [`engine::Engine`] and the fleet
-//! [`coordinator::Coordinator`]), per-request token streams
+//! implemented by the single [`engine::Engine`], the fleet
+//! [`coordinator::Coordinator`], and the remote
+//! [`serving::frontend::NdjsonClient`]), per-request token streams
 //! ([`serving::RequestHandle`] delivering [`serving::TokenEvent`]s),
 //! typed admission errors ([`serving::SubmitError`]), and a std-only
 //! NDJSON-over-TCP frontend ([`serving::frontend`], exposed as
-//! `expertweave serve --listen`). The trace replayers in [`server`] are
-//! thin clients of this API.
+//! `expertweave serve --listen` and — fleet behind the identical
+//! router — `expertweave fleet --listen`; wire spec in
+//! `docs/PROTOCOL.md`). The trace replayers in [`server`] and the
+//! open-loop Poisson load generator ([`workload::openloop`],
+//! `expertweave loadgen`) are thin clients of this API.
 //!
 //! Above the single engine sits the **fleet layer** ([`coordinator`]):
 //! N engine replicas on their own threads behind a coordinator that does
 //! adapter-aware routing (RoundRobin / JoinShortestQueue /
-//! AdapterAffinity), fleet-wide adapter lifecycle (load-on-miss,
+//! AdapterAffinity / DeadlineAware — the last routes by each replica's
+//! published decode-step EWMA × queue depth and refuses deadlines no
+//! replica can meet), fleet-wide adapter lifecycle (load-on-miss,
 //! per-replica capacity with LRU eviction, rate-triggered replication of
 //! hot adapters) and admission control (bounded per-adapter queues with
 //! shed accounting). This is the scale story of the paper taken to its

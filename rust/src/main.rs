@@ -9,7 +9,13 @@
 //!                    cancel, drain) — see `serving::frontend`.
 //! * `fleet`        — replay a trace against a coordinated multi-replica
 //!                    fleet (routing policy, adapter lifecycle, admission
-//!                    control) on the sim backend.
+//!                    control) on the sim backend. With `--listen <addr>`
+//!                    it serves the fleet online over the same NDJSON
+//!                    frontend `serve --listen` uses (docs/PROTOCOL.md).
+//! * `loadgen`      — open-loop load generator: Poisson arrivals at a
+//!                    target rate against an in-process fleet (sweeping
+//!                    routing policies → BENCH_fleet_online.json) or a
+//!                    remote NDJSON server (`--connect`).
 //! * `gen-adapters` — synthesize the Table-1 ESFT adapters for a config
 //!                    and write `.esft` checkpoints.
 //! * `inspect`      — show an artifact set (config, executables, ABI).
@@ -23,6 +29,9 @@
 //! expertweave serve --backend sim --adapters 4 --lambda 10 --horizon 5
 //! expertweave serve --backend sim --adapters 2 --listen 127.0.0.1:7070
 //! expertweave fleet --replicas 3 --adapters 6 --policy affinity --horizon 6
+//! expertweave fleet --replicas 2 --adapters 4 --policy deadline --listen 127.0.0.1:7071
+//! expertweave loadgen --replicas 2 --rate 50 --deadline-ms 300
+//! expertweave loadgen --connect 127.0.0.1:7071 --rate 40 --deadline-ms 250
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -31,7 +40,7 @@ use expertweave::adapters::generator::{
     synth_fleet_adapters,
 };
 use expertweave::bench::Table;
-use expertweave::coordinator::{CoordinatorConfig, RoutingPolicy};
+use expertweave::coordinator::{Coordinator, CoordinatorConfig, RoutingPolicy};
 use expertweave::engine::{Engine, EngineOptions};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{ArtifactSet, SimPerf, Variant};
@@ -40,18 +49,22 @@ use expertweave::util::args::Args;
 use expertweave::util::logging::{set_level, Level};
 use expertweave::weights::StoreMode;
 use expertweave::workload::trace::{Trace, TraceSpec};
+use expertweave::workload::OpenLoopSpec;
 use std::path::PathBuf;
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: expertweave <serve|fleet|gen-adapters|inspect|sparsity> [options]");
+        eprintln!(
+            "usage: expertweave <serve|fleet|loadgen|gen-adapters|inspect|sparsity> [options]"
+        );
         std::process::exit(2);
     }
     let cmd = argv.remove(0);
     let result = match cmd.as_str() {
         "serve" => serve(argv),
         "fleet" => fleet(argv),
+        "loadgen" => loadgen(argv),
         "gen-adapters" => gen_adapters(argv),
         "inspect" => inspect(argv),
         "sparsity" => sparsity(argv),
@@ -220,12 +233,13 @@ fn serve(argv: Vec<String>) -> Result<()> {
 fn fleet(argv: Vec<String>) -> Result<()> {
     let a = Args::new(
         "expertweave fleet",
-        "coordinated multi-replica replay (sim backend)",
+        "coordinated multi-replica replay, or online NDJSON fleet serving (sim backend)",
     )
     .opt("replicas", Some("3"), "engine replicas")
     .opt("adapters", Some("6"), "distinct adapters in the workload")
     .opt("capacity", Some("3"), "resident-adapter budget per replica")
-    .opt("policy", Some("affinity"), "rr|jsq|affinity")
+    .opt("policy", Some("affinity"), "rr|jsq|affinity|deadline")
+    .opt("listen", None, "serve NDJSON requests on this TCP addr instead of replaying")
     .opt("lambda", Some("24.0"), "aggregate arrival rate (req/s)")
     .opt("alpha", Some("0.3"), "power-law skew (1 = uniform)")
     .opt("horizon", Some("6.0"), "trace horizon (s)")
@@ -278,6 +292,51 @@ fn fleet(argv: Vec<String>) -> Result<()> {
         page_size: 64 << 10,
         ..Default::default()
     };
+
+    // --listen: online NDJSON fleet serving instead of trace replay.
+    // The frontend router is the exact one `serve --listen` uses — the
+    // coordinator is just another ServingBackend behind it.
+    if let Some(addr) = a.get("listen") {
+        let frontend = expertweave::serving::frontend::NdjsonServer::bind(&addr)?;
+        println!(
+            "fleet serving on {} — {replicas} sim replicas x capacity {capacity}, \
+             policy {policy}; NDJSON per line; {{\"op\":\"drain\"}} to stop",
+            frontend.local_addr()?
+        );
+        for ad in &adapters {
+            println!("  adapter: {}", ad.name);
+        }
+        let spawn_cfg = cfg.clone();
+        let started = std::time::Instant::now();
+        let mut coord = Coordinator::launch(
+            coord_cfg,
+            move |i| {
+                let cfg = spawn_cfg.clone();
+                let opts = EngineOptions { seed: i as u64, ..opts.clone() };
+                Box::new(move || {
+                    Engine::sim_weave(
+                        &cfg,
+                        SimPerf::default(),
+                        &[],
+                        Variant::Weave,
+                        StoreMode::Virtual,
+                        opts,
+                    )
+                })
+            },
+            adapters,
+        )?;
+        // run() returns once a client drained the fleet: every replica
+        // is idle, so finish() only collects reports and joins threads
+        frontend.run(&mut coord)?;
+        let (per_replica, stats) = coord.finish(started)?;
+        for (i, r) in per_replica.iter().enumerate() {
+            println!("{}", r.row(&format!("replica-{i}")));
+        }
+        println!("  {}", stats.row());
+        return Ok(());
+    }
+
     println!(
         "fleet: {} replicas x capacity {} | {} adapters | policy {policy} | {} requests",
         replicas,
@@ -315,6 +374,122 @@ fn fleet(argv: Vec<String>) -> Result<()> {
         outcome.report.goodput(),
         outcome.report.wall
     );
+    Ok(())
+}
+
+fn loadgen(argv: Vec<String>) -> Result<()> {
+    let a = Args::new(
+        "expertweave loadgen",
+        "open-loop load generator: in-process fleet policy sweep, or a remote NDJSON server",
+    )
+    .opt("connect", None, "drive a remote NDJSON server instead of an in-process fleet")
+    .opt("adapter-names", None, "adapter names to address, comma-separated (remote mode)")
+    .opt("policies", Some("rr,jsq,affinity,deadline"), "routing policies to sweep (fleet mode)")
+    .opt("replicas", Some("2"), "fleet replicas (fleet mode)")
+    .opt("adapters", Some("4"), "distinct adapters (fleet mode)")
+    .opt("capacity", Some("3"), "resident-adapter budget per replica (fleet mode)")
+    .opt("queue-cap", Some("0"), "per-adapter outstanding cap (0 = off; fleet mode)")
+    .opt("rate", Some("50.0"), "offered arrival rate (req/s, Poisson)")
+    .opt("horizon", Some("4.0"), "arrival horizon (s)")
+    .opt("deadline-ms", Some("300"), "per-request completion deadline (0 = none)")
+    .opt("prompt", Some("24"), "mean prompt length (tokens)")
+    .opt("max-new", Some("8"), "output budget per request")
+    .opt("alpha", Some("0.5"), "power-law adapter skew (1 = uniform)")
+    .opt("vocab", Some("512"), "prompt-token vocabulary bound (remote mode)")
+    .opt("seed", Some("0"), "arrival-process seed")
+    .opt("out", Some("target/bench_results/BENCH_fleet_online.json"), "result JSON path")
+    .flag("verbose", "debug logging")
+    .parse(argv)
+    .map_err(anyhow::Error::msg)?;
+    if a.has_flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let rate = a.get_f64("rate").map_err(anyhow::Error::msg)?;
+    let horizon = a.get_f64("horizon").map_err(anyhow::Error::msg)?;
+    let deadline_ms = a.get_f64("deadline-ms").map_err(anyhow::Error::msg)?;
+    let ol = OpenLoopSpec {
+        rate,
+        horizon,
+        adapters: Vec::new(),
+        alpha: a.get_f64("alpha").map_err(anyhow::Error::msg)?,
+        prompt_len: a.get_usize("prompt").map_err(anyhow::Error::msg)?,
+        max_new: a.get_usize("max-new").map_err(anyhow::Error::msg)?,
+        deadline: (deadline_ms > 0.0)
+            .then(|| std::time::Duration::from_secs_f64(deadline_ms / 1e3)),
+        vocab: a.get_usize("vocab").map_err(anyhow::Error::msg)?,
+        seed: a.get_usize("seed").map_err(anyhow::Error::msg)? as u64,
+    };
+
+    // remote mode: a thin NDJSON client is just another ServingBackend
+    if let Some(addr) = a.get("connect") {
+        let mut spec = ol;
+        if let Some(names) = a.get("adapter-names") {
+            spec.adapters = names
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+        }
+        let mut client = expertweave::serving::frontend::NdjsonClient::connect(&addr)?;
+        println!("driving {addr} open-loop at {rate} req/s for {horizon}s...");
+        let outcome = expertweave::workload::openloop::drive(&mut client, &spec)?;
+        println!("{}", outcome.row("remote"));
+        return Ok(());
+    }
+
+    // fleet mode: identical arrival process against each routing policy
+    let policies = a
+        .get_or("policies", "rr,jsq,affinity,deadline")
+        .split(',')
+        .map(|s| RoutingPolicy::parse(s.trim()))
+        .collect::<Result<Vec<_>>>()?;
+    // perf defaults to the shared near-saturation hardware model
+    // (FleetLoadSpec::near_saturation_perf), same as the fig12 bench
+    let spec = expertweave::workload::openloop::FleetLoadSpec {
+        replicas: a.get_usize("replicas").map_err(anyhow::Error::msg)?,
+        n_adapters: a.get_usize("adapters").map_err(anyhow::Error::msg)?,
+        adapter_capacity: a.get_usize("capacity").map_err(anyhow::Error::msg)?,
+        queue_cap: a.get_usize("queue-cap").map_err(anyhow::Error::msg)?,
+        open_loop: ol,
+        ..Default::default()
+    };
+    println!(
+        "loadgen: {} replicas | {} adapters | {rate} req/s for {horizon}s | deadline {}",
+        spec.replicas,
+        spec.n_adapters,
+        if deadline_ms > 0.0 { format!("{deadline_ms} ms") } else { "none".into() },
+    );
+    let mut rows = Vec::new();
+    for policy in policies {
+        let row = expertweave::workload::openloop::run_fleet_open_loop(&spec, policy)?;
+        println!("{}", row.outcome.row(&policy.to_string()));
+        println!("  {}", row.stats.row());
+        rows.push(row);
+    }
+    let json = expertweave::workload::openloop::fleet_online_json(&spec, &rows);
+    let out = std::path::PathBuf::from(a.get_or(
+        "out",
+        "target/bench_results/BENCH_fleet_online.json",
+    ));
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, format!("{json}\n"))?;
+    println!("wrote {}", out.display());
+    let miss = |p: RoutingPolicy| {
+        rows.iter()
+            .find(|r| r.policy == p)
+            .map(|r| r.outcome.deadline_miss_rate())
+    };
+    if let (Some(dl), Some(rr)) =
+        (miss(RoutingPolicy::DeadlineAware), miss(RoutingPolicy::RoundRobin))
+    {
+        println!(
+            "deadline-miss rate: deadline-aware {:.1}% vs round-robin {:.1}%",
+            dl * 100.0,
+            rr * 100.0
+        );
+    }
     Ok(())
 }
 

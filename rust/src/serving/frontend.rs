@@ -1,53 +1,50 @@
-//! Std-only NDJSON-over-TCP frontend: the network face of the serving
-//! API (`expertweave serve --listen <addr>`).
+//! Std-only NDJSON-over-TCP frontend and client: the network face of
+//! the serving API (`expertweave serve --listen`, `expertweave fleet
+//! --listen`, `expertweave loadgen --connect`).
 //!
-//! Wire format — one JSON object per line, both directions (parsed and
-//! emitted with [`crate::util::json`]; no external deps):
+//! **The wire format is specified in
+//! [`docs/PROTOCOL.md`](../../../docs/PROTOCOL.md)** — one JSON object
+//! per line in each direction (parsed and emitted with
+//! [`crate::util::json`]; no external deps). In one breath: submit
+//! frames carry `id`/`adapter`/`prompt`/`max_new_tokens`/`deadline_ms`/
+//! `temperature`; `{"op":"cancel","id":..}` cancels;
+//! `{"op":"drain"}` finishes all in-flight work, acknowledges with
+//! `{"event":"drained"}` on every connection, and shuts the server
+//! down. Responses stream `first`/`token` incrementally (the TTFT edge
+//! is observable on the wire), and every request ends with exactly one
+//! `done`, `aborted`, or immediate `error` frame.
 //!
-//! Requests (client → server):
-//! ```text
-//! {"id":"r1","adapter":"gate-math","prompt":[1,2,3],"max_new_tokens":8}
-//! {"id":"r2","prompt":[4,5],"deadline_ms":500,"temperature":0.7}
-//! {"op":"cancel","id":"r1"}
-//! {"op":"drain"}
-//! ```
-//! `id` is the client's tag for the request, scoped per connection
-//! (autogenerated if omitted). `adapter` absent = base model.
+//! Server architecture ([`NdjsonServer`]): one serving thread owns the
+//! backend (PJRT handles are not `Send`, so engines never cross
+//! threads) and multiplexes all connections; an acceptor plus one
+//! reader thread per connection feed parsed lines over a channel. A
+//! client disconnect cancels its outstanding requests — socket teardown
+//! is client-side cancellation. The backend is *any*
+//! [`ServingBackend`]: a single engine (`serve --listen`) or the fleet
+//! coordinator (`fleet --listen`) — the router code here is identical
+//! for both.
 //!
-//! Responses (server → client, streamed as they happen):
-//! ```text
-//! {"id":"r1","event":"first","token":17}
-//! {"id":"r1","event":"token","token":9}
-//! {"id":"r1","event":"done","tokens":[17,9],"prompt_tokens":3,
-//!  "ttft_ms":1.9,"tpot_ms":0.8,"e2e_ms":4.2}
-//! {"id":"r1","event":"aborted","reason":"cancelled"}
-//! {"id":"rX","event":"error","code":"unknown_adapter","message":"..."}
-//! {"event":"drained"}
-//! ```
-//! `first`/`token` stream incrementally (the TTFT edge is observable on
-//! the wire); every request ends with exactly one `done`, `aborted`, or
-//! immediate `error`. `{"op":"drain"}` finishes all in-flight work,
-//! acknowledges with `{"event":"drained"}` on every connection, and
-//! shuts the server down; requests queued behind (or arriving during)
-//! the drain fail with an `error` event, code `shutting_down`.
-//!
-//! Architecture: one serving thread owns the backend (PJRT handles are
-//! not `Send`, so the engine never crosses threads) and multiplexes all
-//! connections; an acceptor plus one reader thread per connection feed
-//! parsed lines over a channel. A client disconnect cancels its
-//! outstanding requests — socket teardown is client-side cancellation.
+//! Client ([`NdjsonClient`]): the same trait from the other side of the
+//! socket — `submit` writes a frame, `pump` folds response lines into
+//! per-request [`TokenEvent`] streams — so load generators and tests
+//! drive a remote server exactly like an in-process engine.
 
+use crate::engine::Completion;
+use crate::metrics::RequestRecord;
 use crate::sampler::Sampling;
-use crate::serving::{RequestHandle, RequestId, ServeRequest, ServingBackend, TokenEvent};
+use crate::serving::{
+    AbortReason, RequestHandle, RequestId, ServeRequest, ServingBackend, SubmitError,
+    TokenEvent,
+};
 use crate::util::json::{obj, Json};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Connection-scoped commands the reader threads feed the serving loop.
 enum Cmd {
@@ -250,11 +247,21 @@ fn event_json(tag: &str, ev: TokenEvent) -> Json {
                 ("e2e_ms", Json::Num(rec.e2e.as_secs_f64() * 1e3)),
             ])
         }
-        TokenEvent::Aborted { reason, .. } => obj(vec![
-            ("id", Json::Str(tag.to_string())),
-            ("event", Json::Str("aborted".into())),
-            ("reason", Json::Str(reason.as_str().into())),
-        ]),
+        TokenEvent::Aborted { reason, .. } => {
+            let mut fields = vec![
+                ("id", Json::Str(tag.to_string())),
+                ("event", Json::Str("aborted".into())),
+                ("reason", Json::Str(reason.as_str().into())),
+            ];
+            // post-routing rejections keep their typed code on the wire
+            // (clients like NdjsonClient rebuild the SubmitError from it
+            // — a remote load generator must classify a replica-side
+            // deadline rejection exactly like an in-process one)
+            if let AbortReason::Rejected(err) = &reason {
+                fields.push(("code", Json::Str(err.code().into())));
+            }
+            obj(fields)
+        }
     }
 }
 
@@ -470,4 +477,300 @@ fn handle_cmd<B: ServingBackend>(
         }
     }
     Ok(false)
+}
+
+// ---------------------------------------------------------------------
+// NDJSON client: the serving API from the other side of the socket.
+// ---------------------------------------------------------------------
+
+/// A [`ServingBackend`] that forwards to a remote NDJSON server over one
+/// TCP connection — the client half of the wire protocol
+/// (`docs/PROTOCOL.md`).
+///
+/// `submit` writes a request frame and returns a [`RequestHandle`]
+/// exactly like an in-process engine; `pump` folds response lines
+/// (delivered by a reader thread) into the per-request streams. Wire
+/// `error` frames — which the server emits for rejected submits,
+/// because rejection is asynchronous from the client's point of view —
+/// surface as a terminal [`TokenEvent::Aborted`] with
+/// [`AbortReason::Rejected`] carrying the decoded [`SubmitError`].
+///
+/// Request tags on the wire are the client-assigned numeric ids, so the
+/// handle ids round-trip unchanged.
+pub struct NdjsonClient {
+    writer: TcpStream,
+    /// Response lines from the reader thread.
+    lines: Receiver<String>,
+    /// rid → client-side token-stream sender.
+    streams: HashMap<RequestId, Sender<TokenEvent>>,
+    next_rid: RequestId,
+    drained: bool,
+    shutting_down: bool,
+}
+
+impl NdjsonClient {
+    /// Connect to a serving NDJSON listener (e.g. `127.0.0.1:7070`).
+    pub fn connect(addr: &str) -> Result<NdjsonClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let writer = stream.try_clone()?;
+        let (tx, rx) = channel::<String>();
+        std::thread::Builder::new()
+            .name("ndjson-client-read".into())
+            .spawn(move || {
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    match reader.read_line(&mut line) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {
+                            let text = line.trim().to_string();
+                            if !text.is_empty() && tx.send(text).is_err() {
+                                break;
+                            }
+                        }
+                    }
+                }
+            })
+            .context("spawn ndjson client reader")?;
+        Ok(NdjsonClient {
+            writer,
+            lines: rx,
+            streams: HashMap::new(),
+            next_rid: 1,
+            drained: false,
+            shutting_down: false,
+        })
+    }
+
+    /// Has the server acknowledged a drain on this connection?
+    pub fn is_drained(&self) -> bool {
+        self.drained
+    }
+
+    fn send_line(&mut self, line: &Json) -> bool {
+        writeln!(self.writer, "{line}").is_ok()
+    }
+
+    /// Fold one response line into the client state.
+    fn apply_line(&mut self, text: &str) {
+        let Ok(v) = Json::parse(text) else { return };
+        let event = v.get("event").and_then(|e| e.as_str()).unwrap_or("");
+        if event == "drained" {
+            self.drained = true;
+            return;
+        }
+        let Some(rid) = v
+            .get("id")
+            .and_then(|i| i.as_str())
+            .and_then(|t| t.parse::<RequestId>().ok())
+        else {
+            return;
+        };
+        if !self.streams.contains_key(&rid) {
+            return;
+        }
+        let ev = match event {
+            "first" => v
+                .get("token")
+                .and_then(Json::as_i64)
+                .map(|t| TokenEvent::First { id: rid, token: t as i32 }),
+            "token" => v
+                .get("token")
+                .and_then(Json::as_i64)
+                .map(|t| TokenEvent::Token { id: rid, token: t as i32 }),
+            "done" => Some(done_event(rid, &v)),
+            "aborted" => {
+                let reason = match v.get("reason").and_then(|r| r.as_str()) {
+                    Some("cancelled") => AbortReason::Cancelled,
+                    Some("deadline") => AbortReason::DeadlineExceeded,
+                    _ => {
+                        // post-routing rejection: the frame carries the
+                        // typed code, so the decoded SubmitError matches
+                        // what an in-process backend would have produced
+                        let code = v.get("code").and_then(|c| c.as_str()).unwrap_or("");
+                        AbortReason::Rejected(decode_error(code, "rejected upstream"))
+                    }
+                };
+                Some(TokenEvent::Aborted { id: rid, reason })
+            }
+            "error" => {
+                let code = v.get("code").and_then(|c| c.as_str()).unwrap_or("");
+                let msg = v.get("message").and_then(|m| m.as_str()).unwrap_or("");
+                Some(TokenEvent::Aborted {
+                    id: rid,
+                    reason: AbortReason::Rejected(decode_error(code, msg)),
+                })
+            }
+            _ => None,
+        };
+        let Some(ev) = ev else { return };
+        let terminal = ev.is_terminal();
+        if let Some(tx) = self.streams.get(&rid) {
+            let _ = tx.send(ev);
+        }
+        if terminal {
+            self.streams.remove(&rid);
+        }
+    }
+}
+
+/// Rebuild a [`TokenEvent::Done`] from its wire frame (the latency
+/// record is reconstructed from the reported milliseconds).
+fn done_event(rid: RequestId, v: &Json) -> TokenEvent {
+    let output: Vec<i32> = v
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_i64).map(|t| t as i32).collect())
+        .unwrap_or_default();
+    let ms = |k: &str| v.get(k).and_then(Json::as_f64);
+    let dur = |x: f64| Duration::from_secs_f64((x / 1e3).max(0.0));
+    let record = RequestRecord {
+        id: rid,
+        adapter: None,
+        prompt_tokens: v.get("prompt_tokens").and_then(Json::as_usize).unwrap_or(0),
+        output_tokens: output.len(),
+        ttft: dur(ms("ttft_ms").unwrap_or(0.0)),
+        tpot: ms("tpot_ms").map(dur),
+        e2e: dur(ms("e2e_ms").unwrap_or(0.0)),
+    };
+    TokenEvent::Done {
+        id: rid,
+        completion: Completion { id: rid, adapter: None, output, record },
+    }
+}
+
+/// Decode a wire `error` frame's `code` back into the typed
+/// [`SubmitError`] (the inverse of [`SubmitError::code`]).
+fn decode_error(code: &str, message: &str) -> SubmitError {
+    match code {
+        "unknown_adapter" => SubmitError::UnknownAdapter(message.to_string()),
+        "queue_full" => SubmitError::QueueFull,
+        "shed" => SubmitError::Shed,
+        "shutting_down" => SubmitError::ShuttingDown,
+        "deadline_unmeetable" => SubmitError::DeadlineUnmeetable,
+        "" | "invalid" => SubmitError::Invalid(message.to_string()),
+        other => SubmitError::Invalid(format!("{other}: {message}")),
+    }
+}
+
+impl ServingBackend for NdjsonClient {
+    /// Write the request frame. Submission over the wire cannot fail
+    /// synchronously (server rejections arrive as `error` frames, which
+    /// become [`AbortReason::Rejected`] on the stream); the only local
+    /// failures are a draining client or a dead connection, both
+    /// [`SubmitError::ShuttingDown`].
+    fn submit(&mut self, req: ServeRequest) -> std::result::Result<RequestHandle, SubmitError> {
+        if self.shutting_down {
+            return Err(SubmitError::ShuttingDown);
+        }
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        let mut fields = vec![
+            ("id", Json::Str(rid.to_string())),
+            (
+                "prompt",
+                Json::Arr(req.prompt.iter().map(|&t| Json::Int(t as i64)).collect()),
+            ),
+            ("max_new_tokens", Json::Int(req.max_new_tokens as i64)),
+        ];
+        if let Some(a) = &req.adapter {
+            fields.push(("adapter", Json::Str(a.clone())));
+        }
+        if let Some(d) = req.deadline {
+            fields.push(("deadline_ms", Json::Num(d.as_secs_f64() * 1e3)));
+        }
+        if let Sampling::Temperature(t) = req.sampling {
+            fields.push(("temperature", Json::Num(t as f64)));
+        }
+        let line = obj(fields);
+        if !self.send_line(&line) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        let (handle, tx) = RequestHandle::new(rid);
+        self.streams.insert(rid, tx);
+        Ok(handle)
+    }
+
+    fn pump(&mut self) -> Result<bool> {
+        let mut got = false;
+        while let Ok(text) = self.lines.try_recv() {
+            self.apply_line(&text);
+            got = true;
+        }
+        if !got {
+            // nothing buffered: block briefly so pump loops don't spin
+            match self.lines.recv_timeout(Duration::from_millis(2)) {
+                Ok(text) => self.apply_line(&text),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    if !self.streams.is_empty() {
+                        bail!(
+                            "server closed the connection with {} request(s) in flight",
+                            self.streams.len()
+                        );
+                    }
+                }
+            }
+        }
+        Ok(!self.streams.is_empty())
+    }
+
+    /// Relay a cancel frame. Returns `false` for unknown/terminal ids;
+    /// on success the terminal `Aborted` arrives via the stream like any
+    /// other event.
+    fn cancel(&mut self, id: RequestId) -> bool {
+        if !self.streams.contains_key(&id) {
+            return false;
+        }
+        let line = obj(vec![
+            ("op", Json::Str("cancel".into())),
+            ("id", Json::Str(id.to_string())),
+        ]);
+        self.send_line(&line)
+    }
+
+    fn has_work(&self) -> bool {
+        !self.streams.is_empty()
+    }
+
+    /// Send `{"op":"drain"}` and wait for the server to finish all
+    /// in-flight work and acknowledge with `drained`. The server flushes
+    /// every outstanding terminal event before the ack, so all local
+    /// streams close.
+    fn drain(&mut self) -> Result<()> {
+        if !self.shutting_down {
+            self.shutting_down = true;
+            let line = obj(vec![("op", Json::Str("drain".into()))]);
+            if !self.send_line(&line) {
+                bail!("connection closed before the drain could be sent");
+            }
+        }
+        let deadline = Instant::now() + Duration::from_secs(600);
+        while !self.drained || !self.streams.is_empty() {
+            match self.lines.recv_timeout(Duration::from_millis(50)) {
+                Ok(text) => self.apply_line(&text),
+                Err(RecvTimeoutError::Timeout) => {
+                    if Instant::now() > deadline {
+                        bail!("drain timed out waiting for the server's ack");
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    if self.drained {
+                        // the server acked and hung up; close any
+                        // stragglers as shut down
+                        for (id, tx) in self.streams.drain() {
+                            let _ = tx.send(TokenEvent::Aborted {
+                                id,
+                                reason: AbortReason::Rejected(SubmitError::ShuttingDown),
+                            });
+                        }
+                        break;
+                    }
+                    bail!("server closed the connection before acknowledging the drain");
+                }
+            }
+        }
+        Ok(())
+    }
 }

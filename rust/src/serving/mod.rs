@@ -19,8 +19,8 @@
 //!   channel: `First` (TTFT edge), `Token`, then exactly one terminal
 //!   `Done` or `Aborted`.
 //! * [`SubmitError`] — typed admission failures (`UnknownAdapter`,
-//!   `QueueFull`, `Shed`, `ShuttingDown`, `Invalid`) instead of stringly
-//!   `anyhow` errors at the boundary.
+//!   `QueueFull`, `Shed`, `ShuttingDown`, `DeadlineUnmeetable`,
+//!   `Invalid`) instead of stringly `anyhow` errors at the boundary.
 //!
 //! The trace replayers ([`crate::server::replay`] and friends) are thin
 //! clients of this API, so every bench and example exercises the same
@@ -145,6 +145,18 @@ impl TokenEvent {
 }
 
 /// Typed submission failure at the serving boundary.
+///
+/// Every variant has a stable machine-readable tag ([`SubmitError::code`])
+/// that the NDJSON frontend emits as the `error` frame's `code` field
+/// (see `docs/PROTOCOL.md`):
+///
+/// ```
+/// use expertweave::serving::SubmitError;
+///
+/// let err = SubmitError::DeadlineUnmeetable;
+/// assert_eq!(err.code(), "deadline_unmeetable"); // stable wire tag
+/// assert!(err.to_string().contains("deadline")); // human-readable
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SubmitError {
     /// No deployment (or no fleet replica) can serve this adapter.
@@ -206,6 +218,34 @@ impl std::error::Error for SubmitError {}
 /// backend (fleet coordinator behind a pumping loop, or the TCP
 /// frontend) [`RequestHandle::recv_timeout`] can block.
 ///
+/// # Example
+///
+/// ```
+/// # use expertweave::engine::{Engine, EngineOptions};
+/// # use expertweave::model::ModelConfig;
+/// # use expertweave::runtime::{SimPerf, Variant};
+/// # use expertweave::sampler::Sampling;
+/// # use expertweave::serving::{ServeRequest, ServingBackend};
+/// # use expertweave::weights::StoreMode;
+/// # let cfg = ModelConfig::sim_default();
+/// # let mut engine = Engine::sim_weave(&cfg, SimPerf::instant(), &[], Variant::Weave,
+/// #     StoreMode::Virtual, EngineOptions { page_size: 64 << 10, ..Default::default() })
+/// #     .unwrap();
+/// let handle = engine
+///     .submit_request(ServeRequest {
+///         adapter: None,
+///         prompt: vec![7, 8],
+///         max_new_tokens: 1,
+///         sampling: Sampling::Greedy,
+///         deadline: None,
+///     })
+///     .unwrap();
+/// assert!(handle.try_event().is_none(), "nothing pumped yet");
+/// while engine.pump().unwrap() {}
+/// let events = handle.drain_events();
+/// assert!(events.last().unwrap().is_terminal());
+/// ```
+///
 /// [`Engine`]: crate::engine::Engine
 #[derive(Debug)]
 pub struct RequestHandle {
@@ -242,10 +282,51 @@ impl RequestHandle {
 
 /// A serving backend: something that admits requests, produces token
 /// streams, and can cancel and drain. Implemented by the single-replica
-/// [`Engine`] and the fleet [`Coordinator`].
+/// [`Engine`], the fleet [`Coordinator`], and the remote
+/// [`NdjsonClient`] — callers written against this trait (the trace
+/// replayers, the open-loop load generator, the NDJSON listener) work
+/// unchanged across all three.
+///
+/// # Example
+///
+/// Submit against a simulated engine and stream the result:
+///
+/// ```
+/// use expertweave::engine::{Engine, EngineOptions};
+/// use expertweave::model::ModelConfig;
+/// use expertweave::runtime::{SimPerf, Variant};
+/// use expertweave::sampler::Sampling;
+/// use expertweave::serving::{ServeRequest, ServingBackend, TokenEvent};
+/// use expertweave::weights::StoreMode;
+///
+/// let cfg = ModelConfig::sim_default();
+/// let mut engine = Engine::sim_weave(
+///     &cfg,
+///     SimPerf::instant(),
+///     &[], // no adapters: base-model serving
+///     Variant::Weave,
+///     StoreMode::Virtual,
+///     EngineOptions { page_size: 64 << 10, ..Default::default() },
+/// )
+/// .unwrap();
+/// let handle = engine
+///     .submit_request(ServeRequest {
+///         adapter: None,
+///         prompt: vec![1, 2, 3],
+///         max_new_tokens: 2,
+///         sampling: Sampling::Greedy,
+///         deadline: None,
+///     })
+///     .unwrap();
+/// while engine.pump().unwrap() {}
+/// let events = handle.drain_events();
+/// assert!(matches!(events.first(), Some(TokenEvent::First { .. })));
+/// assert!(matches!(events.last(), Some(TokenEvent::Done { .. })));
+/// ```
 ///
 /// [`Engine`]: crate::engine::Engine
 /// [`Coordinator`]: crate::coordinator::Coordinator
+/// [`NdjsonClient`]: crate::serving::frontend::NdjsonClient
 pub trait ServingBackend {
     /// Admit one request. On success the request is queued and its
     /// events will flow through the returned handle as the backend is

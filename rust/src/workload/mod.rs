@@ -3,11 +3,25 @@
 //! adapter skew (section 5.2). No datasets are available offline, so
 //! prompts are synthetic with per-domain length distributions
 //! (DESIGN.md section 7).
+//!
+//! Two driving modes share the same arrival statistics:
+//!
+//! * **Trace replay** ([`trace`]) — pre-generate a [`Trace`] (one
+//!   Poisson process per adapter, power-law rates), then replay it in
+//!   real time through [`crate::server::replay_backend`]. Deterministic
+//!   given a seed; the benches' mode.
+//! * **Open loop** ([`openloop`]) — draw arrivals on the fly and inject
+//!   them on the wall clock whether or not the backend keeps up, against
+//!   any [`crate::serving::ServingBackend`] (single engine, in-process
+//!   fleet, or a remote NDJSON server). The mode that exposes deadline
+//!   misses and queue growth under overload.
 
+pub mod openloop;
 pub mod power_law;
 pub mod prompts;
 pub mod trace;
 
+pub use openloop::{OpenLoopOutcome, OpenLoopSpec};
 pub use power_law::power_law_shares;
 pub use prompts::PromptGen;
 pub use trace::{Trace, TraceEvent, TraceSpec};

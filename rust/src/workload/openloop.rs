@@ -1,0 +1,447 @@
+//! Open-loop load generation: drive any [`ServingBackend`] at a target
+//! Poisson arrival rate, independent of completions.
+//!
+//! Trace replay ([`crate::server::replay_backend`]) measures a system
+//! against a *pre-generated* arrival schedule; an open-loop generator is
+//! the online complement — arrivals are drawn on the fly from an
+//! exponential inter-arrival distribution and injected at their wall
+//! clock instants whether or not the backend keeps up. That property
+//! (arrivals never wait for service) is what exposes deadline misses and
+//! queue growth under overload, which closed-loop clients hide.
+//!
+//! [`drive`] works against *any* [`ServingBackend`]: a single
+//! [`Engine`], an in-process fleet [`Coordinator`], or a remote NDJSON
+//! server through [`NdjsonClient`]. [`run_fleet_open_loop`] /
+//! [`sweep_fleet_policies`] wrap the in-process fleet case for the
+//! routing-policy comparison (`expertweave loadgen`, `cargo bench
+//! --bench fig12_fleet_online` → `BENCH_fleet_online.json`).
+//!
+//! [`Engine`]: crate::engine::Engine
+//! [`Coordinator`]: crate::coordinator::Coordinator
+//! [`NdjsonClient`]: crate::serving::frontend::NdjsonClient
+
+use crate::adapters::generator::synth_fleet_adapters;
+use crate::coordinator::{Coordinator, CoordinatorConfig, FleetStats, RoutingPolicy};
+use crate::engine::{Engine, EngineOptions};
+use crate::metrics::Report;
+use crate::model::ModelConfig;
+use crate::runtime::{SimPerf, Variant};
+use crate::sampler::Sampling;
+use crate::serving::{
+    AbortReason, RequestHandle, ServeRequest, ServingBackend, SubmitError, TokenEvent,
+};
+use crate::util::json::{arr, obj, Json};
+use crate::util::rng::Pcg;
+use crate::util::stats::{Samples, Summary};
+use crate::weights::StoreMode;
+use crate::workload::power_law::power_law_shares;
+use anyhow::{bail, Result};
+use std::time::{Duration, Instant};
+
+/// One open-loop serving session: who arrives, how often, for how long.
+#[derive(Debug, Clone)]
+pub struct OpenLoopSpec {
+    /// Aggregate arrival rate (requests/second, Poisson).
+    pub rate: f64,
+    /// Arrival horizon in seconds (in-flight work is still drained
+    /// afterwards; the outcome's `wall` covers the whole session).
+    pub horizon: f64,
+    /// Adapter names to address, weighted by `alpha`; empty = every
+    /// request targets the base model.
+    pub adapters: Vec<String>,
+    /// Power-law skew across `adapters` (1 = uniform; smaller = more
+    /// skew), as in [`power_law_shares`].
+    pub alpha: f64,
+    /// Mean prompt length (token count varies ±50% around it).
+    pub prompt_len: usize,
+    /// Output budget per request.
+    pub max_new: usize,
+    /// Relative completion deadline attached to every request.
+    pub deadline: Option<Duration>,
+    /// Vocabulary bound for the synthetic prompt tokens.
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for OpenLoopSpec {
+    fn default() -> Self {
+        OpenLoopSpec {
+            rate: 20.0,
+            horizon: 2.0,
+            adapters: Vec::new(),
+            alpha: 0.5,
+            prompt_len: 16,
+            max_new: 8,
+            deadline: None,
+            vocab: 512,
+            seed: 0,
+        }
+    }
+}
+
+/// What happened to an open-loop session's offered load.
+#[derive(Debug, Clone)]
+pub struct OpenLoopOutcome {
+    /// Arrivals generated (== completed + rejected + misses + aborts).
+    pub offered: usize,
+    pub completed: usize,
+    /// Typed submit rejections other than deadline admission
+    /// (queue-full, shed, unknown adapter, ...), plus post-routing
+    /// rejections surfaced as [`AbortReason::Rejected`].
+    pub rejected: usize,
+    /// Refused at the door because no backend/replica could meet the
+    /// deadline ([`SubmitError::DeadlineUnmeetable`], at submit or after
+    /// routing).
+    pub deadline_unmeetable: usize,
+    /// Admitted but expired before completing
+    /// ([`AbortReason::DeadlineExceeded`]).
+    pub deadline_expired: usize,
+    /// Other admitted-but-not-completed requests (cancellations).
+    pub aborted_other: usize,
+    /// TTFT over completed requests (seconds).
+    pub ttft: Summary,
+    /// End-to-end latency over completed requests (seconds).
+    pub e2e: Summary,
+    /// Session wall time in seconds (arrival horizon + drain tail).
+    pub wall: f64,
+}
+
+impl OpenLoopOutcome {
+    /// Fraction of offered requests that missed their deadline — either
+    /// refused at the door as unmeetable or expired in flight. `NaN`
+    /// when nothing was offered.
+    pub fn deadline_miss_rate(&self) -> f64 {
+        if self.offered == 0 {
+            return f64::NAN;
+        }
+        (self.deadline_unmeetable + self.deadline_expired) as f64 / self.offered as f64
+    }
+
+    /// One fixed-width summary row for CLI/bench output.
+    pub fn row(&self, label: &str) -> String {
+        format!(
+            "{label:<18} offered={:<5} done={:<5} ttft p50={:>7.1} ms p99={:>7.1} ms \
+             miss={:>5.1}% (door={} expired={}) rej={} wall={:.1}s",
+            self.offered,
+            self.completed,
+            self.ttft.median * 1e3,
+            self.ttft.p99 * 1e3,
+            self.deadline_miss_rate() * 100.0,
+            self.deadline_unmeetable,
+            self.deadline_expired,
+            self.rejected,
+            self.wall,
+        )
+    }
+}
+
+/// Draw one synthetic request.
+fn gen_request(rng: &mut Pcg, spec: &OpenLoopSpec, shares: &[f64]) -> ServeRequest {
+    let adapter = if spec.adapters.is_empty() {
+        None
+    } else {
+        Some(spec.adapters[rng.categorical(shares)].clone())
+    };
+    let base = spec.prompt_len.max(2);
+    let len = (base / 2 + rng.below(base as u64) as usize).max(1);
+    let prompt = (0..len)
+        .map(|_| (1 + rng.below(spec.vocab.saturating_sub(1).max(1) as u64)) as i32)
+        .collect();
+    ServeRequest {
+        adapter,
+        prompt,
+        max_new_tokens: spec.max_new.max(1),
+        sampling: Sampling::Greedy,
+        deadline: spec.deadline,
+    }
+}
+
+/// Drive `backend` open-loop: inject Poisson arrivals on the wall clock
+/// for `spec.horizon` seconds (arrivals never wait for completions),
+/// then pump until every admitted request reached a terminal event.
+pub fn drive<B: ServingBackend>(backend: &mut B, spec: &OpenLoopSpec) -> Result<OpenLoopOutcome> {
+    if spec.rate <= 0.0 || !spec.rate.is_finite() {
+        bail!("open-loop rate must be positive and finite (got {})", spec.rate);
+    }
+    let shares = if spec.adapters.is_empty() {
+        Vec::new()
+    } else {
+        power_law_shares(spec.adapters.len(), spec.alpha)
+    };
+    let mut rng = Pcg::with_stream(spec.seed, 9191);
+    let mut outcome = OpenLoopOutcome {
+        offered: 0,
+        completed: 0,
+        rejected: 0,
+        deadline_unmeetable: 0,
+        deadline_expired: 0,
+        aborted_other: 0,
+        ttft: Samples::new().summary(),
+        e2e: Samples::new().summary(),
+        wall: 0.0,
+    };
+    let mut ttft = Samples::new();
+    let mut e2e = Samples::new();
+    let mut handles: Vec<RequestHandle> = Vec::new();
+
+    let start = Instant::now();
+    let mut next_at = rng.exp(spec.rate);
+    // liveness bound for the drain tail: a healthy backend terminates
+    // every admitted request; if one stream never closes, fail loudly
+    // instead of spinning forever
+    let stall_limit = Duration::from_secs_f64(spec.horizon + 120.0);
+
+    loop {
+        let now = start.elapsed().as_secs_f64();
+        while next_at <= now && next_at <= spec.horizon {
+            let req = gen_request(&mut rng, spec, &shares);
+            outcome.offered += 1;
+            match backend.submit(req) {
+                Ok(h) => handles.push(h),
+                Err(SubmitError::DeadlineUnmeetable) => outcome.deadline_unmeetable += 1,
+                Err(_) => outcome.rejected += 1,
+            }
+            next_at += rng.exp(spec.rate);
+        }
+        if backend.has_work() {
+            backend.pump()?;
+            sweep(&mut handles, &mut outcome, &mut ttft, &mut e2e);
+        } else if next_at <= spec.horizon {
+            // idle before the next arrival: sleep the remaining wait
+            let wait = next_at - start.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(wait));
+            }
+        } else if handles.is_empty() {
+            break;
+        } else {
+            // arrivals are done and the backend reports idle, but some
+            // streams have not delivered their terminal event yet
+            // (threaded backends deliver asynchronously)
+            backend.pump()?;
+            sweep(&mut handles, &mut outcome, &mut ttft, &mut e2e);
+        }
+        if start.elapsed() > stall_limit {
+            bail!(
+                "open-loop drive stalled: {} stream(s) never terminated",
+                handles.len()
+            );
+        }
+    }
+    sweep(&mut handles, &mut outcome, &mut ttft, &mut e2e);
+    outcome.ttft = ttft.summary();
+    outcome.e2e = e2e.summary();
+    outcome.wall = start.elapsed().as_secs_f64();
+    Ok(outcome)
+}
+
+/// Drain every live stream into the outcome counters; drop finished
+/// handles.
+fn sweep(
+    handles: &mut Vec<RequestHandle>,
+    outcome: &mut OpenLoopOutcome,
+    ttft: &mut Samples,
+    e2e: &mut Samples,
+) {
+    handles.retain(|h| {
+        let mut terminal = false;
+        for ev in h.drain_events() {
+            match ev {
+                TokenEvent::Done { completion, .. } => {
+                    terminal = true;
+                    outcome.completed += 1;
+                    ttft.push(completion.record.ttft.as_secs_f64());
+                    e2e.push(completion.record.e2e.as_secs_f64());
+                }
+                TokenEvent::Aborted { reason, .. } => {
+                    terminal = true;
+                    match reason {
+                        AbortReason::DeadlineExceeded => outcome.deadline_expired += 1,
+                        AbortReason::Rejected(SubmitError::DeadlineUnmeetable) => {
+                            outcome.deadline_unmeetable += 1
+                        }
+                        AbortReason::Rejected(_) => outcome.rejected += 1,
+                        AbortReason::Cancelled => outcome.aborted_other += 1,
+                    }
+                }
+                TokenEvent::First { .. } | TokenEvent::Token { .. } => {}
+            }
+        }
+        !terminal
+    });
+}
+
+/// In-process fleet setup for the policy comparison: `replicas` sim
+/// engines behind a [`Coordinator`], `n_adapters` synthetic ESFT
+/// adapters host-cached, driven open-loop.
+#[derive(Debug, Clone)]
+pub struct FleetLoadSpec {
+    pub replicas: usize,
+    pub n_adapters: usize,
+    /// Resident-adapter budget per replica.
+    pub adapter_capacity: usize,
+    /// Per-adapter outstanding cap (0 = unbounded).
+    pub queue_cap: usize,
+    /// Hardware model of every replica.
+    pub perf: SimPerf,
+    /// Chunked-prefill budget per sequence per step.
+    pub chunk: usize,
+    /// Concurrent-sequence cap per replica (keeps the sim near
+    /// saturation so routing quality is visible).
+    pub max_seqs: usize,
+    /// The arrival process (its `adapters`/`vocab` fields are filled
+    /// from the synthesized fleet).
+    pub open_loop: OpenLoopSpec,
+}
+
+impl FleetLoadSpec {
+    /// The policy-comparison hardware model: each replica completes
+    /// ~25 req/s under the default request shape (prompt ~24 / max_new
+    /// 8 / max_seqs 4), so the default two-replica fleet runs near
+    /// saturation against ~50 req/s offered — placement quality, not
+    /// spare capacity, decides who meets deadlines. Shared by
+    /// `expertweave loadgen` and `benches/fig12_fleet_online.rs` so the
+    /// two stay calibrated together.
+    pub fn near_saturation_perf() -> SimPerf {
+        SimPerf {
+            step_base: Duration::from_millis(15),
+            per_token: Duration::from_micros(200),
+            adapter_swap: Duration::from_millis(25),
+        }
+    }
+}
+
+impl Default for FleetLoadSpec {
+    fn default() -> Self {
+        FleetLoadSpec {
+            replicas: 2,
+            n_adapters: 4,
+            adapter_capacity: 3,
+            queue_cap: 0,
+            perf: Self::near_saturation_perf(),
+            chunk: 64,
+            max_seqs: 4,
+            open_loop: OpenLoopSpec::default(),
+        }
+    }
+}
+
+/// One policy's result in a [`sweep_fleet_policies`] comparison.
+#[derive(Debug)]
+pub struct PolicyOutcome {
+    pub policy: RoutingPolicy,
+    pub outcome: OpenLoopOutcome,
+    pub stats: FleetStats,
+    pub per_replica: Vec<Report>,
+}
+
+/// Launch a sim fleet with `policy`, drive it open-loop per `spec`,
+/// drain, and join the replica threads.
+pub fn run_fleet_open_loop(spec: &FleetLoadSpec, policy: RoutingPolicy) -> Result<PolicyOutcome> {
+    let mut cfg = ModelConfig::sim_default();
+    cfg.max_adapters = spec.adapter_capacity.max(1);
+    let adapters = synth_fleet_adapters(&cfg, spec.n_adapters, 42);
+    let mut ol = spec.open_loop.clone();
+    ol.adapters = adapters.iter().map(|a| a.name.clone()).collect();
+    ol.vocab = cfg.vocab;
+
+    let coord_cfg = CoordinatorConfig {
+        replicas: spec.replicas,
+        policy,
+        adapter_capacity: spec.adapter_capacity.max(1),
+        queue_cap: spec.queue_cap,
+        replicate_rps: f64::INFINITY,
+        rate_halflife: 2.0,
+        max_copies: spec.replicas.min(2).max(1),
+    };
+    let spawn_cfg = cfg.clone();
+    let perf = spec.perf;
+    let chunk = spec.chunk;
+    let max_seqs = spec.max_seqs;
+    let mut coord = Coordinator::launch(
+        coord_cfg,
+        move |i| {
+            let cfg = spawn_cfg.clone();
+            let opts = EngineOptions {
+                chunk,
+                max_seqs,
+                page_size: 64 << 10,
+                seed: i as u64,
+                ..Default::default()
+            };
+            Box::new(move || {
+                Engine::sim_weave(&cfg, perf, &[], Variant::Weave, StoreMode::Virtual, opts)
+            })
+        },
+        adapters,
+    )?;
+    let started = Instant::now();
+    let outcome = drive(&mut coord, &ol)?;
+    ServingBackend::drain(&mut coord)?;
+    let (per_replica, stats) = coord.finish(started)?;
+    Ok(PolicyOutcome { policy, outcome, stats, per_replica })
+}
+
+/// Run [`run_fleet_open_loop`] once per policy with identical arrival
+/// processes (same spec/seed), for the Fig. 12 comparison.
+pub fn sweep_fleet_policies(
+    spec: &FleetLoadSpec,
+    policies: &[RoutingPolicy],
+) -> Result<Vec<PolicyOutcome>> {
+    policies
+        .iter()
+        .map(|&p| run_fleet_open_loop(spec, p))
+        .collect()
+}
+
+/// Render a sweep as the `BENCH_fleet_online.json` document.
+pub fn fleet_online_json(spec: &FleetLoadSpec, rows: &[PolicyOutcome]) -> Json {
+    let policies = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("policy", Json::Str(r.policy.as_str().into())),
+                ("offered", Json::Int(r.outcome.offered as i64)),
+                ("completed", Json::Int(r.outcome.completed as i64)),
+                ("rejected", Json::Int(r.outcome.rejected as i64)),
+                (
+                    "deadline_unmeetable",
+                    Json::Int(r.outcome.deadline_unmeetable as i64),
+                ),
+                (
+                    "deadline_expired",
+                    Json::Int(r.outcome.deadline_expired as i64),
+                ),
+                (
+                    "deadline_miss_rate",
+                    Json::Num(r.outcome.deadline_miss_rate()),
+                ),
+                ("ttft_p50_ms", Json::Num(r.outcome.ttft.median * 1e3)),
+                ("ttft_p99_ms", Json::Num(r.outcome.ttft.p99 * 1e3)),
+                ("e2e_p50_ms", Json::Num(r.outcome.e2e.median * 1e3)),
+                ("wall_s", Json::Num(r.outcome.wall)),
+                ("affinity_hits", Json::Int(r.stats.affinity_hits as i64)),
+                ("loads", Json::Int(r.stats.loads as i64)),
+                ("shed", Json::Int(r.stats.shed_total() as i64)),
+            ])
+        })
+        .collect::<Vec<_>>();
+    obj(vec![
+        ("bench", Json::Str("fleet_online".into())),
+        ("replicas", Json::Int(spec.replicas as i64)),
+        ("adapters", Json::Int(spec.n_adapters as i64)),
+        ("adapter_capacity", Json::Int(spec.adapter_capacity as i64)),
+        ("rate_rps", Json::Num(spec.open_loop.rate)),
+        ("horizon_s", Json::Num(spec.open_loop.horizon)),
+        (
+            "deadline_ms",
+            spec.open_loop
+                .deadline
+                .map(|d| Json::Num(d.as_secs_f64() * 1e3))
+                .unwrap_or(Json::Null),
+        ),
+        ("alpha", Json::Num(spec.open_loop.alpha)),
+        ("seed", Json::Int(spec.open_loop.seed as i64)),
+        ("policies", arr(policies)),
+    ])
+}

@@ -1,0 +1,339 @@
+//! Online fleet serving end to end: deadline-aware routing over live
+//! replicas (split EWMA signal), typed deadline rejections, the fleet
+//! behind the NDJSON TCP frontend (submit/stream/cancel/drain over ≥2
+//! sim replicas, driven through [`NdjsonClient`]), and the open-loop
+//! load generator.
+
+use expertweave::adapters::generator::synth_fleet_adapters;
+use expertweave::coordinator::{Coordinator, CoordinatorConfig, RoutingPolicy};
+use expertweave::engine::{Engine, EngineOptions};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{SimPerf, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::serving::frontend::{NdjsonClient, NdjsonServer};
+use expertweave::serving::{
+    AbortReason, RequestHandle, ServeRequest, ServingBackend, SubmitError, TokenEvent,
+};
+use expertweave::weights::StoreMode;
+use expertweave::workload::openloop::{self, OpenLoopSpec};
+use std::time::Duration;
+
+fn req(adapter: Option<&str>, prompt_len: usize, max_new: usize) -> ServeRequest {
+    ServeRequest {
+        adapter: adapter.map(str::to_string),
+        prompt: (1..=prompt_len as i32).collect(),
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        deadline: None,
+    }
+}
+
+/// Pump a backend, folding a handle's events into `events`, until the
+/// predicate holds (or panic after a generous bound).
+fn pump_until<B: ServingBackend>(
+    backend: &mut B,
+    handle: &RequestHandle,
+    events: &mut Vec<TokenEvent>,
+    what: &str,
+    pred: impl Fn(&[TokenEvent]) -> bool,
+) {
+    for _ in 0..30_000 {
+        let _ = backend.pump().unwrap();
+        events.extend(handle.drain_events());
+        if pred(events) {
+            return;
+        }
+    }
+    panic!("never reached: {what} ({} events)", events.len());
+}
+
+fn has_first(evs: &[TokenEvent]) -> bool {
+    evs.iter().any(|e| matches!(e, TokenEvent::First { .. }))
+}
+
+fn has_done(evs: &[TokenEvent]) -> bool {
+    evs.iter().any(|e| matches!(e, TokenEvent::Done { .. }))
+}
+
+/// The ISSUE scenario: replica 0 is *slow* (inflated decode EWMA) while
+/// replica 1 is fast, and both carry one in-flight request each — so
+/// queue depth alone cannot tell them apart. DeadlineAware reads the
+/// published expected wait, routes the deadline-bound request to the
+/// fast replica, and it completes inside its deadline; a deadline no
+/// replica can meet is refused with a typed error instead of expiring
+/// in a queue.
+#[test]
+fn deadline_aware_routes_around_slow_replica() {
+    let cfg = ModelConfig::sim_default();
+    let slow = SimPerf {
+        step_base: Duration::from_millis(400),
+        per_token: Duration::ZERO,
+        adapter_swap: Duration::from_millis(1),
+    };
+    let spawn_cfg = cfg.clone();
+    let mut coord = Coordinator::launch(
+        CoordinatorConfig {
+            replicas: 2,
+            policy: RoutingPolicy::DeadlineAware,
+            adapter_capacity: 2,
+            queue_cap: 0,
+            replicate_rps: f64::INFINITY,
+            rate_halflife: 1.0,
+            max_copies: 2,
+        },
+        move |i| {
+            let cfg = spawn_cfg.clone();
+            let perf = if i == 0 { slow } else { SimPerf::fast() };
+            Box::new(move || {
+                Engine::sim_weave(
+                    &cfg,
+                    perf,
+                    &[],
+                    Variant::Weave,
+                    StoreMode::Virtual,
+                    EngineOptions { page_size: 64 << 10, seed: i as u64, ..Default::default() },
+                )
+            })
+        },
+        Vec::new(), // base-model requests only: residency plays no role
+    )
+    .unwrap();
+    let started = std::time::Instant::now();
+
+    // prime both EWMAs: A lands on replica 0 (all-idle tie breaks by
+    // index), B on replica 1 (A is in flight); run both to completion
+    let a = coord.submit(req(None, 4, 3)).unwrap();
+    let b = coord.submit(req(None, 4, 3)).unwrap();
+    let mut evs_a = Vec::new();
+    pump_until(&mut coord, &a, &mut evs_a, "prime A done", has_done);
+    let mut evs_b = Vec::new();
+    pump_until(&mut coord, &b, &mut evs_b, "prime B done", has_done);
+
+    // occupy both replicas with one long request each: equal in-flight
+    // counts, wildly different expected waits
+    let c = coord.submit(req(None, 4, 1000)).unwrap();
+    let d = coord.submit(req(None, 4, 1000)).unwrap();
+    let mut evs_c = Vec::new();
+    pump_until(&mut coord, &c, &mut evs_c, "C decoding", has_first);
+    let mut evs_d = Vec::new();
+    pump_until(&mut coord, &d, &mut evs_d, "D decoding", has_first);
+
+    // a deadline only the fast replica can meet: replica 0's expected
+    // wait is its ~400 ms decode EWMA x 1 in-flight, replica 1's is
+    // sub-millisecond (the 200 ms budget leaves generous wall-clock
+    // slack for loaded CI runners)
+    let mut tight = req(None, 4, 2);
+    tight.deadline = Some(Duration::from_millis(200));
+    let e = coord.submit(tight).unwrap();
+    let mut evs_e = Vec::new();
+    pump_until(&mut coord, &e, &mut evs_e, "tight-deadline done", |evs| {
+        evs.iter().any(|ev| ev.is_terminal())
+    });
+    assert!(
+        has_done(&evs_e),
+        "the deadline request must complete on the fast replica: {evs_e:?}"
+    );
+
+    // a deadline nobody can meet (below even the fast replica's
+    // one-step EWMA) is refused with the typed error at the door
+    let mut hopeless = req(None, 4, 1);
+    hopeless.deadline = Some(Duration::from_micros(10));
+    match coord.submit(hopeless) {
+        Err(SubmitError::DeadlineUnmeetable) => {}
+        other => panic!("expected DeadlineUnmeetable, got {other:?}"),
+    }
+
+    // tear down: cancel the occupants, drain, and check the books
+    assert!(coord.cancel(c.id));
+    assert!(coord.cancel(d.id));
+    ServingBackend::drain(&mut coord).unwrap();
+    let (per_replica, stats) = coord.finish(started).unwrap();
+    assert_eq!(per_replica.len(), 2);
+    assert_eq!(
+        per_replica[1].requests, 2,
+        "the fast replica served its prime + the deadline request"
+    );
+    assert_eq!(per_replica[0].requests, 1, "the slow replica served only its prime");
+    let missed: usize = per_replica.iter().map(|r| r.deadline_missed).sum();
+    assert_eq!(missed, 0, "nothing routed by DeadlineAware may expire here");
+    assert_eq!(stats.deadline_unmeetable, 1);
+    assert_eq!(stats.routed, 5);
+}
+
+/// The fleet behind the TCP frontend, exercised through [`NdjsonClient`]
+/// (both halves of the wire in one test): submit + stream over ≥2 sim
+/// replicas, typed error for an unknown adapter, cancel relayed across
+/// the replica boundary, and — the regression this file exists for —
+/// a drain that completes all in-flight work on *every* replica before
+/// the listener closes.
+#[test]
+fn fleet_ndjson_tcp_serve_stream_cancel_drain() {
+    let cfg = ModelConfig::sim_default();
+    let adapters = synth_fleet_adapters(&cfg, 2, 42);
+    let names: Vec<String> = adapters.iter().map(|a| a.name.clone()).collect();
+
+    let server = NdjsonServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let spawn_cfg = cfg.clone();
+    let serving = std::thread::spawn(move || {
+        let started = std::time::Instant::now();
+        let mut coord = Coordinator::launch(
+            CoordinatorConfig {
+                replicas: 2,
+                policy: RoutingPolicy::AdapterAffinity,
+                adapter_capacity: 2,
+                queue_cap: 0,
+                replicate_rps: f64::INFINITY,
+                rate_halflife: 1.0,
+                max_copies: 2,
+            },
+            move |i| {
+                let cfg = spawn_cfg.clone();
+                Box::new(move || {
+                    Engine::sim_weave(
+                        &cfg,
+                        SimPerf::fast(),
+                        &[],
+                        Variant::Weave,
+                        StoreMode::Virtual,
+                        EngineOptions {
+                            page_size: 64 << 10,
+                            chunk: 32,
+                            seed: i as u64,
+                            ..Default::default()
+                        },
+                    )
+                })
+            },
+            adapters,
+        )
+        .unwrap();
+        server.run(&mut coord).unwrap();
+        // every replica drained before run() returned; finish() only
+        // collects reports and joins the threads
+        coord.finish(started).unwrap()
+    });
+
+    let mut client = NdjsonClient::connect(&addr.to_string()).unwrap();
+
+    // 1) one request per adapter, streamed to completion across replicas
+    let h1 = client.submit(req(Some(&names[0]), 6, 3)).unwrap();
+    let h2 = client.submit(req(Some(&names[1]), 6, 3)).unwrap();
+    let mut evs1 = Vec::new();
+    pump_until(&mut client, &h1, &mut evs1, "r1 done", has_done);
+    let mut evs2 = Vec::new();
+    pump_until(&mut client, &h2, &mut evs2, "r2 done", has_done);
+    assert!(has_first(&evs1), "TTFT edge must be visible on the wire");
+    let Some(TokenEvent::Done { completion, .. }) =
+        evs1.iter().find(|e| matches!(e, TokenEvent::Done { .. }))
+    else {
+        unreachable!()
+    };
+    assert_eq!(completion.output.len(), 3);
+    assert_eq!(completion.record.prompt_tokens, 6);
+
+    // 2) unknown adapter: the fleet door's typed rejection crosses the
+    // wire as an error frame and surfaces as Aborted(Rejected)
+    let ghost = client.submit(req(Some("ghost"), 4, 1)).unwrap();
+    let mut evs_g = Vec::new();
+    pump_until(&mut client, &ghost, &mut evs_g, "ghost rejected", |evs| {
+        evs.iter().any(|e| e.is_terminal())
+    });
+    assert!(
+        matches!(
+            evs_g.last(),
+            Some(TokenEvent::Aborted {
+                reason: AbortReason::Rejected(SubmitError::UnknownAdapter(_)),
+                ..
+            })
+        ),
+        "expected a typed unknown-adapter rejection: {evs_g:?}"
+    );
+
+    // 3) cancel mid-decode, relayed coordinator → owning replica
+    let long = client.submit(req(Some(&names[0]), 6, 2000)).unwrap();
+    let mut evs_l = Vec::new();
+    pump_until(&mut client, &long, &mut evs_l, "long decoding", has_first);
+    assert!(client.cancel(long.id));
+    pump_until(&mut client, &long, &mut evs_l, "long aborted", |evs| {
+        evs.iter().any(|e| e.is_terminal())
+    });
+    assert!(matches!(
+        evs_l.last(),
+        Some(TokenEvent::Aborted { reason: AbortReason::Cancelled, .. })
+    ));
+
+    // 4) drain with work still in flight: the submit races the drain
+    // down the same pipe, so the fleet must finish it on whichever
+    // replica it landed before acknowledging
+    let last = client.submit(req(Some(&names[1]), 6, 4)).unwrap();
+    ServingBackend::drain(&mut client).unwrap();
+    assert!(client.is_drained());
+    assert!(
+        has_done(&last.drain_events()),
+        "drain must complete in-flight work before the ack"
+    );
+    match client.submit(req(None, 2, 1)) {
+        Err(SubmitError::ShuttingDown) => {}
+        other => panic!("post-drain submit must fail ShuttingDown, got {other:?}"),
+    }
+
+    let (per_replica, stats) = serving.join().unwrap();
+    assert_eq!(per_replica.len(), 2);
+    let completed: usize = per_replica.iter().map(|r| r.requests).sum();
+    let aborted: usize = per_replica.iter().map(|r| r.aborted).sum();
+    assert_eq!(completed, 3, "r1 + r2 + the post-drain-race request");
+    assert_eq!(aborted, 1, "the cancelled long request");
+    assert!(stats.submit_rejected >= 1, "ghost: {stats:?}");
+    // both replicas actually served (affinity spread the two adapters)
+    assert!(per_replica.iter().all(|r| r.requests > 0), "{per_replica:?}");
+}
+
+/// Open-loop generator sanity against a single sim engine: arrivals are
+/// injected for the whole horizon regardless of completions, and every
+/// offered request is accounted for exactly once.
+#[test]
+fn open_loop_accounts_for_every_arrival() {
+    let cfg = ModelConfig::sim_default();
+    let adapters = synth_fleet_adapters(&cfg, 2, 42);
+    let mut engine = Engine::sim_weave(
+        &cfg,
+        SimPerf::fast(),
+        &adapters,
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions { page_size: 64 << 10, ..Default::default() },
+    )
+    .unwrap();
+    let spec = OpenLoopSpec {
+        rate: 150.0,
+        horizon: 0.4,
+        adapters: adapters.iter().map(|a| a.name.clone()).collect(),
+        alpha: 0.5,
+        prompt_len: 12,
+        max_new: 4,
+        deadline: None,
+        vocab: cfg.vocab,
+        seed: 7,
+    };
+    let outcome = openloop::drive(&mut engine, &spec).unwrap();
+    assert!(outcome.offered > 20, "~60 arrivals expected, got {}", outcome.offered);
+    assert_eq!(
+        outcome.completed
+            + outcome.rejected
+            + outcome.deadline_unmeetable
+            + outcome.deadline_expired
+            + outcome.aborted_other,
+        outcome.offered,
+        "every arrival is completed, rejected, or missed: {outcome:?}"
+    );
+    assert_eq!(outcome.completed, outcome.offered, "no deadline, no overload: all done");
+    assert_eq!(outcome.ttft.n, outcome.completed);
+    // the session spans (most of) the arrival horizon plus the drain
+    // tail; the last Poisson gap may cross the horizon slightly early
+    assert!(outcome.wall > spec.horizon * 0.5, "wall {}", outcome.wall);
+    assert!(outcome.deadline_miss_rate() == 0.0);
+    // the engine's own books agree
+    let report = engine.report();
+    assert_eq!(report.requests, outcome.completed);
+}

@@ -200,6 +200,83 @@ fn deadline_aware_admission_rejects_at_submit() {
     assert_eq!(report.deadline_missed, 1, "only the pre-EWMA tiny deadline expired");
 }
 
+/// The split step-time estimator: a heavy-prefill burst inflates only
+/// the prefill EWMA, so a borderline *decode* deadline is still admitted
+/// where the old unified EWMA would have over-rejected it until the
+/// estimate re-converged (ROADMAP "Deadline admission", PR 4 caveat).
+#[test]
+fn prefill_burst_does_not_inflate_decode_deadline_admission() {
+    let cfg = ModelConfig::sim_default();
+    // the sim's latency is bucket-shaped (step_base + per_token x
+    // bucket): decode steps land in the 16-token bucket (~17 ms here),
+    // while a 256-token prefill chunk lands in the 256 bucket (~257
+    // ms). The per-token cost is a sleep, so the burst's inflation of
+    // the prefill estimate has a deterministic lower bound even on
+    // loaded CI runners.
+    let perf = SimPerf {
+        step_base: Duration::from_millis(1),
+        per_token: Duration::from_millis(1),
+        adapter_swap: Duration::from_millis(2),
+    };
+    let mut e = Engine::sim_weave(
+        &cfg,
+        perf,
+        &[],
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions {
+            page_size: 64 << 10,
+            chunk: 256,
+            max_seqs: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // 1) prime both estimates with a short request (1 prefill step, then
+    // pure decode steps)
+    let h = e.submit_request(req(None, 2, 6)).unwrap();
+    while ServingBackend::pump(&mut e).unwrap() {}
+    assert!(has_done_event(&h.drain_events()));
+    let primed = e.step_ewma();
+    assert!(primed.decode > 0.0 && primed.prefill > 0.0);
+
+    // 2) heavy-prefill burst: a 768-token prompt chunked at 256 runs
+    // three >= 257 ms prefill steps, pushing the prefill EWMA past
+    // 80 ms (0.8/0.2 smoothing from ~17 ms: 65 -> 103 -> 134 ms) while
+    // the decode estimate stays ~17 ms
+    let _busy = e.submit_request(req(None, 768, 50)).unwrap();
+    for _ in 0..3 {
+        ServingBackend::pump(&mut e).unwrap();
+    }
+    let ewma = e.step_ewma();
+    assert!(
+        ewma.prefill > ewma.decode * 2.0,
+        "the burst must inflate only the prefill estimate: {ewma:?}"
+    );
+    assert!(ewma.prefill > 0.080, "3 chunked steps of >= 257 ms each: {ewma:?}");
+    assert!(ewma.decode < 0.080, "decode estimate untouched by the burst: {ewma:?}");
+
+    // 3) with one request waiting behind the busy engine, an 80 ms
+    // deadline is borderline: above decode-EWMA x depth (admit), below
+    // prefill-EWMA x depth (a unified estimate would have rejected)
+    let _queued = e.submit_request(req(None, 2, 2)).unwrap();
+    let mut borderline = req(None, 2, 2);
+    borderline.deadline = Some(Duration::from_millis(80));
+    let _admitted = e
+        .submit_request(borderline)
+        .expect("split estimator must admit a decode-borderline deadline");
+    // drain everything; the borderline request may legitimately expire
+    // later (admission is about the door, not a completion guarantee)
+    while ServingBackend::pump(&mut e).unwrap() {}
+    let report = e.report();
+    assert_eq!(report.rejected, 0, "no deadline rejection at the door");
+}
+
+fn has_done_event(evs: &[TokenEvent]) -> bool {
+    evs.iter().any(|ev| matches!(ev, TokenEvent::Done { .. }))
+}
+
 #[test]
 fn typed_submit_errors_and_internal_rejection_accounting() {
     let (mut e, _names) = sim_engine(EngineOptions { queue_cap: 1, ..Default::default() });
