@@ -9,6 +9,10 @@
 //! Runs on the sim backend with `SimPerf::instant()` — no latency
 //! injection — so the measurement is pure pipeline overhead: scheduler
 //! packing, KV slot allocation, fused batched reroute, output delivery.
+//! A third series re-runs the fast path with the live-telemetry
+//! registry disabled (`ObsRegistry::set_enabled(false)`) to isolate the
+//! cost of always-on metric recording (a handful of relaxed atomic adds
+//! per step — expected to be measurement noise).
 //!
 //! Emits `target/bench_results/BENCH_hotpath.json` — the first point of
 //! the repo's perf trajectory; later PRs append comparable runs.
@@ -54,10 +58,13 @@ struct RunResult {
 }
 
 /// Drive one engine into steady-state decode and time `steps` steps.
+/// `obs` toggles the live-telemetry registry (always-on in production;
+/// the off series isolates the recording cost — expected to be noise).
 fn run_decode(
     cfg: &ModelConfig,
     adapters: &[Adapter],
     full_logits: bool,
+    obs: bool,
     seqs: usize,
     warmup: usize,
     steps: usize,
@@ -74,6 +81,7 @@ fn run_decode(
             ..Default::default()
         },
     )?;
+    e.obs().set_enabled(obs);
     e.metrics.reserve_steps(warmup + steps + 16);
     for i in 0..seqs {
         let who = (i % 2 == 0).then(|| adapters[0].name.clone());
@@ -133,22 +141,31 @@ fn main() -> anyhow::Result<()> {
     let adapters = synth_fleet_adapters(&cfg, 2, 42);
 
     let mut fast = None::<RunResult>;
+    let mut obs_off = None::<RunResult>;
     let mut full = None::<RunResult>;
     for _ in 0..reps {
-        // interleave so host drift cancels
-        let f = run_decode(&cfg, &adapters, false, seqs, warmup, steps)?;
-        let l = run_decode(&cfg, &adapters, true, seqs, warmup, steps)?;
+        // interleave so host drift cancels; "fastpath" records live
+        // telemetry (the production default), "obs off" isolates it
+        let f = run_decode(&cfg, &adapters, false, true, seqs, warmup, steps)?;
+        let o = run_decode(&cfg, &adapters, false, false, seqs, warmup, steps)?;
+        let l = run_decode(&cfg, &adapters, true, true, seqs, warmup, steps)?;
         if fast.as_ref().is_none_or(|b| f.steps_per_sec > b.steps_per_sec) {
             fast = Some(f);
+        }
+        if obs_off.as_ref().is_none_or(|b| o.steps_per_sec > b.steps_per_sec) {
+            obs_off = Some(o);
         }
         if full.as_ref().is_none_or(|b| l.steps_per_sec > b.steps_per_sec) {
             full = Some(l);
         }
     }
     let fast = fast.unwrap();
+    let obs_off = obs_off.unwrap();
     let full = full.unwrap();
     anyhow::ensure!(fast.steps_per_sec > 0.0, "fast path measured zero steps/sec");
     let speedup = fast.steps_per_sec / full.steps_per_sec.max(1e-12);
+    // recording cost per step (negative = noise; both are best-of-reps)
+    let obs_overhead_ns = fast.ns_per_step - obs_off.ns_per_step;
 
     let fmt_allocs = |a: Option<f64>| match a {
         Some(v) => format!("{v:.2}"),
@@ -156,10 +173,16 @@ fn main() -> anyhow::Result<()> {
     };
     let mut t = Table::new(&["path", "steps/s", "ns/step", "allocs/step"]);
     t.row(&[
-        "fastpath (workspace+tokens)".into(),
+        "fastpath (obs on)".into(),
         format!("{:.0}", fast.steps_per_sec),
         format!("{:.0}", fast.ns_per_step),
         fmt_allocs(fast.allocs_per_step),
+    ]);
+    t.row(&[
+        "fastpath (obs off)".into(),
+        format!("{:.0}", obs_off.steps_per_sec),
+        format!("{:.0}", obs_off.ns_per_step),
+        fmt_allocs(obs_off.allocs_per_step),
     ]);
     t.row(&[
         "full-logits (legacy-equiv)".into(),
@@ -169,7 +192,8 @@ fn main() -> anyhow::Result<()> {
     ]);
     t.print(&format!(
         "Figure 11 — steady-state decode hot path ({seqs}-seq batch, \
-         {steps} steps, no latency injection): {speedup:.1}x"
+         {steps} steps, no latency injection): {speedup:.1}x; \
+         obs recording {obs_overhead_ns:+.0} ns/step"
     ));
     t.write_csv("fig11_hotpath").ok();
     if speedup < 5.0 {
@@ -212,6 +236,31 @@ fn main() -> anyhow::Result<()> {
                 ),
             ]),
         ),
+        // obs-on vs obs-off series: "obs_on" is the same configuration
+        // as "fastpath" (recording is the production default)
+        (
+            "obs_on",
+            obj(vec![
+                ("steps_per_sec", Json::Num(fast.steps_per_sec)),
+                ("ns_per_step", Json::Num(fast.ns_per_step)),
+                (
+                    "allocs_per_step",
+                    fast.allocs_per_step.map_or(Json::Null, Json::Num),
+                ),
+            ]),
+        ),
+        (
+            "obs_off",
+            obj(vec![
+                ("steps_per_sec", Json::Num(obs_off.steps_per_sec)),
+                ("ns_per_step", Json::Num(obs_off.ns_per_step)),
+                (
+                    "allocs_per_step",
+                    obs_off.allocs_per_step.map_or(Json::Null, Json::Num),
+                ),
+            ]),
+        ),
+        ("obs_overhead_ns_per_step", Json::Num(obs_overhead_ns)),
         ("speedup", Json::Num(speedup)),
     ]);
     let dir = std::path::Path::new("target/bench_results");

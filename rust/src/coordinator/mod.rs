@@ -237,6 +237,11 @@ pub struct FleetOutcome {
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     replicas: Vec<ReplicaHandle>,
+    /// Each replica engine's live metric registry, by replica index
+    /// (shipped in [`ReplicaEvent::Ready`]). The coordinator only reads
+    /// them — snapshots for fleet `stats` frames, direct rendering by
+    /// the Prometheus exposition — recording stays replica-side.
+    obs: Vec<Arc<crate::obs::ObsRegistry>>,
     events: Receiver<ReplicaEvent>,
     directory: AdapterDirectory,
     rates: RateTracker,
@@ -295,13 +300,16 @@ impl Coordinator {
         drop(ev_tx); // only replica threads hold senders now
 
         let mut ready = 0usize;
+        let mut obs_regs: Vec<Option<Arc<crate::obs::ObsRegistry>>> =
+            (0..cfg.replicas).map(|_| None).collect();
         while ready < cfg.replicas {
             match ev_rx.recv_timeout(Duration::from_secs(600)) {
-                Ok(ReplicaEvent::Ready { replica, err: None }) => {
+                Ok(ReplicaEvent::Ready { replica, err: None, obs }) => {
                     crate::log_debug!("coordinator", "replica {replica} ready");
+                    obs_regs[replica] = obs;
                     ready += 1;
                 }
-                Ok(ReplicaEvent::Ready { replica, err: Some(e) }) => {
+                Ok(ReplicaEvent::Ready { replica, err: Some(e), .. }) => {
                     bail!("replica {replica} failed to start: {e}");
                 }
                 Ok(_) => {}
@@ -329,6 +337,7 @@ impl Coordinator {
             clock: Instant::now(),
             shutting_down: false,
             fatal: None,
+            obs: obs_regs.into_iter().flatten().collect(),
             events: ev_rx,
             replicas,
             cfg,
@@ -363,6 +372,43 @@ impl Coordinator {
 
     pub fn directory(&self) -> &AdapterDirectory {
         &self.directory
+    }
+
+    /// The live metric registries of every replica engine, by replica
+    /// index. The fleet Prometheus exposition
+    /// ([`crate::obs::expo::render`]) consumes these directly, labelling
+    /// each family with `replica="i"`.
+    pub fn obs_registries(&self) -> Vec<Arc<crate::obs::ObsRegistry>> {
+        self.obs.clone()
+    }
+
+    /// One fleet-wide [`StatsSnapshot`]: every replica registry merged
+    /// (counters/gauges summed, histograms merged bucketwise, adapter
+    /// families combined by name), plus the coordinator's own
+    /// door-keeping counters ([`FleetStats`]) in the `fleet` section.
+    ///
+    /// [`StatsSnapshot`]: crate::obs::StatsSnapshot
+    pub fn stats_snapshot(&self) -> crate::obs::StatsSnapshot {
+        let mut snap = crate::obs::StatsSnapshot::default();
+        for r in &self.obs {
+            snap.merge(&r.snapshot());
+        }
+        let s = &self.stats;
+        snap.fleet = vec![
+            ("routed".to_string(), s.routed as u64),
+            ("affinity_hits".to_string(), s.affinity_hits as u64),
+            ("affinity_misses".to_string(), s.affinity_misses as u64),
+            ("loads".to_string(), s.loads as u64),
+            ("load_failures".to_string(), s.load_failures as u64),
+            ("evictions".to_string(), s.evictions as u64),
+            ("evict_rejected".to_string(), s.evict_rejected as u64),
+            ("replications".to_string(), s.replications as u64),
+            ("shed_queue_full".to_string(), s.shed_queue_full as u64),
+            ("shed_no_capacity".to_string(), s.shed_no_capacity as u64),
+            ("deadline_unmeetable".to_string(), s.deadline_unmeetable as u64),
+            ("submit_rejected".to_string(), s.submit_rejected as u64),
+        ];
+        snap
     }
 
     /// Record + send a load of a host-cached adapter to a replica.
@@ -734,6 +780,10 @@ impl ServingBackend for Coordinator {
         // driving loop to pump, which surfaces the root-cause error
         // instead of silently rejecting everything that follows
         self.fatal.is_some() || self.inflight_total() > 0
+    }
+
+    fn stats(&mut self) -> Option<crate::obs::StatsSnapshot> {
+        Some(self.stats_snapshot())
     }
 
     /// Drain the whole fleet: finish every in-flight request *and* wait

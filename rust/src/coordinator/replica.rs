@@ -71,7 +71,15 @@ pub(crate) enum ReplicaCmd {
 /// Events a replica reports back to the coordinator.
 pub(crate) enum ReplicaEvent {
     /// Sent once after engine construction; `err` is set on failure.
-    Ready { replica: usize, err: Option<String> },
+    /// On success `obs` carries the engine's live metric registry
+    /// ([`crate::obs::ObsRegistry`]) — recording stays inside the
+    /// replica thread; the coordinator only snapshots/aggregates it
+    /// (fleet `stats` frames, the Prometheus exposition).
+    Ready {
+        replica: usize,
+        err: Option<String>,
+        obs: Option<Arc<crate::obs::ObsRegistry>>,
+    },
     /// A token-stream event, already re-addressed to the fleet rid.
     /// `Done`/`Aborted` are terminal (the coordinator's in-flight
     /// accounting keys off them).
@@ -260,13 +268,18 @@ fn replica_main(
 ) {
     let mut engine = match build() {
         Ok(e) => {
-            let _ = events.send(ReplicaEvent::Ready { replica: index, err: None });
+            let _ = events.send(ReplicaEvent::Ready {
+                replica: index,
+                err: None,
+                obs: Some(e.obs()),
+            });
             e
         }
         Err(e) => {
             let _ = events.send(ReplicaEvent::Ready {
                 replica: index,
                 err: Some(format!("{e:#}")),
+                obs: None,
             });
             return;
         }

@@ -22,6 +22,8 @@ use crate::kvcache::KvCache;
 use crate::memsim::DeviceMemory;
 use crate::metrics::{MetricsCollector, Report, RequestRecord};
 use crate::model::ModelConfig;
+use crate::obs::trace::{RequestSpan, TraceLog};
+use crate::obs::{ObsRegistry, StatsSnapshot};
 use crate::runtime::{
     ArtifactSet, ParamSource, Runtime, SimPerf, SimRuntime, StepInputs, StepOutput, StepYield,
     Variant,
@@ -205,6 +207,14 @@ pub struct Engine {
     /// Persistent step output buffer (logits or greedy tokens).
     step_out: StepOutput,
     pub metrics: MetricsCollector,
+    /// Live telemetry: lock-free counters/histograms recorded from the
+    /// step loop, shared (`Arc`) with the scrape surfaces — the NDJSON
+    /// `stats` frame, the Prometheus listener and the fleet heartbeat.
+    obs: Arc<ObsRegistry>,
+    /// Opt-in per-request phase tracing ([`Engine::enable_trace`];
+    /// exported as Chrome-trace JSON by [`Engine::write_trace`]). Spans
+    /// are recorded only at completion/abort, never per step.
+    trace: Option<TraceLog>,
     rng: Pcg,
     next_seq: u64,
     /// EWMA of recent step wall time (seconds), split by step shape:
@@ -254,12 +264,15 @@ impl Engine {
         opts: &EngineOptions,
     ) -> Result<Engine> {
         let sched_cfg = Self::sched_config(&cfg, opts);
+        let obs = Arc::new(ObsRegistry::new(cfg.max_adapters));
         let mut engine = Engine {
             ws: StepWorkspace::new(&sched_cfg),
             scheduler: Scheduler::new(sched_cfg),
             kv: KvCache::new(cfg.kv_cap),
             step_out: StepOutput::new(),
             metrics: MetricsCollector::new(),
+            obs,
+            trace: None,
             rng: Pcg::with_stream(opts.seed, 555),
             next_seq: 1,
             ewma_prefill: 0.0,
@@ -277,7 +290,25 @@ impl Engine {
             weights,
         };
         engine.sync_device_state()?;
+        engine.sync_obs_labels();
         Ok(engine)
+    }
+
+    /// Mirror the adapter registry's slot → name layout into the obs
+    /// registry's preallocated label slots (merged deployments attribute
+    /// their base-slot traffic to the merged adapter's name).
+    fn sync_obs_labels(&self) {
+        match &self.weights {
+            Weights::Weave { registry, .. } => {
+                for r in registry.resident() {
+                    self.obs.set_adapter_name(r.slot as i32, &r.name);
+                }
+            }
+            Weights::Merged { adapter } => {
+                self.obs.set_adapter_name(-1, &adapter.name);
+            }
+            Weights::BaseOnly => {}
+        }
     }
 
     /// Build the weave-flavour weight state (store + registry, adapters
@@ -511,6 +542,7 @@ impl Engine {
         };
         let slot = registry.load(store, adapter)?;
         self.weights_version += 1;
+        self.obs.set_adapter_name(slot as i32, &adapter.name);
         self.sync_device_state()?;
         Ok(slot)
     }
@@ -526,8 +558,9 @@ impl Engine {
         let Weights::Weave { store, registry } = &mut self.weights else {
             bail!("adapter evict on a non-weave deployment");
         };
-        registry.evict(store, name)?;
+        let slot = registry.evict(store, name)?;
         self.weights_version += 1;
+        self.obs.clear_adapter_name(slot as i32);
         self.sync_device_state()
     }
 
@@ -612,9 +645,11 @@ impl Engine {
             Ok(aid) => aid,
             Err(e) => {
                 self.metrics.record_rejected();
+                self.obs.record_rejected();
                 return Err(e);
             }
         };
+        self.obs.record_submitted(aid);
         let id = self.next_seq;
         self.next_seq += 1;
         let mut seq = SeqState::new(
@@ -641,13 +676,33 @@ impl Engine {
     /// id is not in flight.
     pub fn cancel_request(&mut self, id: RequestId) -> bool {
         match self.scheduler.cancel(id, &mut self.kv, &mut self.ws) {
-            Some(_) => {
+            Some(seq) => {
                 self.metrics.record_aborted(false);
+                self.obs.record_aborted(seq.aid);
+                self.trace_request(&seq, "cancelled");
                 self.finish_stream(id, AbortReason::Cancelled);
                 true
             }
             None => false,
         }
+    }
+
+    /// Fold a finished/aborted sequence's phase stamps into the trace
+    /// log (no-op unless [`Engine::enable_trace`] was called).
+    fn trace_request(&mut self, seq: &SeqState, outcome: &'static str) {
+        let Some(trace) = self.trace.as_mut() else { return };
+        let span = RequestSpan {
+            id: seq.id,
+            adapter: seq.adapter.clone().unwrap_or_else(|| "base".into()),
+            outcome,
+            arrival_us: trace.rel_us(seq.arrival),
+            admitted_us: seq.admitted_at.map(|t| trace.rel_us(t)),
+            first_scheduled_us: seq.first_scheduled_at.map(|t| trace.rel_us(t)),
+            prefill_done_us: seq.prefill_done_at.map(|t| trace.rel_us(t)),
+            first_token_us: seq.first_token_at.map(|t| trace.rel_us(t)),
+            finished_us: trace.rel_us(seq.finished_at.unwrap_or_else(Instant::now)),
+        };
+        trace.record(span);
     }
 
     /// Finish all queued and running work, then refuse new submits with
@@ -678,6 +733,8 @@ impl Engine {
         );
         for seq in expired {
             self.metrics.record_aborted(true);
+            self.obs.record_aborted(seq.aid);
+            self.trace_request(&seq, "deadline");
             self.finish_stream(seq.id, AbortReason::DeadlineExceeded);
         }
         // un-latch once no in-flight request carries a deadline, so the
@@ -740,6 +797,7 @@ impl Engine {
                 ),
             };
             let first = self.scheduler.push_token(r.seq, tok)?;
+            self.obs.record_token(r.aid);
             // stream the token while the request is still in flight —
             // TTFT is only real if the first token leaves the engine now
             if let Some(tx) = self.streams.get(&r.seq) {
@@ -779,12 +837,31 @@ impl Engine {
             self.step_out.execute_time,
             batch.prefill_tokens + batch.decode_tokens,
         );
+        // live telemetry: atomics only — the steady-state decode step
+        // stays allocation-free with recording enabled
+        self.obs.record_step(
+            wall.as_micros() as u64,
+            self.step_out.execute_time.as_micros() as u64,
+            batch.prefill_tokens as u64,
+            batch.decode_tokens as u64,
+        );
+        self.obs.set_gauges(
+            self.kv.free_slots() as u64,
+            self.scheduler.waiting_len() as u64,
+            self.scheduler.running_len() as u64,
+        );
         let completions: Vec<Completion> = finished
             .into_iter()
             .map(|seq| {
                 let first = seq.first_token_at.unwrap_or_else(Instant::now);
                 let end = seq.finished_at.unwrap_or_else(Instant::now);
                 let outputs = seq.generated();
+                self.obs.record_completed(
+                    seq.aid,
+                    (first - seq.arrival).as_micros() as u64,
+                    (end - seq.arrival).as_micros() as u64,
+                );
+                self.trace_request(&seq, "done");
                 let record = RequestRecord {
                     id: seq.id,
                     adapter: seq.adapter.clone(),
@@ -827,6 +904,48 @@ impl Engine {
         self.metrics.report()
     }
 
+    /// The engine's live telemetry registry. The returned `Arc` is how
+    /// scrape surfaces (Prometheus listener, fleet coordinator) read
+    /// engine state from other threads without locking the engine.
+    pub fn obs(&self) -> Arc<ObsRegistry> {
+        Arc::clone(&self.obs)
+    }
+
+    /// Current live-stats snapshot, with gauges refreshed first (the
+    /// NDJSON `stats` frame body).
+    pub fn stats_snapshot(&self) -> StatsSnapshot {
+        self.obs.set_gauges(
+            self.kv.free_slots() as u64,
+            self.scheduler.waiting_len() as u64,
+            self.scheduler.running_len() as u64,
+        );
+        self.obs.snapshot()
+    }
+
+    /// Start collecting per-request phase spans (idempotent). Spans
+    /// accumulate until [`Engine::write_trace`] / session reset.
+    pub fn enable_trace(&mut self) {
+        if self.trace.is_none() {
+            self.trace = Some(TraceLog::new());
+        }
+    }
+
+    /// Spans collected so far (0 when tracing is disabled).
+    pub fn trace_len(&self) -> usize {
+        self.trace.as_ref().map_or(0, TraceLog::len)
+    }
+
+    /// Write the collected phase spans as Chrome-trace JSON (the
+    /// `--trace-out` target). Errors if tracing was never enabled.
+    pub fn write_trace(&self, path: &std::path::Path) -> Result<()> {
+        match &self.trace {
+            Some(t) => {
+                t.write(path).with_context(|| format!("writing trace to {}", path.display()))
+            }
+            None => bail!("tracing not enabled (call enable_trace first)"),
+        }
+    }
+
     /// Start a fresh serving session on the same deployment: clears the
     /// scheduler, KV cache and metrics (weights and compiled executables
     /// stay resident). Benches reuse one engine across sweep cells to
@@ -844,6 +963,10 @@ impl Engine {
         self.kv = KvCache::new(self.cfg.kv_cap);
         self.step_out = StepOutput::new();
         self.metrics = MetricsCollector::new();
+        self.obs.reset();
+        if self.trace.is_some() {
+            self.trace = Some(TraceLog::new());
+        }
         self.streams.clear();
         self.shutting_down = false;
         self.has_deadlines = false;
@@ -874,5 +997,9 @@ impl ServingBackend for Engine {
 
     fn drain(&mut self) -> Result<()> {
         self.drain_requests()
+    }
+
+    fn stats(&mut self) -> Option<StatsSnapshot> {
+        Some(self.stats_snapshot())
     }
 }

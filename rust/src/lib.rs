@@ -24,7 +24,11 @@
 //! prefill), [`kvcache`], [`sampler`], [`runtime`] (PJRT execution of
 //! AOT-lowered JAX/Pallas artifacts), [`server`] (trace replay), plus the
 //! experiment substrates [`workload`], [`metrics`], [`memsim`] and
-//! [`bench`].
+//! [`bench`], plus the always-on live telemetry layer [`obs`]
+//! (lock-free per-adapter counters and log2 histograms recorded from
+//! the zero-allocation step loop, per-request phase tracing exportable
+//! as Chrome-trace JSON, and the NDJSON `stats` frame / Prometheus
+//! exposition surfaces — see `docs/OBSERVABILITY.md`).
 //!
 //! The online request/response boundary is the [`serving`] API:
 //! [`serving::ServingBackend`] (submit / pump / cancel / drain,
@@ -70,6 +74,7 @@ pub mod kvcache;
 pub mod memsim;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sampler;
 pub mod scheduler;

@@ -27,7 +27,8 @@
 //! expertweave gen-adapters --config small --out /tmp/adapters
 //! expertweave serve --config tiny --adapters 2 --lambda 5 --horizon 10
 //! expertweave serve --backend sim --adapters 4 --lambda 10 --horizon 5
-//! expertweave serve --backend sim --adapters 2 --listen 127.0.0.1:7070
+//! expertweave serve --backend sim --adapters 2 --listen 127.0.0.1:7070 \
+//!             --metrics-listen 127.0.0.1:9464 --trace-out /tmp/trace.json
 //! expertweave fleet --replicas 3 --adapters 6 --policy affinity --horizon 6
 //! expertweave fleet --replicas 2 --adapters 4 --policy deadline --listen 127.0.0.1:7071
 //! expertweave loadgen --replicas 2 --rate 50 --deadline-ms 300
@@ -45,8 +46,10 @@ use expertweave::engine::{Engine, EngineOptions};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{ArtifactSet, SimPerf, Variant};
 use expertweave::server;
+use expertweave::obs::expo::MetricsListener;
 use expertweave::util::args::Args;
 use expertweave::util::logging::{set_level, Level};
+use expertweave::{log_error, log_info};
 use expertweave::weights::StoreMode;
 use expertweave::workload::trace::{Trace, TraceSpec};
 use expertweave::workload::OpenLoopSpec;
@@ -69,14 +72,39 @@ fn main() {
         "inspect" => inspect(argv),
         "sparsity" => sparsity(argv),
         other => {
-            eprintln!("unknown command {other:?}");
+            log_error!("main", "unknown command {other:?}");
             std::process::exit(2);
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        log_error!("main", "error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Apply the shared `--quiet`/`--verbose` pair: quiet wins (errors
+/// only), verbose turns on debug, otherwise the default level stands.
+fn apply_log_flags(a: &Args) {
+    if a.has_flag("quiet") {
+        set_level(Level::Error);
+    } else if a.has_flag("verbose") {
+        set_level(Level::Debug);
+    }
+}
+
+/// Spawn the std-only Prometheus listener over `regs` when
+/// `--metrics-listen` was given (shared by `serve` and `fleet`).
+fn spawn_metrics(
+    a: &Args,
+    regs: Vec<std::sync::Arc<expertweave::obs::ObsRegistry>>,
+) -> Result<Option<MetricsListener>> {
+    let Some(addr) = a.get("metrics-listen") else {
+        return Ok(None);
+    };
+    let listener = MetricsListener::spawn(&addr, move || expertweave::obs::expo::render(&regs))
+        .with_context(|| format!("bind metrics listener {addr}"))?;
+    log_info!("metrics", "Prometheus exposition on http://{}/metrics", listener.local_addr());
+    Ok(Some(listener))
 }
 
 fn artifact_set(config: &str) -> Result<ArtifactSet> {
@@ -91,6 +119,8 @@ fn serve(argv: Vec<String>) -> Result<()> {
         .opt("deployment", Some("weave"), "weave|singleop|padding|base-only")
         .opt("adapters", Some("2"), "number of Table-1 adapters to load")
         .opt("listen", None, "serve NDJSON requests on this TCP addr instead of replaying")
+        .opt("metrics-listen", None, "serve Prometheus text metrics (/metrics) on this TCP addr")
+        .opt("trace-out", None, "write request phase spans as Chrome-trace JSON to this path")
         .opt("queue-cap", Some("0"), "admission queue bound (0 = unbounded); listen mode")
         .opt("lambda", Some("2.0"), "aggregate arrival rate (req/s)")
         .opt("alpha", Some("1.0"), "power-law skew (1 = uniform)")
@@ -98,11 +128,10 @@ fn serve(argv: Vec<String>) -> Result<()> {
         .opt("chunk", Some("256"), "chunked-prefill budget per seq")
         .opt("seed", Some("0"), "workload seed")
         .flag("verbose", "debug logging")
+        .flag("quiet", "errors only")
         .parse(argv)
         .map_err(anyhow::Error::msg)?;
-    if a.has_flag("verbose") {
-        set_level(Level::Debug);
-    }
+    apply_log_flags(&a);
     let backend = a.get_or("backend", "pjrt");
     let set = match backend.as_str() {
         "pjrt" => Some(artifact_set(&a.get_or("config", "tiny"))?),
@@ -164,19 +193,42 @@ fn serve(argv: Vec<String>) -> Result<()> {
         (_, other) => bail!("unknown deployment {other:?}"),
     };
 
+    if a.get("trace-out").is_some() {
+        engine.enable_trace();
+    }
+    let mut metrics = spawn_metrics(&a, vec![engine.obs()])?;
+    let write_trace = |engine: &Engine| -> Result<()> {
+        if let Some(path) = a.get("trace-out") {
+            let path = PathBuf::from(path);
+            engine.write_trace(&path)?;
+            log_info!(
+                "serve",
+                "wrote {} request span(s) to {}",
+                engine.trace_len(),
+                path.display()
+            );
+        }
+        Ok(())
+    };
+
     // --listen: online NDJSON-over-TCP serving instead of trace replay
     if let Some(addr) = a.get("listen") {
         let frontend = expertweave::serving::frontend::NdjsonServer::bind(&addr)?;
-        println!(
+        log_info!(
+            "serve",
             "serving {deployment}/{} ({backend}) on {} — NDJSON per line; \
              {{\"op\":\"drain\"}} to stop",
             cfg.name,
             frontend.local_addr()?
         );
         for name in engine.resident_adapters() {
-            println!("  adapter: {name}");
+            log_info!("serve", "  adapter: {name}");
         }
         frontend.run(&mut engine)?;
+        if let Some(l) = metrics.as_mut() {
+            l.shutdown();
+        }
+        write_trace(&engine)?;
         println!("{}", engine.report().row(&format!("{deployment}/{}", cfg.name)));
         return Ok(());
     }
@@ -216,13 +268,18 @@ fn serve(argv: Vec<String>) -> Result<()> {
     // keep prompts + outputs within the model's bucket/KV budget
     let max_prompt = cfg.buckets.last().copied().unwrap_or(64).min(cfg.kv_cap / 2);
     trace.clip(max_prompt, (cfg.kv_cap / 8).max(1));
-    println!(
+    log_info!(
+        "serve",
         "replaying {} requests over {:.1}s against {deployment} ({}, {backend})...",
         trace.len(),
         a.get_f64("horizon").map_err(anyhow::Error::msg)?,
         cfg.name
     );
     let outcome = server::replay(&mut engine, &trace)?;
+    if let Some(l) = metrics.as_mut() {
+        l.shutdown();
+    }
+    write_trace(&engine)?;
     println!("{}", outcome.report.row(&format!("{deployment}/{}", cfg.name)));
     if outcome.rejected > 0 {
         println!("rejected: {}", outcome.rejected);
@@ -240,6 +297,7 @@ fn fleet(argv: Vec<String>) -> Result<()> {
     .opt("capacity", Some("3"), "resident-adapter budget per replica")
     .opt("policy", Some("affinity"), "rr|jsq|affinity|deadline")
     .opt("listen", None, "serve NDJSON requests on this TCP addr instead of replaying")
+    .opt("metrics-listen", None, "serve Prometheus text metrics (/metrics) on this TCP addr")
     .opt("lambda", Some("24.0"), "aggregate arrival rate (req/s)")
     .opt("alpha", Some("0.3"), "power-law skew (1 = uniform)")
     .opt("horizon", Some("6.0"), "trace horizon (s)")
@@ -248,11 +306,10 @@ fn fleet(argv: Vec<String>) -> Result<()> {
     .opt("chunk", Some("64"), "chunked-prefill budget per seq")
     .opt("seed", Some("0"), "workload seed")
     .flag("verbose", "debug logging")
+    .flag("quiet", "errors only")
     .parse(argv)
     .map_err(anyhow::Error::msg)?;
-    if a.has_flag("verbose") {
-        set_level(Level::Debug);
-    }
+    apply_log_flags(&a);
     let replicas: usize = a.get_usize("replicas").map_err(anyhow::Error::msg)?;
     let n_adapters: usize = a.get_usize("adapters").map_err(anyhow::Error::msg)?;
     let capacity: usize = a.get_usize("capacity").map_err(anyhow::Error::msg)?;
@@ -298,13 +355,14 @@ fn fleet(argv: Vec<String>) -> Result<()> {
     // coordinator is just another ServingBackend behind it.
     if let Some(addr) = a.get("listen") {
         let frontend = expertweave::serving::frontend::NdjsonServer::bind(&addr)?;
-        println!(
+        log_info!(
+            "fleet",
             "fleet serving on {} — {replicas} sim replicas x capacity {capacity}, \
              policy {policy}; NDJSON per line; {{\"op\":\"drain\"}} to stop",
             frontend.local_addr()?
         );
         for ad in &adapters {
-            println!("  adapter: {}", ad.name);
+            log_info!("fleet", "  adapter: {}", ad.name);
         }
         let spawn_cfg = cfg.clone();
         let started = std::time::Instant::now();
@@ -326,9 +384,13 @@ fn fleet(argv: Vec<String>) -> Result<()> {
             },
             adapters,
         )?;
+        let mut metrics = spawn_metrics(&a, coord.obs_registries())?;
         // run() returns once a client drained the fleet: every replica
         // is idle, so finish() only collects reports and joins threads
         frontend.run(&mut coord)?;
+        if let Some(l) = metrics.as_mut() {
+            l.shutdown();
+        }
         let (per_replica, stats) = coord.finish(started)?;
         for (i, r) in per_replica.iter().enumerate() {
             println!("{}", r.row(&format!("replica-{i}")));
@@ -337,15 +399,18 @@ fn fleet(argv: Vec<String>) -> Result<()> {
         return Ok(());
     }
 
-    println!(
+    log_info!(
+        "fleet",
         "fleet: {} replicas x capacity {} | {} adapters | policy {policy} | {} requests",
         replicas,
         capacity,
         n_adapters,
         trace.len()
     );
+    // launched here (not via server::replay_fleet) so --metrics-listen
+    // can observe the replicas while the replay runs
     let spawn_cfg = cfg.clone();
-    let outcome = server::replay_fleet(
+    let coord = Coordinator::launch(
         coord_cfg,
         move |i| {
             let cfg = spawn_cfg.clone();
@@ -362,8 +427,12 @@ fn fleet(argv: Vec<String>) -> Result<()> {
             })
         },
         adapters,
-        &trace,
     )?;
+    let mut metrics = spawn_metrics(&a, coord.obs_registries())?;
+    let outcome = coord.replay(&trace)?;
+    if let Some(l) = metrics.as_mut() {
+        l.shutdown();
+    }
     println!("{}", outcome.report.row(&format!("fleet/{policy}")));
     for (i, r) in outcome.per_replica.iter().enumerate() {
         println!("{}", r.row(&format!("  replica-{i}")));
@@ -399,11 +468,10 @@ fn loadgen(argv: Vec<String>) -> Result<()> {
     .opt("seed", Some("0"), "arrival-process seed")
     .opt("out", Some("target/bench_results/BENCH_fleet_online.json"), "result JSON path")
     .flag("verbose", "debug logging")
+    .flag("quiet", "errors only")
     .parse(argv)
     .map_err(anyhow::Error::msg)?;
-    if a.has_flag("verbose") {
-        set_level(Level::Debug);
-    }
+    apply_log_flags(&a);
     let rate = a.get_f64("rate").map_err(anyhow::Error::msg)?;
     let horizon = a.get_f64("horizon").map_err(anyhow::Error::msg)?;
     let deadline_ms = a.get_f64("deadline-ms").map_err(anyhow::Error::msg)?;
@@ -431,7 +499,7 @@ fn loadgen(argv: Vec<String>) -> Result<()> {
                 .collect();
         }
         let mut client = expertweave::serving::frontend::NdjsonClient::connect(&addr)?;
-        println!("driving {addr} open-loop at {rate} req/s for {horizon}s...");
+        log_info!("loadgen", "driving {addr} open-loop at {rate} req/s for {horizon}s...");
         let outcome = expertweave::workload::openloop::drive(&mut client, &spec)?;
         println!("{}", outcome.row("remote"));
         return Ok(());
@@ -453,7 +521,8 @@ fn loadgen(argv: Vec<String>) -> Result<()> {
         open_loop: ol,
         ..Default::default()
     };
-    println!(
+    log_info!(
+        "loadgen",
         "loadgen: {} replicas | {} adapters | {rate} req/s for {horizon}s | deadline {}",
         spec.replicas,
         spec.n_adapters,
@@ -475,7 +544,7 @@ fn loadgen(argv: Vec<String>) -> Result<()> {
         std::fs::create_dir_all(dir)?;
     }
     std::fs::write(&out, format!("{json}\n"))?;
-    println!("wrote {}", out.display());
+    log_info!("loadgen", "wrote {}", out.display());
     let miss = |p: RoutingPolicy| {
         rows.iter()
             .find(|r| r.policy == p)

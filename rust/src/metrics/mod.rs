@@ -1,6 +1,15 @@
 //! Serving metrics: the paper's four headline numbers — prefill
 //! throughput, TTFT, decode throughput, TPOT — plus per-step engine
 //! telemetry.
+//!
+//! This module is the *post-hoc* side of the telemetry story: exact
+//! per-request records and full sample distributions, aggregated into a
+//! [`Report`] once a run finishes. Its live complement is
+//! [`crate::obs`] — lock-free atomic counters and preallocated
+//! histograms that can be scraped mid-run (Prometheus exposition, the
+//! NDJSON `stats` frame) without draining the engine. Both record from
+//! the same step loop; see `docs/OBSERVABILITY.md` for how the two
+//! surfaces relate.
 
 use crate::util::stats::{Samples, Summary};
 use std::time::Duration;

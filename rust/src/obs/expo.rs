@@ -1,0 +1,339 @@
+//! Prometheus text exposition (format 0.0.4) over a std-only HTTP/1.0
+//! listener.
+//!
+//! [`render`] turns one or more [`ObsRegistry`] snapshots into the text
+//! format: per-replica counter/gauge/histogram families carry a
+//! `replica` label, per-adapter families are aggregated across replicas
+//! by adapter name (the fleet view the coordinator exports). The
+//! [`MetricsListener`] is a single background thread serving every HTTP
+//! request with a fresh render — no HTTP framework, no routing: any
+//! request path gets the metrics page.
+//!
+//! Scrapes never touch the hot path: they read the registry atomics with
+//! `Relaxed` loads from the listener thread.
+
+use super::{bucket_upper, ObsRegistry, StatsSnapshot, HISTO_BUCKETS};
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Escape a label value per the exposition format.
+fn label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn histo(out: &mut String, name: &str, replica: usize, h: &super::HistoSnapshot) {
+    let mut acc = 0u64;
+    for b in 0..HISTO_BUCKETS.min(h.buckets.len()) {
+        if h.buckets[b] == 0 {
+            continue;
+        }
+        acc += h.buckets[b];
+        let le = bucket_upper(b);
+        if le == u64::MAX {
+            continue; // folded into +Inf below
+        }
+        let _ = writeln!(out, "{name}_bucket{{replica=\"{replica}\",le=\"{le}\"}} {acc}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{replica=\"{replica}\",le=\"+Inf\"}} {}", h.count);
+    let _ = writeln!(out, "{name}_sum{{replica=\"{replica}\"}} {}", h.sum);
+    let _ = writeln!(out, "{name}_count{{replica=\"{replica}\"}} {}", h.count);
+}
+
+/// Render the exposition page for one or more registries (one per
+/// replica; a single engine passes a one-element slice).
+pub fn render(regs: &[Arc<ObsRegistry>]) -> String {
+    let snaps: Vec<StatsSnapshot> = regs.iter().map(|r| r.snapshot()).collect();
+    let mut merged = StatsSnapshot::default();
+    for s in &snaps {
+        merged.merge(s);
+    }
+    let mut out = String::with_capacity(4096);
+
+    let counter = |out: &mut String, name: &str, help: &str, get: &dyn Fn(&StatsSnapshot) -> u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        for (i, s) in snaps.iter().enumerate() {
+            let _ = writeln!(out, "{name}{{replica=\"{i}\"}} {}", get(s));
+        }
+    };
+    counter(&mut out, "expertweave_steps_total", "Engine steps executed.", &|s| s.steps);
+    counter(
+        &mut out,
+        "expertweave_requests_submitted_total",
+        "Requests admitted into the engine.",
+        &|s| s.requests_submitted,
+    );
+    counter(
+        &mut out,
+        "expertweave_requests_completed_total",
+        "Requests finished with all tokens delivered.",
+        &|s| s.requests_completed,
+    );
+    counter(
+        &mut out,
+        "expertweave_requests_rejected_total",
+        "Requests refused at admission.",
+        &|s| s.requests_rejected,
+    );
+    counter(
+        &mut out,
+        "expertweave_requests_aborted_total",
+        "Requests cancelled or expired after admission.",
+        &|s| s.requests_aborted,
+    );
+    counter(
+        &mut out,
+        "expertweave_tokens_prefill_total",
+        "Prompt tokens prefilled.",
+        &|s| s.tokens_prefill,
+    );
+    counter(
+        &mut out,
+        "expertweave_tokens_decode_total",
+        "Decode tokens scheduled.",
+        &|s| s.tokens_decode,
+    );
+
+    let gauge = |out: &mut String, name: &str, help: &str, get: &dyn Fn(&StatsSnapshot) -> u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        for (i, s) in snaps.iter().enumerate() {
+            let _ = writeln!(out, "{name}{{replica=\"{i}\"}} {}", get(s));
+        }
+    };
+    gauge(&mut out, "expertweave_kv_free_slots", "Free KV-cache token slots.", &|s| s.kv_free);
+    gauge(&mut out, "expertweave_queue_waiting", "Requests waiting for admission.", &|s| {
+        s.waiting
+    });
+    gauge(&mut out, "expertweave_queue_running", "Requests actively decoding.", &|s| s.running);
+
+    for (name, help, get) in [
+        (
+            "expertweave_step_wall_us",
+            "Engine step wall time (microseconds).",
+            (|s: &StatsSnapshot| &s.step_wall_us) as fn(&StatsSnapshot) -> &super::HistoSnapshot,
+        ),
+        (
+            "expertweave_step_exec_us",
+            "Backend execute time per step (microseconds).",
+            |s: &StatsSnapshot| &s.step_exec_us,
+        ),
+        ("expertweave_ttft_us", "Time to first token (microseconds).", |s: &StatsSnapshot| {
+            &s.ttft_us
+        }),
+        ("expertweave_e2e_us", "Request end-to-end latency (microseconds).", |s: &StatsSnapshot| {
+            &s.e2e_us
+        }),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        for (i, s) in snaps.iter().enumerate() {
+            histo(&mut out, name, i, get(s));
+        }
+    }
+
+    // per-adapter families: aggregated across replicas by adapter name
+    for (name, help, get) in [
+        (
+            "expertweave_adapter_requests_submitted_total",
+            "Requests admitted, by adapter.",
+            (|a: &super::AdapterStats| a.submitted) as fn(&super::AdapterStats) -> u64,
+        ),
+        (
+            "expertweave_adapter_requests_completed_total",
+            "Requests completed, by adapter.",
+            |a: &super::AdapterStats| a.completed,
+        ),
+        (
+            "expertweave_adapter_requests_aborted_total",
+            "Requests cancelled or expired, by adapter.",
+            |a: &super::AdapterStats| a.aborted,
+        ),
+        (
+            "expertweave_adapter_tokens_generated_total",
+            "Output tokens sampled, by adapter.",
+            |a: &super::AdapterStats| a.tokens,
+        ),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        for a in &merged.adapters {
+            let _ = writeln!(out, "{name}{{adapter=\"{}\"}} {}", label(&a.name), get(a));
+        }
+    }
+    out
+}
+
+/// std-only Prometheus scrape endpoint: one background thread, one
+/// `TcpListener`, a fresh [`render`] per request. Shut down by flag +
+/// loopback poke (same pattern as the NDJSON server acceptor).
+pub struct MetricsListener {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsListener {
+    /// Bind `listen` (e.g. `127.0.0.1:9464`; port 0 picks a free port)
+    /// and serve `render()` to every HTTP request until shutdown.
+    pub fn spawn<F>(listen: &str, render_page: F) -> std::io::Result<MetricsListener>
+    where
+        F: Fn() -> String + Send + 'static,
+    {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let join = std::thread::Builder::new().name("metrics-listener".into()).spawn(move || {
+            for conn in listener.incoming() {
+                if flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(mut sock) = conn else { continue };
+                // drain the request head best-effort; every path serves
+                // the metrics page, so the content doesn't matter
+                let _ = sock.set_read_timeout(Some(Duration::from_millis(500)));
+                let mut head = [0u8; 1024];
+                let _ = sock.read(&mut head);
+                let body = render_page();
+                let resp = format!(
+                    "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; \
+                     charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = sock.write_all(resp.as_bytes());
+            }
+        })?;
+        Ok(MetricsListener { addr, stop, join: Some(join) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener thread (idempotent; also runs on drop).
+    pub fn shutdown(&mut self) {
+        if self.join.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        let poke: SocketAddr = if self.addr.ip().is_unspecified() {
+            (std::net::Ipv4Addr::LOCALHOST, self.addr.port()).into()
+        } else {
+            self.addr
+        };
+        let _ = TcpStream::connect_timeout(&poke, Duration::from_millis(500));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for MetricsListener {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One-shot scrape of a metrics endpoint; returns the response body.
+/// Used by tests and handy for humans without curl.
+pub fn scrape(addr: &SocketAddr) -> std::io::Result<String> {
+    let mut sock = TcpStream::connect_timeout(addr, Duration::from_secs(5))?;
+    sock.set_read_timeout(Some(Duration::from_secs(5)))?;
+    sock.write_all(b"GET /metrics HTTP/1.0\r\n\r\n")?;
+    let mut resp = String::new();
+    sock.read_to_string(&mut resp)?;
+    match resp.split_once("\r\n\r\n") {
+        Some((head, body)) if head.starts_with("HTTP/1.0 200") => Ok(body.to_string()),
+        _ => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("unexpected scrape response: {}", resp.lines().next().unwrap_or("")),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_registry() -> Arc<ObsRegistry> {
+        let r = ObsRegistry::new(2);
+        r.set_adapter_name(0, "math");
+        r.record_submitted(0);
+        r.record_completed(0, 1_000, 50_000);
+        r.record_step(200, 150, 32, 8);
+        r.record_token(0);
+        r.set_gauges(512, 0, 4);
+        Arc::new(r)
+    }
+
+    #[test]
+    fn render_exposes_all_families() {
+        let page = render(&[sample_registry()]);
+        for family in [
+            "expertweave_steps_total{replica=\"0\"} 1",
+            "expertweave_requests_completed_total{replica=\"0\"} 1",
+            "expertweave_kv_free_slots{replica=\"0\"} 512",
+            "expertweave_queue_running{replica=\"0\"} 4",
+            "expertweave_step_wall_us_count{replica=\"0\"} 1",
+            "expertweave_adapter_requests_completed_total{adapter=\"math\"} 1",
+            "expertweave_adapter_tokens_generated_total{adapter=\"math\"} 1",
+        ] {
+            assert!(page.contains(family), "missing {family:?} in:\n{page}");
+        }
+        // HELP/TYPE precede every family
+        assert!(page.contains("# TYPE expertweave_ttft_us histogram"));
+        assert!(page.contains("# TYPE expertweave_kv_free_slots gauge"));
+    }
+
+    #[test]
+    fn render_histograms_are_cumulative_and_terminated() {
+        let r = ObsRegistry::new(0);
+        for v in [1u64, 2, 3, 100, 10_000] {
+            r.record_step(v, v, 0, 0);
+        }
+        let page = render(&[Arc::new(r)]);
+        let mut last = 0u64;
+        let mut saw_inf = false;
+        for line in page.lines().filter(|l| l.starts_with("expertweave_step_wall_us_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket counts must be cumulative: {line}");
+            last = v;
+            saw_inf |= line.contains("le=\"+Inf\"");
+        }
+        assert!(saw_inf, "+Inf bucket required");
+        assert_eq!(last, 5, "+Inf equals total count");
+    }
+
+    #[test]
+    fn render_merges_adapter_families_across_replicas() {
+        let a = sample_registry();
+        let b = sample_registry();
+        let page = render(&[a, b]);
+        // per-replica families keep their own label ...
+        assert!(page.contains("expertweave_steps_total{replica=\"1\"} 1"));
+        // ... while adapter families sum across replicas
+        assert!(page.contains("expertweave_adapter_requests_completed_total{adapter=\"math\"} 2"));
+    }
+
+    #[test]
+    fn listener_serves_scrapes() {
+        let reg = sample_registry();
+        let regs = vec![Arc::clone(&reg)];
+        let mut l = MetricsListener::spawn("127.0.0.1:0", move || render(&regs)).unwrap();
+        let addr = l.local_addr();
+        let body = scrape(&addr).unwrap();
+        assert!(body.contains("expertweave_requests_completed_total{replica=\"0\"} 1"));
+        // a second scrape sees fresh state
+        reg.record_completed(0, 1_000, 2_000);
+        let body2 = scrape(&addr).unwrap();
+        assert!(body2.contains("expertweave_requests_completed_total{replica=\"0\"} 2"));
+        // shutdown joins the listener thread; a hang here fails the test
+        l.shutdown();
+    }
+}

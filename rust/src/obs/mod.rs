@@ -1,0 +1,806 @@
+//! Always-on live telemetry that is provably free on the hot path.
+//!
+//! [`crate::metrics`] answers "what happened over the whole run" after
+//! drain; this module answers "what is happening right now" while the
+//! engine is live. The two are complementary: `metrics::Report` stays the
+//! post-hoc experiment record, `obs` is the operational surface scraped by
+//! the NDJSON `stats` frame (docs/PROTOCOL.md) and the Prometheus
+//! exposition listener (`--metrics-listen`, [`expo`]).
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Zero allocation on the recording path.** Every `record_*` method
+//!    touches only preallocated atomics with `Relaxed` ordering — no
+//!    locks, no heap. `tests/hotpath_alloc.rs` proves the steady-state
+//!    decode step still performs 0 allocations *with recording enabled*.
+//! 2. **Lock-free recording.** The only `Mutex` in the registry guards
+//!    per-slot adapter *names*, which are written exclusively on adapter
+//!    load/evict (cold control path) and read on scrape — never by
+//!    `record_*`.
+//! 3. **Preallocated labels.** Per-adapter counters live in a fixed
+//!    `Vec<AdapterSlot>` sized at engine construction (`max_adapters + 1`
+//!    slots; index 0 is the base model, index `aid + 1` mirrors the
+//!    adapter registry's slot == aid layout), so recording never inserts
+//!    into a map.
+//!
+//! Latency-shaped values go into [`Histo`]: 64 log2 buckets of `AtomicU64`
+//! (bucket `b` holds values of bit-length `b`, i.e. `[2^(b-1), 2^b - 1]`;
+//! bucket 0 holds exactly 0). Quantile estimates return the upper bound of
+//! the containing bucket, so they always upper-bound the true quantile and
+//! are off by at most one bucket width (a factor of 2) — property-tested
+//! below against exact [`crate::util::stats::Samples`] quantiles.
+//!
+//! Snapshots ([`StatsSnapshot`]) are taken on the scrape path (allocation
+//! there is fine) and merge associatively across replicas, which is how
+//! the fleet coordinator aggregates per-replica families.
+
+pub mod expo;
+pub mod trace;
+
+use crate::util::json::{arr, obj, Json};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Schema version of the [`StatsSnapshot`] JSON rendering (the NDJSON
+/// `stats` frame carries this as `"version"`).
+pub const STATS_VERSION: i64 = 1;
+
+/// Number of log2 buckets in a [`Histo`] (covers the full `u64` range).
+pub const HISTO_BUCKETS: usize = 64;
+
+/// Bucket index for a recorded value: 0 for 0, else the bit length of
+/// `v`, clamped into the last bucket.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HISTO_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `b` (the quantile estimate returned
+/// for ranks landing in that bucket). The last bucket is unbounded.
+#[inline]
+fn bucket_upper(b: usize) -> u64 {
+    match b {
+        0 => 0,
+        _ if b >= HISTO_BUCKETS - 1 => u64::MAX,
+        _ => (1u64 << b) - 1,
+    }
+}
+
+/// Fixed-size lock-free log2 histogram. `record` is wait-free: three
+/// `Relaxed` fetch-adds on preallocated atomics.
+#[derive(Debug)]
+pub struct Histo {
+    buckets: [AtomicU64; HISTO_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histo {
+    fn default() -> Self {
+        Histo {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histo {
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistoSnapshot {
+        HistoSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time copy of a [`Histo`]; merges associatively (bucketwise
+/// addition), so replica families can be aggregated in any order.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistoSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistoSnapshot {
+    pub fn merge(&mut self, other: &HistoSnapshot) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; HISTO_BUCKETS];
+        }
+        for (i, c) in other.buckets.iter().enumerate() {
+            self.buckets[i] += c;
+        }
+        self.count += other.count;
+        self.sum = self.sum.wrapping_add(other.sum);
+    }
+
+    /// Quantile estimate for `q` in `[0, 1]`: the inclusive upper bound of
+    /// the bucket containing the (nearest-rank) quantile. Always
+    /// upper-bounds the exact nearest-rank quantile, and exceeds it by at
+    /// most one log2 bucket width (`est <= 2 * exact + 1`).
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut acc = 0u64;
+        for (b, c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                return Some(bucket_upper(b));
+            }
+        }
+        Some(bucket_upper(HISTO_BUCKETS - 1))
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Compact JSON for the NDJSON `stats` frame: quantile estimates, not
+    /// raw buckets (the Prometheus exposition carries the full buckets).
+    fn to_json(&self) -> Json {
+        let q = |p: f64| self.quantile(p).map_or(Json::Null, |v| Json::Int(v as i64));
+        obj(vec![
+            ("count", Json::Int(self.count as i64)),
+            ("sum", Json::Int(self.sum as i64)),
+            ("p50", q(0.50)),
+            ("p90", q(0.90)),
+            ("p99", q(0.99)),
+        ])
+    }
+}
+
+/// Per-adapter counter block. Index 0 of [`ObsRegistry::adapters`] is the
+/// base model; index `aid + 1` is the registry slot `aid`. The name is
+/// the only non-atomic field and is written solely on load/evict.
+#[derive(Debug, Default)]
+struct AdapterSlot {
+    name: Mutex<String>,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    aborted: AtomicU64,
+    tokens: AtomicU64,
+}
+
+impl AdapterSlot {
+    fn reset_counters(&self) {
+        self.submitted.store(0, Ordering::Relaxed);
+        self.completed.store(0, Ordering::Relaxed);
+        self.aborted.store(0, Ordering::Relaxed);
+        self.tokens.store(0, Ordering::Relaxed);
+    }
+}
+
+/// The live telemetry registry. One per engine; shared as an
+/// `Arc<ObsRegistry>` with the replica heartbeat (fleet) and the
+/// Prometheus exposition thread.
+///
+/// All `record_*` methods are wait-free (preallocated atomics, `Relaxed`)
+/// and allocation-free; `snapshot()` is the cold scrape path.
+#[derive(Debug)]
+pub struct ObsRegistry {
+    enabled: AtomicBool,
+    // counters
+    steps: AtomicU64,
+    requests_submitted: AtomicU64,
+    requests_completed: AtomicU64,
+    requests_rejected: AtomicU64,
+    requests_aborted: AtomicU64,
+    tokens_prefill: AtomicU64,
+    tokens_decode: AtomicU64,
+    // histograms (microseconds)
+    step_wall_us: Histo,
+    step_exec_us: Histo,
+    ttft_us: Histo,
+    e2e_us: Histo,
+    // gauges
+    kv_free: AtomicU64,
+    waiting: AtomicU64,
+    running: AtomicU64,
+    // labelled counters, preallocated: [base, aid 0, aid 1, ...]
+    adapters: Vec<AdapterSlot>,
+}
+
+impl ObsRegistry {
+    /// Build a registry with room for `max_adapters` labelled slots plus
+    /// the base model. Recording accepts any `aid` in `-1..max_adapters`.
+    pub fn new(max_adapters: usize) -> Self {
+        let adapters: Vec<AdapterSlot> =
+            (0..=max_adapters).map(|_| AdapterSlot::default()).collect();
+        *adapters[0].name.lock().unwrap() = "base".into();
+        ObsRegistry {
+            enabled: AtomicBool::new(true),
+            steps: AtomicU64::new(0),
+            requests_submitted: AtomicU64::new(0),
+            requests_completed: AtomicU64::new(0),
+            requests_rejected: AtomicU64::new(0),
+            requests_aborted: AtomicU64::new(0),
+            tokens_prefill: AtomicU64::new(0),
+            tokens_decode: AtomicU64::new(0),
+            step_wall_us: Histo::default(),
+            step_exec_us: Histo::default(),
+            ttft_us: Histo::default(),
+            e2e_us: Histo::default(),
+            kv_free: AtomicU64::new(0),
+            waiting: AtomicU64::new(0),
+            running: AtomicU64::new(0),
+            adapters,
+        }
+    }
+
+    /// Turn recording on/off (the obs-off bench series; scrape surfaces
+    /// keep working on whatever was recorded so far).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn slot(&self, aid: i32) -> Option<&AdapterSlot> {
+        self.adapters.get((aid + 1) as usize)
+    }
+
+    /// One engine step: wall/execute time (µs) and the token split of the
+    /// batch. Called from `Engine::step` — must stay allocation-free.
+    #[inline]
+    pub fn record_step(&self, wall_us: u64, exec_us: u64, prefill_tokens: u64, decode_tokens: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        self.step_wall_us.record(wall_us);
+        self.step_exec_us.record(exec_us);
+        self.tokens_prefill.fetch_add(prefill_tokens, Ordering::Relaxed);
+        self.tokens_decode.fetch_add(decode_tokens, Ordering::Relaxed);
+    }
+
+    /// One sampled output token for `aid` (-1 = base). Per-row in the
+    /// step loop — must stay allocation-free.
+    #[inline]
+    pub fn record_token(&self, aid: i32) {
+        if !self.is_enabled() {
+            return;
+        }
+        if let Some(s) = self.slot(aid) {
+            s.tokens.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn record_submitted(&self, aid: i32) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = self.slot(aid) {
+            s.submitted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn record_rejected(&self) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.requests_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_aborted(&self, aid: i32) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.requests_aborted.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = self.slot(aid) {
+            s.aborted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One finished request with its first-token and end-to-end latency.
+    #[inline]
+    pub fn record_completed(&self, aid: i32, ttft_us: u64, e2e_us: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        self.ttft_us.record(ttft_us);
+        self.e2e_us.record(e2e_us);
+        if let Some(s) = self.slot(aid) {
+            s.completed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Publish instantaneous gauges (KV free slots, queue depths).
+    #[inline]
+    pub fn set_gauges(&self, kv_free: u64, waiting: u64, running: u64) {
+        self.kv_free.store(kv_free, Ordering::Relaxed);
+        self.waiting.store(waiting, Ordering::Relaxed);
+        self.running.store(running, Ordering::Relaxed);
+    }
+
+    /// Label slot `aid` (on adapter load / registry sync). A name change
+    /// means the physical slot was reused by a different adapter, so the
+    /// slot counters restart from zero under the new label.
+    pub fn set_adapter_name(&self, aid: i32, name: &str) {
+        if let Some(s) = self.slot(aid) {
+            let mut n = s.name.lock().unwrap();
+            if *n != name {
+                s.reset_counters();
+                *n = name.to_string();
+            }
+        }
+    }
+
+    /// Clear slot `aid`'s label on eviction (its counters stop being
+    /// exported until the slot is reused).
+    pub fn clear_adapter_name(&self, aid: i32) {
+        if let Some(s) = self.slot(aid) {
+            s.name.lock().unwrap().clear();
+            s.reset_counters();
+        }
+    }
+
+    /// Point-in-time copy of everything (the scrape path; allocates).
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let adapters = self
+            .adapters
+            .iter()
+            .filter_map(|s| {
+                let name = s.name.lock().unwrap().clone();
+                if name.is_empty() {
+                    return None;
+                }
+                Some(AdapterStats {
+                    name,
+                    submitted: ld(&s.submitted),
+                    completed: ld(&s.completed),
+                    aborted: ld(&s.aborted),
+                    tokens: ld(&s.tokens),
+                })
+            })
+            .collect();
+        StatsSnapshot {
+            replicas: 1,
+            steps: ld(&self.steps),
+            requests_submitted: ld(&self.requests_submitted),
+            requests_completed: ld(&self.requests_completed),
+            requests_rejected: ld(&self.requests_rejected),
+            requests_aborted: ld(&self.requests_aborted),
+            tokens_prefill: ld(&self.tokens_prefill),
+            tokens_decode: ld(&self.tokens_decode),
+            kv_free: ld(&self.kv_free),
+            waiting: ld(&self.waiting),
+            running: ld(&self.running),
+            step_wall_us: self.step_wall_us.snapshot(),
+            step_exec_us: self.step_exec_us.snapshot(),
+            ttft_us: self.ttft_us.snapshot(),
+            e2e_us: self.e2e_us.snapshot(),
+            adapters,
+            fleet: Vec::new(),
+        }
+    }
+
+    /// Reset all counters and histograms (session reset); labels and the
+    /// enabled flag survive.
+    pub fn reset(&self) {
+        self.steps.store(0, Ordering::Relaxed);
+        self.requests_submitted.store(0, Ordering::Relaxed);
+        self.requests_completed.store(0, Ordering::Relaxed);
+        self.requests_rejected.store(0, Ordering::Relaxed);
+        self.requests_aborted.store(0, Ordering::Relaxed);
+        self.tokens_prefill.store(0, Ordering::Relaxed);
+        self.tokens_decode.store(0, Ordering::Relaxed);
+        self.step_wall_us.reset();
+        self.step_exec_us.reset();
+        self.ttft_us.reset();
+        self.e2e_us.reset();
+        self.kv_free.store(0, Ordering::Relaxed);
+        self.waiting.store(0, Ordering::Relaxed);
+        self.running.store(0, Ordering::Relaxed);
+        for s in &self.adapters {
+            s.reset_counters();
+        }
+    }
+}
+
+/// Per-adapter counter snapshot (one exposition label set).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdapterStats {
+    pub name: String,
+    pub submitted: u64,
+    pub completed: u64,
+    pub aborted: u64,
+    pub tokens: u64,
+}
+
+/// Point-in-time view of one registry — or, after [`merge`], of a whole
+/// fleet. Rendered as the NDJSON `stats` frame body (see
+/// docs/PROTOCOL.md) and consumed by the Prometheus exposition.
+///
+/// [`merge`]: StatsSnapshot::merge
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StatsSnapshot {
+    /// Registries merged into this snapshot (1 = single engine).
+    pub replicas: usize,
+    pub steps: u64,
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub requests_rejected: u64,
+    pub requests_aborted: u64,
+    pub tokens_prefill: u64,
+    pub tokens_decode: u64,
+    /// Gauges; summed across replicas on merge.
+    pub kv_free: u64,
+    pub waiting: u64,
+    pub running: u64,
+    pub step_wall_us: HistoSnapshot,
+    pub step_exec_us: HistoSnapshot,
+    pub ttft_us: HistoSnapshot,
+    pub e2e_us: HistoSnapshot,
+    /// Per-adapter families, merged by name across replicas, sorted.
+    pub adapters: Vec<AdapterStats>,
+    /// Fleet-door counters (coordinator only: routed, shed, ...).
+    pub fleet: Vec<(String, u64)>,
+}
+
+impl StatsSnapshot {
+    /// Aggregate `other` into `self` (replica family merge). Counters and
+    /// gauges sum, histograms merge bucketwise, adapters merge by name —
+    /// associative and commutative, property-tested below.
+    pub fn merge(&mut self, other: &StatsSnapshot) {
+        self.replicas += other.replicas;
+        self.steps += other.steps;
+        self.requests_submitted += other.requests_submitted;
+        self.requests_completed += other.requests_completed;
+        self.requests_rejected += other.requests_rejected;
+        self.requests_aborted += other.requests_aborted;
+        self.tokens_prefill += other.tokens_prefill;
+        self.tokens_decode += other.tokens_decode;
+        self.kv_free += other.kv_free;
+        self.waiting += other.waiting;
+        self.running += other.running;
+        self.step_wall_us.merge(&other.step_wall_us);
+        self.step_exec_us.merge(&other.step_exec_us);
+        self.ttft_us.merge(&other.ttft_us);
+        self.e2e_us.merge(&other.e2e_us);
+        let mut by_name: BTreeMap<String, AdapterStats> = BTreeMap::new();
+        for a in self.adapters.drain(..).chain(other.adapters.iter().cloned()) {
+            let e = by_name.entry(a.name.clone()).or_insert_with(|| AdapterStats {
+                name: a.name.clone(),
+                submitted: 0,
+                completed: 0,
+                aborted: 0,
+                tokens: 0,
+            });
+            e.submitted += a.submitted;
+            e.completed += a.completed;
+            e.aborted += a.aborted;
+            e.tokens += a.tokens;
+        }
+        self.adapters = by_name.into_values().collect();
+        for (k, v) in &other.fleet {
+            match self.fleet.iter_mut().find(|(n, _)| n == k) {
+                Some(slot) => slot.1 += v,
+                None => self.fleet.push((k.clone(), *v)),
+            }
+        }
+    }
+
+    /// The versioned `stats` frame body (without the `event`/`id` keys,
+    /// which the frontend adds).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("version", Json::Int(STATS_VERSION)),
+            ("replicas", Json::Int(self.replicas as i64)),
+            (
+                "counters",
+                obj(vec![
+                    ("steps", Json::Int(self.steps as i64)),
+                    ("requests_submitted", Json::Int(self.requests_submitted as i64)),
+                    ("requests_completed", Json::Int(self.requests_completed as i64)),
+                    ("requests_rejected", Json::Int(self.requests_rejected as i64)),
+                    ("requests_aborted", Json::Int(self.requests_aborted as i64)),
+                    ("tokens_prefill", Json::Int(self.tokens_prefill as i64)),
+                    ("tokens_decode", Json::Int(self.tokens_decode as i64)),
+                ]),
+            ),
+            (
+                "gauges",
+                obj(vec![
+                    ("kv_free", Json::Int(self.kv_free as i64)),
+                    ("waiting", Json::Int(self.waiting as i64)),
+                    ("running", Json::Int(self.running as i64)),
+                ]),
+            ),
+            (
+                "latency_us",
+                obj(vec![
+                    ("step_wall", self.step_wall_us.to_json()),
+                    ("step_exec", self.step_exec_us.to_json()),
+                    ("ttft", self.ttft_us.to_json()),
+                    ("e2e", self.e2e_us.to_json()),
+                ]),
+            ),
+            (
+                "adapters",
+                arr(self
+                    .adapters
+                    .iter()
+                    .map(|a| {
+                        obj(vec![
+                            ("adapter", Json::Str(a.name.clone())),
+                            ("submitted", Json::Int(a.submitted as i64)),
+                            ("completed", Json::Int(a.completed as i64)),
+                            ("aborted", Json::Int(a.aborted as i64)),
+                            ("tokens_generated", Json::Int(a.tokens as i64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ];
+        if !self.fleet.is_empty() {
+            fields.push((
+                "fleet",
+                Json::Obj(
+                    self.fleet
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Int(*v as i64)))
+                        .collect(),
+                ),
+            ));
+        }
+        obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+    use crate::util::stats::Samples;
+
+    fn random_histo(rng: &mut Pcg, n: usize, cap: u64) -> (HistoSnapshot, Vec<u64>) {
+        let h = Histo::default();
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = rng.below(cap);
+            h.record(v);
+            vals.push(v);
+        }
+        (h.snapshot(), vals)
+    }
+
+    #[test]
+    fn bucket_layout() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HISTO_BUCKETS - 1);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(2), 3);
+        assert_eq!(bucket_upper(62), (1 << 62) - 1);
+        assert_eq!(bucket_upper(63), u64::MAX);
+        // every value falls at or below its bucket's upper bound
+        for v in [0u64, 1, 2, 3, 7, 8, 1000, 1 << 40] {
+            assert!(v <= bucket_upper(bucket_of(v)), "v={v}");
+        }
+    }
+
+    /// Property (satellite): log2-bucket quantile estimates bound the
+    /// true `Samples` quantile at the matching nearest rank from above,
+    /// within one bucket width (factor of 2).
+    #[test]
+    fn quantile_estimate_bounds_exact_within_one_bucket() {
+        prop::check(61, 200, |rng| {
+            let n = 1 + rng.below(400) as usize;
+            let (snap, vals) = random_histo(rng, n, 1 << 20);
+            let mut s = Samples::new();
+            for &v in &vals {
+                s.push(v as f64);
+            }
+            for q in [0.10, 0.50, 0.90, 0.99] {
+                // nearest-rank exact quantile, extracted through Samples
+                // by asking for the percentile that lands exactly on the
+                // rank (linear interpolation at an integer rank is exact)
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let p = if n == 1 {
+                    50.0
+                } else {
+                    100.0 * (rank - 1) as f64 / (n - 1) as f64
+                };
+                let exact = s.percentile(p);
+                let est = snap.quantile(q).unwrap() as f64;
+                assert!(
+                    est >= exact,
+                    "estimate must upper-bound: q={q} est={est} exact={exact}"
+                );
+                assert!(
+                    est <= 2.0 * exact + 1.0,
+                    "within one log2 bucket: q={q} est={est} exact={exact}"
+                );
+            }
+        });
+    }
+
+    /// Property (satellite): merging replica families is associative and
+    /// commutative, with the empty snapshot as identity — aggregation
+    /// order across the fleet cannot change the answer.
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        prop::check(62, 100, |rng| {
+            let mk = |rng: &mut Pcg| {
+                let (h, _) = random_histo(rng, 1 + rng.below(64) as usize, 1 << 16);
+                h
+            };
+            let (a, b, c) = (mk(rng), mk(rng), mk(rng));
+
+            let mut ab_c = a.clone();
+            ab_c.merge(&b);
+            ab_c.merge(&c);
+
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+
+            let mut ba_c = b.clone();
+            ba_c.merge(&a);
+            ba_c.merge(&c);
+
+            assert_eq!(ab_c, a_bc, "associative");
+            assert_eq!(ab_c, ba_c, "commutative");
+            assert_eq!(ab_c.count, a.count + b.count + c.count);
+
+            let mut with_id = ab_c.clone();
+            with_id.merge(&HistoSnapshot::default());
+            assert_eq!(with_id, ab_c, "identity");
+        });
+    }
+
+    /// Full-snapshot merge: per-adapter families combine by name, in any
+    /// replica order.
+    #[test]
+    fn snapshot_merge_combines_adapter_families_by_name() {
+        prop::check(63, 50, |rng| {
+            let names = ["math", "code", "base"];
+            let mk = |rng: &mut Pcg| {
+                let mut s = StatsSnapshot { replicas: 1, ..Default::default() };
+                for name in names.iter().take(1 + rng.below(3) as usize) {
+                    s.adapters.push(AdapterStats {
+                        name: name.to_string(),
+                        submitted: rng.below(100),
+                        completed: rng.below(100),
+                        aborted: rng.below(10),
+                        tokens: rng.below(10_000),
+                    });
+                }
+                s.requests_completed = s.adapters.iter().map(|a| a.completed).sum();
+                s
+            };
+            let (a, b) = (mk(rng), mk(rng));
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab, ba, "fleet aggregation is order-independent");
+            assert_eq!(ab.replicas, 2);
+            assert_eq!(
+                ab.requests_completed,
+                a.requests_completed + b.requests_completed
+            );
+            // totals attribute exactly: sum over merged adapter families
+            // equals the sum over both inputs
+            let total = |s: &StatsSnapshot| s.adapters.iter().map(|x| x.completed).sum::<u64>();
+            assert_eq!(total(&ab), total(&a) + total(&b));
+            // merged list is sorted and duplicate-free
+            for w in ab.adapters.windows(2) {
+                assert!(w[0].name < w[1].name);
+            }
+        });
+    }
+
+    #[test]
+    fn registry_records_and_snapshots() {
+        let r = ObsRegistry::new(2);
+        r.set_adapter_name(0, "math");
+        r.record_submitted(0);
+        r.record_submitted(-1);
+        r.record_token(0);
+        r.record_token(0);
+        r.record_token(-1);
+        r.record_step(120, 80, 16, 8);
+        r.record_completed(0, 1_500, 30_000);
+        r.record_rejected();
+        r.set_gauges(100, 2, 6);
+        let s = r.snapshot();
+        assert_eq!(s.steps, 1);
+        assert_eq!(s.requests_submitted, 2);
+        assert_eq!(s.requests_completed, 1);
+        assert_eq!(s.requests_rejected, 1);
+        assert_eq!((s.tokens_prefill, s.tokens_decode), (16, 8));
+        assert_eq!((s.kv_free, s.waiting, s.running), (100, 2, 6));
+        assert_eq!(s.step_wall_us.count, 1);
+        assert!(s.step_wall_us.quantile(0.5).unwrap() >= 120);
+        let math = s.adapters.iter().find(|a| a.name == "math").unwrap();
+        assert_eq!((math.submitted, math.completed, math.tokens), (1, 1, 2));
+        let base = s.adapters.iter().find(|a| a.name == "base").unwrap();
+        assert_eq!((base.submitted, base.tokens), (1, 1));
+        // out-of-range aids are ignored, not panics
+        r.record_token(99);
+        r.record_submitted(-5);
+
+        // disabled: nothing moves
+        r.set_enabled(false);
+        r.record_step(1, 1, 1, 1);
+        r.record_submitted(0);
+        assert_eq!(r.snapshot().steps, 1);
+        r.set_enabled(true);
+
+        // slot reuse under a new name restarts its counters
+        r.set_adapter_name(0, "code");
+        let s2 = r.snapshot();
+        let code = s2.adapters.iter().find(|a| a.name == "code").unwrap();
+        assert_eq!(code.tokens, 0);
+        assert!(!s2.adapters.iter().any(|a| a.name == "math"));
+
+        r.reset();
+        let s3 = r.snapshot();
+        assert_eq!(s3.steps, 0);
+        assert_eq!(s3.requests_submitted, 0);
+    }
+
+    #[test]
+    fn stats_frame_json_shape() {
+        let r = ObsRegistry::new(1);
+        r.set_adapter_name(0, "math");
+        r.record_submitted(0);
+        r.record_completed(0, 1000, 2000);
+        let j = r.snapshot().to_json();
+        assert_eq!(j.at(&["version"]).as_i64(), Some(STATS_VERSION));
+        assert_eq!(j.at(&["replicas"]).as_i64(), Some(1));
+        assert_eq!(j.at(&["counters", "requests_completed"]).as_i64(), Some(1));
+        let adapters = j.at(&["adapters"]).as_arr().unwrap();
+        assert!(adapters.iter().any(|a| {
+            a.at(&["adapter"]).as_str() == Some("math")
+                && a.at(&["completed"]).as_i64() == Some(1)
+        }));
+        // fleet block only present when populated
+        assert!(j.get("fleet").is_none());
+    }
+}

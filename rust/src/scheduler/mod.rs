@@ -91,6 +91,13 @@ pub struct SeqState {
     /// [`Scheduler::expire_deadlines`] (queued sequences are dropped
     /// before ever occupying a batch slot).
     pub deadline: Option<Instant>,
+    /// When the scheduler moved the sequence from waiting to running
+    /// (the queued → admitted phase edge; see `docs/OBSERVABILITY.md`).
+    pub admitted_at: Option<Instant>,
+    /// When the sequence's tokens were first packed into a batch.
+    pub first_scheduled_at: Option<Instant>,
+    /// When the last prompt chunk was fed (decode phase begins).
+    pub prefill_done_at: Option<Instant>,
     pub first_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
 }
@@ -120,6 +127,9 @@ impl SeqState {
             sampling,
             arrival: Instant::now(),
             deadline: None,
+            admitted_at: None,
+            first_scheduled_at: None,
+            prefill_done_at: None,
             first_token_at: None,
             finished_at: None,
         }
@@ -163,6 +173,10 @@ pub struct OutRow {
     pub row: usize,
     /// Sequence id to push the sampled token to.
     pub seq: u64,
+    /// The sequence's adapter id (-1 = base), captured at batch build so
+    /// the engine attributes sampled tokens to adapters without
+    /// re-scanning the running list (per-adapter obs counters).
+    pub aid: i32,
     /// The sequence's sampling mode (captured at batch build so the
     /// engine samples without re-scanning the running list).
     pub sampling: Sampling,
@@ -316,7 +330,8 @@ impl Scheduler {
                 break;
             }
             reserved += need;
-            let seq = self.waiting.pop_front().unwrap();
+            let mut seq = self.waiting.pop_front().unwrap();
+            seq.admitted_at = Some(Instant::now());
             // pre-size the KV slot list so decode-path allocs never grow it
             kv.reserve_seq(seq.id, seq.tokens.len() + seq.max_new);
             self.running.push(seq);
@@ -417,6 +432,14 @@ impl Scheduler {
                 prefill_tokens += take;
             }
             seq.prefilled += take;
+            // phase stamps: both are Some by steady-state decode, so the
+            // hot path pays two is_none checks and no clock reads
+            if seq.first_scheduled_at.is_none() {
+                seq.first_scheduled_at = Some(Instant::now());
+            }
+            if seq.prefill_done_at.is_none() && seq.decoding() {
+                seq.prefill_done_at = Some(Instant::now());
+            }
             // this step consumed the whole backlog → its last row yields
             // the next token
             if seq.pending() == 0 {
@@ -425,7 +448,12 @@ impl Scheduler {
                     bail!("out_rows overflow: {row_idx} >= {out_rows}");
                 }
                 inputs.out_rows[row_idx] = (cursor + take - 1) as i32;
-                rows.push(OutRow { row: row_idx, seq: seq.id, sampling: seq.sampling });
+                rows.push(OutRow {
+                    row: row_idx,
+                    seq: seq.id,
+                    aid: seq.aid,
+                    sampling: seq.sampling,
+                });
             }
             cursor += take;
         }
@@ -767,6 +795,35 @@ mod tests {
         let by_seq = |id: u64| ws.rows.iter().find(|r| r.seq == id).unwrap().sampling;
         assert_eq!(by_seq(1), Sampling::Temperature(0.7));
         assert_eq!(by_seq(2), Sampling::Greedy);
+    }
+
+    #[test]
+    fn phase_stamps_progress_in_order_and_rows_carry_aid() {
+        let (mut s, mut kv, mut ws) = setup();
+        let mut q = seq(1, 10, 2);
+        q.aid = 3;
+        s.submit(q);
+        let r = |s: &Scheduler| s.running()[0].clone();
+        // chunk=8: first build admits + schedules but prefill is partial
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
+        assert!(r(&s).admitted_at.is_some());
+        assert!(r(&s).first_scheduled_at.is_some());
+        assert!(r(&s).prefill_done_at.is_none(), "prompt not fully fed yet");
+        // second build feeds the last chunk: prefill done, row emitted
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
+        assert!(r(&s).prefill_done_at.is_some());
+        assert_eq!(ws.rows.len(), 1);
+        assert_eq!(ws.rows[0].aid, 3, "rows carry the adapter id");
+        s.push_token(1, 7).unwrap();
+        let got = r(&s);
+        let admitted = got.admitted_at.unwrap();
+        let scheduled = got.first_scheduled_at.unwrap();
+        let prefill_done = got.prefill_done_at.unwrap();
+        let first_tok = got.first_token_at.unwrap();
+        assert!(got.arrival <= admitted);
+        assert!(admitted <= scheduled);
+        assert!(scheduled <= prefill_done);
+        assert!(prefill_done <= first_tok);
     }
 
     #[test]

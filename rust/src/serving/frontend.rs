@@ -8,6 +8,8 @@
 //! [`crate::util::json`]; no external deps). In one breath: submit
 //! frames carry `id`/`adapter`/`prompt`/`max_new_tokens`/`deadline_ms`/
 //! `temperature`; `{"op":"cancel","id":..}` cancels;
+//! `{"op":"stats"}` answers with one versioned live-telemetry frame
+//! (counters, gauges, latency quantiles — see [`crate::obs`]);
 //! `{"op":"drain"}` finishes all in-flight work, acknowledges with
 //! `{"event":"drained"}` on every connection, and shuts the server
 //! down. Responses stream `first`/`token` incrementally (the TTFT edge
@@ -421,6 +423,36 @@ fn handle_cmd<B: ServingBackend>(
             };
             match parsed.get("op").and_then(|o| o.as_str()) {
                 Some("drain") => return Ok(true),
+                Some("stats") => {
+                    // live telemetry snapshot (PROTOCOL.md v2): answered
+                    // inline without disturbing in-flight requests. The
+                    // optional "id" round-trips so clients can correlate.
+                    let tag = parsed
+                        .get("id")
+                        .and_then(|i| i.as_str())
+                        .unwrap_or("")
+                        .to_string();
+                    match backend.stats() {
+                        Some(snap) => {
+                            let mut frame = snap.to_json();
+                            if let Json::Obj(m) = &mut frame {
+                                m.insert("event".into(), Json::Str("stats".into()));
+                                if !tag.is_empty() {
+                                    m.insert("id".into(), Json::Str(tag));
+                                }
+                            }
+                            router.write_line(conn, &frame);
+                        }
+                        None => {
+                            let line = error_json(
+                                &tag,
+                                "unsupported",
+                                "this backend exposes no stats",
+                            );
+                            router.write_line(conn, &line);
+                        }
+                    }
+                }
                 Some("cancel") => {
                     let tag = parsed
                         .get("id")
@@ -436,7 +468,7 @@ fn handle_cmd<B: ServingBackend>(
                     }
                 }
                 Some(other) => {
-                    let msg = format!("unknown op {other:?} (cancel|drain)");
+                    let msg = format!("unknown op {other:?} (cancel|drain|stats)");
                     let line = error_json("", "bad_request", &msg);
                     router.write_line(conn, &line);
                 }

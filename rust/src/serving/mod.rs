@@ -353,6 +353,16 @@ pub trait ServingBackend {
     /// `submit` fails with [`SubmitError::ShuttingDown`]. Pumps
     /// internally until idle.
     fn drain(&mut self) -> anyhow::Result<()>;
+
+    /// Live telemetry snapshot (the NDJSON `stats` frame body; see
+    /// docs/PROTOCOL.md and `docs/OBSERVABILITY.md`). `None` for
+    /// backends with no local registry (e.g. the remote
+    /// [`NdjsonClient`] — ask the remote end with a `stats` op instead).
+    ///
+    /// [`NdjsonClient`]: crate::serving::frontend::NdjsonClient
+    fn stats(&mut self) -> Option<crate::obs::StatsSnapshot> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -30,8 +30,17 @@ pub fn level() -> Level {
     }
 }
 
+/// Pure gating predicate: would a message at `msg` print when the
+/// global level is `current`? Split out from [`enabled`] so gating is
+/// testable without mutating the process-wide `LEVEL` atomic (tests run
+/// concurrently; a test that flips the global races every other test
+/// that logs).
+pub fn enabled_at(msg: Level, current: Level) -> bool {
+    msg <= current
+}
+
 pub fn enabled(level: Level) -> bool {
-    level <= self::level()
+    enabled_at(level, self::level())
 }
 
 #[doc(hidden)]
@@ -81,14 +90,23 @@ macro_rules! log_debug {
 mod tests {
     use super::*;
 
+    // exercises the pure predicate only: mutating the global LEVEL here
+    // would race concurrently-running tests that log
     #[test]
     fn level_gating() {
-        set_level(Level::Warn);
-        assert!(enabled(Level::Error));
-        assert!(enabled(Level::Warn));
-        assert!(!enabled(Level::Info));
-        set_level(Level::Info);
-        assert!(enabled(Level::Info));
-        assert!(!enabled(Level::Debug));
+        assert!(enabled_at(Level::Error, Level::Warn));
+        assert!(enabled_at(Level::Warn, Level::Warn));
+        assert!(!enabled_at(Level::Info, Level::Warn));
+        assert!(enabled_at(Level::Info, Level::Info));
+        assert!(!enabled_at(Level::Debug, Level::Info));
+        assert!(enabled_at(Level::Error, Level::Error));
+        assert!(!enabled_at(Level::Warn, Level::Error));
+    }
+
+    #[test]
+    fn default_level_is_info() {
+        // read-only on the global: the process default admits info and
+        // below unless a CLI flag changed it
+        assert!(level() >= Level::Error);
     }
 }

@@ -70,6 +70,13 @@ fn steady_state_decode_performs_zero_allocations() {
     assert_eq!(waiting, 0, "all sequences must be admitted");
     assert_eq!(running, SEQS, "all sequences must still be decoding");
 
+    // the obs registry must be live during the measured window — the
+    // zero-allocation contract includes metric recording, not a
+    // telemetry-off fast path
+    let obs = e.obs();
+    assert!(obs.is_enabled(), "recording must be on while we measure");
+    let obs_before = obs.snapshot();
+
     let before = allocations();
     let t0 = Instant::now();
     for _ in 0..MEASURE {
@@ -84,6 +91,34 @@ fn steady_state_decode_performs_zero_allocations() {
         "steady-state decode must not allocate (got {} allocations over {MEASURE} steps)",
         after - before
     );
+
+    // recording demonstrably happened across the alloc-free window:
+    // step counters and per-adapter token counters both advanced
+    let obs_after = obs.snapshot();
+    assert_eq!(
+        obs_after.steps - obs_before.steps,
+        MEASURE as u64,
+        "every measured step must be recorded"
+    );
+    assert_eq!(
+        obs_after.tokens_decode - obs_before.tokens_decode,
+        (MEASURE * SEQS) as u64,
+        "every decode token must be counted"
+    );
+    assert_eq!(
+        obs_after.step_wall_us.count - obs_before.step_wall_us.count,
+        MEASURE as u64,
+        "every step wall time must land in the histogram"
+    );
+    for name in ["base", &adapters[0].name, &adapters[1].name] {
+        let tokens = |s: &expertweave::obs::StatsSnapshot| {
+            s.adapters.iter().find(|a| a.name == name).map_or(0, |a| a.tokens)
+        };
+        assert!(
+            tokens(&obs_after) > tokens(&obs_before),
+            "adapter {name:?} token counter must advance during decode"
+        );
+    }
     let steps_per_sec = MEASURE as f64 / elapsed.as_secs_f64().max(1e-12);
     assert!(steps_per_sec > 0.0, "steps/sec must be nonzero");
     println!(

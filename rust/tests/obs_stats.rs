@@ -1,0 +1,269 @@
+//! End-to-end observability: the NDJSON `stats` frame and the Prometheus
+//! exposition must agree while the backend is *live* (undrained, still
+//! accepting requests) — for a single engine and for a multi-replica
+//! fleet. Both surfaces read the same lock-free registries
+//! ([`expertweave::obs::ObsRegistry`]); consistency here is the proof
+//! that the per-adapter label plumbing (engine slots, replica merge)
+//! lines up end to end.
+
+use expertweave::adapters::generator::synth_fleet_adapters;
+use expertweave::coordinator::{Coordinator, CoordinatorConfig, RoutingPolicy};
+use expertweave::engine::{Engine, EngineOptions};
+use expertweave::model::ModelConfig;
+use expertweave::obs::expo::{render, scrape, MetricsListener};
+use expertweave::obs::ObsRegistry;
+use expertweave::runtime::{SimPerf, Variant};
+use expertweave::serving::frontend::NdjsonServer;
+use expertweave::util::json::Json;
+use expertweave::weights::StoreMode;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn adapter_names() -> Vec<String> {
+    let cfg = ModelConfig::sim_default();
+    synth_fleet_adapters(&cfg, 2, 42).iter().map(|a| a.name.clone()).collect()
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let writer = stream.try_clone().unwrap();
+        Client { reader: BufReader::new(stream), writer }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").unwrap();
+    }
+
+    fn next_event(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(line.trim()).unwrap()
+    }
+
+    fn wait_for(&mut self, id: &str, event: &str) -> Json {
+        for _ in 0..10_000 {
+            let ev = self.next_event();
+            if ev.get("id").and_then(|i| i.as_str()) == Some(id)
+                && ev.get("event").and_then(|e| e.as_str()) == Some(event)
+            {
+                return ev;
+            }
+        }
+        panic!("no {event:?} event for {id:?}");
+    }
+
+    fn drain(&mut self) {
+        self.send(r#"{"op":"drain"}"#);
+        loop {
+            let ev = self.next_event();
+            if ev.get("event").and_then(|e| e.as_str()) == Some("drained") {
+                return;
+            }
+        }
+    }
+}
+
+/// `completed` count for one adapter out of a stats frame.
+fn frame_adapter_completed(frame: &Json, adapter: &str) -> i64 {
+    frame
+        .at(&["adapters"])
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|a| a.at(&["adapter"]).as_str() == Some(adapter))
+        .unwrap_or_else(|| panic!("adapter {adapter:?} missing from stats frame: {frame}"))
+        .at(&["completed"])
+        .as_i64()
+        .unwrap()
+}
+
+/// `completed` count for one adapter out of a Prometheus page.
+fn prom_adapter_completed(page: &str, adapter: &str) -> i64 {
+    let needle =
+        format!("expertweave_adapter_requests_completed_total{{adapter=\"{adapter}\"}} ");
+    page.lines()
+        .find_map(|l| l.strip_prefix(needle.as_str()))
+        .unwrap_or_else(|| panic!("no completed family for {adapter:?} in:\n{page}"))
+        .trim()
+        .parse()
+        .unwrap()
+}
+
+/// Sum of a per-replica counter family across all replica labels.
+fn prom_family_total(page: &str, family: &str) -> i64 {
+    let prefix = format!("{family}{{");
+    page.lines()
+        .filter(|l| l.starts_with(prefix.as_str()))
+        .map(|l| l.rsplit(' ').next().unwrap().parse::<i64>().unwrap())
+        .sum()
+}
+
+#[test]
+fn live_engine_stats_frame_matches_prometheus_scrape() {
+    let server = NdjsonServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    // the engine lives entirely on the serving thread; its obs registry
+    // crosses back over a channel for the metrics listener to read
+    let (obs_tx, obs_rx) = std::sync::mpsc::channel::<Arc<ObsRegistry>>();
+    let serving = std::thread::spawn(move || {
+        let cfg = ModelConfig::sim_default();
+        let adapters = synth_fleet_adapters(&cfg, 2, 42);
+        let mut engine = Engine::sim_weave(
+            &cfg,
+            SimPerf::fast(),
+            &adapters,
+            Variant::Weave,
+            StoreMode::Virtual,
+            EngineOptions { page_size: 64 << 10, ..Default::default() },
+        )
+        .unwrap();
+        obs_tx.send(engine.obs()).unwrap();
+        server.run(&mut engine).unwrap();
+    });
+    let obs = obs_rx.recv().unwrap();
+    let regs = vec![obs];
+    let metrics = MetricsListener::spawn("127.0.0.1:0", move || render(&regs)).unwrap();
+    let names = adapter_names();
+
+    let mut c = Client::connect(addr);
+    c.send(&format!(
+        r#"{{"id":"r1","adapter":"{}","prompt":[1,2,3,4],"max_new_tokens":3}}"#,
+        names[0]
+    ));
+    c.send(r#"{"id":"r2","prompt":[5,6],"max_new_tokens":2}"#);
+    c.wait_for("r1", "done");
+    c.wait_for("r2", "done");
+
+    // the engine is live (no drain yet): both surfaces must answer now
+    c.send(r#"{"op":"stats","id":"s1"}"#);
+    let frame = c.wait_for("s1", "stats");
+    assert_eq!(frame.at(&["version"]).as_i64(), Some(1));
+    assert_eq!(frame.at(&["replicas"]).as_i64(), Some(1));
+    assert_eq!(frame.at(&["counters", "requests_completed"]).as_i64(), Some(2));
+    assert_eq!(frame.at(&["counters", "requests_submitted"]).as_i64(), Some(2));
+    assert!(frame.at(&["counters", "steps"]).as_i64().unwrap() > 0);
+    assert!(frame.at(&["latency_us", "e2e", "p50"]).as_i64().unwrap() > 0);
+    assert!(frame.get("fleet").is_none(), "single engine has no fleet section");
+
+    let page = scrape(&metrics.local_addr()).unwrap();
+    assert_eq!(prom_family_total(&page, "expertweave_requests_completed_total"), 2);
+
+    // per-adapter counters agree across the two surfaces
+    let from_frame = frame_adapter_completed(&frame, &names[0]);
+    let from_prom = prom_adapter_completed(&page, &names[0]);
+    assert_eq!(from_frame, 1, "one request completed on {:?}", names[0]);
+    assert_eq!(from_frame, from_prom, "stats frame and exposition must agree");
+    let base_frame = frame_adapter_completed(&frame, "base");
+    assert_eq!(base_frame, 1, "the no-adapter request lands on \"base\"");
+    assert_eq!(base_frame, prom_adapter_completed(&page, "base"));
+
+    c.drain();
+    drop(c);
+    serving.join().unwrap();
+}
+
+#[test]
+fn live_fleet_stats_merge_replicas_and_match_prometheus() {
+    let server = NdjsonServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let (obs_tx, obs_rx) = std::sync::mpsc::channel::<Vec<Arc<ObsRegistry>>>();
+    let serving = std::thread::spawn(move || {
+        let cfg = ModelConfig::sim_default();
+        let adapters = synth_fleet_adapters(&cfg, 2, 42);
+        let coord_cfg = CoordinatorConfig {
+            replicas: 2,
+            policy: RoutingPolicy::AdapterAffinity,
+            adapter_capacity: 2,
+            ..Default::default()
+        };
+        let spawn_cfg = cfg.clone();
+        let mut coord = Coordinator::launch(
+            coord_cfg,
+            move |i| {
+                let cfg = spawn_cfg.clone();
+                Box::new(move || {
+                    Engine::sim_weave(
+                        &cfg,
+                        SimPerf::fast(),
+                        &[],
+                        Variant::Weave,
+                        StoreMode::Virtual,
+                        EngineOptions {
+                            page_size: 64 << 10,
+                            seed: i as u64,
+                            ..Default::default()
+                        },
+                    )
+                })
+            },
+            adapters,
+        )
+        .unwrap();
+        obs_tx.send(coord.obs_registries()).unwrap();
+        server.run(&mut coord).unwrap();
+        let started = std::time::Instant::now();
+        coord.finish(started).unwrap();
+    });
+    let regs = obs_rx.recv().unwrap();
+    assert_eq!(regs.len(), 2, "one registry per replica");
+    let render_regs = regs.clone();
+    let metrics =
+        MetricsListener::spawn("127.0.0.1:0", move || render(&render_regs)).unwrap();
+    let names = adapter_names();
+
+    let mut c = Client::connect(addr);
+    for (i, name) in names.iter().enumerate() {
+        c.send(&format!(
+            r#"{{"id":"f{i}","adapter":"{name}","prompt":[1,2,3],"max_new_tokens":2}}"#
+        ));
+    }
+    for i in 0..names.len() {
+        c.wait_for(&format!("f{i}"), "done");
+    }
+
+    // fleet is live: the stats frame merges both replica registries and
+    // carries the coordinator's door counters
+    c.send(r#"{"op":"stats","id":"fs"}"#);
+    let frame = c.wait_for("fs", "stats");
+    assert_eq!(frame.at(&["version"]).as_i64(), Some(1));
+    assert_eq!(frame.at(&["replicas"]).as_i64(), Some(2));
+    assert_eq!(
+        frame.at(&["counters", "requests_completed"]).as_i64(),
+        Some(names.len() as i64)
+    );
+    assert_eq!(frame.at(&["fleet", "routed"]).as_i64(), Some(names.len() as i64));
+    assert_eq!(frame.at(&["fleet", "shed_queue_full"]).as_i64(), Some(0));
+
+    let page = scrape(&metrics.local_addr()).unwrap();
+    // per-replica families are labeled, and the sum across replicas
+    // equals the frame's merged counter
+    assert!(page.contains("expertweave_steps_total{replica=\"1\"}"));
+    assert_eq!(
+        prom_family_total(&page, "expertweave_requests_completed_total"),
+        names.len() as i64
+    );
+    // per-adapter families agree between the two surfaces, replica-merged
+    for name in &names {
+        let from_frame = frame_adapter_completed(&frame, name);
+        assert_eq!(from_frame, 1, "one request completed on {name:?}");
+        assert_eq!(
+            from_frame,
+            prom_adapter_completed(&page, name),
+            "fleet stats frame and exposition must agree for {name:?}"
+        );
+    }
+
+    c.drain();
+    drop(c);
+    serving.join().unwrap();
+}
