@@ -96,6 +96,8 @@ pub use router::{choose, ReplicaView, RouteDecision, RouteError, RoutingPolicy};
 use crate::adapters::format::Adapter;
 use crate::engine::{Completion, Engine, StepEwma};
 use crate::metrics::Report;
+use crate::obs::flightrec::FlightRecorder;
+use crate::obs::trace::{Candidate, DoorEvent, RouteSpan, TraceLog};
 use crate::server::Pacer;
 use crate::serving::{
     AbortReason, RequestHandle, RequestId, ServeRequest, ServingBackend, SubmitError, TokenEvent,
@@ -229,6 +231,10 @@ pub struct FleetOutcome {
     pub per_replica: Vec<Report>,
     pub completions: Vec<Completion>,
     pub stats: FleetStats,
+    /// The merged fleet trace (coordinator door/routing spans + every
+    /// replica's phase spans), when [`Coordinator::enable_trace`] ran
+    /// before the replay.
+    pub trace: Option<TraceLog>,
 }
 
 /// The fleet coordinator. Build with [`Coordinator::launch`], then drive
@@ -266,6 +272,18 @@ pub struct Coordinator {
     routes: HashMap<RequestId, (usize, Option<String>)>,
     /// Serving-time origin for the arrival-rate EWMA.
     clock: Instant,
+    /// Trace-time origin: captured before any replica thread spawns, so
+    /// it predates every engine's own origin and rebasing replica spans
+    /// onto it ([`TraceLog::absorb`]) never truncates.
+    origin: Instant,
+    /// Fleet-level trace log (door + routing spans), present once
+    /// [`Coordinator::enable_trace`] ran. Replica phase spans merge into
+    /// it at [`Coordinator::finish_traced`].
+    trace: Option<TraceLog>,
+    /// Each replica engine's always-on flight recorder, by replica index
+    /// (shipped in [`ReplicaEvent::Ready`], like `obs`). Snapshot-only on
+    /// this side: `flightrec` frames and fatal-crash tail dumps.
+    flightrecs: Vec<Arc<FlightRecorder>>,
     /// Draining: every new submit fails with `ShuttingDown`.
     shutting_down: bool,
     /// A replica died; surfaced as an error on the next pump.
@@ -293,6 +311,9 @@ impl Coordinator {
         if cfg.max_copies == 0 {
             bail!("max_copies must be at least 1");
         }
+        // the fleet trace origin must predate every engine's (engines
+        // construct inside the threads spawned below)
+        let origin = Instant::now();
         let (ev_tx, ev_rx) = std::sync::mpsc::channel();
         let replicas: Vec<ReplicaHandle> = (0..cfg.replicas)
             .map(|i| spawn_replica(i, spawn(i), ev_tx.clone()))
@@ -302,11 +323,14 @@ impl Coordinator {
         let mut ready = 0usize;
         let mut obs_regs: Vec<Option<Arc<crate::obs::ObsRegistry>>> =
             (0..cfg.replicas).map(|_| None).collect();
+        let mut flightrecs: Vec<Option<Arc<FlightRecorder>>> =
+            (0..cfg.replicas).map(|_| None).collect();
         while ready < cfg.replicas {
             match ev_rx.recv_timeout(Duration::from_secs(600)) {
-                Ok(ReplicaEvent::Ready { replica, err: None, obs }) => {
+                Ok(ReplicaEvent::Ready { replica, err: None, obs, flightrec }) => {
                     crate::log_debug!("coordinator", "replica {replica} ready");
                     obs_regs[replica] = obs;
+                    flightrecs[replica] = flightrec;
                     ready += 1;
                 }
                 Ok(ReplicaEvent::Ready { replica, err: Some(e), .. }) => {
@@ -335,6 +359,9 @@ impl Coordinator {
             clients: HashMap::new(),
             routes: HashMap::new(),
             clock: Instant::now(),
+            origin,
+            trace: None,
+            flightrecs: flightrecs.into_iter().flatten().collect(),
             shutting_down: false,
             fatal: None,
             obs: obs_regs.into_iter().flatten().collect(),
@@ -409,6 +436,44 @@ impl Coordinator {
             ("submit_rejected".to_string(), s.submit_rejected as u64),
         ];
         snap
+    }
+
+    /// Shared handles to every replica engine's always-on flight
+    /// recorder, by replica index. The rings outlive the coordinator
+    /// (the engines record, anyone holding the `Arc` snapshots), so a
+    /// caller can capture these before a consuming `replay`/`finish`
+    /// and still dump the black box afterwards.
+    pub fn flight_recorders(&self) -> Vec<Arc<FlightRecorder>> {
+        self.flightrecs.clone()
+    }
+
+    /// Turn on fleet-wide request tracing (idempotent): coordinator-side
+    /// door/routing spans plus per-request phase spans inside every
+    /// replica engine. The `EnableTrace` command rides each replica's
+    /// FIFO channel, so it is applied before any submit issued after
+    /// this call — no request admitted from here on is missed.
+    pub fn enable_trace(&mut self) -> Result<()> {
+        if self.trace.is_none() {
+            self.trace = Some(TraceLog::with_origin(self.origin));
+        }
+        for h in &self.replicas {
+            h.send(ReplicaCmd::EnableTrace)?;
+        }
+        Ok(())
+    }
+
+    /// Record a door-side reject/shed instant into the fleet trace
+    /// (no-op when tracing is off). Pre-admission rejects have no fleet
+    /// rid yet, so the stamped trace id is the client-supplied one or 0.
+    fn trace_door(&mut self, req: &ServeRequest, code: &'static str) {
+        let Some(t) = self.trace.as_mut() else { return };
+        let at_us = t.rel_us(Instant::now());
+        t.record_door(DoorEvent {
+            trace: req.trace.unwrap_or(0),
+            adapter: req.adapter.clone().unwrap_or_else(|| "base".into()),
+            code,
+            at_us,
+        });
     }
 
     /// Record + send a load of a host-cached adapter to a replica.
@@ -576,6 +641,35 @@ impl Coordinator {
                 }
             }
             ReplicaEvent::Fatal { replica, err } => {
+                // black-box dump: the dead engine's last recorded events,
+                // straight from its shared flight-recorder ring
+                if let Some(fr) = self.flightrecs.get(replica) {
+                    let snap = fr.snapshot();
+                    let tail: Vec<String> = snap
+                        .events
+                        .iter()
+                        .rev()
+                        .take(16)
+                        .rev()
+                        .map(|e| {
+                            format!(
+                                "{}+{}us id={} aid={} v={}",
+                                e.kind.as_str(),
+                                e.t_us,
+                                e.id,
+                                e.aid,
+                                e.value
+                            )
+                        })
+                        .collect();
+                    crate::log_warn!(
+                        "coordinator",
+                        "replica {replica} flight recorder: {} recorded, {} dropped, tail [{}]",
+                        snap.recorded,
+                        snap.dropped,
+                        tail.join(", ")
+                    );
+                }
                 self.fatal = Some(format!("replica {replica} failed: {err}"));
             }
             ReplicaEvent::Ready { .. } | ReplicaEvent::Finished { .. } => {}
@@ -592,11 +686,13 @@ impl Coordinator {
     /// Admit, place and submit one request through the typed serving
     /// boundary. Sheds/rejections update [`FleetStats`] (and therefore
     /// the fleet report) — this is the single accounting point.
-    fn route(&mut self, req: ServeRequest) -> Result<RequestHandle, SubmitError> {
+    fn route(&mut self, mut req: ServeRequest) -> Result<RequestHandle, SubmitError> {
+        let arrival = Instant::now();
         // fold finished work first so routing scores are fresh
         self.absorb_events();
         if self.shutting_down || self.fatal.is_some() {
             self.stats.submit_rejected += 1;
+            self.trace_door(&req, "shutting_down");
             return Err(SubmitError::ShuttingDown);
         }
         let adapter = req.adapter.clone();
@@ -604,23 +700,29 @@ impl Coordinator {
         if let Some(n) = name {
             if !self.host_adapters.contains_key(n) {
                 self.stats.submit_rejected += 1;
+                self.trace_door(&req, "unknown_adapter");
                 return Err(SubmitError::UnknownAdapter(n.to_string()));
             }
             if self.cfg.queue_cap > 0 && self.inflight_for(n) >= self.cfg.queue_cap {
                 self.stats.shed_queue_full += 1;
+                self.trace_door(&req, "queue_full");
                 return Err(SubmitError::QueueFull);
             }
         }
+        // past the door budget checks = admitted to the routing stage
+        let admitted = Instant::now();
         let views = self.views(name);
         let decision = match choose(self.cfg.policy, &views, req.deadline, &mut self.rr_next) {
             Ok(d) => d,
             Err(RouteError::NoCapacity) => {
                 self.stats.shed_no_capacity += 1;
+                self.trace_door(&req, "shed");
                 return Err(SubmitError::Shed);
             }
             Err(RouteError::DeadlineUnmeetable) => {
                 self.stats.deadline_unmeetable += 1;
                 self.stats.submit_rejected += 1;
+                self.trace_door(&req, "deadline_unmeetable");
                 return Err(SubmitError::DeadlineUnmeetable);
             }
         };
@@ -658,6 +760,12 @@ impl Coordinator {
         self.stats.routed += 1;
         let rid = self.next_rid;
         self.next_rid += 1;
+        // the fleet trace id: the client's, or the rid itself. It rides
+        // `req.trace` into the replica engine, which stamps it on every
+        // phase span — the thread tying both halves of the timeline.
+        let trace_id = req.trace.unwrap_or(rid);
+        req.trace = Some(trace_id);
+        let adapter_label = adapter.clone().unwrap_or_else(|| "base".into());
         let (handle, tx) = RequestHandle::new(rid);
         self.clients.insert(rid, tx);
         self.routes.insert(rid, (r, adapter));
@@ -672,6 +780,30 @@ impl Coordinator {
             self.fatal = Some(format!("replica {r} is no longer accepting commands"));
             return Err(SubmitError::ShuttingDown);
         }
+        if let Some(t) = self.trace.as_mut() {
+            let candidates = views
+                .iter()
+                .map(|v| Candidate {
+                    replica: v.index,
+                    inflight: v.inflight,
+                    kv_free: v.kv_free,
+                    expected_wait_us: (v.expected_wait * 1e6) as u64,
+                    resident: v.resident,
+                })
+                .collect();
+            t.record_route(RouteSpan {
+                rid,
+                trace: trace_id,
+                adapter: adapter_label,
+                policy: self.cfg.policy.as_str(),
+                replica: r,
+                resident: decision.resident,
+                candidates,
+                arrival_us: t.rel_us(arrival),
+                admitted_us: t.rel_us(admitted),
+                routed_us: t.rel_us(Instant::now()),
+            });
+        }
         Ok(handle)
     }
 
@@ -680,7 +812,21 @@ impl Coordinator {
     /// Callers driving the fleet through [`ServingBackend`] directly
     /// (instead of [`Coordinator::replay`]) end a serving session with
     /// `drain()` followed by `finish(started_at)`.
-    pub fn finish(mut self, since: Instant) -> Result<(Vec<Report>, FleetStats)> {
+    pub fn finish(self, since: Instant) -> Result<(Vec<Report>, FleetStats)> {
+        let (per_replica, stats, _trace) = self.finish_traced(since)?;
+        Ok((per_replica, stats))
+    }
+
+    /// [`Coordinator::finish`] plus the merged fleet trace: every
+    /// replica's phase-span log is shipped back in its `Finished` event,
+    /// rebased onto the coordinator's origin and re-keyed from engine
+    /// sequence ids to fleet rids ([`TraceLog::absorb`]), then folded
+    /// into the coordinator's own door/routing timeline. `None` unless
+    /// [`Coordinator::enable_trace`] ran.
+    pub fn finish_traced(
+        mut self,
+        since: Instant,
+    ) -> Result<(Vec<Report>, FleetStats, Option<TraceLog>)> {
         // surface a stashed replica failure with its root cause rather
         // than the generic send error the dead channel would produce
         self.absorb_events();
@@ -692,13 +838,15 @@ impl Coordinator {
         }
         let n = self.replicas.len();
         let mut reports: Vec<Option<Report>> = (0..n).map(|_| None).collect();
+        let mut traces: Vec<Option<TraceLog>> = (0..n).map(|_| None).collect();
         let mut finished = 0usize;
         while finished < n {
             match self.events.recv_timeout(Duration::from_secs(600)) {
-                Ok(ReplicaEvent::Finished { replica, report }) => {
+                Ok(ReplicaEvent::Finished { replica, report, trace }) => {
                     if reports[replica].replace(report).is_none() {
                         finished += 1;
                     }
+                    traces[replica] = trace;
                 }
                 Ok(ev) => self.apply(ev),
                 Err(e) => bail!("fleet drain failed: {e}"),
@@ -712,7 +860,19 @@ impl Coordinator {
         }
         let per_replica: Vec<Report> =
             reports.into_iter().map(|r| r.expect("replica report")).collect();
-        Ok((per_replica, self.stats))
+        let merged = self.trace.take().map(|mut fleet| {
+            // replica spans carry the fleet trace id; map it back to the
+            // fleet rid so Chrome tids line up with the routing spans
+            let rekey: HashMap<u64, u64> =
+                fleet.routes().iter().map(|s| (s.trace, s.rid)).collect();
+            for (i, t) in traces.into_iter().enumerate() {
+                if let Some(t) = t {
+                    fleet.absorb(t, i as u64 + 1, &rekey);
+                }
+            }
+            fleet
+        });
+        Ok((per_replica, self.stats, merged))
     }
 
     /// Replay a trace against the fleet in real time — a thin client of
@@ -727,7 +887,7 @@ impl Coordinator {
             crate::server::replay_backend(&mut self, trace, &pacer)?;
         let wall = pacer.elapsed().as_secs_f64().max(1e-9);
         let since = pacer.started_at();
-        let (per_replica, stats) = self.finish(since)?;
+        let (per_replica, stats, trace) = self.finish_traced(since)?;
         let mut report = Report::merge(
             per_replica.iter(),
             completions.iter().map(|c| &c.record),
@@ -738,7 +898,7 @@ impl Coordinator {
         report.requests = completions.len();
         report.rejected = stats.submit_rejected;
         report.shed = stats.shed_total();
-        Ok(FleetOutcome { report, per_replica, completions, stats })
+        Ok(FleetOutcome { report, per_replica, completions, stats, trace })
     }
 }
 
@@ -784,6 +944,16 @@ impl ServingBackend for Coordinator {
 
     fn stats(&mut self) -> Option<crate::obs::StatsSnapshot> {
         Some(self.stats_snapshot())
+    }
+
+    fn flightrec(&mut self) -> Option<crate::util::json::Json> {
+        let pairs: Vec<(usize, &FlightRecorder)> = self
+            .flightrecs
+            .iter()
+            .enumerate()
+            .map(|(i, fr)| (i, &**fr))
+            .collect();
+        Some(crate::obs::flightrec::dump(&pairs))
     }
 
     /// Drain the whole fleet: finish every in-flight request *and* wait

@@ -63,6 +63,10 @@ pub(crate) enum ReplicaCmd {
     Cancel { rid: u64 },
     Load(Arc<crate::adapters::format::Adapter>),
     Evict(String),
+    /// Turn on the engine's per-request phase tracing. FIFO ordering
+    /// guarantees it lands before any `Submit` issued after it, so the
+    /// fleet trace misses no request.
+    EnableTrace,
     /// Drain all queued work, report (wall time anchored to `since`,
     /// the coordinator's replay start), and exit the thread.
     Finish { since: Instant },
@@ -79,6 +83,10 @@ pub(crate) enum ReplicaEvent {
         replica: usize,
         err: Option<String>,
         obs: Option<Arc<crate::obs::ObsRegistry>>,
+        /// The engine's always-on flight recorder; the coordinator keeps
+        /// a handle per replica so `flightrec` frames and crash dumps can
+        /// snapshot every ring without a round-trip to the thread.
+        flightrec: Option<Arc<crate::obs::flightrec::FlightRecorder>>,
     },
     /// A token-stream event, already re-addressed to the fleet rid.
     /// `Done`/`Aborted` are terminal (the coordinator's in-flight
@@ -94,8 +102,14 @@ pub(crate) enum ReplicaEvent {
     },
     LoadDone { replica: usize, adapter: String, err: Option<String> },
     EvictDone { replica: usize, adapter: String, err: Option<String> },
-    /// Final per-replica serving report (response to `Finish`).
-    Finished { replica: usize, report: Report },
+    /// Final per-replica serving report (response to `Finish`). `trace`
+    /// carries the engine's phase-span log when tracing was enabled —
+    /// the coordinator rebases and merges it into the fleet timeline.
+    Finished {
+        replica: usize,
+        report: Report,
+        trace: Option<crate::obs::trace::TraceLog>,
+    },
     /// The engine failed mid-serve; the replica is gone.
     Fatal { replica: usize, err: String },
 }
@@ -255,6 +269,10 @@ fn handle_cmd(
             let _ = events.send(ReplicaEvent::EvictDone { replica: index, adapter: name, err });
             Flow::Continue
         }
+        ReplicaCmd::EnableTrace => {
+            engine.enable_trace();
+            Flow::Continue
+        }
         ReplicaCmd::Finish { since } => Flow::Finish(since),
     }
 }
@@ -272,6 +290,7 @@ fn replica_main(
                 replica: index,
                 err: None,
                 obs: Some(e.obs()),
+                flightrec: Some(e.flight_recorder()),
             });
             e
         }
@@ -280,6 +299,7 @@ fn replica_main(
                 replica: index,
                 err: Some(format!("{e:#}")),
                 obs: None,
+                flightrec: None,
             });
             return;
         }
@@ -341,6 +361,7 @@ fn replica_main(
         publish(&engine, &gauges);
         engine.metrics.set_wall(since.elapsed());
         let report = engine.report();
-        let _ = events.send(ReplicaEvent::Finished { replica: index, report });
+        let trace = engine.take_trace();
+        let _ = events.send(ReplicaEvent::Finished { replica: index, report, trace });
     }
 }

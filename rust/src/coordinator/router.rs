@@ -3,7 +3,12 @@
 //! The coordinator assembles a [`ReplicaView`] per replica (its own
 //! in-flight bookkeeping + the replica-published gauges) and asks
 //! [`choose`] for a placement. Keeping this free of channels and threads
-//! makes every policy unit-testable.
+//! makes every policy unit-testable. When fleet tracing is on, the
+//! coordinator records the full scored candidate set (one
+//! [`crate::obs::trace::Candidate`] per view) plus the chosen replica
+//! into the routing-decision span, so a Perfetto timeline shows not just
+//! *where* a request went but what the alternatives looked like at that
+//! instant.
 
 use anyhow::{bail, Result};
 use std::time::Duration;

@@ -22,6 +22,7 @@ use crate::kvcache::KvCache;
 use crate::memsim::DeviceMemory;
 use crate::metrics::{MetricsCollector, Report, RequestRecord};
 use crate::model::ModelConfig;
+use crate::obs::flightrec::{EventKind, FlightRecorder};
 use crate::obs::trace::{RequestSpan, TraceLog};
 use crate::obs::{ObsRegistry, StatsSnapshot};
 use crate::runtime::{
@@ -215,6 +216,15 @@ pub struct Engine {
     /// exported as Chrome-trace JSON by [`Engine::write_trace`]). Spans
     /// are recorded only at completion/abort, never per step.
     trace: Option<TraceLog>,
+    /// Always-on black-box flight recorder: bounded ring of recent
+    /// request/step events, recorded allocation-free from the step loop
+    /// and shared (`Arc`) with dump surfaces (the NDJSON `flightrec`
+    /// frame, the coordinator's abort path).
+    flightrec: Arc<FlightRecorder>,
+    /// When this engine was built — the time origin of both the trace
+    /// log and the flight recorder, so stamps taken before
+    /// [`Engine::enable_trace`] keep their real offsets.
+    constructed: Instant,
     rng: Pcg,
     next_seq: u64,
     /// EWMA of recent step wall time (seconds), split by step shape:
@@ -265,6 +275,7 @@ impl Engine {
     ) -> Result<Engine> {
         let sched_cfg = Self::sched_config(&cfg, opts);
         let obs = Arc::new(ObsRegistry::new(cfg.max_adapters));
+        let constructed = Instant::now();
         let mut engine = Engine {
             ws: StepWorkspace::new(&sched_cfg),
             scheduler: Scheduler::new(sched_cfg),
@@ -273,6 +284,8 @@ impl Engine {
             metrics: MetricsCollector::new(),
             obs,
             trace: None,
+            flightrec: Arc::new(FlightRecorder::with_origin(constructed)),
+            constructed,
             rng: Pcg::with_stream(opts.seed, 555),
             next_seq: 1,
             ewma_prefill: 0.0,
@@ -564,6 +577,20 @@ impl Engine {
         self.sync_device_state()
     }
 
+    /// Stable ordinal of a typed rejection for the flight recorder's
+    /// fixed-width event payload (one `u64` per event — no room for the
+    /// error string itself).
+    fn reject_ordinal(e: &SubmitError) -> u64 {
+        match e {
+            SubmitError::UnknownAdapter(_) => 0,
+            SubmitError::QueueFull => 1,
+            SubmitError::Shed => 2,
+            SubmitError::ShuttingDown => 3,
+            SubmitError::DeadlineUnmeetable => 4,
+            SubmitError::Invalid(_) => 5,
+        }
+    }
+
     /// Submit a request (legacy convenience): the typed
     /// [`Engine::submit_request`] with the handle reduced to its id.
     /// Token events are discarded; completions are still returned by
@@ -646,12 +673,14 @@ impl Engine {
             Err(e) => {
                 self.metrics.record_rejected();
                 self.obs.record_rejected();
+                self.flightrec.record(EventKind::Reject, 0, -1, Self::reject_ordinal(&e));
                 return Err(e);
             }
         };
         self.obs.record_submitted(aid);
         let id = self.next_seq;
         self.next_seq += 1;
+        self.flightrec.record(EventKind::Submit, id, aid, req.prompt.len() as u64);
         let mut seq = SeqState::new(
             id,
             aid,
@@ -660,6 +689,7 @@ impl Engine {
             req.max_new_tokens.max(1),
             req.sampling,
         );
+        seq.trace = req.trace.unwrap_or(0);
         if let Some(d) = req.deadline {
             seq.deadline = Some(Instant::now() + d);
             self.has_deadlines = true;
@@ -679,6 +709,7 @@ impl Engine {
             Some(seq) => {
                 self.metrics.record_aborted(false);
                 self.obs.record_aborted(seq.aid);
+                self.flightrec.record(EventKind::Abort, id, seq.aid, 0);
                 self.trace_request(&seq, "cancelled");
                 self.finish_stream(id, AbortReason::Cancelled);
                 true
@@ -693,6 +724,8 @@ impl Engine {
         let Some(trace) = self.trace.as_mut() else { return };
         let span = RequestSpan {
             id: seq.id,
+            trace: seq.trace,
+            pid: 1,
             adapter: seq.adapter.clone().unwrap_or_else(|| "base".into()),
             outcome,
             arrival_us: trace.rel_us(seq.arrival),
@@ -734,6 +767,7 @@ impl Engine {
         for seq in expired {
             self.metrics.record_aborted(true);
             self.obs.record_aborted(seq.aid);
+            self.flightrec.record(EventKind::Abort, seq.id, seq.aid, 1);
             self.trace_request(&seq, "deadline");
             self.finish_stream(seq.id, AbortReason::DeadlineExceeded);
         }
@@ -798,6 +832,9 @@ impl Engine {
             };
             let first = self.scheduler.push_token(r.seq, tok)?;
             self.obs.record_token(r.aid);
+            if first {
+                self.flightrec.record(EventKind::FirstToken, r.seq, r.aid, tok as u32 as u64);
+            }
             // stream the token while the request is still in flight —
             // TTFT is only real if the first token leaves the engine now
             if let Some(tx) = self.streams.get(&r.seq) {
@@ -845,6 +882,7 @@ impl Engine {
             batch.prefill_tokens as u64,
             batch.decode_tokens as u64,
         );
+        self.flightrec.record(EventKind::Step, 0, -1, wall.as_micros() as u64);
         self.obs.set_gauges(
             self.kv.free_slots() as u64,
             self.scheduler.waiting_len() as u64,
@@ -861,6 +899,7 @@ impl Engine {
                     (first - seq.arrival).as_micros() as u64,
                     (end - seq.arrival).as_micros() as u64,
                 );
+                self.flightrec.record(EventKind::Done, seq.id, seq.aid, outputs as u64);
                 self.trace_request(&seq, "done");
                 let record = RequestRecord {
                     id: seq.id,
@@ -926,8 +965,25 @@ impl Engine {
     /// accumulate until [`Engine::write_trace`] / session reset.
     pub fn enable_trace(&mut self) {
         if self.trace.is_none() {
-            self.trace = Some(TraceLog::new());
+            // Anchor the origin at engine construction, not at
+            // enable-time: phase stamps taken before tracing was turned
+            // on (e.g. a request admitted just prior) would otherwise
+            // all saturate to 0 and collapse into one point.
+            self.trace = Some(TraceLog::with_origin(self.constructed));
         }
+    }
+
+    /// Hand the collected trace log to the caller (fleet replicas ship
+    /// it to the coordinator at drain for the merged timeline). Tracing
+    /// stops until [`Engine::enable_trace`] is called again.
+    pub fn take_trace(&mut self) -> Option<TraceLog> {
+        self.trace.take()
+    }
+
+    /// Shared handle to this engine's always-on flight recorder (the
+    /// black-box ring of recent request/step events).
+    pub fn flight_recorder(&self) -> Arc<FlightRecorder> {
+        Arc::clone(&self.flightrec)
     }
 
     /// Spans collected so far (0 when tracing is disabled).
@@ -965,7 +1021,7 @@ impl Engine {
         self.metrics = MetricsCollector::new();
         self.obs.reset();
         if self.trace.is_some() {
-            self.trace = Some(TraceLog::new());
+            self.trace = Some(TraceLog::with_origin(self.constructed));
         }
         self.streams.clear();
         self.shutting_down = false;
@@ -1001,5 +1057,9 @@ impl ServingBackend for Engine {
 
     fn stats(&mut self) -> Option<StatsSnapshot> {
         Some(self.stats_snapshot())
+    }
+
+    fn flightrec(&mut self) -> Option<crate::util::json::Json> {
+        Some(crate::obs::flightrec::dump(&[(0, &*self.flightrec)]))
     }
 }

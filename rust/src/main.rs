@@ -56,6 +56,7 @@ use expertweave::workload::OpenLoopSpec;
 use std::path::PathBuf;
 
 fn main() {
+    expertweave::obs::expo::mark_process_start();
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         eprintln!(
@@ -110,6 +111,37 @@ fn spawn_metrics(
 fn artifact_set(config: &str) -> Result<ArtifactSet> {
     let dir = PathBuf::from("artifacts").join(config);
     ArtifactSet::load(&dir)
+}
+
+/// Write the merged fleet Chrome trace and its flight-recorder sidecar
+/// (the trace path with its extension replaced by `flightrec.json`)
+/// when `--trace-out` was given.
+fn write_fleet_trace(
+    a: &Args,
+    trace: Option<&expertweave::obs::trace::TraceLog>,
+    recorders: &[std::sync::Arc<expertweave::obs::flightrec::FlightRecorder>],
+) -> Result<()> {
+    let Some(path) = a.get("trace-out") else {
+        return Ok(());
+    };
+    let path = PathBuf::from(path);
+    let Some(t) = trace else {
+        bail!("--trace-out was given but no trace was collected");
+    };
+    t.write(&path).with_context(|| format!("writing trace to {}", path.display()))?;
+    log_info!(
+        "fleet",
+        "wrote merged fleet trace ({} request span(s)) to {}",
+        t.len(),
+        path.display()
+    );
+    let pairs: Vec<(usize, &expertweave::obs::flightrec::FlightRecorder)> =
+        recorders.iter().enumerate().map(|(i, fr)| (i, &**fr)).collect();
+    let dump = expertweave::obs::flightrec::dump(&pairs);
+    let fr_path = path.with_extension("flightrec.json");
+    std::fs::write(&fr_path, format!("{dump}\n"))?;
+    log_info!("fleet", "wrote flight-recorder dump to {}", fr_path.display());
+    Ok(())
 }
 
 fn serve(argv: Vec<String>) -> Result<()> {
@@ -207,6 +239,13 @@ fn serve(argv: Vec<String>) -> Result<()> {
                 engine.trace_len(),
                 path.display()
             );
+            // the black-box dump rides along: recent request/step events
+            // from the always-on flight recorder
+            let fr = engine.flight_recorder();
+            let dump = expertweave::obs::flightrec::dump(&[(0, &*fr)]);
+            let fr_path = path.with_extension("flightrec.json");
+            std::fs::write(&fr_path, format!("{dump}\n"))?;
+            log_info!("serve", "wrote flight-recorder dump to {}", fr_path.display());
         }
         Ok(())
     };
@@ -298,6 +337,7 @@ fn fleet(argv: Vec<String>) -> Result<()> {
     .opt("policy", Some("affinity"), "rr|jsq|affinity|deadline")
     .opt("listen", None, "serve NDJSON requests on this TCP addr instead of replaying")
     .opt("metrics-listen", None, "serve Prometheus text metrics (/metrics) on this TCP addr")
+    .opt("trace-out", None, "write the merged fleet Chrome-trace JSON to this path")
     .opt("lambda", Some("24.0"), "aggregate arrival rate (req/s)")
     .opt("alpha", Some("0.3"), "power-law skew (1 = uniform)")
     .opt("horizon", Some("6.0"), "trace horizon (s)")
@@ -384,6 +424,10 @@ fn fleet(argv: Vec<String>) -> Result<()> {
             },
             adapters,
         )?;
+        if a.get("trace-out").is_some() {
+            coord.enable_trace()?;
+        }
+        let recorders = coord.flight_recorders();
         let mut metrics = spawn_metrics(&a, coord.obs_registries())?;
         // run() returns once a client drained the fleet: every replica
         // is idle, so finish() only collects reports and joins threads
@@ -391,7 +435,8 @@ fn fleet(argv: Vec<String>) -> Result<()> {
         if let Some(l) = metrics.as_mut() {
             l.shutdown();
         }
-        let (per_replica, stats) = coord.finish(started)?;
+        let (per_replica, stats, trace) = coord.finish_traced(started)?;
+        write_fleet_trace(&a, trace.as_ref(), &recorders)?;
         for (i, r) in per_replica.iter().enumerate() {
             println!("{}", r.row(&format!("replica-{i}")));
         }
@@ -410,7 +455,7 @@ fn fleet(argv: Vec<String>) -> Result<()> {
     // launched here (not via server::replay_fleet) so --metrics-listen
     // can observe the replicas while the replay runs
     let spawn_cfg = cfg.clone();
-    let coord = Coordinator::launch(
+    let mut coord = Coordinator::launch(
         coord_cfg,
         move |i| {
             let cfg = spawn_cfg.clone();
@@ -428,11 +473,16 @@ fn fleet(argv: Vec<String>) -> Result<()> {
         },
         adapters,
     )?;
+    if a.get("trace-out").is_some() {
+        coord.enable_trace()?;
+    }
+    let recorders = coord.flight_recorders();
     let mut metrics = spawn_metrics(&a, coord.obs_registries())?;
     let outcome = coord.replay(&trace)?;
     if let Some(l) = metrics.as_mut() {
         l.shutdown();
     }
+    write_fleet_trace(&a, outcome.trace.as_ref(), &recorders)?;
     println!("{}", outcome.report.row(&format!("fleet/{policy}")));
     for (i, r) in outcome.per_replica.iter().enumerate() {
         println!("{}", r.row(&format!("  replica-{i}")));
@@ -533,6 +583,7 @@ fn loadgen(argv: Vec<String>) -> Result<()> {
         let row = expertweave::workload::openloop::run_fleet_open_loop(&spec, policy)?;
         println!("{}", row.outcome.row(&policy.to_string()));
         println!("  {}", row.stats.row());
+        println!("  {}", row.phases.row());
         rows.push(row);
     }
     let json = expertweave::workload::openloop::fleet_online_json(&spec, &rows);

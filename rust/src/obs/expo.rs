@@ -17,12 +17,23 @@ use std::fmt::Write as _;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
 
 /// Escape a label value per the exposition format.
 fn label(v: &str) -> String {
     v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Process start anchor for `expertweave_uptime_seconds`. Set once by
+/// [`mark_process_start`] (the CLI calls it first thing in `main`);
+/// falls back to first-render time when embedding code never did.
+static PROCESS_START: OnceLock<Instant> = OnceLock::new();
+
+/// Anchor the uptime gauge at the caller's notion of process start
+/// (idempotent — the first call wins).
+pub fn mark_process_start() {
+    let _ = PROCESS_START.set(Instant::now());
 }
 
 fn histo(out: &mut String, name: &str, replica: usize, h: &super::HistoSnapshot) {
@@ -52,6 +63,23 @@ pub fn render(regs: &[Arc<ObsRegistry>]) -> String {
         merged.merge(s);
     }
     let mut out = String::with_capacity(4096);
+
+    // build identity first: scrapers join on this to tag every other
+    // family with the running version/commit
+    let _ = writeln!(out, "# HELP expertweave_build_info Build metadata; the value is always 1.");
+    let _ = writeln!(out, "# TYPE expertweave_build_info gauge");
+    let version = env!("CARGO_PKG_VERSION");
+    let git = option_env!("EXPERTWEAVE_GIT_SHA").unwrap_or("unknown");
+    let _ = writeln!(
+        out,
+        "expertweave_build_info{{version=\"{}\",git=\"{}\"}} 1",
+        label(version),
+        label(git)
+    );
+    let uptime = PROCESS_START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let _ = writeln!(out, "# HELP expertweave_uptime_seconds Seconds since process start.");
+    let _ = writeln!(out, "# TYPE expertweave_uptime_seconds gauge");
+    let _ = writeln!(out, "expertweave_uptime_seconds {uptime:.3}");
 
     let counter = |out: &mut String, name: &str, help: &str, get: &dyn Fn(&StatsSnapshot) -> u64| {
         let _ = writeln!(out, "# HELP {name} {help}");
@@ -289,6 +317,9 @@ mod tests {
         // HELP/TYPE precede every family
         assert!(page.contains("# TYPE expertweave_ttft_us histogram"));
         assert!(page.contains("# TYPE expertweave_kv_free_slots gauge"));
+        // build identity + uptime lead the page
+        assert!(page.contains("expertweave_build_info{version=\""));
+        assert!(page.contains("expertweave_uptime_seconds"));
     }
 
     #[test]

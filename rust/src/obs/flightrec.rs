@@ -1,0 +1,340 @@
+//! Always-on black-box flight recorder: a fixed-capacity, preallocated
+//! ring of recent request/step events per engine.
+//!
+//! `--trace-out` tracing is opt-in, so the incident you actually care
+//! about is usually the one you were *not* tracing. The flight recorder
+//! closes that gap the way an aircraft recorder does: it is always
+//! recording into a bounded ring, overwriting the oldest events, and is
+//! dumped as JSON only when someone asks — on a replica abort, at
+//! drain, or via the NDJSON `{"op":"flightrec"}` frame (protocol v3,
+//! docs/PROTOCOL.md). The last [`FLIGHTREC_CAPACITY`] events preceding
+//! an incident are reconstructable even when nothing was enabled.
+//!
+//! Recording must therefore be as cheap as the obs counters it sits
+//! next to: zero heap allocations, no locks, no CAS loops. One
+//! [`FlightRecorder::record`] is a relaxed `fetch_add` on the cursor
+//! plus five relaxed/release stores into a preallocated slot
+//! (`tests/hotpath_alloc.rs` proves the steady-state decode step stays
+//! at 0 allocations with the recorder live). The price is the classic
+//! black-box trade: a reader racing a writer that has lapped the ring
+//! can observe a torn slot (fields from two different events). Readers
+//! detect *dropped* history via the cursor, and torn slots are bounded
+//! to the ring's write frontier — acceptable for a post-incident
+//! artifact, which is a reconstruction aid, not an audit log.
+
+use crate::util::json::{arr, obj, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Ring capacity (events). Power of two so the slot index is a mask.
+pub const FLIGHTREC_CAPACITY: usize = 4096;
+
+/// What happened. Stored in the slot as a `u32` discriminant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u32)]
+pub enum EventKind {
+    /// A request was admitted (`value` = prompt tokens).
+    Submit = 1,
+    /// A submit was refused (`value` = [`crate::serving::SubmitError`]
+    /// ordinal).
+    Reject = 2,
+    /// One engine step retired (`value` = step wall µs; `id` = step
+    /// counter).
+    Step = 3,
+    /// A request produced its first output token (`value` = the token).
+    FirstToken = 4,
+    /// A request completed (`value` = output tokens generated).
+    Done = 5,
+    /// An admitted request aborted (`value`: 0 = cancelled,
+    /// 1 = deadline).
+    Abort = 6,
+}
+
+impl EventKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::Reject => "reject",
+            EventKind::Step => "step",
+            EventKind::FirstToken => "first_token",
+            EventKind::Done => "done",
+            EventKind::Abort => "abort",
+        }
+    }
+
+    fn from_u32(v: u32) -> Option<EventKind> {
+        Some(match v {
+            1 => EventKind::Submit,
+            2 => EventKind::Reject,
+            3 => EventKind::Step,
+            4 => EventKind::FirstToken,
+            5 => EventKind::Done,
+            6 => EventKind::Abort,
+            _ => return None,
+        })
+    }
+}
+
+/// One preallocated ring slot. `seq` is the 1-based global sequence
+/// number of the event occupying the slot (0 = never written); it is
+/// stored last with `Release` so a fully-published slot is observable
+/// as such, while a torn read under an active lap stays detectable by
+/// its out-of-window `seq`.
+#[derive(Debug)]
+struct Slot {
+    seq: AtomicU64,
+    t_us: AtomicU64,
+    /// `(kind as u64) << 32 | aid as u32` (aid -1 = base → 0xffffffff).
+    kind_aid: AtomicU64,
+    id: AtomicU64,
+    value: AtomicU64,
+}
+
+/// A decoded event out of a [`FlightRecorder::snapshot`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlightEvent {
+    /// 1-based global sequence number (gaps = ring overwrites).
+    pub seq: u64,
+    /// Microseconds since the recorder's origin (engine construction).
+    pub t_us: u64,
+    pub kind: EventKind,
+    /// Adapter id (-1 = base model; meaningless for `Step`).
+    pub aid: i32,
+    /// Request id (engine-local), or the step counter for `Step`.
+    pub id: u64,
+    pub value: u64,
+}
+
+/// Point-in-time copy of one recorder's ring.
+#[derive(Debug, Clone)]
+pub struct FlightSnapshot {
+    pub capacity: usize,
+    /// Total events ever recorded.
+    pub recorded: u64,
+    /// Events overwritten before this snapshot could see them.
+    pub dropped: u64,
+    /// Surviving events, oldest first.
+    pub events: Vec<FlightEvent>,
+}
+
+/// The per-engine ring. Shared as an `Arc`: the engine records, the
+/// coordinator (or the NDJSON frontend) snapshots from any thread.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    origin: Instant,
+    cursor: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FlightRecorder {
+    pub fn new() -> Self {
+        Self::with_origin(Instant::now())
+    }
+
+    /// A recorder whose `t_us` zero is `origin` (engines pass their
+    /// construction instant, the same origin their [`super::trace`]
+    /// log uses, so the two artifacts line up).
+    pub fn with_origin(origin: Instant) -> Self {
+        let slots = (0..FLIGHTREC_CAPACITY)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                t_us: AtomicU64::new(0),
+                kind_aid: AtomicU64::new(0),
+                id: AtomicU64::new(0),
+                value: AtomicU64::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        FlightRecorder { origin, cursor: AtomicU64::new(0), slots }
+    }
+
+    /// Record one event. Wait-free, allocation-free: one relaxed
+    /// `fetch_add` plus five stores into a preallocated slot.
+    #[inline]
+    pub fn record(&self, kind: EventKind, id: u64, aid: i32, value: u64) {
+        let n = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(n as usize) & (FLIGHTREC_CAPACITY - 1)];
+        let t_us = self.origin.elapsed().as_micros() as u64;
+        slot.t_us.store(t_us, Ordering::Relaxed);
+        slot.kind_aid
+            .store(((kind as u64) << 32) | (aid as u32 as u64), Ordering::Relaxed);
+        slot.id.store(id, Ordering::Relaxed);
+        slot.value.store(value, Ordering::Relaxed);
+        // publish last: a slot is only as valid as its seq
+        slot.seq.store(n + 1, Ordering::Release);
+    }
+
+    /// Total events ever recorded.
+    pub fn recorded(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Copy the surviving window out of the ring, oldest first. Slots
+    /// whose `seq` falls outside the live window (unwritten, lapped
+    /// mid-copy, or torn) are skipped rather than misreported.
+    pub fn snapshot(&self) -> FlightSnapshot {
+        let recorded = self.cursor.load(Ordering::Acquire);
+        let window = recorded.min(FLIGHTREC_CAPACITY as u64);
+        let oldest = recorded - window; // seqs (oldest, recorded] survive
+        let mut events = Vec::with_capacity(window as usize);
+        for slot in self.slots.iter() {
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq <= oldest || seq > recorded {
+                continue;
+            }
+            let kind_aid = slot.kind_aid.load(Ordering::Relaxed);
+            let Some(kind) = EventKind::from_u32((kind_aid >> 32) as u32) else {
+                continue;
+            };
+            events.push(FlightEvent {
+                seq,
+                t_us: slot.t_us.load(Ordering::Relaxed),
+                kind,
+                aid: (kind_aid & 0xffff_ffff) as u32 as i32,
+                id: slot.id.load(Ordering::Relaxed),
+                value: slot.value.load(Ordering::Relaxed),
+            });
+        }
+        events.sort_unstable_by_key(|e| e.seq);
+        FlightSnapshot {
+            capacity: FLIGHTREC_CAPACITY,
+            recorded,
+            dropped: oldest,
+            events,
+        }
+    }
+}
+
+impl FlightSnapshot {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("recorded", Json::Int(self.recorded as i64)),
+            ("dropped", Json::Int(self.dropped as i64)),
+            (
+                "events",
+                arr(self.events.iter().map(|e| {
+                    obj(vec![
+                        ("seq", Json::Int(e.seq as i64)),
+                        ("t_us", Json::Int(e.t_us as i64)),
+                        ("kind", Json::Str(e.kind.as_str().into())),
+                        ("aid", Json::Int(e.aid as i64)),
+                        ("id", Json::Int(e.id as i64)),
+                        ("value", Json::Int(e.value as i64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// The dump document for one engine or a whole fleet: one `replicas`
+/// entry per recorder (a standalone engine is replica 0). This is the
+/// body of the `{"op":"flightrec"}` response frame and of the
+/// `<trace-out>.flightrec.json` file written at shutdown.
+pub fn dump(recorders: &[(usize, &FlightRecorder)]) -> Json {
+    obj(vec![
+        ("capacity", Json::Int(FLIGHTREC_CAPACITY as i64)),
+        (
+            "replicas",
+            arr(recorders.iter().map(|(i, r)| {
+                let snap = r.snapshot();
+                let Json::Obj(mut body) = snap.to_json() else { unreachable!() };
+                body.insert("replica".into(), Json::Int(*i as i64));
+                Json::Obj(body)
+            })),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots_in_order() {
+        let r = FlightRecorder::new();
+        r.record(EventKind::Submit, 1, -1, 4);
+        r.record(EventKind::Step, 1, -1, 120);
+        r.record(EventKind::FirstToken, 1, 0, 17);
+        r.record(EventKind::Done, 1, 0, 8);
+        let snap = r.snapshot();
+        assert_eq!(snap.recorded, 4);
+        assert_eq!(snap.dropped, 0);
+        let kinds: Vec<EventKind> = snap.events.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![EventKind::Submit, EventKind::Step, EventKind::FirstToken, EventKind::Done]
+        );
+        assert_eq!(snap.events[0].value, 4);
+        assert_eq!(snap.events[2].aid, 0);
+        assert_eq!(snap.events[0].aid, -1, "base traffic round-trips aid -1");
+        // seqs are 1-based and strictly increasing
+        let seqs: Vec<u64> = snap.events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_reports_drops() {
+        let r = FlightRecorder::new();
+        let total = FLIGHTREC_CAPACITY as u64 + 100;
+        for i in 0..total {
+            r.record(EventKind::Step, i, -1, i);
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.recorded, total);
+        assert_eq!(snap.dropped, 100);
+        assert_eq!(snap.events.len(), FLIGHTREC_CAPACITY);
+        assert_eq!(snap.events.first().unwrap().seq, 101, "oldest 100 overwritten");
+        assert_eq!(snap.events.last().unwrap().seq, total);
+        // the surviving window is contiguous
+        for w in snap.events.windows(2) {
+            assert_eq!(w[0].seq + 1, w[1].seq);
+        }
+    }
+
+    #[test]
+    fn dump_shape_is_stable() {
+        let a = FlightRecorder::new();
+        let b = FlightRecorder::new();
+        a.record(EventKind::Submit, 1, -1, 3);
+        b.record(EventKind::Abort, 2, 0, 1);
+        let doc = Json::parse(&dump(&[(0, &a), (1, &b)]).to_string()).unwrap();
+        assert_eq!(doc.at(&["capacity"]).as_i64(), Some(FLIGHTREC_CAPACITY as i64));
+        let replicas = doc.at(&["replicas"]).as_arr().unwrap();
+        assert_eq!(replicas.len(), 2);
+        assert_eq!(replicas[0].at(&["replica"]).as_i64(), Some(0));
+        assert_eq!(replicas[1].at(&["replica"]).as_i64(), Some(1));
+        let ev = &replicas[1].at(&["events"]).as_arr().unwrap()[0];
+        assert_eq!(ev.at(&["kind"]).as_str(), Some("abort"));
+        assert_eq!(ev.at(&["value"]).as_i64(), Some(1));
+        assert_eq!(ev.at(&["aid"]).as_i64(), Some(0));
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let r = std::sync::Arc::new(FlightRecorder::new());
+        let writer = {
+            let r = r.clone();
+            std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    r.record(EventKind::Step, i, -1, i);
+                }
+            })
+        };
+        // reader races the writer: every decoded event must be coherent
+        for _ in 0..50 {
+            let snap = r.snapshot();
+            for e in &snap.events {
+                assert_eq!(e.kind, EventKind::Step);
+            }
+        }
+        writer.join().unwrap();
+        assert_eq!(r.recorded(), 10_000);
+    }
+}

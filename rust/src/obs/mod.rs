@@ -35,6 +35,7 @@
 //! the fleet coordinator aggregates per-replica families.
 
 pub mod expo;
+pub mod flightrec;
 pub mod trace;
 
 use crate::util::json::{arr, obj, Json};

@@ -1,19 +1,30 @@
 //! Per-request phase tracing, exportable as Chrome-trace JSON
-//! (`chrome://tracing`, Perfetto).
+//! (`chrome://tracing`, Perfetto) — for one engine or for a whole fleet.
 //!
 //! The engine stamps request phases in the scheduler's per-slot state
 //! (queued → admitted → first-scheduled → prefill-done → decode →
 //! done/aborted; see [`crate::scheduler::SeqState`]) and, when tracing is
-//! enabled, folds each finished request into a [`RequestSpan`] here. The
-//! span timeline renders as one track per request (`tid` = request id,
-//! `cat` = adapter), so adapter interference and queueing delay are
-//! visible at a glance.
+//! enabled, folds each finished request into a [`RequestSpan`] here.
+//!
+//! On a fleet, the coordinator keeps its own `TraceLog` for door-side
+//! events: a [`RouteSpan`] per routed request (admission queue wait +
+//! routing decision with the scored candidate set) and a [`DoorEvent`]
+//! per request refused at the door (shed, queue-full, unmeetable
+//! deadline, ...). At drain it [`TraceLog::absorb`]s every replica's
+//! log into one merged timeline: `pid` 0 is the coordinator, `pid`
+//! `replica + 1` is that replica's engine, and replica-local request
+//! ids are re-keyed to fleet request ids so one request is one `tid`
+//! across processes. Every span carries the request's end-to-end
+//! **trace id** (client-supplied via the NDJSON `trace` field, or the
+//! fleet request id) in its `args`, which is how a Perfetto query ties
+//! the door-admission span to the replica's decode span.
 //!
 //! Tracing is opt-in (`--trace-out`) and entirely off the steady-state
-//! path: spans are recorded only at request completion/abort, never per
-//! step.
+//! path: spans are recorded only at routing/completion/abort, never per
+//! step. (The always-on counterpart is [`crate::obs::flightrec`].)
 
 use crate::util::json::{arr, obj, Json};
+use std::collections::HashMap;
 use std::time::Instant;
 
 /// One request's phase timeline, in microseconds relative to the trace
@@ -22,6 +33,12 @@ use std::time::Instant;
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RequestSpan {
     pub id: u64,
+    /// End-to-end trace id tying this span to coordinator-side spans
+    /// (0 = none: standalone engine with no client-supplied id).
+    pub trace: u64,
+    /// Chrome-trace process id this span renders under (1 for a
+    /// standalone engine; the fleet merge rewrites it to `replica + 1`).
+    pub pid: u64,
     /// Adapter name, or `"base"`.
     pub adapter: String,
     /// `"done"`, `"cancelled"` or `"deadline"`.
@@ -34,17 +51,64 @@ pub struct RequestSpan {
     pub finished_us: u64,
 }
 
-/// Accumulates [`RequestSpan`]s against a fixed time origin and writes
-/// them out in the Chrome trace-event format.
+/// One scored replica in a routing decision (a row of the candidate set
+/// the policy chose from).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub replica: usize,
+    pub inflight: usize,
+    pub kv_free: usize,
+    pub expected_wait_us: u64,
+    pub resident: bool,
+}
+
+/// Coordinator-side timeline of one routed request: admission queue
+/// wait (`arrival → admitted`) and the routing decision
+/// (`admitted → routed`), with the policy, the scored candidate set,
+/// and the chosen replica.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteSpan {
+    /// Fleet request id (`tid` of the coordinator track).
+    pub rid: u64,
+    /// End-to-end trace id (client-supplied or `rid`).
+    pub trace: u64,
+    pub adapter: String,
+    pub policy: &'static str,
+    /// The replica the request was placed on.
+    pub replica: usize,
+    /// The adapter was already resident there (affinity hit).
+    pub resident: bool,
+    pub candidates: Vec<Candidate>,
+    pub arrival_us: u64,
+    pub admitted_us: u64,
+    pub routed_us: u64,
+}
+
+/// A request refused at the fleet door (never placed): shed, queue
+/// bound, unknown adapter, unmeetable deadline, shutdown.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DoorEvent {
+    pub trace: u64,
+    pub adapter: String,
+    /// The typed rejection (`crate::serving::SubmitError::code`).
+    pub code: &'static str,
+    pub at_us: u64,
+}
+
+/// Accumulates [`RequestSpan`]s (and, on a coordinator, [`RouteSpan`]s /
+/// [`DoorEvent`]s) against a fixed time origin and writes them out in
+/// the Chrome trace-event format.
 #[derive(Debug)]
 pub struct TraceLog {
     origin: Instant,
     spans: Vec<RequestSpan>,
+    routes: Vec<RouteSpan>,
+    doors: Vec<DoorEvent>,
 }
 
 impl Default for TraceLog {
     fn default() -> Self {
-        TraceLog { origin: Instant::now(), spans: Vec::new() }
+        Self::with_origin(Instant::now())
     }
 }
 
@@ -53,8 +117,21 @@ impl TraceLog {
         Self::default()
     }
 
+    /// A log whose time zero is `origin`. Engines anchor this at
+    /// *construction* (not at `enable_trace`) so stamps of requests
+    /// queued before tracing was turned on keep their real offsets
+    /// instead of collapsing onto t=0.
+    pub fn with_origin(origin: Instant) -> Self {
+        TraceLog { origin, spans: Vec::new(), routes: Vec::new(), doors: Vec::new() }
+    }
+
+    pub fn origin(&self) -> Instant {
+        self.origin
+    }
+
     /// Microseconds since the trace origin (saturating at 0 for stamps
-    /// that predate it, e.g. requests queued before tracing started).
+    /// that predate it — which, with the origin anchored at engine
+    /// construction, cannot happen for stamps the engine itself takes).
     pub fn rel_us(&self, t: Instant) -> u64 {
         t.saturating_duration_since(self.origin).as_micros() as u64
     }
@@ -63,23 +140,158 @@ impl TraceLog {
         self.spans.push(span);
     }
 
+    pub fn record_route(&mut self, span: RouteSpan) {
+        self.routes.push(span);
+    }
+
+    pub fn record_door(&mut self, ev: DoorEvent) {
+        self.doors.push(ev);
+    }
+
     pub fn len(&self) -> usize {
         self.spans.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.spans.is_empty()
+        self.spans.is_empty() && self.routes.is_empty() && self.doors.is_empty()
     }
 
     pub fn spans(&self) -> &[RequestSpan] {
         &self.spans
     }
 
-    /// The `{"traceEvents": [...]}` document. Phases become `ph:"X"`
-    /// complete events on track `tid` = request id; the first token is an
-    /// instant event on the same track.
+    pub fn routes(&self) -> &[RouteSpan] {
+        &self.routes
+    }
+
+    pub fn doors(&self) -> &[DoorEvent] {
+        &self.doors
+    }
+
+    /// Fold a replica engine's log into this (coordinator) log: rebase
+    /// every stamp from `other`'s origin onto ours (both origins come
+    /// from the same process-wide monotonic clock, so the shift is
+    /// exact), rewrite `pid` to the fleet-assigned process id, and
+    /// re-key replica-local request ids to fleet request ids via
+    /// `rekey` (trace id → fleet rid) so one request is one `tid`
+    /// across the merged timeline.
+    pub fn absorb(&mut self, other: TraceLog, pid: u64, rekey: &HashMap<u64, u64>) {
+        let fwd = other.origin.saturating_duration_since(self.origin).as_micros() as u64;
+        let back = self.origin.saturating_duration_since(other.origin).as_micros() as u64;
+        let shift = |us: u64| (us + fwd).saturating_sub(back);
+        for mut s in other.spans {
+            s.pid = pid;
+            if let Some(&rid) = rekey.get(&s.trace) {
+                s.id = rid;
+            }
+            s.arrival_us = shift(s.arrival_us);
+            s.admitted_us = s.admitted_us.map(shift);
+            s.first_scheduled_us = s.first_scheduled_us.map(shift);
+            s.prefill_done_us = s.prefill_done_us.map(shift);
+            s.first_token_us = s.first_token_us.map(shift);
+            s.finished_us = shift(s.finished_us);
+            self.spans.push(s);
+        }
+    }
+
+    /// The `{"traceEvents": [...]}` document. Request phases become
+    /// `ph:"X"` complete events on track `pid` = span's process,
+    /// `tid` = request id; coordinator route spans render on `pid` 0
+    /// (`door_admission` + `routing_decision`); door rejections are
+    /// instant events; process-name metadata labels each `pid` for
+    /// Perfetto.
     pub fn to_chrome_json(&self) -> Json {
         let mut events = Vec::new();
+        let fleet = !self.routes.is_empty() || !self.doors.is_empty();
+        // process-name metadata so Perfetto shows "coordinator" /
+        // "replica N" instead of bare pids
+        let mut pids: Vec<u64> = self.spans.iter().map(|s| s.pid).collect();
+        pids.sort_unstable();
+        pids.dedup();
+        let proc_name = |pid: u64, name: String| {
+            obj(vec![
+                ("name", Json::Str("process_name".into())),
+                ("ph", Json::Str("M".into())),
+                ("pid", Json::Int(pid as i64)),
+                ("args", obj(vec![("name", Json::Str(name))])),
+            ])
+        };
+        if fleet {
+            events.push(proc_name(0, "coordinator".into()));
+        }
+        for &pid in &pids {
+            let name =
+                if fleet { format!("replica {}", pid.saturating_sub(1)) } else { "engine".into() };
+            events.push(proc_name(pid, name));
+        }
+
+        for r in &self.routes {
+            let complete = |name: &str, ts: u64, end: u64, args: Json| {
+                obj(vec![
+                    ("name", Json::Str(name.into())),
+                    ("ph", Json::Str("X".into())),
+                    ("ts", Json::Int(ts as i64)),
+                    ("dur", Json::Int(end.saturating_sub(ts) as i64)),
+                    ("pid", Json::Int(0)),
+                    ("tid", Json::Int(r.rid as i64)),
+                    ("cat", Json::Str(r.adapter.clone())),
+                    ("args", args),
+                ])
+            };
+            events.push(complete(
+                "door_admission",
+                r.arrival_us,
+                r.admitted_us,
+                obj(vec![
+                    ("trace", Json::Int(r.trace as i64)),
+                    ("adapter", Json::Str(r.adapter.clone())),
+                ]),
+            ));
+            let candidates = arr(r
+                .candidates
+                .iter()
+                .map(|c| {
+                    obj(vec![
+                        ("replica", Json::Int(c.replica as i64)),
+                        ("inflight", Json::Int(c.inflight as i64)),
+                        ("kv_free", Json::Int(c.kv_free as i64)),
+                        ("expected_wait_us", Json::Int(c.expected_wait_us as i64)),
+                        ("resident", Json::Bool(c.resident)),
+                    ])
+                })
+                .collect());
+            events.push(complete(
+                "routing_decision",
+                r.admitted_us,
+                r.routed_us,
+                obj(vec![
+                    ("trace", Json::Int(r.trace as i64)),
+                    ("policy", Json::Str(r.policy.into())),
+                    ("replica", Json::Int(r.replica as i64)),
+                    ("resident", Json::Bool(r.resident)),
+                    ("candidates", candidates),
+                ]),
+            ));
+        }
+        for d in &self.doors {
+            events.push(obj(vec![
+                ("name", Json::Str(format!("shed:{}", d.code))),
+                ("ph", Json::Str("i".into())),
+                ("ts", Json::Int(d.at_us as i64)),
+                ("s", Json::Str("t".into())),
+                ("pid", Json::Int(0)),
+                ("tid", Json::Int(0)),
+                ("cat", Json::Str(d.adapter.clone())),
+                (
+                    "args",
+                    obj(vec![
+                        ("trace", Json::Int(d.trace as i64)),
+                        ("code", Json::Str(d.code.into())),
+                        ("adapter", Json::Str(d.adapter.clone())),
+                    ]),
+                ),
+            ]));
+        }
         for s in &self.spans {
             let complete = |name: &str, ts: u64, end: u64| {
                 obj(vec![
@@ -87,12 +299,13 @@ impl TraceLog {
                     ("ph", Json::Str("X".into())),
                     ("ts", Json::Int(ts as i64)),
                     ("dur", Json::Int(end.saturating_sub(ts) as i64)),
-                    ("pid", Json::Int(1)),
+                    ("pid", Json::Int(s.pid as i64)),
                     ("tid", Json::Int(s.id as i64)),
                     ("cat", Json::Str(s.adapter.clone())),
                     (
                         "args",
                         obj(vec![
+                            ("trace", Json::Int(s.trace as i64)),
                             ("adapter", Json::Str(s.adapter.clone())),
                             ("outcome", Json::Str(s.outcome.into())),
                         ]),
@@ -120,7 +333,7 @@ impl TraceLog {
                     ("ph", Json::Str("i".into())),
                     ("ts", Json::Int(t as i64)),
                     ("s", Json::Str("t".into())),
-                    ("pid", Json::Int(1)),
+                    ("pid", Json::Int(s.pid as i64)),
                     ("tid", Json::Int(s.id as i64)),
                     ("cat", Json::Str(s.adapter.clone())),
                 ]));
@@ -148,6 +361,8 @@ mod tests {
     fn span(id: u64, outcome: &'static str) -> RequestSpan {
         RequestSpan {
             id,
+            trace: 0,
+            pid: 1,
             adapter: "math".into(),
             outcome,
             arrival_us: 100,
@@ -166,6 +381,8 @@ mod tests {
         log.record(RequestSpan {
             // aborted while queued: only the queued phase renders
             id: 2,
+            trace: 0,
+            pid: 1,
             adapter: "base".into(),
             outcome: "cancelled",
             arrival_us: 10,
@@ -179,9 +396,9 @@ mod tests {
         // round-trips through the parser (valid JSON)
         let doc = Json::parse(&doc.to_string()).unwrap();
         let events = doc.at(&["traceEvents"]).as_arr().unwrap();
-        // request 1: queued, admitted, prefill, decode + first_token
-        // request 2: queued only
-        assert_eq!(events.len(), 6);
+        // process_name metadata + request 1 (queued, admitted, prefill,
+        // decode + first_token) + request 2 (queued only)
+        assert_eq!(events.len(), 7);
         let of = |id: i64, name: &str| {
             events
                 .iter()
@@ -200,6 +417,12 @@ mod tests {
         assert_eq!(queued2.at(&["dur"]).as_i64(), Some(30));
         assert_eq!(queued2.at(&["args", "outcome"]).as_str(), Some("cancelled"));
         assert!(of(2, "prefill").is_none(), "missing stamps truncate the timeline");
+        // a non-fleet log labels its single process "engine"
+        let meta = events
+            .iter()
+            .find(|e| e.at(&["name"]).as_str() == Some("process_name"))
+            .unwrap();
+        assert_eq!(meta.at(&["args", "name"]).as_str(), Some("engine"));
         // phases on one track tile without overlap
         let seq: Vec<(i64, i64)> = ["queued", "admitted", "prefill", "decode"]
             .iter()
@@ -225,13 +448,99 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// The satellite-1 regression: with the origin anchored at engine
+    /// construction, stamps taken *before* `enable_trace` keep distinct
+    /// positive offsets instead of all collapsing to 0.
     #[test]
-    fn rel_us_saturates_before_origin() {
-        let log = TraceLog::new();
-        let before = Instant::now().checked_sub(std::time::Duration::from_secs(1));
-        if let Some(t) = before {
-            assert_eq!(log.rel_us(t), 0);
-        }
-        assert!(log.is_empty());
+    fn pre_enable_stamps_keep_distinct_offsets() {
+        let constructed = Instant::now();
+        let t1 = constructed + std::time::Duration::from_micros(1_000);
+        let t2 = constructed + std::time::Duration::from_micros(2_500);
+        // tracing enabled long after both stamps were taken
+        let log = TraceLog::with_origin(constructed);
+        assert_eq!(log.rel_us(t1), 1_000);
+        assert_eq!(log.rel_us(t2), 2_500);
+        assert_ne!(log.rel_us(t1), log.rel_us(t2), "offsets must not collapse");
+        // the old behaviour (origin = enable time) collapsed both to 0
+        let late = TraceLog::with_origin(t2 + std::time::Duration::from_secs(1));
+        assert_eq!(late.rel_us(t1), 0);
+        assert_eq!(late.rel_us(t2), 0);
+    }
+
+    #[test]
+    fn absorb_rebases_rekeys_and_sets_pid() {
+        let base = Instant::now();
+        let mut fleet = TraceLog::with_origin(base);
+        fleet.record_route(RouteSpan {
+            rid: 42,
+            trace: 7,
+            adapter: "math".into(),
+            policy: "adapter-affinity",
+            replica: 1,
+            resident: true,
+            candidates: vec![Candidate {
+                replica: 1,
+                inflight: 0,
+                kv_free: 100,
+                expected_wait_us: 0,
+                resident: true,
+            }],
+            arrival_us: 10,
+            admitted_us: 12,
+            routed_us: 20,
+        });
+        // replica log whose origin is 1 ms after the fleet origin; its
+        // local request 3 carries trace id 7
+        let mut replica = TraceLog::with_origin(base + std::time::Duration::from_millis(1));
+        let mut s = span(3, "done");
+        s.trace = 7;
+        replica.record(s);
+        let rekey: HashMap<u64, u64> = [(7u64, 42u64)].into_iter().collect();
+        fleet.absorb(replica, 2, &rekey);
+        let merged = &fleet.spans()[0];
+        assert_eq!(merged.id, 42, "replica-local id re-keyed to the fleet rid");
+        assert_eq!(merged.pid, 2, "pid = replica + 1");
+        assert_eq!(merged.arrival_us, 1_100, "rebased onto the fleet origin");
+        assert_eq!(merged.finished_us, 1_900);
+        // rendering: coordinator + replica tracks in one document
+        let doc = Json::parse(&fleet.to_chrome_json().to_string()).unwrap();
+        let events = doc.at(&["traceEvents"]).as_arr().unwrap();
+        let routing = events
+            .iter()
+            .find(|e| e.at(&["name"]).as_str() == Some("routing_decision"))
+            .unwrap();
+        assert_eq!(routing.at(&["pid"]).as_i64(), Some(0));
+        assert_eq!(routing.at(&["tid"]).as_i64(), Some(42));
+        assert_eq!(routing.at(&["args", "replica"]).as_i64(), Some(1));
+        assert_eq!(routing.at(&["args", "trace"]).as_i64(), Some(7));
+        let decode = events
+            .iter()
+            .find(|e| e.at(&["name"]).as_str() == Some("decode"))
+            .unwrap();
+        assert_eq!(decode.at(&["pid"]).as_i64(), Some(2));
+        assert_eq!(decode.at(&["tid"]).as_i64(), Some(42));
+        assert_eq!(decode.at(&["args", "trace"]).as_i64(), Some(7));
+        // process labels for Perfetto
+        let names: Vec<&str> = events
+            .iter()
+            .filter(|e| e.at(&["name"]).as_str() == Some("process_name"))
+            .filter_map(|e| e.at(&["args", "name"]).as_str())
+            .collect();
+        assert!(names.contains(&"coordinator"));
+        assert!(names.contains(&"replica 1"));
+    }
+
+    /// An absorb in the other time direction: a replica constructed
+    /// *before* the fleet origin shifts backwards, saturating at 0.
+    #[test]
+    fn absorb_shifts_earlier_origins_back() {
+        let base = Instant::now();
+        let mut fleet = TraceLog::with_origin(base + std::time::Duration::from_millis(2));
+        let mut replica = TraceLog::with_origin(base);
+        replica.record(span(1, "done")); // arrival_us = 100
+        fleet.absorb(replica, 1, &HashMap::new());
+        let merged = &fleet.spans()[0];
+        assert_eq!(merged.arrival_us, 0, "pre-origin stamps clamp to 0");
+        assert_eq!(merged.finished_us, 0); // 900 µs < 2 ms shift
     }
 }

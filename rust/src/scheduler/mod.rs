@@ -76,6 +76,11 @@ pub fn seg_of(id: u64) -> i32 {
 #[derive(Debug, Clone)]
 pub struct SeqState {
     pub id: u64,
+    /// End-to-end trace id (0 = none). Set at submit from
+    /// [`crate::serving::ServeRequest::trace`]; carried into the
+    /// request's [`crate::obs::trace::RequestSpan`] so replica-local
+    /// spans join the fleet-wide timeline.
+    pub trace: u64,
     /// Adapter ID for rerouting (-1 = base model).
     pub aid: i32,
     pub adapter: Option<String>,
@@ -118,6 +123,7 @@ impl SeqState {
         tokens.reserve(max_new);
         SeqState {
             id,
+            trace: 0,
             aid,
             adapter,
             tokens,

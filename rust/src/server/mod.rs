@@ -127,6 +127,7 @@ pub fn replay_backend<B: ServingBackend>(
                 max_new_tokens: e.max_new_tokens,
                 sampling: Sampling::Greedy,
                 deadline: None,
+                trace: None,
             };
             match backend.submit(req) {
                 Ok(h) => handles.push(h),

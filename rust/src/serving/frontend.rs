@@ -324,7 +324,16 @@ fn parse_request(v: &Json) -> std::result::Result<ServeRequest, (String, String)
             t.as_f64().ok_or_else(|| bad("\"temperature\" must be a number"))? as f32,
         ),
     };
-    Ok(ServeRequest { adapter, prompt, max_new_tokens, sampling, deadline })
+    let trace = match v.get("trace") {
+        None | Some(Json::Null) => None,
+        Some(t) => Some(
+            t.as_i64()
+                .filter(|&x| x > 0)
+                .ok_or_else(|| bad("\"trace\" must be a positive integer"))?
+                as u64,
+        ),
+    };
+    Ok(ServeRequest { adapter, prompt, max_new_tokens, sampling, deadline, trace })
 }
 
 fn serve_loop<B: ServingBackend>(backend: &mut B, rx: &Receiver<Cmd>) -> Result<()> {
@@ -453,6 +462,35 @@ fn handle_cmd<B: ServingBackend>(
                         }
                     }
                 }
+                Some("flightrec") => {
+                    // black-box snapshot (PROTOCOL.md v3): the recent
+                    // request/step events from every engine's always-on
+                    // flight-recorder ring, answered inline like stats.
+                    let tag = parsed
+                        .get("id")
+                        .and_then(|i| i.as_str())
+                        .unwrap_or("")
+                        .to_string();
+                    match backend.flightrec() {
+                        Some(mut frame) => {
+                            if let Json::Obj(m) = &mut frame {
+                                m.insert("event".into(), Json::Str("flightrec".into()));
+                                if !tag.is_empty() {
+                                    m.insert("id".into(), Json::Str(tag));
+                                }
+                            }
+                            router.write_line(conn, &frame);
+                        }
+                        None => {
+                            let line = error_json(
+                                &tag,
+                                "unsupported",
+                                "this backend exposes no flight recorder",
+                            );
+                            router.write_line(conn, &line);
+                        }
+                    }
+                }
                 Some("cancel") => {
                     let tag = parsed
                         .get("id")
@@ -468,7 +506,7 @@ fn handle_cmd<B: ServingBackend>(
                     }
                 }
                 Some(other) => {
-                    let msg = format!("unknown op {other:?} (cancel|drain|stats)");
+                    let msg = format!("unknown op {other:?} (cancel|drain|stats|flightrec)");
                     let line = error_json("", "bad_request", &msg);
                     router.write_line(conn, &line);
                 }
@@ -714,6 +752,9 @@ impl ServingBackend for NdjsonClient {
         }
         if let Sampling::Temperature(t) = req.sampling {
             fields.push(("temperature", Json::Num(t as f64)));
+        }
+        if let Some(t) = req.trace {
+            fields.push(("trace", Json::Int(t as i64)));
         }
         let line = obj(fields);
         if !self.send_line(&line) {

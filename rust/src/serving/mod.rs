@@ -55,6 +55,12 @@ pub struct ServeRequest {
     /// expires while still queued is dropped before ever occupying a
     /// batch slot.
     pub deadline: Option<Duration>,
+    /// End-to-end trace id (client-supplied via the NDJSON `trace`
+    /// field, protocol v3). Propagated through routing into the
+    /// replica's phase spans so one request is traceable across the
+    /// whole fleet; `None` = let the backend assign one (the fleet
+    /// uses the request id).
+    pub trace: Option<u64>,
 }
 
 impl From<RequestSpec> for ServeRequest {
@@ -65,6 +71,7 @@ impl From<RequestSpec> for ServeRequest {
             max_new_tokens: spec.max_new_tokens,
             sampling: spec.sampling,
             deadline: None,
+            trace: None,
         }
     }
 }
@@ -238,6 +245,7 @@ impl std::error::Error for SubmitError {}
 ///         max_new_tokens: 1,
 ///         sampling: Sampling::Greedy,
 ///         deadline: None,
+///         trace: None,
 ///     })
 ///     .unwrap();
 /// assert!(handle.try_event().is_none(), "nothing pumped yet");
@@ -316,6 +324,7 @@ impl RequestHandle {
 ///         max_new_tokens: 2,
 ///         sampling: Sampling::Greedy,
 ///         deadline: None,
+///         trace: None,
 ///     })
 ///     .unwrap();
 /// while engine.pump().unwrap() {}
@@ -361,6 +370,16 @@ pub trait ServingBackend {
     ///
     /// [`NdjsonClient`]: crate::serving::frontend::NdjsonClient
     fn stats(&mut self) -> Option<crate::obs::StatsSnapshot> {
+        None
+    }
+
+    /// Flight-recorder dump (the NDJSON `flightrec` frame body, protocol
+    /// v3; see [`crate::obs::flightrec`]). `None` for backends with no
+    /// local recorder (e.g. the remote [`NdjsonClient`] — ask the remote
+    /// end with a `flightrec` op instead).
+    ///
+    /// [`NdjsonClient`]: crate::serving::frontend::NdjsonClient
+    fn flightrec(&mut self) -> Option<crate::util::json::Json> {
         None
     }
 }

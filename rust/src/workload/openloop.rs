@@ -25,6 +25,7 @@ use crate::coordinator::{Coordinator, CoordinatorConfig, FleetStats, RoutingPoli
 use crate::engine::{Engine, EngineOptions};
 use crate::metrics::Report;
 use crate::model::ModelConfig;
+use crate::obs::trace::TraceLog;
 use crate::runtime::{SimPerf, Variant};
 use crate::sampler::Sampling;
 use crate::serving::{
@@ -153,6 +154,7 @@ fn gen_request(rng: &mut Pcg, spec: &OpenLoopSpec, shares: &[f64]) -> ServeReque
         max_new_tokens: spec.max_new.max(1),
         sampling: Sampling::Greedy,
         deadline: spec.deadline,
+        trace: None,
     }
 }
 
@@ -326,6 +328,61 @@ impl Default for FleetLoadSpec {
     }
 }
 
+/// Mean per-phase dwell times across completed requests, derived from
+/// the merged fleet trace's phase spans — where e2e latency was spent
+/// (waiting in a queue, prefilling, or decoding), not just how long it
+/// was.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseBreakdown {
+    /// Completed spans with a full queued→prefill→decode timeline.
+    pub requests: usize,
+    /// Admission (or arrival) → first scheduled, mean ms.
+    pub queue_ms: f64,
+    /// First scheduled → prefill done, mean ms.
+    pub prefill_ms: f64,
+    /// Prefill done → finished, mean ms.
+    pub decode_ms: f64,
+}
+
+impl PhaseBreakdown {
+    /// One-line summary for loadgen output.
+    pub fn row(&self) -> String {
+        format!(
+            "phases ({} reqs): queue {:.2}ms | prefill {:.2}ms | decode {:.2}ms",
+            self.requests, self.queue_ms, self.prefill_ms, self.decode_ms
+        )
+    }
+}
+
+/// Compute the [`PhaseBreakdown`] of every completed request span in a
+/// (merged fleet) trace.
+pub fn phase_breakdown(trace: &TraceLog) -> PhaseBreakdown {
+    let mut queue = Samples::new();
+    let mut prefill = Samples::new();
+    let mut decode = Samples::new();
+    for s in trace.spans() {
+        if s.outcome != "done" {
+            continue;
+        }
+        let (Some(sched), Some(pfd)) = (s.first_scheduled_us, s.prefill_done_us) else {
+            continue;
+        };
+        let start = s.admitted_us.unwrap_or(s.arrival_us);
+        queue.push(sched.saturating_sub(start) as f64 / 1e3);
+        prefill.push(pfd.saturating_sub(sched) as f64 / 1e3);
+        decode.push(s.finished_us.saturating_sub(pfd) as f64 / 1e3);
+    }
+    if queue.is_empty() {
+        return PhaseBreakdown::default();
+    }
+    PhaseBreakdown {
+        requests: queue.len(),
+        queue_ms: queue.mean(),
+        prefill_ms: prefill.mean(),
+        decode_ms: decode.mean(),
+    }
+}
+
 /// One policy's result in a [`sweep_fleet_policies`] comparison.
 #[derive(Debug)]
 pub struct PolicyOutcome {
@@ -333,6 +390,9 @@ pub struct PolicyOutcome {
     pub outcome: OpenLoopOutcome,
     pub stats: FleetStats,
     pub per_replica: Vec<Report>,
+    /// Where completed requests spent their time, from the merged fleet
+    /// trace (zeros when no request completed).
+    pub phases: PhaseBreakdown,
 }
 
 /// Launch a sim fleet with `policy`, drive it open-loop per `spec`,
@@ -375,11 +435,13 @@ pub fn run_fleet_open_loop(spec: &FleetLoadSpec, policy: RoutingPolicy) -> Resul
         },
         adapters,
     )?;
+    coord.enable_trace()?;
     let started = Instant::now();
     let outcome = drive(&mut coord, &ol)?;
     ServingBackend::drain(&mut coord)?;
-    let (per_replica, stats) = coord.finish(started)?;
-    Ok(PolicyOutcome { policy, outcome, stats, per_replica })
+    let (per_replica, stats, trace) = coord.finish_traced(started)?;
+    let phases = trace.as_ref().map(phase_breakdown).unwrap_or_default();
+    Ok(PolicyOutcome { policy, outcome, stats, per_replica, phases })
 }
 
 /// Run [`run_fleet_open_loop`] once per policy with identical arrival
@@ -423,6 +485,9 @@ pub fn fleet_online_json(spec: &FleetLoadSpec, rows: &[PolicyOutcome]) -> Json {
                 ("affinity_hits", Json::Int(r.stats.affinity_hits as i64)),
                 ("loads", Json::Int(r.stats.loads as i64)),
                 ("shed", Json::Int(r.stats.shed_total() as i64)),
+                ("phase_queue_ms", Json::Num(r.phases.queue_ms)),
+                ("phase_prefill_ms", Json::Num(r.phases.prefill_ms)),
+                ("phase_decode_ms", Json::Num(r.phases.decode_ms)),
             ])
         })
         .collect::<Vec<_>>();

@@ -232,6 +232,7 @@ fn fleet_serving_backend_streams_cancels_and_drains() {
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         deadline: None,
+        trace: None,
     };
 
     // unknown adapter: typed rejection at the fleet door

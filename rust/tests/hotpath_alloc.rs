@@ -76,6 +76,10 @@ fn steady_state_decode_performs_zero_allocations() {
     let obs = e.obs();
     assert!(obs.is_enabled(), "recording must be on while we measure");
     let obs_before = obs.snapshot();
+    // the always-on flight recorder is part of the contract too: its
+    // ring must absorb one Step event per step without allocating
+    let flightrec = e.flight_recorder();
+    let flightrec_before = flightrec.recorded();
 
     let before = allocations();
     let t0 = Instant::now();
@@ -109,6 +113,11 @@ fn steady_state_decode_performs_zero_allocations() {
         obs_after.step_wall_us.count - obs_before.step_wall_us.count,
         MEASURE as u64,
         "every step wall time must land in the histogram"
+    );
+    assert!(
+        flightrec.recorded() - flightrec_before >= MEASURE as u64,
+        "the flight recorder must capture every measured step (got {} of {MEASURE})",
+        flightrec.recorded() - flightrec_before
     );
     for name in ["base", &adapters[0].name, &adapters[1].name] {
         let tokens = |s: &expertweave::obs::StatsSnapshot| {

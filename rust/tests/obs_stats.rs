@@ -158,6 +158,11 @@ fn live_engine_stats_frame_matches_prometheus_scrape() {
     let page = scrape(&metrics.local_addr()).unwrap();
     assert_eq!(prom_family_total(&page, "expertweave_requests_completed_total"), 2);
 
+    // build identity and process uptime lead every exposition page
+    assert!(page.contains("expertweave_build_info{version=\""), "build_info missing:\n{page}");
+    assert!(page.contains(",git=\""), "build_info must carry a git label");
+    assert!(page.contains("expertweave_uptime_seconds "), "uptime gauge missing");
+
     // per-adapter counters agree across the two surfaces
     let from_frame = frame_adapter_completed(&frame, &names[0]);
     let from_prom = prom_adapter_completed(&page, &names[0]);

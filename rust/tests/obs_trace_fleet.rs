@@ -1,0 +1,242 @@
+//! End-to-end distributed tracing: a 2-replica fleet served over TCP,
+//! with tracing enabled at the coordinator, must produce ONE merged
+//! Chrome-trace timeline in which a single request can be followed from
+//! the fleet door to the replica that decoded it:
+//!
+//!   door_admission (pid 0) → routing_decision naming the chosen
+//!   replica (pid 0) → that replica's queued/admitted/prefill/decode
+//!   phase spans (pid = replica + 1), all carrying the same trace id.
+//!
+//! The trace id is client-supplied via the NDJSON `trace` field
+//! (PROTOCOL.md v3); requests that omit it get the fleet request id.
+//! The same session also exercises the `{"op":"flightrec"}` frame: the
+//! always-on black-box ring must answer with per-replica event windows
+//! without any opt-in.
+
+use expertweave::adapters::generator::synth_fleet_adapters;
+use expertweave::coordinator::{Coordinator, CoordinatorConfig, RoutingPolicy};
+use expertweave::engine::{Engine, EngineOptions};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{SimPerf, Variant};
+use expertweave::serving::frontend::NdjsonServer;
+use expertweave::util::json::Json;
+use expertweave::weights::StoreMode;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// The client-chosen end-to-end trace id for the request we follow.
+const TRACE_ID: i64 = 777;
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let writer = stream.try_clone().unwrap();
+        Client { reader: BufReader::new(stream), writer }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.writer, "{line}").unwrap();
+    }
+
+    fn next_event(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(line.trim()).unwrap()
+    }
+
+    fn wait_for(&mut self, id: &str, event: &str) -> Json {
+        for _ in 0..10_000 {
+            let ev = self.next_event();
+            if ev.get("id").and_then(|i| i.as_str()) == Some(id)
+                && ev.get("event").and_then(|e| e.as_str()) == Some(event)
+            {
+                return ev;
+            }
+        }
+        panic!("no {event:?} event for {id:?}");
+    }
+
+    fn drain(&mut self) {
+        self.send(r#"{"op":"drain"}"#);
+        loop {
+            let ev = self.next_event();
+            if ev.get("event").and_then(|e| e.as_str()) == Some("drained") {
+                return;
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_trace_follows_one_request_door_to_decode() {
+    let server = NdjsonServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let serving = std::thread::spawn(move || {
+        let cfg = ModelConfig::sim_default();
+        let adapters = synth_fleet_adapters(&cfg, 2, 42);
+        let coord_cfg = CoordinatorConfig {
+            replicas: 2,
+            policy: RoutingPolicy::AdapterAffinity,
+            adapter_capacity: 2,
+            ..Default::default()
+        };
+        let spawn_cfg = cfg.clone();
+        let mut coord = Coordinator::launch(
+            coord_cfg,
+            move |i| {
+                let cfg = spawn_cfg.clone();
+                Box::new(move || {
+                    Engine::sim_weave(
+                        &cfg,
+                        SimPerf::fast(),
+                        &[],
+                        Variant::Weave,
+                        StoreMode::Virtual,
+                        EngineOptions {
+                            page_size: 64 << 10,
+                            seed: i as u64,
+                            ..Default::default()
+                        },
+                    )
+                })
+            },
+            adapters,
+        )
+        .unwrap();
+        // before any client request: every request of the session traces
+        coord.enable_trace().unwrap();
+        server.run(&mut coord).unwrap();
+        let started = std::time::Instant::now();
+        coord.finish_traced(started).unwrap()
+    });
+
+    let cfg = ModelConfig::sim_default();
+    let names: Vec<String> =
+        synth_fleet_adapters(&cfg, 2, 42).iter().map(|a| a.name.clone()).collect();
+
+    let mut c = Client::connect(addr);
+    // the request we follow: client-supplied trace id, adapter traffic
+    c.send(&format!(
+        r#"{{"id":"r1","adapter":"{}","prompt":[1,2,3,4],"max_new_tokens":4,"trace":{TRACE_ID}}}"#,
+        names[0]
+    ));
+    // a second request without a trace id: defaults to the fleet rid
+    c.send(r#"{"id":"r2","prompt":[5,6,7],"max_new_tokens":2}"#);
+    c.wait_for("r1", "done");
+    c.wait_for("r2", "done");
+
+    // the black-box is always on: no opt-in, answered while live
+    c.send(r#"{"op":"flightrec","id":"fr"}"#);
+    let frame = c.wait_for("fr", "flightrec");
+    let replicas = frame.at(&["replicas"]).as_arr().unwrap();
+    assert_eq!(replicas.len(), 2, "one ring per replica");
+    let recorded: i64 =
+        replicas.iter().map(|r| r.at(&["recorded"]).as_i64().unwrap()).sum();
+    assert!(recorded > 0, "the fleet served requests, the rings must have seen them");
+    let kinds: Vec<&str> = replicas
+        .iter()
+        .flat_map(|r| r.at(&["events"]).as_arr().unwrap().iter())
+        .filter_map(|e| e.at(&["kind"]).as_str())
+        .collect();
+    assert!(kinds.contains(&"submit"), "submit events in the ring: {kinds:?}");
+    assert!(kinds.contains(&"done"), "done events in the ring: {kinds:?}");
+
+    c.drain();
+    drop(c);
+    let (per_replica, _stats, trace) = serving.join().unwrap();
+    assert_eq!(per_replica.len(), 2);
+    let trace = trace.expect("enable_trace ran, finish_traced must return the merged log");
+
+    // --- coordinator side: the routing decision for our trace id ---
+    assert_eq!(trace.routes().len(), 2, "both requests were routed");
+    let route = trace
+        .routes()
+        .iter()
+        .find(|r| r.trace == TRACE_ID as u64)
+        .expect("a RouteSpan must carry the client-supplied trace id");
+    assert_eq!(route.policy, "adapter-affinity");
+    assert_eq!(route.adapter, names[0]);
+    assert!(route.replica < 2, "chosen replica must be a real index");
+    assert_eq!(route.candidates.len(), 2, "the full scored candidate set is kept");
+    assert!(route.admitted_us >= route.arrival_us);
+    assert!(route.routed_us >= route.admitted_us);
+    // the request without a client trace id defaulted to its fleet rid
+    let other = trace.routes().iter().find(|r| r.trace != TRACE_ID as u64).unwrap();
+    assert_eq!(other.trace, other.rid, "no client id: trace id = fleet rid");
+
+    // --- replica side: the phase span merged under the fleet track ---
+    let span = trace
+        .spans()
+        .iter()
+        .find(|s| s.trace == TRACE_ID as u64)
+        .expect("the replica's phase span must carry the same trace id");
+    assert_eq!(span.id, route.rid, "replica-local id re-keyed to the fleet rid");
+    assert_eq!(
+        span.pid,
+        route.replica as u64 + 1,
+        "the span renders under the replica the router actually chose"
+    );
+    assert_eq!(span.outcome, "done");
+    assert_eq!(span.adapter, names[0]);
+    assert!(span.first_scheduled_us.is_some(), "prefill phase must be stamped");
+    assert!(span.prefill_done_us.is_some(), "decode phase must be stamped");
+    assert!(span.finished_us >= span.arrival_us);
+    // door-side routing completed before the replica finished the request
+    assert!(route.routed_us <= span.finished_us);
+
+    // --- the rendered Chrome-trace document ties it all together ---
+    let doc = Json::parse(&trace.to_chrome_json().to_string()).unwrap();
+    let events = doc.at(&["traceEvents"]).as_arr().unwrap();
+    let of = |name: &str| {
+        events
+            .iter()
+            .find(|e| {
+                e.at(&["name"]).as_str() == Some(name)
+                    && e.at(&["args", "trace"]).as_i64() == Some(TRACE_ID)
+            })
+            .unwrap_or_else(|| panic!("no {name:?} event with trace {TRACE_ID}"))
+    };
+    let door = of("door_admission");
+    assert_eq!(door.at(&["pid"]).as_i64(), Some(0), "door span on the coordinator track");
+    assert_eq!(door.at(&["tid"]).as_i64(), Some(route.rid as i64));
+    let routing = of("routing_decision");
+    assert_eq!(routing.at(&["pid"]).as_i64(), Some(0));
+    assert_eq!(
+        routing.at(&["args", "replica"]).as_i64(),
+        Some(route.replica as i64),
+        "the decision names the replica the span then renders under"
+    );
+    assert_eq!(
+        routing.at(&["args", "candidates"]).as_arr().unwrap().len(),
+        2,
+        "the scored candidate set survives into the rendered args"
+    );
+    for phase in ["queued", "prefill", "decode"] {
+        let ev = of(phase);
+        assert_eq!(
+            ev.at(&["pid"]).as_i64(),
+            Some(route.replica as i64 + 1),
+            "{phase} renders on the chosen replica's track"
+        );
+        assert_eq!(ev.at(&["tid"]).as_i64(), Some(route.rid as i64));
+    }
+    // process-name metadata labels both sides for Perfetto
+    let procs: Vec<&str> = events
+        .iter()
+        .filter(|e| e.at(&["name"]).as_str() == Some("process_name"))
+        .filter_map(|e| e.at(&["args", "name"]).as_str())
+        .collect();
+    assert!(procs.contains(&"coordinator"), "process names: {procs:?}");
+    assert!(
+        procs.contains(&format!("replica {}", route.replica).as_str()),
+        "process names: {procs:?}"
+    );
+}

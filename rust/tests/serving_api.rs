@@ -40,6 +40,7 @@ fn req(adapter: Option<&str>, prompt_len: usize, max_new: usize) -> ServeRequest
         max_new_tokens: max_new,
         sampling: Sampling::Greedy,
         deadline: None,
+        trace: None,
     }
 }
 

@@ -1,0 +1,64 @@
+#!/usr/bin/env sh
+# Snapshot bench results into the repo's committed perf trajectory.
+#
+# Benches write BENCH_*.json under target/bench_results/ (gitignored,
+# per-run). This script copies them into bench/ — the tracked baseline
+# directory — and writes bench/SUMMARY.json, a schema-stable index of
+# what was captured and from which revision, so successive commits of
+# bench/ form a perf trajectory reviewable in git history.
+#
+# Usage: scripts/bench_snapshot.sh [src-dir] [dst-dir]
+#   src-dir  defaults to target/bench_results
+#   dst-dir  defaults to bench
+#
+# CI runs this after the hot-path bench and uploads bench/ as an
+# artifact; committing the refreshed bench/ is a deliberate, human
+# act (baselines should move when performance moved, not on noise).
+
+set -eu
+
+SRC="${1:-target/bench_results}"
+DST="${2:-bench}"
+
+if [ ! -d "$SRC" ]; then
+    echo "bench_snapshot: no $SRC directory — run a bench first" >&2
+    echo "  e.g. cargo bench --bench fig11_hotpath -- --reps 2" >&2
+    exit 1
+fi
+
+found=0
+for f in "$SRC"/BENCH_*.json; do
+    [ -e "$f" ] || break
+    found=1
+done
+if [ "$found" -eq 0 ]; then
+    echo "bench_snapshot: no BENCH_*.json under $SRC" >&2
+    exit 1
+fi
+
+mkdir -p "$DST"
+
+GIT_SHA=$(git rev-parse --short HEAD 2>/dev/null || echo unknown)
+DATE=$(date -u +%Y-%m-%dT%H:%M:%SZ)
+
+# SUMMARY.json schema (version 1, stable: additive changes only):
+# { "schema": 1, "git": "<sha>", "captured_at": "<iso8601>",
+#   "benches": [ { "file": "BENCH_x.json", "bench": "<bench field>" } ] }
+summary="$DST/SUMMARY.json"
+{
+    printf '{"schema":1,"git":"%s","captured_at":"%s","benches":[' \
+        "$GIT_SHA" "$DATE"
+    sep=""
+    for f in "$SRC"/BENCH_*.json; do
+        base=$(basename "$f")
+        cp "$f" "$DST/$base"
+        # the "bench" field names the harness that emitted the file
+        bench=$(sed -n 's/.*"bench":"\([^"]*\)".*/\1/p' "$f" | head -n 1)
+        printf '%s{"file":"%s","bench":"%s"}' "$sep" "$base" "${bench:-unknown}"
+        sep=","
+        echo "bench_snapshot: $base -> $DST/$base" >&2
+    done
+    printf ']}\n'
+} > "$summary"
+
+echo "bench_snapshot: wrote $summary (git $GIT_SHA)" >&2
