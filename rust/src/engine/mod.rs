@@ -18,7 +18,7 @@
 
 use crate::adapters::format::Adapter;
 use crate::adapters::registry::AdapterRegistry;
-use crate::kvcache::KvCache;
+use crate::kvcache::PagedKvCache;
 use crate::memsim::DeviceMemory;
 use crate::metrics::{MetricsCollector, Report, RequestRecord};
 use crate::model::ModelConfig;
@@ -116,6 +116,12 @@ pub struct EngineOptions {
     /// instead of taking the greedy-token fast path (accuracy-style
     /// experiments; see [`SimRuntime::set_full_logits`]).
     pub sim_full_logits: bool,
+    /// Tokens per physical KV page of the paged cache. `kv_cap` slots
+    /// that don't fill a whole page are unaddressable (pick a divisor).
+    pub kv_block: usize,
+    /// Cross-request prefix sharing in the KV cache. Off restores flat
+    /// private-slot semantics (every prompt pays full physical KV).
+    pub kv_share: bool,
 }
 
 impl Default for EngineOptions {
@@ -129,6 +135,8 @@ impl Default for EngineOptions {
             compute_share: 1.0,
             queue_cap: 0,
             sim_full_logits: false,
+            kv_block: 16,
+            kv_share: true,
         }
     }
 }
@@ -201,7 +209,16 @@ pub struct Engine {
     base: BaseWeights,
     weights: Weights,
     scheduler: Scheduler,
-    kv: KvCache,
+    kv: PagedKvCache,
+    /// Paged-cache construction knobs, kept for session reset.
+    kv_block: usize,
+    kv_share: bool,
+    /// High-water marks of the paged cache's cumulative counters already
+    /// published to `obs` (the cache keeps totals; obs wants per-step
+    /// deltas so fleet merges stay associative).
+    kv_hits_seen: u64,
+    kv_misses_seen: u64,
+    kv_cow_seen: u64,
     /// Persistent step buffers: batch tensors (incl. the authoritative
     /// per-slot cache metadata) refilled in place every step.
     ws: StepWorkspace,
@@ -279,7 +296,12 @@ impl Engine {
         let mut engine = Engine {
             ws: StepWorkspace::new(&sched_cfg),
             scheduler: Scheduler::new(sched_cfg),
-            kv: KvCache::new(cfg.kv_cap),
+            kv: PagedKvCache::new(cfg.kv_cap, opts.kv_block, opts.kv_share),
+            kv_block: opts.kv_block,
+            kv_share: opts.kv_share,
+            kv_hits_seen: 0,
+            kv_misses_seen: 0,
+            kv_cow_seen: 0,
             step_out: StepOutput::new(),
             metrics: MetricsCollector::new(),
             obs,
@@ -647,13 +669,17 @@ impl Engine {
         if req.prompt.is_empty() {
             return Err(SubmitError::Invalid("empty prompt".into()));
         }
+        // capacity check against the paged cache's addressable slots
+        // (page-granular: a kv_cap that doesn't divide into whole pages
+        // strands the remainder) — an over-size request would otherwise
+        // wait forever for blocks that can never exist
         let need = req.prompt.len() + req.max_new_tokens.max(1);
-        if need > self.cfg.kv_cap {
+        if need > self.kv.capacity() {
             return Err(SubmitError::Invalid(format!(
                 "request needs {need} KV slots (prompt {} + output {}), capacity is {}",
                 req.prompt.len(),
                 req.max_new_tokens.max(1),
-                self.cfg.kv_cap
+                self.kv.capacity()
             )));
         }
         Ok(aid)
@@ -888,6 +914,17 @@ impl Engine {
             self.scheduler.waiting_len() as u64,
             self.scheduler.running_len() as u64,
         );
+        // prefix-cache telemetry: the cache keeps cumulative totals, obs
+        // takes the per-step delta (atomics only — still allocation-free)
+        let (hits, misses) = (self.kv.prefix_hit_tokens(), self.kv.prefix_miss_tokens());
+        self.obs.record_prefix(hits - self.kv_hits_seen, misses - self.kv_misses_seen);
+        self.kv_hits_seen = hits;
+        self.kv_misses_seen = misses;
+        let cow = self.kv.cow_copies();
+        self.obs.record_cow(cow - self.kv_cow_seen);
+        self.kv_cow_seen = cow;
+        self.obs.set_kv_shared(self.kv.shared_blocks() as u64);
+        self.metrics.set_kv_sharing(self.kv.shared_blocks(), cow as usize);
         let completions: Vec<Completion> = finished
             .into_iter()
             .map(|seq| {
@@ -958,6 +995,7 @@ impl Engine {
             self.scheduler.waiting_len() as u64,
             self.scheduler.running_len() as u64,
         );
+        self.obs.set_kv_shared(self.kv.shared_blocks() as u64);
         self.obs.snapshot()
     }
 
@@ -1016,7 +1054,10 @@ impl Engine {
         let sched_cfg = Scheduler::rebuild_config(&self.scheduler);
         self.ws = StepWorkspace::new(&sched_cfg);
         self.scheduler = Scheduler::new(sched_cfg);
-        self.kv = KvCache::new(self.cfg.kv_cap);
+        self.kv = PagedKvCache::new(self.cfg.kv_cap, self.kv_block, self.kv_share);
+        self.kv_hits_seen = 0;
+        self.kv_misses_seen = 0;
+        self.kv_cow_seen = 0;
         self.step_out = StepOutput::new();
         self.metrics = MetricsCollector::new();
         self.obs.reset();

@@ -1,10 +1,24 @@
-//! KV cache slot allocator.
+//! KV cache allocators.
 //!
-//! The step executable treats the KV cache as a pool of `CAP` token slots
-//! (functional paged attention at slot granularity — block size 1). This
-//! module owns the free list and the per-sequence slot lists, and is the
-//! source of the "KV cache capacity in tokens" metric the paper reports
-//! (Fig. 9).
+//! Two allocators share the `[0, kv_cap)` slot arena the step ABI
+//! expects:
+//!
+//! - [`KvCache`] — the original flat allocator: private token slots per
+//!   sequence, no sharing. Kept as the reference semantics (differential
+//!   tests) and for the Fig. 9 flat-capacity accounting.
+//! - [`PagedKvCache`] (in [`paged`]) — the serving allocator: block/page
+//!   tables per sequence, refcounted physical blocks, prefix-hash
+//!   sharing across requests, and copy-on-write on divergence. The
+//!   engine runs on this one.
+//!
+//! This module is also the source of the "KV cache capacity in tokens"
+//! metrics the paper reports (Fig. 9): [`kv_capacity_tokens`] for a flat
+//! deployment, [`paged_kv_capacity`] for the logical-vs-physical view
+//! under prefix sharing.
+
+pub mod paged;
+
+pub use paged::{CowCopy, PagedKvCache};
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
@@ -126,6 +140,57 @@ pub fn kv_capacity_tokens(
     ((device_free_bytes as f64 * utilization) as usize) / kv_bytes_per_token.max(1)
 }
 
+/// Host-side metadata bytes charged per physical block by the paged
+/// allocator: the `Block` record (refcount, fill, two hashes, flags)
+/// plus its share of the free-list and two hash-index entries. Small
+/// against the device-side KV bytes of a block, but Fig. 9 accounting
+/// includes it so the paged capacity numbers stay honest.
+pub const PAGED_BLOCK_META_BYTES: usize = 96;
+
+/// Logical-vs-physical KV capacity of a paged deployment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PagedKvCapacity {
+    /// Device tokens actually materialized (block-granular).
+    pub physical_tokens: usize,
+    /// Tokens addressable by concurrent sequences at the given prefix
+    /// overlap: shared prefix blocks are paid once but serve every
+    /// sequence referencing them.
+    pub logical_tokens: usize,
+    /// Host metadata overhead of the block structures.
+    pub metadata_bytes: usize,
+}
+
+/// Paged-cache capacity a device budget affords, and the logical
+/// multiplier prefix sharing buys at a given overlap fraction. With
+/// `prefix_overlap = 0` the physical capacity matches
+/// [`kv_capacity_tokens`] up to block rounding and metadata — the
+/// flat-mode Fig. 9 numbers are unchanged by construction.
+pub fn paged_kv_capacity(
+    device_free_bytes: usize,
+    utilization: f64,
+    kv_bytes_per_token: usize,
+    block_size: usize,
+    prefix_overlap: f64,
+) -> PagedKvCapacity {
+    let block_size = block_size.max(1);
+    let budget = (device_free_bytes as f64 * utilization) as usize;
+    let per_block =
+        block_size * kv_bytes_per_token.max(1) + PAGED_BLOCK_META_BYTES;
+    let blocks = budget / per_block;
+    let physical = blocks * block_size;
+    // a shared fraction `o` of every sequence's footprint is resident
+    // once instead of once-per-sequence, so N concurrent sequences fit
+    // in (1 - o) * N + o sequence-footprints of physical memory:
+    // logical capacity ≈ physical / (1 - o) for o < 1
+    let o = prefix_overlap.clamp(0.0, 0.9999);
+    let logical = (physical as f64 / (1.0 - o)) as usize;
+    PagedKvCapacity {
+        physical_tokens: physical,
+        logical_tokens: logical,
+        metadata_bytes: blocks * PAGED_BLOCK_META_BYTES,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,6 +261,25 @@ mod tests {
         // paper scale-ish sanity: 30 GB free, 90% util, 70 KB/token
         let t = kv_capacity_tokens(30 << 30, 0.9, 70 << 10);
         assert!((300_000..500_000).contains(&t), "{t}");
+    }
+
+    #[test]
+    fn paged_capacity_matches_flat_at_zero_overlap() {
+        let flat = kv_capacity_tokens(30 << 30, 0.9, 70 << 10);
+        let paged = paged_kv_capacity(30 << 30, 0.9, 70 << 10, 16, 0.0);
+        // physical capacity within one block + metadata rounding of flat
+        assert!(paged.physical_tokens <= flat);
+        assert!(
+            flat - paged.physical_tokens <= 16 + flat / 1000,
+            "flat {flat} vs paged physical {}",
+            paged.physical_tokens
+        );
+        assert_eq!(paged.logical_tokens, paged.physical_tokens);
+        assert!(paged.metadata_bytes > 0);
+        // sharing multiplies the logical view, never the physical one
+        let hot = paged_kv_capacity(30 << 30, 0.9, 70 << 10, 16, 0.95);
+        assert_eq!(hot.physical_tokens, paged.physical_tokens);
+        assert!(hot.logical_tokens >= paged.logical_tokens * 19);
     }
 
     #[test]

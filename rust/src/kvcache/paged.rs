@@ -1,0 +1,855 @@
+//! Paged KV cache with refcounted cross-request prefix sharing.
+//!
+//! The flat [`super::KvCache`] hands every sequence private token slots,
+//! so ten requests sharing one system prompt pay for it ten times. This
+//! module re-casts the slot arena as **blocks** (pages of `block_size`
+//! consecutive slots) with:
+//!
+//! - a **block table per sequence** (`SeqTable`): logical position `p`
+//!   lives in physical slot `blocks[p / bs] * bs + p % bs`;
+//! - **refcounted physical blocks**: identical prompt prefixes attach to
+//!   the same blocks, so the memory is paid once per *distinct* prefix;
+//! - a **prefix-hash index** keyed by a per-adapter rolling hash chain of
+//!   block contents: sealed (full) blocks register in `prefix_index`,
+//!   the partially-filled tail block keeps a live entry in `tail_index`,
+//!   so an arriving request can adopt both the full-block prefix and a
+//!   matching partial tail;
+//! - **copy-on-write on divergence**: appending into a block another
+//!   sequence also references allocates a private copy first and reports
+//!   it as a [`CowCopy`] for the caller to mirror (the host analogue of
+//!   vLLM's `copy_blocks` device op);
+//! - **lazy eviction**: a block whose refcount drops to zero goes on a
+//!   FIFO free list but keeps its hash registration, so a follow-up
+//!   request with the same prefix can resurrect it before it is reused
+//!   (FIFO reuse ≈ oldest-freed content evicted first).
+//!
+//! ## Sharing is host-side accounting
+//!
+//! Neither step backend consumes `cache_seg`/`cache_pos` beyond shape
+//! checks (the sim derives outputs from token/pos/aid only; PJRT
+//! forwards them opaquely), so sharing needs no kernel change here: the
+//! scheduler stamps a shared slot with the seg of its most recent
+//! writer/attacher. A real seg-masked attention kernel would instead
+//! gather per-sequence block tables on device — that kernel is future
+//! work; the capacity/admission wins measured by `fig13_prefix_cache`
+//! are backend-independent.
+//!
+//! ## Zero-allocation contract
+//!
+//! Everything the steady decode path touches is preallocated: the free
+//! list is a `VecDeque` sized for every block, both hash indexes are
+//! `HashMap`s with capacity for one entry per block (their entry counts
+//! are bounded by the block count, so they never rehash), and
+//! per-sequence block tables are pre-sized by [`PagedKvCache::reserve_seq`].
+//! `tests/hotpath_alloc.rs` asserts 0 allocs/steady-decode-step with
+//! this cache under the engine.
+
+use anyhow::{bail, Result};
+use std::collections::{HashMap, VecDeque};
+
+/// One pending host-side block copy produced by copy-on-write: the first
+/// `filled` slots of `src_block` were logically duplicated into
+/// `dst_block` for the sequence that diverged. The scheduler drains
+/// these after each allocation to re-stamp the destination slots'
+/// device-visible metadata (`cache_seg`/`cache_pos`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CowCopy {
+    /// Physical block the content was copied from (still owned by the
+    /// remaining sharers).
+    pub src_block: u32,
+    /// Freshly allocated private block.
+    pub dst_block: u32,
+    /// Index of the block within the diverging sequence's block table
+    /// (logical position of its first token = `block_index * block_size`).
+    pub block_index: u32,
+    /// Tokens already resident in the block at copy time.
+    pub filled: u32,
+}
+
+#[derive(Debug, Clone, Default)]
+struct Block {
+    /// Live references (sequences whose tables contain this block).
+    refcount: u32,
+    /// Tokens written into the block so far.
+    filled: u32,
+    /// Rolling chain hash over (adapter seed, every prior sealed block,
+    /// the tokens written here so far).
+    run_hash: u64,
+    /// Key under which the block is registered in `prefix_index`
+    /// (0 = not registered).
+    sealed_key: u64,
+    /// Whether the block id currently sits in the free deque (lazily
+    /// cleared on pop, so resurrected blocks leave stale entries behind
+    /// instead of forcing an O(n) deque removal).
+    in_free: bool,
+}
+
+#[derive(Debug, Clone)]
+struct SeqTable {
+    /// Physical block ids, in logical position order.
+    blocks: Vec<u32>,
+    /// Logical tokens resident (attached + written).
+    len: usize,
+    /// Chain hash after the last *sealed* block (seed when none).
+    chain: u64,
+}
+
+/// splitmix64-style combiner; the chain identity of a prefix is the
+/// fold of this over (adapter seed, token ids in order).
+#[inline]
+fn mix(h: u64, v: u64) -> u64 {
+    let mut x = h ^ v.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Per-adapter chain seed: prefixes only match within one adapter
+/// (ESFT task preambles are adapter-specific; a base-model prompt must
+/// never adopt an adapter's cached KV, whose values went through
+/// rerouted experts).
+#[inline]
+fn chain_seed(aid: i32) -> u64 {
+    mix(0xe2f0_77ea_7e57_c0de, (aid as i64 as u64) ^ 0xada7)
+}
+
+#[inline]
+fn tok_key(t: i32) -> u64 {
+    // disambiguate token values from the seed domain
+    (t as u32 as u64) | (1 << 40)
+}
+
+/// Block/page-table KV cache with refcounted cross-request prefix
+/// sharing. Slot ids remain plain `u32` indexes into the same
+/// `[0, capacity)` arena the step ABI expects — `block * block_size +
+/// offset` — so the engine's `cache_seg`/`cache_pos` arrays are
+/// unchanged in shape.
+#[derive(Debug, Clone)]
+pub struct PagedKvCache {
+    block_size: usize,
+    blocks: Vec<Block>,
+    /// FIFO free list of refcount-0 blocks (may contain stale entries
+    /// for resurrected blocks; see `Block::in_free`).
+    free: VecDeque<u32>,
+    /// Count of refcount-0 blocks (authoritative; the deque is not).
+    free_blocks: usize,
+    /// Count of blocks with refcount >= 2 (the shared-pages gauge).
+    shared_blocks: usize,
+    /// Sealed-block registry: chain hash -> block id.
+    prefix_index: HashMap<u64, u32>,
+    /// Partial-tail registry: current chain hash -> block id (kept fresh
+    /// on every append so a hit always matches the block's live state).
+    tail_index: HashMap<u64, u32>,
+    seqs: HashMap<u64, SeqTable>,
+    pending_copies: Vec<CowCopy>,
+    share: bool,
+    peak_used_blocks: usize,
+    prefix_hit_tokens: u64,
+    prefix_miss_tokens: u64,
+    cow_copies: u64,
+}
+
+impl PagedKvCache {
+    /// `cap_slots` is the slot-arena size (the ABI `kv_cap`); blocks
+    /// beyond the last whole multiple of `block_size` are unusable.
+    /// `share` gates prefix attachment: with it off the cache behaves
+    /// like a block-granular private allocator (the fig13 baseline).
+    pub fn new(cap_slots: usize, block_size: usize, share: bool) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        let nb = cap_slots / block_size;
+        PagedKvCache {
+            block_size,
+            blocks: vec![Block::default(); nb],
+            free: (0..nb as u32).collect(),
+            free_blocks: nb,
+            shared_blocks: 0,
+            prefix_index: HashMap::with_capacity(nb),
+            tail_index: HashMap::with_capacity(nb),
+            seqs: HashMap::with_capacity(64),
+            pending_copies: Vec::with_capacity(32),
+            share,
+            peak_used_blocks: 0,
+            prefix_hit_tokens: 0,
+            prefix_miss_tokens: 0,
+            cow_copies: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Usable slot capacity (whole blocks only).
+    pub fn capacity(&self) -> usize {
+        self.blocks.len() * self.block_size
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks
+    }
+
+    /// Physically free slots (block-granular: a partially filled live
+    /// block contributes nothing).
+    pub fn free_slots(&self) -> usize {
+        self.free_blocks * self.block_size
+    }
+
+    /// Physically occupied slots (block-granular).
+    pub fn used_slots(&self) -> usize {
+        (self.blocks.len() - self.free_blocks) * self.block_size
+    }
+
+    pub fn peak_used(&self) -> usize {
+        self.peak_used_blocks * self.block_size
+    }
+
+    /// Blocks needed to hold `tokens` logical tokens from scratch.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Can `n` more tokens be cached right now, ignoring sharing?
+    /// (Conservative: assumes a fresh block per `block_size` tokens.)
+    pub fn has_room(&self, n: usize) -> bool {
+        self.free_blocks >= self.blocks_for(n)
+    }
+
+    pub fn seq_count(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Logical tokens resident for a sequence (attached + written).
+    pub fn seq_len(&self, seq: u64) -> usize {
+        self.seqs.get(&seq).map_or(0, |t| t.len)
+    }
+
+    /// The sequence's block table, in logical position order.
+    pub fn blocks_of(&self, seq: u64) -> Option<&[u32]> {
+        self.seqs.get(&seq).map(|t| t.blocks.as_slice())
+    }
+
+    /// Physical slot of a sequence's logical position `p`.
+    pub fn slot_of(&self, seq: u64, p: usize) -> Option<u32> {
+        let t = self.seqs.get(&seq)?;
+        if p >= t.len {
+            return None;
+        }
+        Some(t.blocks[p / self.block_size] * self.block_size as u32
+            + (p % self.block_size) as u32)
+    }
+
+    /// Upper bound on physical blocks sequence `seq` still needs to
+    /// reach `final_len` logical tokens: whole blocks beyond its table,
+    /// plus one for the copy-on-write a shared partial tail will force
+    /// on its next append. The scheduler's conservative admission
+    /// reservation sums this over all running sequences.
+    pub fn future_blocks(&self, seq: u64, final_len: usize) -> usize {
+        match self.seqs.get(&seq) {
+            Some(t) => {
+                let total = self.blocks_for(final_len).max(t.blocks.len());
+                let mut need = total - t.blocks.len();
+                if let Some(&b) = t.blocks.last() {
+                    let blk = &self.blocks[b as usize];
+                    if blk.refcount > 1
+                        && (blk.filled as usize) < self.block_size
+                        && t.len < final_len
+                    {
+                        need += 1;
+                    }
+                }
+                need
+            }
+            None => self.blocks_for(final_len),
+        }
+    }
+
+    /// Prompt tokens served from the shared cache since construction.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.prefix_hit_tokens
+    }
+
+    /// Prompt tokens that had to be prefilled despite sharing being on.
+    pub fn prefix_miss_tokens(&self) -> u64 {
+        self.prefix_miss_tokens
+    }
+
+    /// Copy-on-write block copies performed since construction.
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    /// Blocks currently referenced by two or more sequences.
+    pub fn shared_blocks(&self) -> usize {
+        self.shared_blocks
+    }
+
+    /// Pre-size sequence `seq`'s block table for `cap_tokens` logical
+    /// tokens so later appends never reallocate it. Call before
+    /// [`PagedKvCache::attach_prefix`] at admission.
+    pub fn reserve_seq(&mut self, seq: u64, cap_tokens: usize, aid: i32) {
+        let need = self.blocks_for(cap_tokens);
+        let t = self.seqs.entry(seq).or_insert_with(|| SeqTable {
+            blocks: Vec::new(),
+            len: 0,
+            chain: chain_seed(aid),
+        });
+        t.blocks.reserve(need.saturating_sub(t.blocks.len()));
+    }
+
+    /// How much of `tokens` (capped at `limit`) is already cached for
+    /// adapter `aid`, without attaching: returns `(cached_tokens,
+    /// live_full_blocks)` where the second counts matched *sealed*
+    /// blocks that are already referenced by a live sequence — the
+    /// blocks a new request would share for free. Matched refcount-0
+    /// (resurrectable) blocks and a matched partial tail still consume
+    /// free-pool blocks, so admission must not discount them.
+    pub fn probe_prefix(&self, tokens: &[i32], aid: i32, limit: usize) -> (usize, usize) {
+        if !self.share {
+            return (0, 0);
+        }
+        let bs = self.block_size;
+        let limit = limit.min(tokens.len());
+        let mut h = chain_seed(aid);
+        let mut matched = 0usize;
+        let mut live_full = 0usize;
+        while matched + bs <= limit {
+            let mut h2 = h;
+            for &t in &tokens[matched..matched + bs] {
+                h2 = mix(h2, tok_key(t));
+            }
+            match self.prefix_index.get(&h2) {
+                Some(&b) if self.blocks[b as usize].sealed_key == h2 => {
+                    if self.blocks[b as usize].refcount >= 1 {
+                        live_full += 1;
+                    }
+                    matched += bs;
+                    h = h2;
+                }
+                _ => break,
+            }
+        }
+        // deepest matching partial tail at the current chain depth
+        let mut h2 = h;
+        let mut best = 0usize;
+        for d in 1..=(limit - matched).min(bs.saturating_sub(1)) {
+            h2 = mix(h2, tok_key(tokens[matched + d - 1]));
+            if let Some(&b) = self.tail_index.get(&h2) {
+                let blk = &self.blocks[b as usize];
+                if blk.filled as usize == d && blk.run_hash == h2 {
+                    best = d;
+                }
+            }
+        }
+        (matched + best, live_full)
+    }
+
+    /// Adopt the longest cached prefix of `tokens` (capped at `limit`,
+    /// normally `prompt_len - 1` so the last prompt token is always
+    /// computed and yields first-token logits): increfs every matched
+    /// sealed block plus at most one matching partial tail, installs
+    /// them as the head of `seq`'s block table, and returns the number
+    /// of logical tokens now resident — the scheduler skips prefilling
+    /// them. Also advances the prefix hit/miss token counters.
+    pub fn attach_prefix(&mut self, seq: u64, tokens: &[i32], aid: i32, limit: usize) -> usize {
+        if !self.share {
+            return 0;
+        }
+        let bs = self.block_size;
+        let limit = limit.min(tokens.len());
+        let mut table = self.seqs.remove(&seq).unwrap_or_else(|| SeqTable {
+            blocks: Vec::new(),
+            len: 0,
+            chain: chain_seed(aid),
+        });
+        debug_assert!(table.blocks.is_empty(), "attach_prefix on a non-empty sequence");
+        let mut h = table.chain;
+        let mut matched = 0usize;
+        while matched + bs <= limit {
+            let mut h2 = h;
+            for &t in &tokens[matched..matched + bs] {
+                h2 = mix(h2, tok_key(t));
+            }
+            match self.prefix_index.get(&h2).copied() {
+                Some(b) if self.blocks[b as usize].sealed_key == h2 => {
+                    self.incref(b);
+                    table.blocks.push(b);
+                    matched += bs;
+                    h = h2;
+                }
+                _ => break,
+            }
+        }
+        table.chain = h;
+        let mut h2 = h;
+        let mut best: Option<(u32, usize)> = None;
+        for d in 1..=(limit - matched).min(bs.saturating_sub(1)) {
+            h2 = mix(h2, tok_key(tokens[matched + d - 1]));
+            if let Some(&b) = self.tail_index.get(&h2) {
+                let blk = &self.blocks[b as usize];
+                if blk.filled as usize == d && blk.run_hash == h2 {
+                    best = Some((b, d));
+                }
+            }
+        }
+        if let Some((b, d)) = best {
+            self.incref(b);
+            table.blocks.push(b);
+            matched += d;
+        }
+        table.len = matched;
+        self.prefix_hit_tokens += matched as u64;
+        self.prefix_miss_tokens += (tokens.len() - matched) as u64;
+        self.seqs.insert(seq, table);
+        matched
+    }
+
+    /// Append `tokens` to sequence `seq`, writing the slot of each (in
+    /// logical position order) into the caller-owned `out` buffer,
+    /// which is cleared first. Fresh blocks come off the FIFO free
+    /// list; appending into a block shared with another sequence
+    /// triggers copy-on-write (recorded for [`PagedKvCache::drain_copies`]).
+    /// The token values feed the rolling prefix hash so future requests
+    /// can match this content. Fails without side effects when the free
+    /// pool cannot cover the worst case.
+    pub fn alloc_into(
+        &mut self,
+        seq: u64,
+        aid: i32,
+        tokens: &[i32],
+        out: &mut Vec<u32>,
+    ) -> Result<()> {
+        out.clear();
+        if tokens.is_empty() {
+            return Ok(());
+        }
+        let bs = self.block_size;
+        let mut table = self.seqs.remove(&seq).unwrap_or_else(|| SeqTable {
+            blocks: Vec::new(),
+            len: 0,
+            chain: chain_seed(aid),
+        });
+        // precheck so failure leaves the cache untouched
+        let (tail_room, tail_shared) = match table.blocks.last() {
+            Some(&b) => {
+                let blk = &self.blocks[b as usize];
+                let room = bs - blk.filled as usize;
+                (room, room > 0 && blk.refcount > 1)
+            }
+            None => (0, false),
+        };
+        let need = tokens.len().saturating_sub(tail_room).div_ceil(bs)
+            + tail_shared as usize;
+        if need > self.free_blocks {
+            let free = self.free_slots();
+            if !table.blocks.is_empty() || table.len > 0 {
+                self.seqs.insert(seq, table);
+            }
+            bail!(
+                "KV cache full: need {} block(s) for {} token(s), {} free of {} slots",
+                need,
+                tokens.len(),
+                free,
+                self.capacity()
+            );
+        }
+        for &tok in tokens {
+            let tail = match table.blocks.last().copied() {
+                Some(b) if (self.blocks[b as usize].filled as usize) < bs => {
+                    if self.blocks[b as usize].refcount > 1 {
+                        self.cow(&mut table, b)
+                    } else {
+                        b
+                    }
+                }
+                _ => {
+                    let b = self.pop_free();
+                    self.blocks[b as usize].run_hash = table.chain;
+                    table.blocks.push(b);
+                    b
+                }
+            };
+            let blk = &mut self.blocks[tail as usize];
+            if blk.filled > 0 {
+                // the partial-tail entry tracks the live hash; retire
+                // the stale depth before advancing (only if it is ours —
+                // a COW source keeps its entry for future attachers)
+                if self.tail_index.get(&blk.run_hash) == Some(&tail) {
+                    self.tail_index.remove(&blk.run_hash);
+                }
+            }
+            blk.run_hash = mix(blk.run_hash, tok_key(tok));
+            out.push(tail * bs as u32 + blk.filled);
+            blk.filled += 1;
+            table.len += 1;
+            if blk.filled as usize == bs {
+                // seal: register for whole-block prefix matching (first
+                // writer of a content hash keeps the registration)
+                table.chain = blk.run_hash;
+                let key = blk.run_hash;
+                let blk_sealed = &mut self.blocks[tail as usize];
+                if !self.prefix_index.contains_key(&key) {
+                    self.prefix_index.insert(key, tail);
+                    blk_sealed.sealed_key = key;
+                }
+            } else {
+                self.tail_index.insert(blk.run_hash, tail);
+            }
+        }
+        self.seqs.insert(seq, table);
+        Ok(())
+    }
+
+    /// Move the pending copy-on-write records into `out` (cleared
+    /// first). The scheduler calls this after every allocation to
+    /// re-stamp the destination slots' device-visible metadata.
+    pub fn drain_copies(&mut self, out: &mut Vec<CowCopy>) {
+        out.clear();
+        out.append(&mut self.pending_copies);
+    }
+
+    /// Drop sequence `seq`'s references. Blocks whose refcount reaches
+    /// zero join the free list (their content hash stays registered for
+    /// resurrection until the block is reused); the slots of each such
+    /// block are appended to `freed` (cleared first) so the caller can
+    /// clear their device-visible metadata. Returns the sequence's
+    /// logical token count (0 if unknown).
+    pub fn decref_seq(&mut self, seq: u64, freed: &mut Vec<u32>) -> usize {
+        freed.clear();
+        let Some(table) = self.seqs.remove(&seq) else {
+            return 0;
+        };
+        let bs = self.block_size;
+        for &b in &table.blocks {
+            let dead = self.decref(b);
+            if dead {
+                let blk = &self.blocks[b as usize];
+                for j in 0..blk.filled {
+                    freed.push(b * bs as u32 + j);
+                }
+            }
+        }
+        table.len
+    }
+
+    fn incref(&mut self, b: u32) {
+        let blk = &mut self.blocks[b as usize];
+        blk.refcount += 1;
+        match blk.refcount {
+            1 => {
+                // resurrection off the free list (stale deque entry is
+                // skipped lazily on pop)
+                self.free_blocks -= 1;
+                self.peak_used_blocks =
+                    self.peak_used_blocks.max(self.blocks.len() - self.free_blocks);
+            }
+            2 => self.shared_blocks += 1,
+            _ => {}
+        }
+    }
+
+    /// Decrement; returns true when the block became free.
+    fn decref(&mut self, b: u32) -> bool {
+        let blk = &mut self.blocks[b as usize];
+        debug_assert!(blk.refcount > 0, "double free of block {b}");
+        blk.refcount -= 1;
+        match blk.refcount {
+            0 => {
+                self.free_blocks += 1;
+                if !blk.in_free {
+                    blk.in_free = true;
+                    self.free.push_back(b);
+                }
+                true
+            }
+            1 => {
+                self.shared_blocks -= 1;
+                false
+            }
+            _ => false,
+        }
+    }
+
+    /// Pop a truly-free block, skipping stale entries for resurrected
+    /// blocks, and wipe its cached identity (this is the eviction
+    /// point: FIFO order reuses the oldest-freed content first).
+    fn pop_free(&mut self) -> u32 {
+        loop {
+            let b = self
+                .free
+                .pop_front()
+                .expect("free_blocks accounting out of sync with deque");
+            self.blocks[b as usize].in_free = false;
+            if self.blocks[b as usize].refcount > 0 {
+                continue; // resurrected since it was freed
+            }
+            let blk = &mut self.blocks[b as usize];
+            if blk.sealed_key != 0 {
+                if self.prefix_index.get(&blk.sealed_key) == Some(&b) {
+                    self.prefix_index.remove(&blk.sealed_key);
+                }
+                blk.sealed_key = 0;
+            } else if blk.filled > 0 && self.tail_index.get(&blk.run_hash) == Some(&b) {
+                self.tail_index.remove(&blk.run_hash);
+            }
+            let blk = &mut self.blocks[b as usize];
+            blk.filled = 0;
+            blk.run_hash = 0;
+            blk.refcount = 1;
+            self.free_blocks -= 1;
+            self.peak_used_blocks =
+                self.peak_used_blocks.max(self.blocks.len() - self.free_blocks);
+            return b;
+        }
+    }
+
+    /// Copy-on-write: give `table` a private copy of its shared tail
+    /// block `src` (capacity was prechecked by the caller).
+    fn cow(&mut self, table: &mut SeqTable, src: u32) -> u32 {
+        let dst = self.pop_free();
+        let (filled, run_hash) = {
+            let s = &self.blocks[src as usize];
+            (s.filled, s.run_hash)
+        };
+        {
+            let d = &mut self.blocks[dst as usize];
+            d.filled = filled;
+            d.run_hash = run_hash;
+        }
+        // the source keeps its tail_index registration: it still serves
+        // future attachers of the common prefix
+        self.decref(src);
+        *table.blocks.last_mut().expect("cow on empty table") = dst;
+        self.cow_copies += 1;
+        self.pending_copies.push(CowCopy {
+            src_block: src,
+            dst_block: dst,
+            block_index: (table.blocks.len() - 1) as u32,
+            filled,
+        });
+        dst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slots(kv: &PagedKvCache, seq: u64) -> Vec<u32> {
+        (0..kv.seq_len(seq)).map(|p| kv.slot_of(seq, p).unwrap()).collect()
+    }
+
+    #[test]
+    fn block_size_one_matches_flat_kvcache_semantics() {
+        // the differential anchor: with 1-slot blocks and sharing off,
+        // the paged cache is semantically the flat allocator — same
+        // per-call slot sets while allocation is monotone, and identical
+        // free/used/per-seq accounting across arbitrary churn (slot
+        // *order* legitimately differs: flat hands out the tail of a
+        // reversed free list, paged pops a FIFO deque)
+        let mut flat = crate::kvcache::KvCache::new(32);
+        let mut paged = PagedKvCache::new(32, 1, false);
+        let mut fbuf = Vec::new();
+        let mut pbuf = Vec::new();
+        let toks: Vec<i32> = (0..8).collect();
+        for (seq, n) in [(1u64, 5usize), (2, 3), (1, 2), (3, 8)] {
+            flat.alloc_into(seq, n, &mut fbuf).unwrap();
+            paged.alloc_into(seq, -1, &toks[..n], &mut pbuf).unwrap();
+            fbuf.sort_unstable();
+            pbuf.sort_unstable();
+            assert_eq!(fbuf, pbuf, "seq {seq} n {n}");
+            assert_eq!(flat.seq_len(seq), paged.seq_len(seq));
+        }
+        assert_eq!(flat.free_slots(), paged.free_slots());
+        let mut freed = Vec::new();
+        assert_eq!(paged.decref_seq(1, &mut freed), flat.free_seq(1));
+        assert_eq!(freed.len(), 7);
+        assert_eq!(flat.free_slots(), paged.free_slots());
+        assert_eq!(flat.used_slots(), paged.used_slots());
+        // post-churn: accounting stays in lockstep even when ids diverge
+        crate::util::prop::check(411, 10, |rng| {
+            let mut flat = crate::kvcache::KvCache::new(24);
+            let mut paged = PagedKvCache::new(24, 1, false);
+            let mut live: Vec<u64> = Vec::new();
+            let (mut fb, mut pb, mut fr) = (Vec::new(), Vec::new(), Vec::new());
+            for step in 0..60u64 {
+                if rng.below(3) > 0 {
+                    let n = 1 + rng.below(5) as usize;
+                    let f = flat.alloc_into(step, n, &mut fb);
+                    let p = paged.alloc_into(step, -1, &vec![7; n], &mut pb);
+                    assert_eq!(f.is_ok(), p.is_ok(), "admission must agree");
+                    if f.is_ok() && !live.contains(&step) {
+                        live.push(step);
+                    }
+                } else if !live.is_empty() {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let seq = live.swap_remove(i);
+                    assert_eq!(flat.free_seq(seq), paged.decref_seq(seq, &mut fr));
+                }
+                assert_eq!(flat.free_slots(), paged.free_slots());
+                assert_eq!(flat.used_slots(), paged.used_slots());
+                for &s in &live {
+                    assert_eq!(flat.seq_len(s), paged.seq_len(s));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn full_block_prefix_is_shared_and_refcounted() {
+        let mut kv = PagedKvCache::new(64, 4, true);
+        let prompt: Vec<i32> = (100..112).collect(); // 3 full blocks
+        let mut buf = Vec::new();
+        kv.alloc_into(1, 0, &prompt, &mut buf).unwrap();
+        assert_eq!(kv.used_slots(), 12);
+        // identical prompt, same adapter: the cap at prompt_len-1 = 11
+        // admits the first 2 sealed blocks; the third sealed at depth 12
+        // is past the cap, and no partial tail exists (12 | 4)
+        let (cached, live) = kv.probe_prefix(&prompt, 0, prompt.len() - 1);
+        assert_eq!(cached, 8, "2 sealed blocks within the cap");
+        assert_eq!(live, 2);
+        kv.reserve_seq(2, 16, 0);
+        let got = kv.attach_prefix(2, &prompt, 0, prompt.len() - 1);
+        assert_eq!(got, 8);
+        assert_eq!(kv.seq_len(2), 8);
+        assert_eq!(kv.shared_blocks(), 2);
+        // physical memory did not grow: still 3 blocks
+        assert_eq!(kv.used_slots(), 12);
+        // shared slots are the same physical slots
+        assert_eq!(slots(&kv, 1)[..8], slots(&kv, 2)[..]);
+        assert_eq!(kv.prefix_hit_tokens(), 8);
+        assert_eq!(kv.prefix_miss_tokens(), 4);
+        // a different adapter must not match
+        assert_eq!(kv.probe_prefix(&prompt, 1, prompt.len() - 1), (0, 0));
+        // a diverging prompt matches only the common full blocks
+        let mut other = prompt.clone();
+        other[9] = 999;
+        assert_eq!(kv.probe_prefix(&other, 0, other.len() - 1).0, 8);
+    }
+
+    #[test]
+    fn cow_on_divergence_keeps_the_source_intact() {
+        let mut kv = PagedKvCache::new(64, 4, true);
+        let prompt: Vec<i32> = (7..13).collect(); // block 0 full, block 1 holds 2
+        let mut buf = Vec::new();
+        kv.alloc_into(1, -1, &prompt, &mut buf).unwrap();
+        let s1 = slots(&kv, 1);
+        // seq 2's prompt extends seq 1's by one diverging token, so the
+        // cap (prompt_len-1 = 6) admits seq 1's whole residency: one
+        // sealed block + the 2-deep partial tail
+        let mut prompt2 = prompt.clone();
+        prompt2.push(42);
+        kv.reserve_seq(2, 12, -1);
+        let got = kv.attach_prefix(2, &prompt2, -1, prompt2.len() - 1);
+        assert_eq!(got, 6, "1 sealed block + 2-deep partial tail");
+        assert_eq!(kv.shared_blocks(), 2);
+        // seq 2 writes its 7th token into the shared partial tail: COW
+        kv.alloc_into(2, -1, &[42], &mut buf).unwrap();
+        let mut copies = Vec::new();
+        kv.drain_copies(&mut copies);
+        assert_eq!(copies.len(), 1);
+        let c = copies[0];
+        assert_eq!(c.block_index, 1);
+        assert_eq!(c.filled, 2, "two shared tokens lived in the tail at copy time");
+        assert_ne!(c.src_block, c.dst_block);
+        // seq 1's physical slots are untouched; seq 2's tail moved
+        assert_eq!(slots(&kv, 1), s1);
+        let s2 = slots(&kv, 2);
+        assert_eq!(s2[..4], s1[..4], "sealed block still shared");
+        assert_ne!(s2[4], s1[4], "diverged tail is private");
+        assert_eq!(kv.cow_copies(), 1);
+        assert_eq!(kv.shared_blocks(), 1, "only the sealed block stays shared");
+        // seq 1 keeps appending into its original tail without COW
+        kv.alloc_into(1, -1, &[55], &mut buf).unwrap();
+        kv.drain_copies(&mut copies);
+        assert!(copies.is_empty(), "exclusive append must not copy");
+    }
+
+    #[test]
+    fn freed_blocks_resurrect_until_reused() {
+        let mut kv = PagedKvCache::new(16, 4, true);
+        let prompt: Vec<i32> = (0..8).collect();
+        let mut buf = Vec::new();
+        let mut freed = Vec::new();
+        kv.alloc_into(1, 0, &prompt, &mut buf).unwrap();
+        kv.decref_seq(1, &mut freed);
+        assert_eq!(kv.used_slots(), 0, "refcount-0 blocks are free");
+        assert_eq!(freed.len(), 8);
+        // the content hash survives: a new identical request resurrects
+        // the first sealed block (the second, sealed at depth 8, is past
+        // the prompt_len-1 cap) — the TTFT win across sequential requests
+        kv.reserve_seq(2, 10, 0);
+        let got = kv.attach_prefix(2, &prompt, 0, prompt.len() - 1);
+        assert_eq!(got, 4, "the in-cap sealed block resurrects");
+        assert_eq!(kv.used_slots(), 4, "resurrection consumes the free pool");
+        // churn through the whole pool so the freed blocks get reused...
+        let mut freed2 = Vec::new();
+        kv.decref_seq(2, &mut freed2);
+        let filler: Vec<i32> = (100..116).collect();
+        kv.alloc_into(9, 1, &filler, &mut buf).unwrap();
+        // ...then the old prefix is gone (evicted on reuse)
+        assert_eq!(kv.probe_prefix(&prompt, 0, prompt.len() - 1), (0, 0));
+    }
+
+    #[test]
+    fn alloc_failure_is_side_effect_free() {
+        let mut kv = PagedKvCache::new(8, 4, true);
+        let mut buf = Vec::new();
+        kv.alloc_into(1, -1, &[1, 2, 3, 4, 5], &mut buf).unwrap();
+        let free_before = kv.free_blocks();
+        let toks: Vec<i32> = (0..9).collect();
+        assert!(kv.alloc_into(2, -1, &toks, &mut buf).is_err());
+        assert!(buf.is_empty());
+        assert_eq!(kv.free_blocks(), free_before);
+        assert_eq!(kv.seq_len(2), 0);
+    }
+
+    #[test]
+    fn property_refcounts_never_leak() {
+        crate::util::prop::check(909, 30, |rng| {
+            let bs = 1 + rng.below(4) as usize;
+            let mut kv = PagedKvCache::new(64 * bs, bs, true);
+            let mut live: Vec<u64> = Vec::new();
+            let mut buf = Vec::new();
+            let mut freed = Vec::new();
+            let mut next = 0u64;
+            // a small pool of prompts makes sharing and COW frequent
+            let prompts: Vec<Vec<i32>> = (0..4)
+                .map(|p| (0..12).map(|i| (p * 3 + i) as i32).collect())
+                .collect();
+            for _ in 0..120 {
+                if rng.below(3) > 0 {
+                    next += 1;
+                    let prompt = &prompts[rng.below(4) as usize];
+                    let aid = rng.below(2) as i32 - 1;
+                    kv.reserve_seq(next, prompt.len() + 4, aid);
+                    let got = kv.attach_prefix(next, prompt, aid, prompt.len() - 1);
+                    if kv
+                        .alloc_into(next, aid, &prompt[got..], &mut buf)
+                        .is_ok()
+                    {
+                        live.push(next);
+                    } else {
+                        kv.decref_seq(next, &mut freed);
+                    }
+                } else if !live.is_empty() {
+                    let i = rng.below(live.len() as u64) as usize;
+                    kv.decref_seq(live.swap_remove(i), &mut freed);
+                }
+                kv.drain_copies(&mut Vec::new());
+            }
+            for &s in &live {
+                assert_eq!(kv.seq_len(s), 12);
+                kv.decref_seq(s, &mut freed);
+            }
+            assert_eq!(kv.used_slots(), 0, "all refcounts must return to zero");
+            assert_eq!(kv.shared_blocks(), 0);
+            assert_eq!(kv.free_blocks(), kv.num_blocks());
+        });
+    }
+}

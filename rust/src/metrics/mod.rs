@@ -42,6 +42,8 @@ pub struct MetricsCollector {
     rejected: usize,
     aborted: usize,
     deadline_missed: usize,
+    kv_pages_shared: usize,
+    kv_pages_cow: usize,
 }
 
 /// Final report of a serving run (one Fig. 5/6/10 data point).
@@ -69,6 +71,11 @@ pub struct Report {
     /// Subset of `aborted` that hit their deadline (queued requests past
     /// deadline are dropped before ever occupying a batch slot).
     pub deadline_missed: usize,
+    /// Peak physical KV pages referenced by more than one sequence over
+    /// the run (paged cache prefix sharing; 0 with sharing off).
+    pub kv_pages_shared: usize,
+    /// Copy-on-write KV page splits performed over the run.
+    pub kv_pages_cow: usize,
 }
 
 impl MetricsCollector {
@@ -126,6 +133,14 @@ impl MetricsCollector {
         self.records.len()
     }
 
+    /// Publish the paged-cache sharing totals (the engine calls this
+    /// when a report is cut; `shared` keeps the high-water mark so a
+    /// drained engine still reports the sharing it saw mid-run).
+    pub fn set_kv_sharing(&mut self, shared: usize, cow: usize) {
+        self.kv_pages_shared = self.kv_pages_shared.max(shared);
+        self.kv_pages_cow = cow;
+    }
+
     pub fn records(&self) -> &[RequestRecord] {
         &self.records
     }
@@ -164,6 +179,8 @@ impl MetricsCollector {
             shed: 0,
             aborted: self.aborted,
             deadline_missed: self.deadline_missed,
+            kv_pages_shared: self.kv_pages_shared,
+            kv_pages_cow: self.kv_pages_cow,
         }
     }
 }
@@ -192,6 +209,8 @@ impl Report {
         let mut shed = 0;
         let mut aborted = 0;
         let mut deadline_missed = 0;
+        let mut kv_pages_shared = 0;
+        let mut kv_pages_cow = 0;
         let mut wall: f64 = 0.0;
         for r in parts {
             requests += r.requests;
@@ -201,6 +220,8 @@ impl Report {
             shed += r.shed;
             aborted += r.aborted;
             deadline_missed += r.deadline_missed;
+            kv_pages_shared += r.kv_pages_shared;
+            kv_pages_cow += r.kv_pages_cow;
             wall = wall.max(r.wall);
         }
         let wall = wall_override.unwrap_or(wall).max(1e-9);
@@ -228,6 +249,8 @@ impl Report {
             shed,
             aborted,
             deadline_missed,
+            kv_pages_shared,
+            kv_pages_cow,
         }
     }
 
@@ -258,6 +281,12 @@ impl Report {
             row.push_str(&format!(
                 " aborted={} (deadline={})",
                 self.aborted, self.deadline_missed
+            ));
+        }
+        if self.kv_pages_shared > 0 || self.kv_pages_cow > 0 {
+            row.push_str(&format!(
+                " kv_shared={} cow={}",
+                self.kv_pages_shared, self.kv_pages_cow
             ));
         }
         row
@@ -356,6 +385,25 @@ mod tests {
         assert!(empty.ttft.min.is_nan(), "empty min must not be +inf");
         assert_eq!(empty.goodput(), 0.0);
         let _ = empty.row("empty");
+    }
+
+    #[test]
+    fn kv_sharing_flows_to_report_and_merge() {
+        let mut m = MetricsCollector::new();
+        m.set_kv_sharing(5, 1);
+        m.set_kv_sharing(2, 3); // gauge fell back; peak must hold
+        let r = m.report();
+        assert_eq!((r.kv_pages_shared, r.kv_pages_cow), (5, 3));
+        assert!(r.row("x").contains("kv_shared=5 cow=3"));
+        let merged = Report::merge(
+            [&r, &r],
+            std::iter::empty::<&RequestRecord>(),
+            None,
+        );
+        assert_eq!((merged.kv_pages_shared, merged.kv_pages_cow), (10, 6));
+        // silent when sharing never happened
+        let quiet = MetricsCollector::new().report();
+        assert!(!quiet.row("x").contains("kv_shared"));
     }
 
     #[test]

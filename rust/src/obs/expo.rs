@@ -125,6 +125,24 @@ pub fn render(regs: &[Arc<ObsRegistry>]) -> String {
         "Decode tokens scheduled.",
         &|s| s.tokens_decode,
     );
+    counter(
+        &mut out,
+        "expertweave_kv_prefix_hits_total",
+        "Prompt tokens adopted from shared KV prefix pages.",
+        &|s| s.kv_prefix_hits,
+    );
+    counter(
+        &mut out,
+        "expertweave_kv_prefix_misses_total",
+        "Prompt tokens prefilled fresh (no shared prefix page).",
+        &|s| s.kv_prefix_misses,
+    );
+    counter(
+        &mut out,
+        "expertweave_kv_cow_copies_total",
+        "Copy-on-write KV page splits on divergence.",
+        &|s| s.kv_pages_cow,
+    );
 
     let gauge = |out: &mut String, name: &str, help: &str, get: &dyn Fn(&StatsSnapshot) -> u64| {
         let _ = writeln!(out, "# HELP {name} {help}");
@@ -134,6 +152,12 @@ pub fn render(regs: &[Arc<ObsRegistry>]) -> String {
         }
     };
     gauge(&mut out, "expertweave_kv_free_slots", "Free KV-cache token slots.", &|s| s.kv_free);
+    gauge(
+        &mut out,
+        "expertweave_kv_pages_shared",
+        "Physical KV pages referenced by more than one sequence.",
+        &|s| s.kv_pages_shared,
+    );
     gauge(&mut out, "expertweave_queue_waiting", "Requests waiting for admission.", &|s| {
         s.waiting
     });
@@ -297,6 +321,8 @@ mod tests {
         r.record_step(200, 150, 32, 8);
         r.record_token(0);
         r.set_gauges(512, 0, 4);
+        r.record_prefix(24, 8);
+        r.set_kv_shared(2);
         Arc::new(r)
     }
 
@@ -307,6 +333,10 @@ mod tests {
             "expertweave_steps_total{replica=\"0\"} 1",
             "expertweave_requests_completed_total{replica=\"0\"} 1",
             "expertweave_kv_free_slots{replica=\"0\"} 512",
+            "expertweave_kv_prefix_hits_total{replica=\"0\"} 24",
+            "expertweave_kv_prefix_misses_total{replica=\"0\"} 8",
+            "expertweave_kv_cow_copies_total{replica=\"0\"} 0",
+            "expertweave_kv_pages_shared{replica=\"0\"} 2",
             "expertweave_queue_running{replica=\"0\"} 4",
             "expertweave_step_wall_us_count{replica=\"0\"} 1",
             "expertweave_adapter_requests_completed_total{adapter=\"math\"} 1",

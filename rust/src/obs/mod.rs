@@ -45,7 +45,11 @@ use std::sync::Mutex;
 
 /// Schema version of the [`StatsSnapshot`] JSON rendering (the NDJSON
 /// `stats` frame carries this as `"version"`).
-pub const STATS_VERSION: i64 = 1;
+///
+/// v2: prefix-cache families (`kv_prefix_hits`, `kv_prefix_misses`,
+/// `kv_pages_cow` counters; `kv_pages_shared` gauge) — see
+/// docs/PROTOCOL.md.
+pub const STATS_VERSION: i64 = 2;
 
 /// Number of log2 buckets in a [`Histo`] (covers the full `u64` range).
 pub const HISTO_BUCKETS: usize = 64;
@@ -216,6 +220,10 @@ pub struct ObsRegistry {
     requests_aborted: AtomicU64,
     tokens_prefill: AtomicU64,
     tokens_decode: AtomicU64,
+    // prefix-cache counters (paged KV cache sharing)
+    kv_prefix_hits: AtomicU64,
+    kv_prefix_misses: AtomicU64,
+    kv_pages_cow: AtomicU64,
     // histograms (microseconds)
     step_wall_us: Histo,
     step_exec_us: Histo,
@@ -223,6 +231,7 @@ pub struct ObsRegistry {
     e2e_us: Histo,
     // gauges
     kv_free: AtomicU64,
+    kv_pages_shared: AtomicU64,
     waiting: AtomicU64,
     running: AtomicU64,
     // labelled counters, preallocated: [base, aid 0, aid 1, ...]
@@ -245,11 +254,15 @@ impl ObsRegistry {
             requests_aborted: AtomicU64::new(0),
             tokens_prefill: AtomicU64::new(0),
             tokens_decode: AtomicU64::new(0),
+            kv_prefix_hits: AtomicU64::new(0),
+            kv_prefix_misses: AtomicU64::new(0),
+            kv_pages_cow: AtomicU64::new(0),
             step_wall_us: Histo::default(),
             step_exec_us: Histo::default(),
             ttft_us: Histo::default(),
             e2e_us: Histo::default(),
             kv_free: AtomicU64::new(0),
+            kv_pages_shared: AtomicU64::new(0),
             waiting: AtomicU64::new(0),
             running: AtomicU64::new(0),
             adapters,
@@ -350,6 +363,34 @@ impl ObsRegistry {
         self.running.store(running, Ordering::Relaxed);
     }
 
+    /// Prefix-cache outcome of one scheduling round: prompt tokens
+    /// adopted from shared pages (`hits`) vs prefilled fresh (`misses`).
+    /// Called from `Engine::step` with per-step deltas — allocation-free.
+    #[inline]
+    pub fn record_prefix(&self, hits: u64, misses: u64) {
+        if !self.is_enabled() || (hits == 0 && misses == 0) {
+            return;
+        }
+        self.kv_prefix_hits.fetch_add(hits, Ordering::Relaxed);
+        self.kv_prefix_misses.fetch_add(misses, Ordering::Relaxed);
+    }
+
+    /// Copy-on-write page splits performed this step (paged KV cache).
+    #[inline]
+    pub fn record_cow(&self, copies: u64) {
+        if !self.is_enabled() || copies == 0 {
+            return;
+        }
+        self.kv_pages_cow.fetch_add(copies, Ordering::Relaxed);
+    }
+
+    /// Publish the shared-pages gauge (physical KV pages referenced by
+    /// more than one sequence right now).
+    #[inline]
+    pub fn set_kv_shared(&self, pages: u64) {
+        self.kv_pages_shared.store(pages, Ordering::Relaxed);
+    }
+
     /// Label slot `aid` (on adapter load / registry sync). A name change
     /// means the physical slot was reused by a different adapter, so the
     /// slot counters restart from zero under the new label.
@@ -401,7 +442,11 @@ impl ObsRegistry {
             requests_aborted: ld(&self.requests_aborted),
             tokens_prefill: ld(&self.tokens_prefill),
             tokens_decode: ld(&self.tokens_decode),
+            kv_prefix_hits: ld(&self.kv_prefix_hits),
+            kv_prefix_misses: ld(&self.kv_prefix_misses),
+            kv_pages_cow: ld(&self.kv_pages_cow),
             kv_free: ld(&self.kv_free),
+            kv_pages_shared: ld(&self.kv_pages_shared),
             waiting: ld(&self.waiting),
             running: ld(&self.running),
             step_wall_us: self.step_wall_us.snapshot(),
@@ -423,11 +468,15 @@ impl ObsRegistry {
         self.requests_aborted.store(0, Ordering::Relaxed);
         self.tokens_prefill.store(0, Ordering::Relaxed);
         self.tokens_decode.store(0, Ordering::Relaxed);
+        self.kv_prefix_hits.store(0, Ordering::Relaxed);
+        self.kv_prefix_misses.store(0, Ordering::Relaxed);
+        self.kv_pages_cow.store(0, Ordering::Relaxed);
         self.step_wall_us.reset();
         self.step_exec_us.reset();
         self.ttft_us.reset();
         self.e2e_us.reset();
         self.kv_free.store(0, Ordering::Relaxed);
+        self.kv_pages_shared.store(0, Ordering::Relaxed);
         self.waiting.store(0, Ordering::Relaxed);
         self.running.store(0, Ordering::Relaxed);
         for s in &self.adapters {
@@ -462,8 +511,16 @@ pub struct StatsSnapshot {
     pub requests_aborted: u64,
     pub tokens_prefill: u64,
     pub tokens_decode: u64,
+    /// Prompt tokens adopted from shared prefix pages (paged KV cache).
+    pub kv_prefix_hits: u64,
+    /// Prompt tokens that had to be prefilled fresh.
+    pub kv_prefix_misses: u64,
+    /// Copy-on-write page splits performed.
+    pub kv_pages_cow: u64,
     /// Gauges; summed across replicas on merge.
     pub kv_free: u64,
+    /// Physical KV pages currently referenced by more than one sequence.
+    pub kv_pages_shared: u64,
     pub waiting: u64,
     pub running: u64,
     pub step_wall_us: HistoSnapshot,
@@ -489,7 +546,11 @@ impl StatsSnapshot {
         self.requests_aborted += other.requests_aborted;
         self.tokens_prefill += other.tokens_prefill;
         self.tokens_decode += other.tokens_decode;
+        self.kv_prefix_hits += other.kv_prefix_hits;
+        self.kv_prefix_misses += other.kv_prefix_misses;
+        self.kv_pages_cow += other.kv_pages_cow;
         self.kv_free += other.kv_free;
+        self.kv_pages_shared += other.kv_pages_shared;
         self.waiting += other.waiting;
         self.running += other.running;
         self.step_wall_us.merge(&other.step_wall_us);
@@ -535,12 +596,16 @@ impl StatsSnapshot {
                     ("requests_aborted", Json::Int(self.requests_aborted as i64)),
                     ("tokens_prefill", Json::Int(self.tokens_prefill as i64)),
                     ("tokens_decode", Json::Int(self.tokens_decode as i64)),
+                    ("kv_prefix_hits", Json::Int(self.kv_prefix_hits as i64)),
+                    ("kv_prefix_misses", Json::Int(self.kv_prefix_misses as i64)),
+                    ("kv_pages_cow", Json::Int(self.kv_pages_cow as i64)),
                 ]),
             ),
             (
                 "gauges",
                 obj(vec![
                     ("kv_free", Json::Int(self.kv_free as i64)),
+                    ("kv_pages_shared", Json::Int(self.kv_pages_shared as i64)),
                     ("waiting", Json::Int(self.waiting as i64)),
                     ("running", Json::Int(self.running as i64)),
                 ]),
@@ -749,6 +814,9 @@ mod tests {
         r.record_completed(0, 1_500, 30_000);
         r.record_rejected();
         r.set_gauges(100, 2, 6);
+        r.record_prefix(12, 4);
+        r.record_cow(1);
+        r.set_kv_shared(3);
         let s = r.snapshot();
         assert_eq!(s.steps, 1);
         assert_eq!(s.requests_submitted, 2);
@@ -756,6 +824,8 @@ mod tests {
         assert_eq!(s.requests_rejected, 1);
         assert_eq!((s.tokens_prefill, s.tokens_decode), (16, 8));
         assert_eq!((s.kv_free, s.waiting, s.running), (100, 2, 6));
+        assert_eq!((s.kv_prefix_hits, s.kv_prefix_misses), (12, 4));
+        assert_eq!((s.kv_pages_cow, s.kv_pages_shared), (1, 3));
         assert_eq!(s.step_wall_us.count, 1);
         assert!(s.step_wall_us.quantile(0.5).unwrap() >= 120);
         let math = s.adapters.iter().find(|a| a.name == "math").unwrap();
@@ -792,10 +862,14 @@ mod tests {
         r.set_adapter_name(0, "math");
         r.record_submitted(0);
         r.record_completed(0, 1000, 2000);
+        r.record_prefix(8, 2);
         let j = r.snapshot().to_json();
         assert_eq!(j.at(&["version"]).as_i64(), Some(STATS_VERSION));
         assert_eq!(j.at(&["replicas"]).as_i64(), Some(1));
         assert_eq!(j.at(&["counters", "requests_completed"]).as_i64(), Some(1));
+        assert_eq!(j.at(&["counters", "kv_prefix_hits"]).as_i64(), Some(8));
+        assert_eq!(j.at(&["counters", "kv_pages_cow"]).as_i64(), Some(0));
+        assert_eq!(j.at(&["gauges", "kv_pages_shared"]).as_i64(), Some(0));
         let adapters = j.at(&["adapters"]).as_arr().unwrap();
         assert!(adapters.iter().any(|a| {
             a.at(&["adapter"]).as_str() == Some("math")

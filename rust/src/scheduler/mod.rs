@@ -6,11 +6,17 @@
 //! 2. chunked prefill tokens of admitted sequences, FCFS, up to
 //!    `chunk` tokens per sequence per step.
 //!
-//! New sequences are admitted while the sequence and KV-slot budgets
-//! hold (conservative reservation: prompt + max_new slots). Tokens of
-//! requests for different ESFT adapters are freely interleaved — the
-//! batch carries the per-token AID array the rerouting kernel consumes
-//! (token-granularity batching, paper section 4.3).
+//! New sequences are admitted while the sequence and KV-block budgets
+//! hold (conservative reservation: blocks for prompt + max_new). The
+//! budget is *physical*: with the paged KV cache
+//! ([`crate::kvcache::PagedKvCache`]), prompt blocks already resident
+//! for another live request are shared instead of re-reserved, so
+//! admitted concurrency grows with prefix overlap — and the cached
+//! prefix is adopted at admission (`attach_prefix`), so prefill skips
+//! it entirely (the TTFT win). Tokens of requests for different ESFT
+//! adapters are freely interleaved — the batch carries the per-token
+//! AID array the rerouting kernel consumes (token-granularity batching,
+//! paper section 4.3).
 //!
 //! ## The step workspace (zero-allocation hot path)
 //!
@@ -25,7 +31,7 @@
 //! (asserted by `tests/hotpath_alloc.rs` under the `alloc-counter`
 //! feature).
 
-use crate::kvcache::KvCache;
+use crate::kvcache::{CowCopy, PagedKvCache};
 use crate::runtime::engine::StepInputs;
 use crate::sampler::Sampling;
 use anyhow::{bail, Result};
@@ -206,6 +212,12 @@ pub struct StepWorkspace {
     plan: Vec<(usize, usize)>,
     /// Scratch for KV slot allocation.
     slots: Vec<u32>,
+    /// Scratch for physically-freed slots reported by `decref_seq`
+    /// (release only clears metadata of slots whose block refcount hit
+    /// zero — shared blocks stay live for their other sequences).
+    freed: Vec<u32>,
+    /// Scratch for pending copy-on-write records drained per alloc.
+    copies: Vec<CowCopy>,
 }
 
 impl StepWorkspace {
@@ -226,6 +238,8 @@ impl StepWorkspace {
             rows: Vec::with_capacity(max_rows),
             plan: Vec::with_capacity(cfg.max_seqs.min(max_rows.max(16))),
             slots: Vec::with_capacity(cfg.chunk.min(max_bucket)),
+            freed: Vec::with_capacity(cfg.kv_cap),
+            copies: Vec::with_capacity(32),
         }
     }
 
@@ -235,14 +249,6 @@ impl StepWorkspace {
         self.rows.iter().all(|r| r.sampling == Sampling::Greedy)
     }
 
-    /// Clear the device-visible metadata of freed KV slots (dirty-slot
-    /// update of the persistent `cache_seg`/`cache_pos` arrays).
-    fn clear_slots(&mut self, slots: &[u32]) {
-        for &s in slots {
-            self.inputs.cache_seg[s as usize] = -1;
-            self.inputs.cache_pos[s as usize] = 0;
-        }
-    }
 }
 
 /// The continuous-batching scheduler.
@@ -308,19 +314,19 @@ impl Scheduler {
             .count()
     }
 
-    /// Upper bound on KV slots a sequence will still consume.
-    fn future_need(seq: &SeqState) -> usize {
-        seq.pending() + seq.max_new.saturating_sub(seq.generated())
-    }
-
-    fn admit(&mut self, kv: &mut KvCache) {
+    fn admit(&mut self, kv: &mut PagedKvCache, ws: &mut StepWorkspace) {
         if self.waiting.is_empty() {
             return;
         }
-        // conservative reservation: pending prompt + remaining output of
-        // every running sequence is already spoken for (no preemption)
-        let mut reserved: usize =
-            self.running.iter().map(Self::future_need).sum();
+        // conservative reservation: the physical blocks every running
+        // sequence may still need to finish (pending prompt + remaining
+        // output, block-granular, +1 for a pending tail copy-on-write)
+        // are already spoken for (no preemption)
+        let mut reserved: usize = self
+            .running
+            .iter()
+            .map(|s| kv.future_blocks(s.id, s.prompt_len + s.max_new))
+            .sum();
         while self.running.len() < self.cfg.max_seqs {
             let Some(seq) = self.waiting.front() else { break };
             // seg-id safety: the attention kernel isolates sequences by
@@ -331,15 +337,40 @@ impl Scheduler {
             if self.running.iter().any(|r| seg_of(r.id) == seg) {
                 break;
             }
-            let need = Self::future_need(seq);
-            if kv.free_slots() < reserved + need {
+            // logical vs physical admission: the sequence only needs
+            // fresh physical blocks for the part of its footprint that
+            // is not already resident in a *live* sequence's shared
+            // prefix (refcount-0 cached blocks and partial tails still
+            // draw on the free pool, so they are not discounted).
+            let final_len = seq.tokens.len() + seq.max_new;
+            let limit = seq.prompt_len.saturating_sub(1);
+            let (cached, live_full) = kv.probe_prefix(&seq.tokens, seq.aid, limit);
+            let need = kv.blocks_for(final_len).saturating_sub(live_full);
+            if kv.free_blocks() < reserved + need {
                 break;
             }
             reserved += need;
             let mut seq = self.waiting.pop_front().unwrap();
             seq.admitted_at = Some(Instant::now());
-            // pre-size the KV slot list so decode-path allocs never grow it
-            kv.reserve_seq(seq.id, seq.tokens.len() + seq.max_new);
+            // pre-size the block table so decode-path allocs never grow it
+            kv.reserve_seq(seq.id, final_len, seq.aid);
+            // adopt the cached prefix: those tokens are already resident,
+            // so prefill skips them entirely (the prefix-cache TTFT win)
+            let attached = kv.attach_prefix(seq.id, &seq.tokens, seq.aid, limit);
+            debug_assert_eq!(attached, cached, "probe and attach must agree");
+            if attached > 0 {
+                seq.prefilled = attached;
+                // stamp the adopted slots' device-visible metadata with
+                // the attaching sequence's seg (most-recent-attacher
+                // convention; see the kvcache::paged module docs)
+                let bs = kv.block_size();
+                let blocks = kv.blocks_of(seq.id).expect("attached seq has a table");
+                for p in 0..attached {
+                    let slot = blocks[p / bs] as usize * bs + p % bs;
+                    ws.inputs.cache_seg[slot] = seg;
+                    ws.inputs.cache_pos[slot] = p as i32;
+                }
+            }
             self.running.push(seq);
         }
     }
@@ -351,10 +382,10 @@ impl Scheduler {
     /// capacity.
     pub fn build_batch(
         &mut self,
-        kv: &mut KvCache,
+        kv: &mut PagedKvCache,
         ws: &mut StepWorkspace,
     ) -> Result<Option<Batch>> {
-        self.admit(kv);
+        self.admit(kv, ws);
         ws.rows.clear();
         if self.running.is_empty() {
             return Ok(None);
@@ -366,7 +397,7 @@ impl Scheduler {
             "duplicate seg ids among running sequences"
         );
         let budget = self.cfg.max_bucket();
-        let StepWorkspace { inputs, rows, plan, slots } = ws;
+        let StepWorkspace { inputs, rows, plan, slots, copies, .. } = ws;
         plan.clear();
         let mut total = 0usize;
 
@@ -419,8 +450,24 @@ impl Scheduler {
         for &(si, take) in plan.iter() {
             let seq = &mut self.running[si];
             let start = seq.prefilled;
-            kv.alloc_into(seq.id, take, slots)?;
+            // the token values feed the paged cache's rolling prefix
+            // hash, so this sequence's blocks become matchable by
+            // future requests with the same (adapter, prefix)
+            kv.alloc_into(seq.id, seq.aid, &seq.tokens[start..start + take], slots)?;
             let seg = seg_of(seq.id);
+            // appending into a block shared with another sequence moved
+            // this sequence's tail to a private copy: re-stamp the
+            // copied slots' metadata (host analogue of device copy_blocks)
+            kv.drain_copies(copies);
+            let bs = kv.block_size();
+            for c in copies.iter() {
+                let first = c.block_index as usize * bs;
+                for j in 0..c.filled as usize {
+                    let slot = c.dst_block as usize * bs + j;
+                    inputs.cache_seg[slot] = seg;
+                    inputs.cache_pos[slot] = (first + j) as i32;
+                }
+            }
             for (j, &slot) in slots.iter().enumerate() {
                 let pos = (start + j) as i32;
                 let t = cursor + j;
@@ -481,16 +528,21 @@ impl Scheduler {
         Ok(first)
     }
 
-    /// Free a sequence's KV slots and clear its device-visible metadata.
-    fn release(seq: &SeqState, kv: &mut KvCache, ws: &mut StepWorkspace) {
-        if let Some(slots) = kv.slots_of(seq.id) {
-            ws.clear_slots(slots);
+    /// Drop a sequence's KV block references. Only blocks whose
+    /// refcount reaches zero are physically freed — shared prefix
+    /// blocks stay resident for their surviving sequences — and only
+    /// those slots get their device-visible metadata cleared.
+    fn release(seq: &SeqState, kv: &mut PagedKvCache, ws: &mut StepWorkspace) {
+        let StepWorkspace { inputs, freed, .. } = ws;
+        kv.decref_seq(seq.id, freed);
+        for &s in freed.iter() {
+            inputs.cache_seg[s as usize] = -1;
+            inputs.cache_pos[s as usize] = 0;
         }
-        kv.free_seq(seq.id);
     }
 
     /// Remove finished sequences, freeing their KV slots; returns them.
-    pub fn reap(&mut self, kv: &mut KvCache, ws: &mut StepWorkspace) -> Vec<SeqState> {
+    pub fn reap(&mut self, kv: &mut PagedKvCache, ws: &mut StepWorkspace) -> Vec<SeqState> {
         let mut out = Vec::new();
         let mut i = 0;
         while i < self.running.len() {
@@ -512,7 +564,7 @@ impl Scheduler {
     pub fn cancel(
         &mut self,
         id: u64,
-        kv: &mut KvCache,
+        kv: &mut PagedKvCache,
         ws: &mut StepWorkspace,
     ) -> Option<SeqState> {
         if let Some(pos) = self.waiting.iter().position(|s| s.id == id) {
@@ -533,7 +585,7 @@ impl Scheduler {
     pub fn expire_deadlines(
         &mut self,
         now: Instant,
-        kv: &mut KvCache,
+        kv: &mut PagedKvCache,
         ws: &mut StepWorkspace,
     ) -> Vec<SeqState> {
         let mut out = Vec::new();
@@ -578,9 +630,16 @@ mod tests {
         )
     }
 
-    fn setup() -> (Scheduler, KvCache, StepWorkspace) {
+    /// Flat-equivalent paged cache (1-slot blocks, sharing off): the
+    /// scheduler behaviour tests pin the same numbers as the original
+    /// flat allocator.
+    fn flat_kv(cap: usize) -> PagedKvCache {
+        PagedKvCache::new(cap, 1, false)
+    }
+
+    fn setup() -> (Scheduler, PagedKvCache, StepWorkspace) {
         let c = cfg();
-        (Scheduler::new(c.clone()), KvCache::new(64), StepWorkspace::new(&c))
+        (Scheduler::new(c.clone()), flat_kv(64), StepWorkspace::new(&c))
     }
 
     #[test]
@@ -644,7 +703,7 @@ mod tests {
         // KV-constrained admission: capacity 16, each seq reserves 6
         let c = SchedConfig { max_seqs: 64, abi_max_seqs: 64, kv_cap: 16, ..cfg() };
         let (mut s, mut kv, mut ws) =
-            (Scheduler::new(c.clone()), KvCache::new(16), StepWorkspace::new(&c));
+            (Scheduler::new(c.clone()), flat_kv(16), StepWorkspace::new(&c));
         for i in 0..5 {
             s.submit(seq(i, 4, 2)); // needs 6 reserved
         }
@@ -755,6 +814,63 @@ mod tests {
     }
 
     #[test]
+    fn shared_prefix_grows_admission_and_skips_prefill() {
+        // 5 blocks of 4 slots; each request needs 3 blocks privately
+        // (8-token prompt + 4 new = 12 tokens), so flat accounting fits
+        // only one (2 * 12 = 24 > 20 slots). With sharing, the second
+        // identical-prompt request discounts the live prompt block and
+        // admits — and its prefill skips the 4 adopted tokens.
+        let c = SchedConfig {
+            max_seqs: 8,
+            abi_max_seqs: 8,
+            chunk: 8,
+            buckets: vec![4, 16],
+            kv_cap: 20,
+        };
+        let mut s = Scheduler::new(c.clone());
+        let mut kv = PagedKvCache::new(20, 4, true);
+        let mut ws = StepWorkspace::new(&c);
+        let prompt: Vec<i32> = (100..108).collect();
+        let req = |id: u64| {
+            SeqState::new(id, 2, Some("math".into()), prompt.clone(), 4, Sampling::Greedy)
+        };
+        s.submit(req(1));
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
+        s.push_token(1, 1).unwrap();
+        s.submit(req(2));
+        let b = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
+        assert_eq!(s.running_len(), 2, "sharing must widen admission");
+        assert_eq!(b.decode_tokens, 1);
+        assert_eq!(
+            b.prefill_tokens, 4,
+            "the 4 adopted prefix tokens must not be re-prefilled"
+        );
+        assert_eq!(kv.prefix_hit_tokens(), 4);
+        assert_eq!(kv.prefix_miss_tokens(), 4);
+        assert_eq!(kv.shared_blocks(), 1);
+        // the adopted slots were re-stamped for the attaching sequence
+        for slot in 0..4 {
+            assert_eq!(ws.inputs.cache_seg[slot], seg_of(2));
+            assert_eq!(ws.inputs.cache_pos[slot], slot as i32);
+        }
+        // drain both; every block refcount must return to zero
+        for _ in 0..32 {
+            let seqs: Vec<u64> = ws.rows.iter().map(|r| r.seq).collect();
+            for id in seqs {
+                s.push_token(id, 7).unwrap();
+            }
+            s.reap(&mut kv, &mut ws);
+            if s.build_batch(&mut kv, &mut ws).unwrap().is_none() {
+                break;
+            }
+        }
+        assert!(s.is_idle());
+        assert_eq!(kv.used_slots(), 0);
+        assert_eq!(kv.shared_blocks(), 0);
+        assert!(ws.inputs.cache_seg.iter().all(|&x| x == -1));
+    }
+
+    #[test]
     fn push_token_reports_ttft_edge() {
         let (mut s, mut kv, mut ws) = setup();
         s.submit(seq(1, 2, 3));
@@ -844,7 +960,7 @@ mod tests {
                 kv_cap: 256,
             };
             let mut s = Scheduler::new(cfg.clone());
-            let mut kv = KvCache::new(256);
+            let mut kv = flat_kv(256);
             let mut ws = StepWorkspace::new(&cfg);
             let mut next_id = 0u64;
             for _ in 0..30 {

@@ -21,7 +21,7 @@ pub mod power_law;
 pub mod prompts;
 pub mod trace;
 
-pub use openloop::{OpenLoopOutcome, OpenLoopSpec};
+pub use openloop::{preamble_token, OpenLoopOutcome, OpenLoopSpec, PREAMBLE_POOL};
 pub use power_law::power_law_shares;
 pub use prompts::PromptGen;
 pub use trace::{Trace, TraceEvent, TraceSpec};

@@ -61,7 +61,35 @@ pub struct OpenLoopSpec {
     pub deadline: Option<Duration>,
     /// Vocabulary bound for the synthetic prompt tokens.
     pub vocab: usize,
+    /// Fraction (`0..=1`) of every prompt drawn from its adapter's
+    /// shared preamble pool instead of fresh random tokens — the
+    /// ESFT-style "identical task preamble" pattern that the paged KV
+    /// cache's prefix sharing exploits. Preambles are deterministic per
+    /// (adapter, pool slot), so two requests hitting the same slot carry
+    /// byte-identical prefixes across replicas and runs.
+    pub prefix_overlap: f64,
     pub seed: u64,
+}
+
+/// Distinct preambles per adapter in the shared-prefix pool: overlap
+/// concentrates on a handful of "system prompts" per task, not one.
+pub const PREAMBLE_POOL: u64 = 4;
+
+/// Deterministic preamble token for `(adapter slot, pool slot, position)`
+/// — stateless, so every generator (openloop, loadgen, fig13) agrees on
+/// the shared prefixes without coordinating.
+pub fn preamble_token(adapter_ix: u64, pool: u64, pos: usize, vocab: usize) -> i32 {
+    let mut x = adapter_ix
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(pool.wrapping_mul(0xbf58_476d_1ce4_e5b9))
+        .wrapping_add((pos as u64).wrapping_mul(0x94d0_49bb_1331_11eb))
+        .wrapping_add(0x5eed);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    (1 + x % (vocab.saturating_sub(1).max(1) as u64)) as i32
 }
 
 impl Default for OpenLoopSpec {
@@ -75,6 +103,7 @@ impl Default for OpenLoopSpec {
             max_new: 8,
             deadline: None,
             vocab: 512,
+            prefix_overlap: 0.0,
             seed: 0,
         }
     }
@@ -138,15 +167,27 @@ impl OpenLoopOutcome {
 
 /// Draw one synthetic request.
 fn gen_request(rng: &mut Pcg, spec: &OpenLoopSpec, shares: &[f64]) -> ServeRequest {
-    let adapter = if spec.adapters.is_empty() {
-        None
+    let (adapter, adapter_ix) = if spec.adapters.is_empty() {
+        (None, u64::MAX) // base model draws from its own preamble pool
     } else {
-        Some(spec.adapters[rng.categorical(shares)].clone())
+        let i = rng.categorical(shares);
+        (Some(spec.adapters[i].clone()), i as u64)
     };
     let base = spec.prompt_len.max(2);
     let len = (base / 2 + rng.below(base as u64) as usize).max(1);
+    // the leading `overlap` fraction comes from one of the adapter's
+    // shared preambles; the tail stays request-private random tokens
+    let overlap = spec.prefix_overlap.clamp(0.0, 1.0);
+    let shared = ((len as f64) * overlap).round() as usize;
+    let pool = rng.below(PREAMBLE_POOL);
     let prompt = (0..len)
-        .map(|_| (1 + rng.below(spec.vocab.saturating_sub(1).max(1) as u64)) as i32)
+        .map(|p| {
+            if p < shared {
+                preamble_token(adapter_ix, pool, p, spec.vocab)
+            } else {
+                (1 + rng.below(spec.vocab.saturating_sub(1).max(1) as u64)) as i32
+            }
+        })
         .collect();
     ServeRequest {
         adapter,
@@ -506,6 +547,7 @@ pub fn fleet_online_json(spec: &FleetLoadSpec, rows: &[PolicyOutcome]) -> Json {
                 .unwrap_or(Json::Null),
         ),
         ("alpha", Json::Num(spec.open_loop.alpha)),
+        ("prefix_overlap", Json::Num(spec.open_loop.prefix_overlap)),
         ("seed", Json::Int(spec.open_loop.seed as i64)),
         ("policies", arr(policies)),
     ])

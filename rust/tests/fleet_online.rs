@@ -315,6 +315,7 @@ fn open_loop_accounts_for_every_arrival() {
         max_new: 4,
         deadline: None,
         vocab: cfg.vocab,
+        prefix_overlap: 0.0,
         seed: 7,
     };
     let outcome = openloop::drive(&mut engine, &spec).unwrap();

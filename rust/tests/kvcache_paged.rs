@@ -1,0 +1,200 @@
+//! Paged-KV integration through the public engine API: prefix sharing
+//! must be semantically invisible (same greedy streams as the private-
+//! slot baseline), copy-on-write must fire when a shared partial block
+//! diverges, and every exit path — completion, cancel, deadline expiry
+//! — must return the cache to its idle capacity (refcounts never leak).
+
+use expertweave::adapters::format::Adapter;
+use expertweave::adapters::generator::synth_fleet_adapters;
+use expertweave::engine::{Engine, EngineOptions, RequestSpec};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{SimPerf, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::serving::ServeRequest;
+use expertweave::weights::StoreMode;
+use expertweave::workload::preamble_token;
+use std::time::Duration;
+
+fn engine(kv_cap: usize, share: bool, chunk: usize) -> (Engine, Vec<Adapter>) {
+    let mut cfg = ModelConfig::sim_default();
+    cfg.kv_cap = kv_cap;
+    let adapters = synth_fleet_adapters(&cfg, 2, 42);
+    let e = Engine::sim_weave(
+        &cfg,
+        SimPerf::instant(),
+        &adapters,
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions {
+            page_size: 64 << 10,
+            chunk,
+            kv_share: share,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    (e, adapters)
+}
+
+/// `len`-token prompt whose first `shared` positions come from adapter
+/// slot 0's preamble pool and whose tail is a private per-`i` stream.
+fn prompt(i: u64, len: usize, shared: usize) -> Vec<i32> {
+    (0..len)
+        .map(|p| {
+            if p < shared {
+                preamble_token(0, 0, p, 512)
+            } else {
+                preamble_token(0x4000 + i, 7, p, 512)
+            }
+        })
+        .collect()
+}
+
+fn spec(adapter: &Adapter, prompt: Vec<i32>, max_new: usize) -> RequestSpec {
+    RequestSpec {
+        adapter: Some(adapter.name.clone()),
+        prompt,
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+    }
+}
+
+/// Submit six overlapping requests and drain; return (outputs by id,
+/// prefix hit tokens). Identical workload under both cache policies.
+fn run_fleet(share: bool) -> (Vec<(u64, Vec<i32>)>, u64) {
+    let (mut e, adapters) = engine(512, share, 256);
+    let idle = e.kv_free_slots();
+    // sharing attaches at admission against blocks already computed by
+    // live sequences, so let a seed request seal the shared block first
+    e.submit(spec(&adapters[0], prompt(0, 24, 16), 4)).unwrap();
+    e.step().unwrap();
+    for i in 1..6u64 {
+        // 24-token prompts sharing one full 16-token block
+        e.submit(spec(&adapters[0], prompt(i, 24, 16), 4)).unwrap();
+    }
+    let mut done: Vec<(u64, Vec<i32>)> = e
+        .run_to_completion()
+        .unwrap()
+        .into_iter()
+        .map(|c| (c.id, c.output))
+        .collect();
+    done.sort_by_key(|(id, _)| *id);
+    assert_eq!(e.kv_free_slots(), idle, "slots leaked (share={share})");
+    (done, e.stats_snapshot().kv_prefix_hits)
+}
+
+#[test]
+fn sharing_is_semantically_invisible_and_leak_free() {
+    let (flat, flat_hits) = run_fleet(false);
+    let (shared, shared_hits) = run_fleet(true);
+    assert_eq!(flat.len(), 6);
+    assert_eq!(flat, shared, "prefix sharing changed a greedy stream");
+    assert_eq!(flat_hits, 0, "flat mode must never report prefix hits");
+    assert!(
+        shared_hits >= 16 * 5,
+        "five of six requests should attach the shared block: {shared_hits}"
+    );
+}
+
+#[test]
+fn cancel_mid_flight_releases_shared_pages() {
+    let (mut e, adapters) = engine(512, true, 256);
+    let idle = e.kv_free_slots();
+    // seed first so the flood's admission probe finds sealed blocks
+    let seed = e.submit(spec(&adapters[0], prompt(0, 32, 32), 16)).unwrap();
+    e.step().unwrap();
+    let mut ids = vec![seed];
+    ids.extend((1..4u64).map(|i| {
+        e.submit(spec(&adapters[0], prompt(i, 32, 32), 16)).unwrap()
+    }));
+    e.step().unwrap();
+    assert!(
+        e.stats_snapshot().kv_pages_shared > 0,
+        "expected live shared pages before cancelling"
+    );
+    assert!(e.cancel_request(ids[0]));
+    assert!(e.cancel_request(ids[2]));
+    assert!(!e.cancel_request(ids[0]), "double cancel must be a no-op");
+    assert!(!e.cancel_request(9999));
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2, "the two uncancelled requests complete");
+    assert_eq!(e.kv_free_slots(), idle, "cancel leaked shared KV pages");
+    assert_eq!(e.queue_depth(), (0, 0));
+}
+
+#[test]
+fn deadline_expiry_releases_shared_pages() {
+    let (mut e, adapters) = engine(512, true, 256);
+    let idle = e.kv_free_slots();
+    // two requests sharing their whole 32-token prompt prefix: one
+    // bounded (submitted first so its sealed blocks are attachable),
+    // one that cannot finish before its deadline
+    e.submit(spec(&adapters[0], prompt(0, 32, 32), 8)).unwrap();
+    e.step().unwrap();
+    let doomed = ServeRequest {
+        adapter: Some(adapters[0].name.clone()),
+        prompt: prompt(1, 32, 32),
+        max_new_tokens: 400,
+        sampling: Sampling::Greedy,
+        deadline: Some(Duration::from_millis(25)),
+        trace: None,
+    };
+    e.submit_request(doomed).unwrap();
+    // both admitted and decoding against the shared prefix
+    e.step().unwrap();
+    e.step().unwrap();
+    assert_eq!(e.queue_depth().1, 2);
+    std::thread::sleep(Duration::from_millis(40));
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1, "only the bounded request completes");
+    assert_eq!(done[0].output.len(), 8);
+    assert_eq!(e.queue_depth(), (0, 0), "expired request still in flight");
+    assert_eq!(e.kv_free_slots(), idle, "deadline expiry leaked KV pages");
+}
+
+#[test]
+fn cow_divergence_keeps_both_streams_intact() {
+    // chunk 8 so request A registers a half-filled tail block after one
+    // step; B attaches that partial block and the next append into it
+    // (refcount 2) must copy-on-write, not corrupt the other stream
+    let run = |share: bool| -> (Vec<(u64, Vec<i32>)>, u64, usize) {
+        let (mut e, adapters) = engine(512, share, 8);
+        let idle = e.kv_free_slots();
+        e.submit(spec(&adapters[0], prompt(0, 26, 26), 6)).unwrap();
+        e.step().unwrap(); // A prefills exactly its first 8 tokens
+        e.submit(spec(&adapters[0], prompt(1, 20, 8), 6)).unwrap();
+        let mut done: Vec<(u64, Vec<i32>)> = e
+            .run_to_completion()
+            .unwrap()
+            .into_iter()
+            .map(|c| (c.id, c.output))
+            .collect();
+        done.sort_by_key(|(id, _)| *id);
+        assert_eq!(e.kv_free_slots(), idle, "slots leaked (share={share})");
+        (done, e.stats_snapshot().kv_pages_cow, e.kv_free_slots())
+    };
+    let (flat, flat_cow, _) = run(false);
+    let (shared, shared_cow, _) = run(true);
+    assert_eq!(flat.len(), 2);
+    assert_eq!(flat, shared, "COW divergence corrupted a stream");
+    assert_eq!(flat_cow, 0);
+    assert!(shared_cow >= 1, "divergent append into a shared partial block must COW");
+}
+
+#[test]
+fn cancelling_a_waiting_request_holds_no_kv() {
+    // 64-slot cache: one 40+8 request fills it, the rest must wait
+    let (mut e, adapters) = engine(64, true, 256);
+    let idle = e.kv_free_slots();
+    let ids: Vec<u64> = (0..3u64)
+        .map(|i| e.submit(spec(&adapters[0], prompt(i, 40, 32), 8)).unwrap())
+        .collect();
+    e.step().unwrap();
+    let (waiting, running) = e.queue_depth();
+    assert_eq!(running, 1, "only one request fits the 64-slot cache");
+    assert_eq!(waiting, 2);
+    assert!(e.cancel_request(ids[2]), "cancel straight out of the queue");
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    assert_eq!(e.kv_free_slots(), idle);
+}

@@ -9,7 +9,7 @@
 //! they are checked against an independent first-principles
 //! reconstruction from the per-sequence KV slot lists instead.
 
-use expertweave::kvcache::KvCache;
+use expertweave::kvcache::PagedKvCache;
 use expertweave::sampler::Sampling;
 use expertweave::scheduler::{seg_of, SchedConfig, Scheduler, SeqState, StepWorkspace};
 use expertweave::util::prop;
@@ -17,12 +17,13 @@ use std::time::{Duration, Instant};
 
 /// Rebuild the device-visible slot metadata from scratch: every running
 /// sequence's slots carry its seg id and positions 0..len; everything
-/// else is cleared (-1 / 0).
-fn reconstruct_cache(s: &Scheduler, kv: &KvCache, cap: usize) -> (Vec<i32>, Vec<i32>) {
+/// else is cleared (-1 / 0). Block size 1 with sharing off keeps the
+/// paged cache at flat private-slot semantics, so slot == block id.
+fn reconstruct_cache(s: &Scheduler, kv: &PagedKvCache, cap: usize) -> (Vec<i32>, Vec<i32>) {
     let mut seg = vec![-1; cap];
     let mut pos = vec![0; cap];
     for q in s.running() {
-        if let Some(slots) = kv.slots_of(q.id) {
+        if let Some(slots) = kv.blocks_of(q.id) {
             for (p, &sl) in slots.iter().enumerate() {
                 seg[sl as usize] = seg_of(q.id);
                 pos[sl as usize] = p as i32;
@@ -44,7 +45,7 @@ fn workspace_build_matches_fresh_allocation_reference() {
             kv_cap: 128,
         };
         let mut s = Scheduler::new(cfg.clone());
-        let mut kv = KvCache::new(cfg.kv_cap);
+        let mut kv = PagedKvCache::new(cfg.kv_cap, 1, false);
         let mut ws = StepWorkspace::new(&cfg);
         let mut next_id = 0u64;
         let mut live: Vec<u64> = Vec::new();
