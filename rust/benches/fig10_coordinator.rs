@@ -129,6 +129,7 @@ fn main() -> anyhow::Result<()> {
             replicate_rps: if replicate_rps > 0.0 { replicate_rps } else { f64::INFINITY },
             rate_halflife: 2.0,
             max_copies: replicas.min(3),
+            ..Default::default()
         };
         let cfg_spawn = cfg.clone();
         let opts_spawn = opts.clone();

@@ -1,0 +1,257 @@
+//! Figure 14 — elastic fleet under membership change: open-loop Poisson
+//! load against a 2-replica sim fleet while one replica is killed
+//! mid-run (fault injection) and a fresh replica joins later
+//! ([`Coordinator::add_replica`]).
+//!
+//! What it measures: per-phase throughput and TTFT p50/p99 —
+//! **before** (2 healthy replicas), **during** (replica 0 killed at the
+//! phase boundary's midpoint load: its in-flight work re-routed to the
+//! survivor, which then runs the whole offered load alone), and
+//! **after** (a newcomer joins and takes traffic again). Completions
+//! are bucketed by *arrival* phase. The run fails loudly if the books
+//! don't show exactly one retired replica and at least one re-routed
+//! request — the whole point of the figure.
+//!
+//! Emits `target/bench_results/BENCH_elastic.json`.
+//!
+//! `cargo bench --bench fig14_elastic [-- --rate 30 --phase 2]`
+
+use expertweave::adapters::generator::synth_fleet_adapters;
+use expertweave::bench::Table;
+use expertweave::coordinator::{Coordinator, CoordinatorConfig, RoutingPolicy};
+use expertweave::engine::{Engine, EngineOptions};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{SimPerf, Variant};
+use expertweave::sampler::Sampling;
+use expertweave::serving::{RequestHandle, ServeRequest, ServingBackend, TokenEvent};
+use expertweave::util::args::Args;
+use expertweave::util::json::{arr, obj, Json};
+use expertweave::util::rng::Pcg;
+use expertweave::util::stats::Samples;
+use expertweave::weights::StoreMode;
+use expertweave::workload::openloop::FleetLoadSpec;
+use std::time::{Duration, Instant};
+
+const PHASES: [&str; 3] = ["before", "during", "after"];
+
+/// One replica engine on the shared hardware model — same recipe for
+/// the founders and the runtime joiner.
+fn engine_for(
+    cfg: &ModelConfig,
+    perf: SimPerf,
+    seed: u64,
+) -> impl FnOnce() -> anyhow::Result<Engine> + Send + 'static {
+    let cfg = cfg.clone();
+    move || {
+        Engine::sim_weave(
+            &cfg,
+            perf,
+            &[],
+            Variant::Weave,
+            StoreMode::Virtual,
+            EngineOptions { page_size: 64 << 10, max_seqs: 4, seed, ..Default::default() },
+        )
+    }
+}
+
+#[derive(Default)]
+struct PhaseBucket {
+    offered: usize,
+    completed: usize,
+    aborted: usize,
+    shed: usize,
+    ttft: Option<Samples>,
+}
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::new(
+        "fig14_elastic",
+        "fleet throughput/TTFT across a kill + runtime-join membership change",
+    )
+    .opt("adapters", Some("4"), "distinct adapters")
+    .opt("capacity", Some("3"), "resident adapters per replica")
+    .opt("rate", Some("30"), "offered arrival rate (req/s)")
+    .opt("phase", Some("2"), "seconds per phase (before / during / after)")
+    .opt("seed", Some("0"), "arrival-process seed")
+    .parse_env()
+    .map_err(anyhow::Error::msg)?;
+    let rate: f64 = a.get_f64("rate").map_err(anyhow::Error::msg)?;
+    let phase_s: f64 = a.get_f64("phase").map_err(anyhow::Error::msg)?;
+    let n_adapters = a.get_usize("adapters").map_err(anyhow::Error::msg)?;
+    let capacity = a.get_usize("capacity").map_err(anyhow::Error::msg)?.max(1);
+    let seed = a.get_usize("seed").map_err(anyhow::Error::msg)? as u64;
+    anyhow::ensure!(rate > 0.0 && phase_s > 0.0, "rate and phase must be positive");
+
+    let mut cfg = ModelConfig::sim_default();
+    cfg.max_adapters = capacity;
+    let adapters = synth_fleet_adapters(&cfg, n_adapters, 42);
+    let names: Vec<String> = adapters.iter().map(|a| a.name.clone()).collect();
+
+    // the shared near-saturation hardware model: one replica sustains
+    // ~25 req/s under this request shape, so the default 30 req/s is
+    // comfortable for two replicas and overload for the lone survivor —
+    // the "during" TTFT inflation is the signal, not an accident
+    let perf = FleetLoadSpec::near_saturation_perf();
+    let spawn_cfg = cfg.clone();
+    let mut coord = Coordinator::launch(
+        CoordinatorConfig {
+            replicas: 2,
+            policy: RoutingPolicy::AdapterAffinity,
+            adapter_capacity: capacity,
+            queue_cap: 0,
+            max_copies: 2,
+            ..Default::default()
+        },
+        move |i| Box::new(engine_for(&spawn_cfg, perf, i as u64)),
+        adapters,
+    )?;
+    let started = Instant::now();
+    eprintln!(
+        "[fig14] 2 replicas | {n_adapters} adapters | {rate} req/s | \
+         kill replica 0 @ {phase_s}s, join @ {:.0}s",
+        2.0 * phase_s
+    );
+
+    let mut rng = Pcg::with_stream(seed, 1414);
+    let mut buckets: Vec<PhaseBucket> = (0..3).map(|_| PhaseBucket::default()).collect();
+    for b in &mut buckets {
+        b.ttft = Some(Samples::new());
+    }
+    // (arrival phase, handle): completions credit the arrival's phase
+    let mut live: Vec<(usize, RequestHandle)> = Vec::new();
+    let total = 3.0 * phase_s;
+    let start = Instant::now();
+    let mut next_at = rng.exp(rate);
+    let (mut killed, mut joined) = (false, false);
+    let stall_limit = Duration::from_secs_f64(total + 120.0);
+
+    loop {
+        let now = start.elapsed().as_secs_f64();
+        if !killed && now >= phase_s {
+            assert!(coord.kill_replica(0), "replica 0 must be live to kill");
+            eprintln!("[fig14] t={now:.2}s: killed replica 0");
+            killed = true;
+        }
+        if !joined && now >= 2.0 * phase_s {
+            let ix = coord.add_replica(Box::new(engine_for(&cfg, perf, 7)))?;
+            eprintln!("[fig14] t={:.2}s: replica {ix} joined", start.elapsed().as_secs_f64());
+            joined = true;
+        }
+        while next_at <= now && next_at <= total {
+            let phase = ((next_at / phase_s) as usize).min(2);
+            let name = &names[rng.below(names.len() as u64) as usize];
+            let len = 12 + rng.below(24) as usize;
+            let req = ServeRequest {
+                adapter: Some(name.clone()),
+                prompt: (0..len)
+                    .map(|_| (1 + rng.below(cfg.vocab as u64 - 1)) as i32)
+                    .collect(),
+                max_new_tokens: 8,
+                sampling: Sampling::Greedy,
+                deadline: None,
+                trace: None,
+            };
+            buckets[phase].offered += 1;
+            match coord.submit(req) {
+                Ok(h) => live.push((phase, h)),
+                Err(_) => buckets[phase].shed += 1,
+            }
+            next_at += rng.exp(rate);
+        }
+        coord.pump()?;
+        live.retain(|(phase, h)| {
+            let mut open = true;
+            for ev in h.drain_events() {
+                match ev {
+                    TokenEvent::Done { completion, .. } => {
+                        open = false;
+                        buckets[*phase].completed += 1;
+                        if let Some(s) = buckets[*phase].ttft.as_mut() {
+                            s.push(completion.record.ttft.as_secs_f64());
+                        }
+                    }
+                    TokenEvent::Aborted { .. } => {
+                        open = false;
+                        buckets[*phase].aborted += 1;
+                    }
+                    TokenEvent::First { .. } | TokenEvent::Token { .. } => {}
+                }
+            }
+            open
+        });
+        if next_at > total && live.is_empty() {
+            break;
+        }
+        anyhow::ensure!(
+            start.elapsed() <= stall_limit,
+            "elastic run stalled: {} stream(s) never terminated",
+            live.len()
+        );
+    }
+    let wall = start.elapsed().as_secs_f64();
+    ServingBackend::drain(&mut coord)?;
+    let (per_replica, stats) = coord.finish(started)?;
+
+    let mut t = Table::new(&[
+        "phase", "offered", "completed", "aborted", "rps", "TTFT p50 ms", "TTFT p99 ms",
+    ]);
+    let mut rows = Vec::new();
+    for (i, b) in buckets.iter_mut().enumerate() {
+        let s = b.ttft.take().unwrap().summary();
+        t.row(&[
+            PHASES[i].to_string(),
+            b.offered.to_string(),
+            b.completed.to_string(),
+            b.aborted.to_string(),
+            format!("{:.1}", b.completed as f64 / phase_s),
+            format!("{:.1}", s.median * 1e3),
+            format!("{:.1}", s.p99 * 1e3),
+        ]);
+        rows.push(obj(vec![
+            ("phase", Json::Str(PHASES[i].into())),
+            ("offered", Json::Int(b.offered as i64)),
+            ("completed", Json::Int(b.completed as i64)),
+            ("aborted", Json::Int(b.aborted as i64)),
+            ("shed", Json::Int(b.shed as i64)),
+            ("throughput_rps", Json::Num(b.completed as f64 / phase_s)),
+            ("ttft_p50_ms", Json::Num(s.median * 1e3)),
+            ("ttft_p99_ms", Json::Num(s.p99 * 1e3)),
+        ]));
+    }
+    t.print("Figure 14 — elastic fleet: throughput/TTFT across kill + runtime join");
+    t.write_csv("fig14_elastic").ok();
+    eprintln!("[fig14]   {}", stats.row());
+    for (i, r) in per_replica.iter().enumerate() {
+        eprintln!("[fig14]   {}", r.row(&format!("replica-{i}")));
+    }
+
+    let json = obj(vec![
+        ("bench", Json::Str("elastic".into())),
+        ("replicas", Json::Int(2)),
+        ("adapters", Json::Int(n_adapters as i64)),
+        ("rate_rps", Json::Num(rate)),
+        ("phase_s", Json::Num(phase_s)),
+        ("seed", Json::Int(seed as i64)),
+        ("wall_s", Json::Num(wall)),
+        ("requests_rerouted", Json::Int(stats.requests_rerouted as i64)),
+        ("reroute_aborted", Json::Int(stats.reroute_aborted as i64)),
+        ("replica_retired", Json::Int(stats.replica_retired as i64)),
+        ("phases", arr(rows)),
+    ]);
+    let dir = std::path::Path::new("target/bench_results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_elastic.json");
+    std::fs::write(&path, format!("{json}\n"))?;
+    eprintln!("[fig14] wrote {}", path.display());
+
+    anyhow::ensure!(
+        buckets.iter().all(|b| b.completed > 0),
+        "degenerate run: a phase completed nothing"
+    );
+    anyhow::ensure!(stats.replica_retired == 1, "exactly one replica was killed: {stats:?}");
+    anyhow::ensure!(
+        stats.requests_rerouted >= 1,
+        "the kill must land mid-flight and re-route work: {stats:?}"
+    );
+    Ok(())
+}

@@ -77,6 +77,19 @@ impl AdapterDirectory {
         }
     }
 
+    /// Extend the directory for a replica that joined at runtime (its
+    /// index is the new length; indices are append-only and stable).
+    pub fn add_replica(&mut self) {
+        self.resident.push(HashMap::new());
+    }
+
+    /// Forget every placement on a dead replica (its slots are gone with
+    /// the engine). The index stays valid — an empty map — so positional
+    /// bookkeeping across the fleet is untouched.
+    pub fn clear_replica(&mut self, replica: usize) {
+        self.resident[replica].clear();
+    }
+
     /// Least-recently-used resident on `replica` among those `idle`
     /// accepts (callers pass "no in-flight requests and not the adapter
     /// being placed").
@@ -156,6 +169,31 @@ mod tests {
         d.remove(0, "b");
         assert!(d.has_free_slot(0));
         assert!(!d.is_resident(0, "b"));
+    }
+
+    #[test]
+    fn directory_tracks_membership_changes() {
+        let mut d = AdapterDirectory::new(2, 2);
+        d.insert(0, "a");
+        d.insert(1, "a");
+        d.insert(1, "b");
+
+        // a runtime join extends the index space, empty
+        d.add_replica();
+        assert_eq!(d.count(2), 0);
+        assert!(d.has_free_slot(2));
+        d.insert(2, "b");
+        assert_eq!(d.copies("b"), 2);
+        assert_eq!(d.replicas_of("b"), vec![1, 2]);
+
+        // a replica loss clears its placements but keeps the index
+        d.clear_replica(1);
+        assert_eq!(d.count(1), 0);
+        assert_eq!(d.copies("a"), 1);
+        assert_eq!(d.replicas_of("b"), vec![2]);
+        // the cleared slot can be repopulated (rebalance re-placement)
+        d.insert(1, "a");
+        assert_eq!(d.copies("a"), 2);
     }
 
     #[test]

@@ -73,6 +73,28 @@
 //! rejected counts surface in [`Report::shed`] / [`Report::rejected`]
 //! and in [`FleetStats`].
 //!
+//! # Membership & failover
+//!
+//! The replica set is *elastic*: [`Coordinator::add_replica`] spawns a
+//! fresh engine thread mid-run (indices are append-only and stable) and
+//! [`Coordinator::retire_replica`] drains one replica and folds its
+//! report away without stopping the fleet. Replica death is contained,
+//! not fatal: a [`ReplicaEvent::Fatal`] (engine step error, panic, or
+//! the `Die` chaos command) retires the replica in place and every
+//! request routed to it is *re-submitted* to a survivor with its
+//! remaining deadline budget (prefill re-runs; the stream may restart).
+//! Only when no survivor can take a request — or its deadline cannot
+//! survive the retry — does the client see a typed
+//! [`AbortReason::ReplicaLost`] terminal event. Either way every
+//! accepted stream is guaranteed a terminal event; nothing hangs.
+//!
+//! A wedged-but-alive replica is caught by heartbeat staleness: replica
+//! threads restamp [`ReplicaGauges::last_beat_us`] after every command
+//! and step (and on an idle timer), and a replica whose stamp is older
+//! than [`CoordinatorConfig::suspect_after`] is *suspect* — excluded
+//! from routing until it beats again, but not retired (it may just be
+//! stuck in one long step).
+//!
 //! # Serving API
 //!
 //! The coordinator implements [`ServingBackend`] — the same typed
@@ -134,6 +156,12 @@ pub struct CoordinatorConfig {
     /// adapter sheds the request once the copy budget is spent, rather
     /// than silently exceeding it.
     pub max_copies: usize,
+    /// Heartbeat staleness bound: a replica whose
+    /// [`ReplicaGauges::last_beat_us`] stamp is older than this is
+    /// *suspect* — excluded from routing until it republishes (wedged
+    /// threads stop taking traffic without being retired).
+    /// `Duration::ZERO` disables suspect detection.
+    pub suspect_after: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -146,6 +174,7 @@ impl Default for CoordinatorConfig {
             replicate_rps: f64::INFINITY,
             rate_halflife: 2.0,
             max_copies: 2,
+            suspect_after: Duration::from_secs(2),
         }
     }
 }
@@ -182,6 +211,16 @@ pub struct FleetStats {
     /// ([`SubmitError::UnknownAdapter`]) plus engine-level submit
     /// rejections after routing (residency races).
     pub submit_rejected: usize,
+    /// Requests re-submitted to a surviving replica after their routed
+    /// replica died (prefill re-runs; the client stream may restart).
+    pub requests_rerouted: usize,
+    /// Requests lost with a dead replica that could not be re-routed
+    /// (no surviving capacity, remaining deadline too small, or the
+    /// fleet was already finishing); the client saw a typed
+    /// [`AbortReason::ReplicaLost`] terminal event.
+    pub reroute_aborted: usize,
+    /// Replicas retired, by failure or by [`Coordinator::retire_replica`].
+    pub replica_retired: usize,
 }
 
 impl FleetStats {
@@ -209,7 +248,8 @@ impl FleetStats {
         };
         format!(
             "routed={} hit={hit} loads={} evict={} repl={} \
-             shed_q={} shed_cap={} dl={} rej={}",
+             shed_q={} shed_cap={} dl={} rej={} rerouted={} \
+             reroute_abort={} retired={}",
             self.routed,
             self.loads,
             self.evictions,
@@ -218,6 +258,9 @@ impl FleetStats {
             self.shed_no_capacity,
             self.deadline_unmeetable,
             self.submit_rejected,
+            self.requests_rerouted,
+            self.reroute_aborted,
+            self.replica_retired,
         )
     }
 }
@@ -237,18 +280,56 @@ pub struct FleetOutcome {
     pub trace: Option<TraceLog>,
 }
 
+/// Lifecycle state of one replica slot. Slots are append-only — a dead
+/// replica keeps its index (empty directory row, zeroed in-flight) so
+/// positional bookkeeping across the fleet never shifts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReplicaState {
+    /// Serving; eligible for routing (unless heartbeat-suspect).
+    Live,
+    /// Draining toward [`Coordinator::retire_replica`]; no new routes.
+    Retiring,
+    /// Gone — failed or retired. Never routed to again.
+    Dead,
+}
+
+/// Everything the coordinator must remember about a routed request to
+/// cancel it, account its terminal event, or *re-submit it elsewhere*
+/// if its replica dies mid-flight.
+struct RouteEntry {
+    /// Replica currently serving the request.
+    replica: usize,
+    /// Adapter name (admission bookkeeping key); `None` = base model.
+    adapter: Option<String>,
+    /// The full request, kept so failover can re-submit it verbatim
+    /// (modulo the already-spent deadline budget).
+    req: ServeRequest,
+    /// When the current submission was sent — the base for computing
+    /// the remaining deadline on failover.
+    submitted_at: Instant,
+}
+
 /// The fleet coordinator. Build with [`Coordinator::launch`], then drive
 /// a workload with [`Coordinator::replay`] (which consumes the fleet and
 /// joins its threads).
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     replicas: Vec<ReplicaHandle>,
+    /// Lifecycle state per replica slot, parallel to `replicas`.
+    states: Vec<ReplicaState>,
     /// Each replica engine's live metric registry, by replica index
     /// (shipped in [`ReplicaEvent::Ready`]). The coordinator only reads
     /// them — snapshots for fleet `stats` frames, direct rendering by
     /// the Prometheus exposition — recording stays replica-side.
     obs: Vec<Arc<crate::obs::ObsRegistry>>,
     events: Receiver<ReplicaEvent>,
+    /// Retained clone of the replica event sender, so replicas spawned
+    /// at runtime ([`Coordinator::add_replica`]) report into the same
+    /// channel as the launch set.
+    events_tx: Sender<ReplicaEvent>,
+    /// Fleet-level failover/membership gauges and counters, shared with
+    /// the Prometheus exposition ([`crate::obs::expo::render_fleet`]).
+    fleet_obs: Arc<crate::obs::FleetObs>,
     directory: AdapterDirectory,
     rates: RateTracker,
     /// Host-cached adapter checkpoints available for loading (shared
@@ -267,9 +348,9 @@ pub struct Coordinator {
     /// rid → client token-stream sender (the fleet half of each
     /// [`RequestHandle`]).
     clients: HashMap<RequestId, Sender<TokenEvent>>,
-    /// rid → (replica it was routed to, adapter name) for cancel routing
-    /// and terminal-event accounting.
-    routes: HashMap<RequestId, (usize, Option<String>)>,
+    /// rid → full route record: cancel routing, terminal-event
+    /// accounting, and the re-submit payload for failover.
+    routes: HashMap<RequestId, RouteEntry>,
     /// Serving-time origin for the arrival-rate EWMA.
     clock: Instant,
     /// Trace-time origin: captured before any replica thread spawns, so
@@ -284,10 +365,17 @@ pub struct Coordinator {
     /// (shipped in [`ReplicaEvent::Ready`], like `obs`). Snapshot-only on
     /// this side: `flightrec` frames and fatal-crash tail dumps.
     flightrecs: Vec<Arc<FlightRecorder>>,
+    /// Reports stashed from replicas retired mid-run (failure or
+    /// [`Coordinator::retire_replica`]), folded into the final merge.
+    retired_reports: HashMap<usize, Report>,
+    /// Trace logs stashed from retired replicas, merged like live ones.
+    retired_traces: HashMap<usize, TraceLog>,
     /// Draining: every new submit fails with `ShuttingDown`.
     shutting_down: bool,
-    /// A replica died; surfaced as an error on the next pump.
-    fatal: Option<String>,
+    /// Final drain in progress (`finish` sent to every live replica):
+    /// failover must abort lost requests instead of re-submitting them
+    /// into engines that will never read another command.
+    finishing: bool,
 }
 
 impl Coordinator {
@@ -316,9 +404,10 @@ impl Coordinator {
         let origin = Instant::now();
         let (ev_tx, ev_rx) = std::sync::mpsc::channel();
         let replicas: Vec<ReplicaHandle> = (0..cfg.replicas)
-            .map(|i| spawn_replica(i, spawn(i), ev_tx.clone()))
+            .map(|i| spawn_replica(i, spawn(i), ev_tx.clone(), origin))
             .collect();
-        drop(ev_tx); // only replica threads hold senders now
+        // ev_tx is retained: runtime joins (add_replica) clone it for
+        // replicas spawned after launch
 
         let mut ready = 0usize;
         let mut obs_regs: Vec<Option<Arc<crate::obs::ObsRegistry>>> =
@@ -343,6 +432,12 @@ impl Coordinator {
 
         let n = cfg.replicas;
         let names: Vec<String> = adapters.iter().map(|a| a.name.clone()).collect();
+        let obs: Vec<Arc<crate::obs::ObsRegistry>> = obs_regs.into_iter().flatten().collect();
+        let fleet_obs = Arc::new(crate::obs::FleetObs::new());
+        for r in &obs {
+            fleet_obs.push_registry(r.clone());
+        }
+        fleet_obs.replicas.store(n as u64, Ordering::Relaxed);
         let mut coord = Coordinator {
             directory: AdapterDirectory::new(n, cfg.adapter_capacity),
             rates: RateTracker::new(cfg.rate_halflife),
@@ -362,10 +457,15 @@ impl Coordinator {
             origin,
             trace: None,
             flightrecs: flightrecs.into_iter().flatten().collect(),
+            retired_reports: HashMap::new(),
+            retired_traces: HashMap::new(),
             shutting_down: false,
-            fatal: None,
-            obs: obs_regs.into_iter().flatten().collect(),
+            finishing: false,
+            obs,
             events: ev_rx,
+            events_tx: ev_tx,
+            fleet_obs,
+            states: vec![ReplicaState::Live; n],
             replicas,
             cfg,
         };
@@ -434,8 +534,49 @@ impl Coordinator {
             ("shed_no_capacity".to_string(), s.shed_no_capacity as u64),
             ("deadline_unmeetable".to_string(), s.deadline_unmeetable as u64),
             ("submit_rejected".to_string(), s.submit_rejected as u64),
+            ("requests_rerouted".to_string(), s.requests_rerouted as u64),
+            ("reroute_aborted".to_string(), s.reroute_aborted as u64),
+            ("replica_retired".to_string(), s.replica_retired as u64),
+            ("fleet_replicas".to_string(), self.live_count() as u64),
+            ("replica_suspect".to_string(), self.refresh_suspect()),
         ];
         snap
+    }
+
+    /// Fleet-level membership/failover gauges and counters, for the
+    /// Prometheus exposition ([`crate::obs::expo::render_fleet`]). The
+    /// `Arc` outlives a consuming `replay`/`finish`, like
+    /// [`Coordinator::flight_recorders`].
+    pub fn fleet_obs(&self) -> Arc<crate::obs::FleetObs> {
+        self.fleet_obs.clone()
+    }
+
+    /// Replicas currently serving (not retiring, not dead).
+    pub fn live_count(&self) -> usize {
+        self.states.iter().filter(|s| **s == ReplicaState::Live).count()
+    }
+
+    /// Heartbeat staleness check against `now_us` (microseconds since
+    /// `self.origin`). A zero stamp means the engine is still building —
+    /// that is launch latency, not a wedged thread, so it counts fresh.
+    fn is_suspect(&self, replica: usize, now_us: u64) -> bool {
+        let sus = self.cfg.suspect_after.as_micros() as u64;
+        if sus == 0 {
+            return false;
+        }
+        let beat = self.replicas[replica].gauges.last_beat_us.load(Ordering::Relaxed);
+        beat > 0 && now_us.saturating_sub(beat) > sus
+    }
+
+    /// Count suspect live replicas and refresh the shared gauges
+    /// (callable from `&self`: everything it touches is atomic).
+    fn refresh_suspect(&self) -> u64 {
+        let now_us = self.origin.elapsed().as_micros() as u64;
+        let n = (0..self.replicas.len())
+            .filter(|&i| self.states[i] == ReplicaState::Live && self.is_suspect(i, now_us))
+            .count() as u64;
+        self.fleet_obs.suspect.store(n, Ordering::Relaxed);
+        n
     }
 
     /// Shared handles to every replica engine's always-on flight
@@ -447,6 +588,150 @@ impl Coordinator {
         self.flightrecs.clone()
     }
 
+    /// Grow the fleet at runtime: spawn one more engine thread, wait
+    /// until it reports ready, and re-balance by loading any host-cached
+    /// adapter that currently has *zero* resident copies onto the
+    /// newcomer (up to its capacity). Returns the new replica's index.
+    /// Indices are append-only, so every existing route, label, and
+    /// registry stays valid; events from replicas already running are
+    /// folded normally while waiting.
+    pub fn add_replica(
+        &mut self,
+        build: Box<dyn FnOnce() -> Result<Engine> + Send>,
+    ) -> Result<usize> {
+        let index = self.replicas.len();
+        let handle = spawn_replica(index, build, self.events_tx.clone(), self.origin);
+        self.replicas.push(handle);
+        self.states.push(ReplicaState::Live);
+        self.inflight.push(0);
+        self.inflight_ra.push(HashMap::new());
+        self.directory.add_replica();
+        // placeholders keep the obs/flightrec vectors index-aligned even
+        // if the engine build fails; replaced on Ready
+        self.obs.push(Arc::new(crate::obs::ObsRegistry::new(0)));
+        self.flightrecs.push(Arc::new(FlightRecorder::new()));
+        let joined = loop {
+            match self.events.recv_timeout(Duration::from_secs(600)) {
+                Ok(ReplicaEvent::Ready { replica, err, obs, flightrec }) if replica == index => {
+                    match err {
+                        None => {
+                            if let Some(o) = obs {
+                                self.obs[index] = o;
+                            }
+                            if let Some(fr) = flightrec {
+                                self.flightrecs[index] = fr;
+                            }
+                            break Ok(());
+                        }
+                        Some(e) => break Err(anyhow::anyhow!("{e}")),
+                    }
+                }
+                Ok(ev) => self.apply(ev),
+                Err(e) => break Err(anyhow::anyhow!("{e}")),
+            }
+        };
+        if let Err(e) = joined {
+            self.states[index] = ReplicaState::Dead;
+            self.replicas[index].shutdown();
+            bail!("replica {index} failed to join: {e}");
+        }
+        self.fleet_obs.push_registry(self.obs[index].clone());
+        self.fleet_obs
+            .replicas
+            .store(self.live_count() as u64, Ordering::Relaxed);
+        if self.trace.is_some() {
+            self.replicas[index].send(ReplicaCmd::EnableTrace)?;
+        }
+        // re-balance: orphaned adapters (all copies died with retired
+        // replicas) come back to life on the newcomer
+        let orphans: Vec<String> = self
+            .host_adapters
+            .keys()
+            .filter(|n| self.directory.copies(n) == 0)
+            .cloned()
+            .collect();
+        for name in orphans {
+            if !self.directory.has_free_slot(index) {
+                break;
+            }
+            self.issue_load(index, &name)?;
+        }
+        crate::log_info!("coordinator", "replica {index} joined the fleet");
+        Ok(index)
+    }
+
+    /// Shrink the fleet at runtime: stop routing to `replica`, wait for
+    /// its in-flight work to complete (folding fleet events normally),
+    /// then drain it and stash its report for the final merge. The slot
+    /// stays (Dead) so indices never shift. If the replica fails while
+    /// draining, failover already handled its requests and the retire
+    /// is complete.
+    pub fn retire_replica(&mut self, replica: usize) -> Result<()> {
+        if replica >= self.replicas.len() || self.states[replica] != ReplicaState::Live {
+            bail!("replica {replica} is not live");
+        }
+        self.states[replica] = ReplicaState::Retiring;
+        crate::log_info!("coordinator", "retiring replica {replica} (draining)");
+        let patience = Instant::now();
+        while self.inflight[replica] > 0 {
+            if self.states[replica] == ReplicaState::Dead {
+                return Ok(()); // died mid-drain; failover covered it
+            }
+            if patience.elapsed() > Duration::from_secs(600) {
+                bail!("replica {replica} did not drain in time");
+            }
+            match self.events.recv_timeout(Duration::from_millis(50)) {
+                Ok(ev) => self.apply(ev),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(e) => bail!("fleet event channel failed: {e}"),
+            }
+        }
+        if self.states[replica] == ReplicaState::Dead {
+            return Ok(());
+        }
+        self.replicas[replica].send(ReplicaCmd::Finish { since: self.clock })?;
+        loop {
+            if self.states[replica] == ReplicaState::Dead {
+                // failed while draining; failover settled its streams
+                return Ok(());
+            }
+            if self.retired_reports.contains_key(&replica) {
+                break; // apply() stashed the Finished for us
+            }
+            match self.events.recv_timeout(Duration::from_secs(600)) {
+                Ok(ReplicaEvent::Finished { replica: r, report, trace }) if r == replica => {
+                    self.retired_reports.insert(replica, report);
+                    if let Some(t) = trace {
+                        self.retired_traces.insert(replica, t);
+                    }
+                    break;
+                }
+                Ok(ev) => self.apply(ev),
+                Err(e) => bail!("replica {replica} did not finish: {e}"),
+            }
+        }
+        self.states[replica] = ReplicaState::Dead;
+        self.stats.replica_retired += 1;
+        self.fleet_obs.retired.fetch_add(1, Ordering::Relaxed);
+        self.fleet_obs
+            .replicas
+            .store(self.live_count() as u64, Ordering::Relaxed);
+        self.directory.clear_replica(replica);
+        self.replicas[replica].shutdown();
+        crate::log_info!("coordinator", "replica {replica} retired");
+        Ok(())
+    }
+
+    /// Chaos hook ([`ServingBackend::kill_replica`], NDJSON
+    /// `kill-replica` op): command a live replica to die as if its
+    /// engine had crashed. Asynchronous — the `Fatal` event arrives on
+    /// the event channel and the normal failover path takes over.
+    pub fn kill_replica(&mut self, replica: usize) -> bool {
+        replica < self.replicas.len()
+            && self.states[replica] == ReplicaState::Live
+            && self.replicas[replica].send(ReplicaCmd::Die).is_ok()
+    }
+
     /// Turn on fleet-wide request tracing (idempotent): coordinator-side
     /// door/routing spans plus per-request phase spans inside every
     /// replica engine. The `EnableTrace` command rides each replica's
@@ -456,8 +741,10 @@ impl Coordinator {
         if self.trace.is_none() {
             self.trace = Some(TraceLog::with_origin(self.origin));
         }
-        for h in &self.replicas {
-            h.send(ReplicaCmd::EnableTrace)?;
+        for (i, h) in self.replicas.iter().enumerate() {
+            if self.states[i] != ReplicaState::Dead {
+                h.send(ReplicaCmd::EnableTrace)?;
+            }
         }
         Ok(())
     }
@@ -483,7 +770,14 @@ impl Coordinator {
         };
         self.directory.insert(r, name);
         self.stats.loads += 1;
-        self.replicas[r].send(ReplicaCmd::Load(adapter))
+        let sent = self.replicas[r].send(ReplicaCmd::Load(adapter));
+        if sent.is_err() {
+            // the replica died under us; un-record the placement (its
+            // Fatal event retires it through the normal failover path)
+            self.directory.remove(r, name);
+            self.stats.loads -= 1;
+        }
+        sent
     }
 
     /// LRU-resident adapter on `r` that is idle (no in-flight requests)
@@ -494,11 +788,19 @@ impl Coordinator {
             .lru_evictable(r, |n| n != keep && ra.get(n).map_or(true, |&c| c == 0))
     }
 
-    /// Per-replica snapshots for one routing decision.
+    /// Per-replica snapshots for one routing decision. Only live,
+    /// non-suspect replicas appear — [`choose`] never sees a dead,
+    /// retiring, or heartbeat-stale candidate ([`ReplicaView::index`]
+    /// carries the true fleet index, so the filtered slice is safe for
+    /// every policy including positional round-robin).
     fn views(&self, name: Option<&str>) -> Vec<ReplicaView> {
+        let now_us = self.origin.elapsed().as_micros() as u64;
         self.replicas
             .iter()
             .enumerate()
+            .filter(|(i, _)| {
+                self.states[*i] == ReplicaState::Live && !self.is_suspect(*i, now_us)
+            })
             .map(|(i, h)| {
                 let resident = name.map_or(true, |n| self.directory.is_resident(i, n));
                 let can_host = name.map_or(true, |n| {
@@ -557,7 +859,10 @@ impl Coordinator {
     fn try_replicate(&mut self, name: &str) -> Result<()> {
         let mut best: Option<usize> = None;
         for i in 0..self.replicas.len() {
-            if self.directory.is_resident(i, name) || !self.directory.has_free_slot(i) {
+            if self.states[i] != ReplicaState::Live
+                || self.directory.is_resident(i, name)
+                || !self.directory.has_free_slot(i)
+            {
                 continue;
             }
             if best.map_or(true, |b| self.inflight[i] < self.inflight[b]) {
@@ -597,16 +902,17 @@ impl Coordinator {
     }
 
     /// Fold one replica event into coordinator state, forwarding stream
-    /// events to the owning client handle. Replica failure is stashed in
-    /// `self.fatal` (surfaced by the next `pump`), not thrown, so the
-    /// typed submit path never has to smuggle an internal error.
+    /// events to the owning client handle. Replica failure is *not*
+    /// fatal to the fleet: the dead replica is retired in place and its
+    /// in-flight requests fail over to survivors
+    /// ([`Coordinator::lose_replica`]).
     fn apply(&mut self, ev: ReplicaEvent) {
         match ev {
             ReplicaEvent::Stream { replica, event } => {
                 let rid = event.id();
                 let terminal = event.is_terminal();
                 if terminal {
-                    let adapter = self.routes.remove(&rid).and_then(|(_, a)| a);
+                    let adapter = self.routes.remove(&rid).and_then(|e| e.adapter);
                     self.note_done(replica, adapter.as_deref());
                 }
                 if let Some(tx) = self.clients.get(&rid) {
@@ -641,38 +947,180 @@ impl Coordinator {
                 }
             }
             ReplicaEvent::Fatal { replica, err } => {
-                // black-box dump: the dead engine's last recorded events,
-                // straight from its shared flight-recorder ring
-                if let Some(fr) = self.flightrecs.get(replica) {
-                    let snap = fr.snapshot();
-                    let tail: Vec<String> = snap
-                        .events
-                        .iter()
-                        .rev()
-                        .take(16)
-                        .rev()
-                        .map(|e| {
-                            format!(
-                                "{}+{}us id={} aid={} v={}",
-                                e.kind.as_str(),
-                                e.t_us,
-                                e.id,
-                                e.aid,
-                                e.value
-                            )
-                        })
-                        .collect();
-                    crate::log_warn!(
-                        "coordinator",
-                        "replica {replica} flight recorder: {} recorded, {} dropped, tail [{}]",
-                        snap.recorded,
-                        snap.dropped,
-                        tail.join(", ")
-                    );
-                }
-                self.fatal = Some(format!("replica {replica} failed: {err}"));
+                self.lose_replica(replica, &err);
             }
-            ReplicaEvent::Ready { .. } | ReplicaEvent::Finished { .. } => {}
+            ReplicaEvent::Finished { replica, report, trace } => {
+                // a drain answer arriving outside the finish/retire wait
+                // loops (e.g. a retire raced a failure): stash it so the
+                // final merge still sees the replica's numbers
+                self.retired_reports.entry(replica).or_insert(report);
+                if let Some(t) = trace {
+                    self.retired_traces.entry(replica).or_insert(t);
+                }
+            }
+            ReplicaEvent::Ready { .. } => {}
+        }
+    }
+
+    /// Retire `replica` in place: mark it dead, drop its directory row
+    /// and in-flight books, and collect the route entries stranded on
+    /// it. Idempotent — a second call (Fatal event after a send failure
+    /// already retired it) returns nothing.
+    fn mark_dead(&mut self, replica: usize, err: &str) -> Vec<(RequestId, RouteEntry)> {
+        if self.states[replica] == ReplicaState::Dead {
+            return Vec::new();
+        }
+        crate::log_warn!("coordinator", "retiring replica {replica}: {err}");
+        // black-box dump: the dead engine's last recorded events,
+        // straight from its shared flight-recorder ring
+        if let Some(fr) = self.flightrecs.get(replica) {
+            let snap = fr.snapshot();
+            let tail: Vec<String> = snap
+                .events
+                .iter()
+                .rev()
+                .take(16)
+                .rev()
+                .map(|e| {
+                    format!(
+                        "{}+{}us id={} aid={} v={}",
+                        e.kind.as_str(),
+                        e.t_us,
+                        e.id,
+                        e.aid,
+                        e.value
+                    )
+                })
+                .collect();
+            crate::log_warn!(
+                "coordinator",
+                "replica {replica} flight recorder: {} recorded, {} dropped, tail [{}]",
+                snap.recorded,
+                snap.dropped,
+                tail.join(", ")
+            );
+        }
+        self.states[replica] = ReplicaState::Dead;
+        self.replicas[replica].shutdown();
+        self.stats.replica_retired += 1;
+        self.fleet_obs.retired.fetch_add(1, Ordering::Relaxed);
+        self.fleet_obs
+            .replicas
+            .store(self.live_count() as u64, Ordering::Relaxed);
+        self.directory.clear_replica(replica);
+        self.inflight_ra[replica].clear();
+        let rids: Vec<RequestId> = self
+            .routes
+            .iter()
+            .filter(|(_, e)| e.replica == replica)
+            .map(|(&rid, _)| rid)
+            .collect();
+        let mut lost = Vec::with_capacity(rids.len());
+        for rid in rids {
+            if let Some(e) = self.routes.remove(&rid) {
+                if let Some(n) = &e.adapter {
+                    if let Some(c) = self.inflight_adapter.get_mut(n) {
+                        *c = c.saturating_sub(1);
+                    }
+                }
+                lost.push((rid, e));
+            }
+        }
+        self.inflight[replica] = 0;
+        lost
+    }
+
+    /// Terminal path for a request that could not survive its replica:
+    /// the client gets a typed [`AbortReason::ReplicaLost`], never a
+    /// hung stream.
+    fn abort_lost(&mut self, rid: RequestId) {
+        self.stats.reroute_aborted += 1;
+        self.fleet_obs.reroute_aborted.fetch_add(1, Ordering::Relaxed);
+        if let Some(tx) = self.clients.remove(&rid) {
+            let _ = tx.send(TokenEvent::Aborted { id: rid, reason: AbortReason::ReplicaLost });
+        }
+    }
+
+    /// Failover: retire a dead replica and re-submit every request that
+    /// was routed to it to a survivor, under the same fleet rid (the
+    /// client keeps its stream; prefill re-runs, so the stream may
+    /// restart — the last terminal event is authoritative). A request
+    /// is aborted typed ([`abort_lost`]) only when its remaining
+    /// deadline cannot survive the retry, no survivor can take it, or
+    /// the fleet is already finishing. If a survivor turns out dead at
+    /// submit time it joins the retirement cascade and its stranded
+    /// requests enter the same worklist.
+    ///
+    /// [`abort_lost`]: Coordinator::abort_lost
+    fn lose_replica(&mut self, replica: usize, err: &str) {
+        let mut lost = self.mark_dead(replica, err);
+        while let Some((rid, entry)) = lost.pop() {
+            if self.finishing {
+                self.abort_lost(rid);
+                continue;
+            }
+            let mut req = entry.req;
+            if let Some(d) = req.deadline {
+                match d.checked_sub(entry.submitted_at.elapsed()) {
+                    Some(rem) if !rem.is_zero() => req.deadline = Some(rem),
+                    _ => {
+                        self.abort_lost(rid);
+                        continue;
+                    }
+                }
+            }
+            let name = entry.adapter;
+            loop {
+                let views = self.views(name.as_deref());
+                let Ok(d) = choose(self.cfg.policy, &views, req.deadline, &mut self.rr_next)
+                else {
+                    self.abort_lost(rid);
+                    break;
+                };
+                let r2 = d.replica;
+                if let Some(n) = name.as_deref() {
+                    if d.resident {
+                        self.directory.touch(r2, n);
+                    } else if let Err(e) = self.ensure_resident(r2, n) {
+                        // r2 died too: fold its already-queued events
+                        // (terminal streams before its Fatal, FIFO per
+                        // sender) before sweeping it into the cascade
+                        self.absorb_events();
+                        lost.extend(self.mark_dead(r2, &format!("{e:#}")));
+                        continue;
+                    }
+                }
+                match self.replicas[r2].send(ReplicaCmd::Submit { rid, req: req.clone() }) {
+                    Ok(()) => {
+                        if let Some(n) = name.as_deref() {
+                            *self.inflight_adapter.entry(n.to_string()).or_insert(0) += 1;
+                            *self.inflight_ra[r2].entry(n.to_string()).or_insert(0) += 1;
+                        }
+                        self.inflight[r2] += 1;
+                        self.routes.insert(
+                            rid,
+                            RouteEntry {
+                                replica: r2,
+                                adapter: name.clone(),
+                                req,
+                                submitted_at: Instant::now(),
+                            },
+                        );
+                        self.stats.requests_rerouted += 1;
+                        self.fleet_obs.rerouted.fetch_add(1, Ordering::Relaxed);
+                        crate::log_info!(
+                            "coordinator",
+                            "re-routed request {rid} to replica {r2}"
+                        );
+                        break;
+                    }
+                    Err(e) => {
+                        self.absorb_events();
+                        lost.extend(self.mark_dead(r2, &format!("{e:#}")));
+                        continue;
+                    }
+                }
+            }
         }
     }
 
@@ -688,9 +1136,11 @@ impl Coordinator {
     /// the fleet report) — this is the single accounting point.
     fn route(&mut self, mut req: ServeRequest) -> Result<RequestHandle, SubmitError> {
         let arrival = Instant::now();
-        // fold finished work first so routing scores are fresh
+        // fold finished work first so routing scores are fresh (this
+        // also applies any pending Fatal, retiring dead replicas before
+        // they can be scored)
         self.absorb_events();
-        if self.shutting_down || self.fatal.is_some() {
+        if self.shutting_down {
             self.stats.submit_rejected += 1;
             self.trace_door(&req, "shutting_down");
             return Err(SubmitError::ShuttingDown);
@@ -734,9 +1184,14 @@ impl Coordinator {
             } else {
                 self.stats.affinity_misses += 1;
                 if let Err(e) = self.ensure_resident(r, n) {
-                    self.fatal = Some(format!("{e:#}"));
-                    self.stats.submit_rejected += 1;
-                    return Err(SubmitError::ShuttingDown);
+                    // the chosen replica died between scoring and load;
+                    // retire it (failing over its in-flight work) and
+                    // shed this request — the client retries against a
+                    // fleet that no longer scores the dead replica
+                    self.lose_replica(r, &format!("{e:#}"));
+                    self.stats.shed_no_capacity += 1;
+                    self.trace_door(&req, "shed");
+                    return Err(SubmitError::Shed);
                 }
             }
             let at = self.clock.elapsed().as_secs_f64();
@@ -746,9 +1201,9 @@ impl Coordinator {
                 && self.directory.copies(n) < self.cfg.max_copies
             {
                 if let Err(e) = self.try_replicate(n) {
-                    self.fatal = Some(format!("{e:#}"));
-                    self.stats.submit_rejected += 1;
-                    return Err(SubmitError::ShuttingDown);
+                    // best-effort: the replication target died, not the
+                    // submit path — its own Fatal event retires it
+                    crate::log_warn!("coordinator", "replication failed: {e:#}");
                 }
             }
             // book the request as in-flight only after every fallible
@@ -768,17 +1223,21 @@ impl Coordinator {
         let adapter_label = adapter.clone().unwrap_or_else(|| "base".into());
         let (handle, tx) = RequestHandle::new(rid);
         self.clients.insert(rid, tx);
-        self.routes.insert(rid, (r, adapter));
+        self.routes.insert(
+            rid,
+            RouteEntry { replica: r, adapter, req: req.clone(), submitted_at: Instant::now() },
+        );
         if self.replicas[r].send(ReplicaCmd::Submit { rid, req }).is_err() {
-            // the replica is gone; roll the request back out
-            self.clients.remove(&rid);
-            if let Some((r, a)) = self.routes.remove(&rid) {
-                self.note_done(r, a.as_deref());
-            }
-            self.stats.routed -= 1;
-            self.stats.submit_rejected += 1;
-            self.fatal = Some(format!("replica {r} is no longer accepting commands"));
-            return Err(SubmitError::ShuttingDown);
+            // the replica died between scoring and send. Fold its
+            // already-queued events first (terminal streams precede its
+            // Fatal, FIFO per sender — applying the Fatal retires it and
+            // fails over this rid with everything else stranded there),
+            // then retire explicitly in case the Fatal is still in
+            // flight. Either way this rid is re-submitted to a survivor
+            // (the handle we return streams from the new replica) or
+            // terminated with a typed ReplicaLost abort — never hung.
+            self.absorb_events();
+            self.lose_replica(r, "submit channel closed");
         }
         if let Some(t) = self.trace.as_mut() {
             let candidates = views
@@ -827,35 +1286,64 @@ impl Coordinator {
         mut self,
         since: Instant,
     ) -> Result<(Vec<Report>, FleetStats, Option<TraceLog>)> {
-        // surface a stashed replica failure with its root cause rather
-        // than the generic send error the dead channel would produce
         self.absorb_events();
-        if let Some(e) = self.fatal.take() {
-            bail!("{e}");
-        }
-        for h in &self.replicas {
-            h.send(ReplicaCmd::Finish { since })?;
-        }
+        // lose_replica must stop re-submitting from here on: replicas
+        // processing Finish never read another command, so a re-routed
+        // request would hang — typed aborts are the correct terminal
+        self.finishing = true;
         let n = self.replicas.len();
         let mut reports: Vec<Option<Report>> = (0..n).map(|_| None).collect();
         let mut traces: Vec<Option<TraceLog>> = (0..n).map(|_| None).collect();
-        let mut finished = 0usize;
-        while finished < n {
-            match self.events.recv_timeout(Duration::from_secs(600)) {
-                Ok(ReplicaEvent::Finished { replica, report, trace }) => {
-                    if reports[replica].replace(report).is_none() {
-                        finished += 1;
-                    }
-                    traces[replica] = trace;
+        let fill_dead = |me: &mut Coordinator,
+                         reports: &mut Vec<Option<Report>>,
+                         traces: &mut Vec<Option<TraceLog>>| {
+            for i in 0..n {
+                if reports[i].is_some() {
+                    continue;
                 }
-                Ok(ev) => self.apply(ev),
-                Err(e) => bail!("fleet drain failed: {e}"),
+                // a stashed report (retired mid-run, or a Finished that
+                // apply() caught) fills the slot; a dead replica without
+                // one contributes an empty report so the vector aligns
+                if let Some(rep) = me.retired_reports.remove(&i) {
+                    reports[i] = Some(rep);
+                    traces[i] = me.retired_traces.remove(&i);
+                } else if me.states[i] == ReplicaState::Dead {
+                    reports[i] = Some(Report::empty());
+                }
             }
-            if let Some(e) = self.fatal.take() {
-                bail!("{e}");
+        };
+        // replicas retired mid-run already reported (or died without a
+        // report); every remaining live/retiring one is asked to finish
+        fill_dead(&mut self, &mut reports, &mut traces);
+        for i in 0..n {
+            if reports[i].is_some() {
+                continue;
+            }
+            if self.replicas[i].send(ReplicaCmd::Finish { since }).is_err() {
+                // died on the doorstep; failover (abort-only, we are
+                // finishing) settles its streams, report stays empty
+                self.lose_replica(i, "finish channel closed");
             }
         }
-        for h in self.replicas.drain(..) {
+        fill_dead(&mut self, &mut reports, &mut traces);
+        while reports.iter().any(|r| r.is_none()) {
+            match self.events.recv_timeout(Duration::from_secs(600)) {
+                Ok(ReplicaEvent::Finished { replica, report, trace }) => {
+                    if reports[replica].is_none() {
+                        reports[replica] = Some(report);
+                        traces[replica] = trace;
+                    }
+                }
+                Ok(ev) => {
+                    // a Fatal here retires the replica; fill its slot so
+                    // the wait terminates
+                    self.apply(ev);
+                    fill_dead(&mut self, &mut reports, &mut traces);
+                }
+                Err(e) => bail!("fleet drain failed: {e}"),
+            }
+        }
+        for h in self.replicas.iter_mut() {
             h.shutdown();
         }
         let per_replica: Vec<Report> =
@@ -911,35 +1399,32 @@ impl ServingBackend for Coordinator {
     }
 
     fn pump(&mut self) -> Result<bool> {
-        if let Some(e) = self.fatal.take() {
-            bail!("{e}");
-        }
         match self.events.recv_timeout(Duration::from_millis(2)) {
             Ok(ev) => {
                 self.apply(ev);
                 self.absorb_events();
             }
             Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => bail!("every fleet replica has exited"),
-        }
-        if let Some(e) = self.fatal.take() {
-            bail!("{e}");
+            // unreachable while the coordinator holds events_tx; kept as
+            // a defensive exit
+            Err(RecvTimeoutError::Disconnected) => bail!("fleet event channel closed"),
         }
         Ok(self.inflight_total() > 0)
     }
 
     fn cancel(&mut self, id: RequestId) -> bool {
-        let Some(r) = self.routes.get(&id).map(|(r, _)| *r) else {
+        let Some(r) = self.routes.get(&id).map(|e| e.replica) else {
             return false;
         };
         self.replicas[r].send(ReplicaCmd::Cancel { rid: id }).is_ok()
     }
 
     fn has_work(&self) -> bool {
-        // a stashed replica failure counts as work: it forces the
-        // driving loop to pump, which surfaces the root-cause error
-        // instead of silently rejecting everything that follows
-        self.fatal.is_some() || self.inflight_total() > 0
+        self.inflight_total() > 0
+    }
+
+    fn kill_replica(&mut self, replica: usize) -> bool {
+        Coordinator::kill_replica(self, replica)
     }
 
     fn stats(&mut self) -> Option<crate::obs::StatsSnapshot> {
@@ -967,10 +1452,12 @@ impl ServingBackend for Coordinator {
     fn drain(&mut self) -> Result<()> {
         self.shutting_down = true;
         loop {
-            let replica_busy = self
-                .replicas
-                .iter()
-                .any(|h| h.gauges.active.load(Ordering::Relaxed) > 0);
+            // dead replicas' gauges can be frozen mid-step; only live
+            // slots gate the drain
+            let replica_busy = self.replicas.iter().enumerate().any(|(i, h)| {
+                self.states[i] != ReplicaState::Dead
+                    && h.gauges.active.load(Ordering::Relaxed) > 0
+            });
             if !ServingBackend::has_work(self) && !replica_busy {
                 break;
             }
@@ -978,9 +1465,6 @@ impl ServingBackend for Coordinator {
         }
         // deliver any terminal events that raced the last pump
         self.absorb_events();
-        if let Some(e) = self.fatal.take() {
-            bail!("{e}");
-        }
         Ok(())
     }
 }

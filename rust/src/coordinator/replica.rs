@@ -26,10 +26,10 @@ use crate::serving::{RequestHandle, ServeRequest, SubmitError, TokenEvent};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Lock-free telemetry snapshot a replica thread keeps fresh — its
 /// heartbeat to the coordinator, republished after every command and
@@ -53,6 +53,13 @@ pub struct ReplicaGauges {
     /// drain waits for this to reach zero on every replica so the fleet
     /// listener never closes while an engine is still mid-step.
     pub active: AtomicUsize,
+    /// Monotonic heartbeat: microseconds since the coordinator's epoch
+    /// at the last publish. Idle replicas republish on a short timer, so
+    /// a stamp older than [`CoordinatorConfig::suspect_after`] means the
+    /// thread is wedged (or dead) and routing marks the replica suspect.
+    ///
+    /// [`CoordinatorConfig::suspect_after`]: crate::coordinator::CoordinatorConfig::suspect_after
+    pub last_beat_us: AtomicU64,
 }
 
 /// Commands a replica executes in arrival order.
@@ -70,6 +77,11 @@ pub(crate) enum ReplicaCmd {
     /// Drain all queued work, report (wall time anchored to `since`,
     /// the coordinator's replay start), and exit the thread.
     Finish { since: Instant },
+    /// Chaos hook: die immediately, as if the engine had crashed
+    /// mid-step. The thread reports [`ReplicaEvent::Fatal`] and exits
+    /// without draining — the coordinator's failover path handles the
+    /// in-flight fallout exactly like a real crash.
+    Die,
 }
 
 /// Events a replica reports back to the coordinator.
@@ -118,20 +130,26 @@ pub(crate) enum ReplicaEvent {
 pub struct ReplicaHandle {
     pub index: usize,
     pub gauges: Arc<ReplicaGauges>,
-    cmd: Sender<ReplicaCmd>,
+    /// `None` once shut down (the channel drop is the exit signal).
+    cmd: Option<Sender<ReplicaCmd>>,
     join: Option<JoinHandle<()>>,
 }
 
 impl ReplicaHandle {
     pub(crate) fn send(&self, cmd: ReplicaCmd) -> Result<()> {
         self.cmd
-            .send(cmd)
-            .map_err(|_| anyhow::anyhow!("replica {} is no longer accepting commands", self.index))
+            .as_ref()
+            .and_then(|tx| tx.send(cmd).ok())
+            .ok_or_else(|| {
+                anyhow::anyhow!("replica {} is no longer accepting commands", self.index)
+            })
     }
 
     /// Drop the command channel and wait for the thread to exit.
-    pub(crate) fn shutdown(mut self) {
-        drop(self.cmd);
+    /// In-place (the handle stays in the membership vector, keeping
+    /// replica indices stable for routing and labels); idempotent.
+    pub(crate) fn shutdown(&mut self) {
+        self.cmd = None;
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -139,10 +157,13 @@ impl ReplicaHandle {
 }
 
 /// Spawn a replica thread; the engine is constructed inside it.
+/// `epoch` anchors the heartbeat stamp (the coordinator's origin
+/// instant, shared by every replica so staleness is comparable).
 pub(crate) fn spawn_replica(
     index: usize,
     build: Box<dyn FnOnce() -> Result<Engine> + Send>,
     events: Sender<ReplicaEvent>,
+    epoch: Instant,
 ) -> ReplicaHandle {
     let (cmd_tx, cmd_rx) = channel::<ReplicaCmd>();
     let gauges = Arc::new(ReplicaGauges::default());
@@ -154,7 +175,7 @@ pub(crate) fn spawn_replica(
             // coordinator's drain would block until its recv timeout
             let events_panic = events.clone();
             let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                replica_main(index, build, cmd_rx, events, gauges_thread)
+                replica_main(index, build, cmd_rx, events, gauges_thread, epoch)
             }));
             if let Err(payload) = run {
                 let err = payload
@@ -166,10 +187,10 @@ pub(crate) fn spawn_replica(
             }
         })
         .expect("spawn replica thread");
-    ReplicaHandle { index, gauges, cmd: cmd_tx, join: Some(join) }
+    ReplicaHandle { index, gauges, cmd: Some(cmd_tx), join: Some(join) }
 }
 
-fn publish(engine: &Engine, gauges: &ReplicaGauges) {
+fn publish(engine: &Engine, gauges: &ReplicaGauges, epoch: Instant) {
     gauges.kv_free.store(engine.kv_free_slots(), Ordering::Relaxed);
     let ewma = engine.step_ewma();
     gauges
@@ -180,6 +201,11 @@ fn publish(engine: &Engine, gauges: &ReplicaGauges) {
         .store((ewma.decode * 1e6) as u64, Ordering::Relaxed);
     let (waiting, running) = engine.queue_depth();
     gauges.active.store(waiting + running, Ordering::Relaxed);
+    // the heartbeat edge: staleness is measured against this stamp, so
+    // it must be the last store (everything above is at least as fresh)
+    gauges
+        .last_beat_us
+        .store(epoch.elapsed().as_micros() as u64, Ordering::Relaxed);
 }
 
 /// In-flight request bookkeeping inside one replica thread.
@@ -218,6 +244,7 @@ impl Streams {
 enum Flow {
     Continue,
     Finish(Instant),
+    Die,
 }
 
 fn handle_cmd(
@@ -274,8 +301,14 @@ fn handle_cmd(
             Flow::Continue
         }
         ReplicaCmd::Finish { since } => Flow::Finish(since),
+        ReplicaCmd::Die => Flow::Die,
     }
 }
+
+/// How often an idle replica wakes up just to restamp its heartbeat.
+/// Far below any sane `suspect_after`, so an idle replica never looks
+/// suspect; cheap (a handful of atomic stores per wakeup).
+const IDLE_HEARTBEAT: Duration = Duration::from_millis(50);
 
 fn replica_main(
     index: usize,
@@ -283,6 +316,7 @@ fn replica_main(
     cmds: Receiver<ReplicaCmd>,
     events: Sender<ReplicaEvent>,
     gauges: Arc<ReplicaGauges>,
+    epoch: Instant,
 ) {
     let mut engine = match build() {
         Ok(e) => {
@@ -304,7 +338,7 @@ fn replica_main(
             return;
         }
     };
-    publish(&engine, &gauges);
+    publish(&engine, &gauges, epoch);
     let mut streams = Streams::default();
 
     let mut finishing: Option<Instant> = None;
@@ -313,14 +347,20 @@ fn replica_main(
             // busy: absorb whatever commands are already queued, then step
             loop {
                 match cmds.try_recv() {
-                    Ok(cmd) => {
-                        if let Flow::Finish(since) =
-                            handle_cmd(index, &mut engine, &mut streams, &events, cmd)
-                        {
+                    Ok(cmd) => match handle_cmd(index, &mut engine, &mut streams, &events, cmd) {
+                        Flow::Continue => {}
+                        Flow::Finish(since) => {
                             finishing = Some(since);
                             break;
                         }
-                    }
+                        Flow::Die => {
+                            let _ = events.send(ReplicaEvent::Fatal {
+                                replica: index,
+                                err: "killed by fault injection (kill-replica)".to_string(),
+                            });
+                            return;
+                        }
+                    },
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => break 'serve,
                 }
@@ -335,20 +375,26 @@ fn replica_main(
                 }
             }
         } else {
-            // idle: block until the coordinator has something for us
-            match cmds.recv() {
-                Ok(cmd) => {
-                    if let Flow::Finish(since) =
-                        handle_cmd(index, &mut engine, &mut streams, &events, cmd)
-                    {
-                        finishing = Some(since);
+            // idle: wait for the coordinator, waking periodically so the
+            // heartbeat below keeps getting restamped
+            match cmds.recv_timeout(IDLE_HEARTBEAT) {
+                Ok(cmd) => match handle_cmd(index, &mut engine, &mut streams, &events, cmd) {
+                    Flow::Continue => {}
+                    Flow::Finish(since) => finishing = Some(since),
+                    Flow::Die => {
+                        let _ = events.send(ReplicaEvent::Fatal {
+                            replica: index,
+                            err: "killed by fault injection (kill-replica)".to_string(),
+                        });
+                        return;
                     }
-                }
-                Err(_) => break 'serve,
+                },
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break 'serve,
             }
         }
         streams.forward(index, &events);
-        publish(&engine, &gauges);
+        publish(&engine, &gauges, epoch);
     }
 
     if let Some(since) = finishing {
@@ -358,7 +404,7 @@ fn replica_main(
             return;
         }
         streams.forward(index, &events);
-        publish(&engine, &gauges);
+        publish(&engine, &gauges, epoch);
         engine.metrics.set_wall(since.elapsed());
         let report = engine.report();
         let trace = engine.take_trace();

@@ -116,6 +116,10 @@ pub struct EngineOptions {
     /// instead of taking the greedy-token fast path (accuracy-style
     /// experiments; see [`SimRuntime::set_full_logits`]).
     pub sim_full_logits: bool,
+    /// Sim backend only: deterministically fail the engine after this
+    /// many device steps (0 = never) — the chaos-testing replica-death
+    /// hook (see [`SimRuntime::fail_after_steps`]).
+    pub sim_fail_after: usize,
     /// Tokens per physical KV page of the paged cache. `kv_cap` slots
     /// that don't fill a whole page are unaddressable (pick a divisor).
     pub kv_block: usize,
@@ -135,6 +139,7 @@ impl Default for EngineOptions {
             compute_share: 1.0,
             queue_cap: 0,
             sim_full_logits: false,
+            sim_fail_after: 0,
             kv_block: 16,
             kv_share: true,
         }
@@ -406,6 +411,7 @@ impl Engine {
         }
         let mut rt = SimRuntime::new(cfg, variant, perf, opts.seed)?;
         rt.set_full_logits(opts.sim_full_logits);
+        rt.fail_after_steps(opts.sim_fail_after);
         let backend = Backend::Sim(rt);
         let base = BaseWeights::generate(cfg, opts.seed);
         let device = DeviceMemory::shared(opts.device_capacity);
@@ -431,6 +437,7 @@ impl Engine {
     pub fn sim_base_only(cfg: &ModelConfig, perf: SimPerf, opts: EngineOptions) -> Result<Engine> {
         let mut rt = SimRuntime::new(cfg, Variant::Base, perf, opts.seed)?;
         rt.set_full_logits(opts.sim_full_logits);
+        rt.fail_after_steps(opts.sim_fail_after);
         let backend = Backend::Sim(rt);
         let base = BaseWeights::generate(cfg, opts.seed);
         let device = DeviceMemory::shared(opts.device_capacity);
@@ -466,6 +473,7 @@ impl Engine {
     ) -> Result<Engine> {
         let mut rt = SimRuntime::new(cfg, Variant::Base, perf, opts.seed)?;
         rt.set_full_logits(opts.sim_full_logits);
+        rt.fail_after_steps(opts.sim_fail_after);
         let backend = Backend::Sim(rt);
         let base = BaseWeights::generate(cfg, opts.seed);
         let device = DeviceMemory::shared(opts.device_capacity);

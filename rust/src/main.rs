@@ -33,6 +33,7 @@
 //! expertweave fleet --replicas 2 --adapters 4 --policy deadline --listen 127.0.0.1:7071
 //! expertweave loadgen --replicas 2 --rate 50 --deadline-ms 300
 //! expertweave loadgen --connect 127.0.0.1:7071 --rate 40 --deadline-ms 250
+//! expertweave loadgen --connect 127.0.0.1:7071 --rate 40 --kill-replica 0@1500
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -49,7 +50,7 @@ use expertweave::server;
 use expertweave::obs::expo::MetricsListener;
 use expertweave::util::args::Args;
 use expertweave::util::logging::{set_level, Level};
-use expertweave::{log_error, log_info};
+use expertweave::{log_error, log_info, log_warn};
 use expertweave::weights::StoreMode;
 use expertweave::workload::trace::{Trace, TraceSpec};
 use expertweave::workload::OpenLoopSpec;
@@ -104,6 +105,25 @@ fn spawn_metrics(
     };
     let listener = MetricsListener::spawn(&addr, move || expertweave::obs::expo::render(&regs))
         .with_context(|| format!("bind metrics listener {addr}"))?;
+    log_info!("metrics", "Prometheus exposition on http://{}/metrics", listener.local_addr());
+    Ok(Some(listener))
+}
+
+/// Like [`spawn_metrics`] but for a fleet: renders the membership /
+/// failover families (`expertweave_fleet_replicas`,
+/// `expertweave_replica_suspect`, reroute counters, ...) alongside the
+/// merged per-replica registries — and keeps tracking replicas that
+/// join at runtime, which a fixed registry list would miss.
+fn spawn_metrics_fleet(
+    a: &Args,
+    fleet: std::sync::Arc<expertweave::obs::FleetObs>,
+) -> Result<Option<MetricsListener>> {
+    let Some(addr) = a.get("metrics-listen") else {
+        return Ok(None);
+    };
+    let listener =
+        MetricsListener::spawn(&addr, move || expertweave::obs::expo::render_fleet(&fleet))
+            .with_context(|| format!("bind metrics listener {addr}"))?;
     log_info!("metrics", "Prometheus exposition on http://{}/metrics", listener.local_addr());
     Ok(Some(listener))
 }
@@ -428,7 +448,7 @@ fn fleet(argv: Vec<String>) -> Result<()> {
             coord.enable_trace()?;
         }
         let recorders = coord.flight_recorders();
-        let mut metrics = spawn_metrics(&a, coord.obs_registries())?;
+        let mut metrics = spawn_metrics_fleet(&a, coord.fleet_obs())?;
         // run() returns once a client drained the fleet: every replica
         // is idle, so finish() only collects reports and joins threads
         frontend.run(&mut coord)?;
@@ -477,7 +497,7 @@ fn fleet(argv: Vec<String>) -> Result<()> {
         coord.enable_trace()?;
     }
     let recorders = coord.flight_recorders();
-    let mut metrics = spawn_metrics(&a, coord.obs_registries())?;
+    let mut metrics = spawn_metrics_fleet(&a, coord.fleet_obs())?;
     let outcome = coord.replay(&trace)?;
     if let Some(l) = metrics.as_mut() {
         l.shutdown();
@@ -517,6 +537,7 @@ fn loadgen(argv: Vec<String>) -> Result<()> {
     .opt("prefix-overlap", Some("0"), "percent of each prompt drawn from shared preambles (0-100)")
     .opt("vocab", Some("512"), "prompt-token vocabulary bound (remote mode)")
     .opt("seed", Some("0"), "arrival-process seed")
+    .opt("kill-replica", None, "chaos: kill fleet replica I, T ms into the run, as \"I@T\" (remote mode)")
     .opt("out", Some("target/bench_results/BENCH_fleet_online.json"), "result JSON path")
     .flag("verbose", "debug logging")
     .flag("quiet", "errors only")
@@ -540,6 +561,21 @@ fn loadgen(argv: Vec<String>) -> Result<()> {
         seed: a.get_usize("seed").map_err(anyhow::Error::msg)? as u64,
     };
 
+    // chaos hook: "<replica>@<ms>" — kill one fleet replica mid-run
+    // through a second client connection (PROTOCOL.md v4 kill-replica)
+    let chaos: Option<(usize, f64)> = match a.get("kill-replica") {
+        None => None,
+        Some(s) => {
+            let (i, at) = s
+                .split_once('@')
+                .with_context(|| format!("--kill-replica wants \"<replica>@<ms>\", got {s:?}"))?;
+            Some((
+                i.trim().parse::<usize>().with_context(|| format!("bad replica index {i:?}"))?,
+                at.trim().parse::<f64>().with_context(|| format!("bad kill time {at:?}"))?,
+            ))
+        }
+    };
+
     // remote mode: a thin NDJSON client is just another ServingBackend
     if let Some(addr) = a.get("connect") {
         let mut spec = ol;
@@ -552,9 +588,29 @@ fn loadgen(argv: Vec<String>) -> Result<()> {
         }
         let mut client = expertweave::serving::frontend::NdjsonClient::connect(&addr)?;
         log_info!("loadgen", "driving {addr} open-loop at {rate} req/s for {horizon}s...");
+        let killer = chaos.map(|(replica, at_ms)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_secs_f64(at_ms / 1e3));
+                match expertweave::serving::frontend::NdjsonClient::connect(&addr) {
+                    Ok(mut c) => {
+                        use expertweave::serving::ServingBackend;
+                        c.kill_replica(replica);
+                        log_info!("loadgen", "chaos: kill-replica {replica} sent at {at_ms} ms");
+                    }
+                    Err(e) => log_warn!("loadgen", "chaos: connect for kill failed: {e:#}"),
+                }
+            })
+        });
         let outcome = expertweave::workload::openloop::drive(&mut client, &spec)?;
+        if let Some(k) = killer {
+            let _ = k.join();
+        }
         println!("{}", outcome.row("remote"));
         return Ok(());
+    }
+    if chaos.is_some() {
+        bail!("--kill-replica drives a live server: pair it with --connect");
     }
 
     // fleet mode: identical arrival process against each routing policy

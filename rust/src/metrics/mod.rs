@@ -254,6 +254,18 @@ impl Report {
         }
     }
 
+    /// An all-zero report: the fleet-merge contribution of a replica
+    /// that crashed (or was retired) before producing one. Latency
+    /// summaries are NaN, counts zero — [`Report::merge`] treats it as
+    /// a no-op input.
+    pub fn empty() -> Report {
+        Report::merge(
+            std::iter::empty::<&Report>(),
+            std::iter::empty::<&RequestRecord>(),
+            None,
+        )
+    }
+
     /// Completed requests per second of wall time — the fleet
     /// experiments' headline number (Fig. 10).
     pub fn goodput(&self) -> f64 {

@@ -12,7 +12,7 @@
 //! Scrapes never touch the hot path: they read the registry atomics with
 //! `Relaxed` loads from the listener thread.
 
-use super::{bucket_upper, ObsRegistry, StatsSnapshot, HISTO_BUCKETS};
+use super::{bucket_upper, FleetObs, ObsRegistry, StatsSnapshot, HISTO_BUCKETS};
 use std::fmt::Write as _;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -220,6 +220,52 @@ pub fn render(regs: &[Arc<ObsRegistry>]) -> String {
     out
 }
 
+/// Fleet exposition page: [`render`] over the fleet's *current* registry
+/// list (replicas can join at runtime, so the list is read per scrape,
+/// not captured at listener spawn), plus the coordinator's fleet-level
+/// failure-handling families.
+pub fn render_fleet(fleet: &FleetObs) -> String {
+    use std::sync::atomic::Ordering;
+    let mut out = render(&fleet.registries());
+    for (name, kind, help, v) in [
+        (
+            "expertweave_fleet_replicas",
+            "gauge",
+            "Live (routable) replicas in the fleet.",
+            fleet.replicas.load(Ordering::Relaxed),
+        ),
+        (
+            "expertweave_replica_suspect",
+            "gauge",
+            "Live replicas whose heartbeat is currently stale (excluded from routing).",
+            fleet.suspect.load(Ordering::Relaxed),
+        ),
+        (
+            "expertweave_requests_rerouted_total",
+            "counter",
+            "Requests re-submitted to a surviving replica after theirs died.",
+            fleet.rerouted.load(Ordering::Relaxed),
+        ),
+        (
+            "expertweave_reroute_aborted_total",
+            "counter",
+            "Failover aborts: remaining deadline could not survive the retry.",
+            fleet.reroute_aborted.load(Ordering::Relaxed),
+        ),
+        (
+            "expertweave_replica_retired_total",
+            "counter",
+            "Replicas retired from the fleet (crashed, killed, or drained out).",
+            fleet.retired.load(Ordering::Relaxed),
+        ),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    out
+}
+
 /// std-only Prometheus scrape endpoint: one background thread, one
 /// `TcpListener`, a fresh [`render`] per request. Shut down by flag +
 /// loopback poke (same pattern as the NDJSON server acceptor).
@@ -380,6 +426,36 @@ mod tests {
         assert!(page.contains("expertweave_steps_total{replica=\"1\"} 1"));
         // ... while adapter families sum across replicas
         assert!(page.contains("expertweave_adapter_requests_completed_total{adapter=\"math\"} 2"));
+    }
+
+    #[test]
+    fn render_fleet_appends_failover_families() {
+        use std::sync::atomic::Ordering;
+        let fleet = FleetObs::new();
+        fleet.push_registry(sample_registry());
+        fleet.replicas.store(3, Ordering::Relaxed);
+        fleet.suspect.store(1, Ordering::Relaxed);
+        fleet.rerouted.store(2, Ordering::Relaxed);
+        fleet.retired.store(1, Ordering::Relaxed);
+        let page = render_fleet(&fleet);
+        // the per-replica families come from the registry list ...
+        assert!(page.contains("expertweave_steps_total{replica=\"0\"} 1"));
+        // ... and the fleet failover families are appended unlabeled
+        for family in [
+            "expertweave_fleet_replicas 3",
+            "expertweave_replica_suspect 1",
+            "expertweave_requests_rerouted_total 2",
+            "expertweave_reroute_aborted_total 0",
+            "expertweave_replica_retired_total 1",
+        ] {
+            assert!(page.contains(family), "missing {family:?} in:\n{page}");
+        }
+        assert!(page.contains("# TYPE expertweave_fleet_replicas gauge"));
+        assert!(page.contains("# TYPE expertweave_requests_rerouted_total counter"));
+        // a runtime join shows up on the next render without respawning
+        fleet.push_registry(sample_registry());
+        let page2 = render_fleet(&fleet);
+        assert!(page2.contains("expertweave_steps_total{replica=\"1\"} 1"));
     }
 
     #[test]

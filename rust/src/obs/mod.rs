@@ -41,7 +41,7 @@ pub mod trace;
 use crate::util::json::{arr, obj, Json};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Schema version of the [`StatsSnapshot`] JSON rendering (the NDJSON
 /// `stats` frame carries this as `"version"`).
@@ -49,7 +49,12 @@ use std::sync::Mutex;
 /// v2: prefix-cache families (`kv_prefix_hits`, `kv_prefix_misses`,
 /// `kv_pages_cow` counters; `kv_pages_shared` gauge) — see
 /// docs/PROTOCOL.md.
-pub const STATS_VERSION: i64 = 2;
+///
+/// v3: fleet failover families in the `fleet` section
+/// (`requests_rerouted` / `reroute_aborted` / `replica_retired`
+/// counters; `fleet_replicas` / `replica_suspect` gauges) — see
+/// docs/PROTOCOL.md.
+pub const STATS_VERSION: i64 = 3;
 
 /// Number of log2 buckets in a [`Histo`] (covers the full `u64` range).
 pub const HISTO_BUCKETS: usize = 64;
@@ -648,6 +653,50 @@ impl StatsSnapshot {
             ));
         }
         obj(fields)
+    }
+}
+
+/// Fleet-level live telemetry shared between the coordinator and the
+/// Prometheus exposition ([`expo::render_fleet`]): failure-handling
+/// counters/gauges plus the *dynamic* list of replica registries.
+///
+/// The coordinator updates the atomics from its event loop (never the
+/// engine hot path) and pushes a registry when a replica joins at
+/// runtime; the metrics listener thread reads everything lock-free
+/// except the registry list (a short mutex-guarded clone per scrape).
+/// Registries of dead replicas stay listed — their counters are history
+/// the fleet totals must keep.
+#[derive(Debug, Default)]
+pub struct FleetObs {
+    /// Live (routable) replicas right now.
+    pub replicas: AtomicU64,
+    /// Live replicas whose heartbeat is currently stale (excluded from
+    /// routing but not yet retired).
+    pub suspect: AtomicU64,
+    /// Requests re-submitted to a surviving replica after theirs died.
+    pub rerouted: AtomicU64,
+    /// Failover aborts: the remaining deadline could not survive the
+    /// retry (clients saw `replica_lost`).
+    pub reroute_aborted: AtomicU64,
+    /// Replicas retired — crashed, killed, or drained out.
+    pub retired: AtomicU64,
+    registries: Mutex<Vec<Arc<ObsRegistry>>>,
+}
+
+impl FleetObs {
+    pub fn new() -> FleetObs {
+        FleetObs::default()
+    }
+
+    /// Register one replica's live metric registry (launch or runtime
+    /// join). Never removed: dead replicas keep their history.
+    pub fn push_registry(&self, reg: Arc<ObsRegistry>) {
+        self.registries.lock().unwrap().push(reg);
+    }
+
+    /// Snapshot of the registry list (cheap `Arc` clones).
+    pub fn registries(&self) -> Vec<Arc<ObsRegistry>> {
+        self.registries.lock().unwrap().clone()
     }
 }
 

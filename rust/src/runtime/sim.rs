@@ -110,6 +110,11 @@ pub struct SimRuntime {
     /// Always materialize the full `[out_rows, vocab]` logits block,
     /// even when the engine only needs greedy tokens.
     full_logits: bool,
+    /// Fault injection: fail `step_into` once this many steps have run
+    /// (0 = never). Deterministic replica-death hook for chaos tests.
+    fail_after: usize,
+    /// Steps executed so far (drives `fail_after`).
+    steps_taken: usize,
     /// Host copy of the uploaded expert maps (adapter-aware variants).
     maps: Option<ExpertMaps>,
     // persistent per-step scratch (zero-allocation steady state)
@@ -143,6 +148,8 @@ impl SimRuntime {
             maps_version: 0,
             params_uploaded: false,
             full_logits: false,
+            fail_after: 0,
+            steps_taken: 0,
             maps: None,
             aid_buf: Vec::new(),
             topk_buf: Vec::new(),
@@ -167,6 +174,14 @@ impl SimRuntime {
     /// experiments that want the whole tensor; see module docs).
     pub fn set_full_logits(&mut self, on: bool) {
         self.full_logits = on;
+    }
+
+    /// Fault injection: make the `n+1`-th step fail with an error, as if
+    /// the device had died mid-decode (0 disables). The coordinator's
+    /// failover path treats the resulting engine error like any other
+    /// replica crash, which is exactly what chaos tests want.
+    pub fn fail_after_steps(&mut self, n: usize) {
+        self.fail_after = n;
     }
 
     /// Logits rows per bucket; must mirror `SchedConfig::out_rows`.
@@ -333,6 +348,11 @@ impl SimRuntime {
                 bail!("step input {name}: {v} elements, bucket wants {want}");
             }
         }
+
+        if self.fail_after > 0 && self.steps_taken >= self.fail_after {
+            bail!("injected fault: sim device failed after {} steps", self.steps_taken);
+        }
+        self.steps_taken += 1;
 
         let latency = self.perf.step_base + self.perf.per_token * bucket as u32;
         if !latency.is_zero() {

@@ -505,8 +505,31 @@ fn handle_cmd<B: ServingBackend>(
                         router.write_line(conn, &line);
                     }
                 }
+                Some("kill-replica") => {
+                    // chaos hook (PROTOCOL.md v4): forcibly fail one
+                    // fleet replica; failover handles the fallout.
+                    let tag = parsed
+                        .get("id")
+                        .and_then(|i| i.as_str())
+                        .unwrap_or("")
+                        .to_string();
+                    let replica = parsed
+                        .get("replica")
+                        .and_then(|r| r.as_i64())
+                        .unwrap_or(-1);
+                    let killed = replica >= 0 && backend.kill_replica(replica as usize);
+                    if !killed {
+                        let line = error_json(
+                            &tag,
+                            "unknown_replica",
+                            "no live replica at that index (or backend has no fleet)",
+                        );
+                        router.write_line(conn, &line);
+                    }
+                }
                 Some(other) => {
-                    let msg = format!("unknown op {other:?} (cancel|drain|stats|flightrec)");
+                    let msg =
+                        format!("unknown op {other:?} (cancel|drain|stats|flightrec|kill-replica)");
                     let line = error_json("", "bad_request", &msg);
                     router.write_line(conn, &line);
                 }
@@ -654,6 +677,7 @@ impl NdjsonClient {
                 let reason = match v.get("reason").and_then(|r| r.as_str()) {
                     Some("cancelled") => AbortReason::Cancelled,
                     Some("deadline") => AbortReason::DeadlineExceeded,
+                    Some("replica_lost") => AbortReason::ReplicaLost,
                     _ => {
                         // post-routing rejection: the frame carries the
                         // typed code, so the decoded SubmitError matches
@@ -805,6 +829,18 @@ impl ServingBackend for NdjsonClient {
 
     fn has_work(&self) -> bool {
         !self.streams.is_empty()
+    }
+
+    /// Relay a `kill-replica` frame (chaos hook, protocol v4). Fire and
+    /// forget: a bad index comes back as an `error` frame, which carries
+    /// no request id and is ignored by `apply_line` — the caller's
+    /// observable signal is the fleet's failover stats, not this return.
+    fn kill_replica(&mut self, replica: usize) -> bool {
+        let line = obj(vec![
+            ("op", Json::Str("kill-replica".into())),
+            ("replica", Json::Int(replica as i64)),
+        ]);
+        self.send_line(&line)
     }
 
     /// Send `{"op":"drain"}` and wait for the server to finish all

@@ -87,6 +87,12 @@ pub enum AbortReason {
     /// refused the submit, e.g. the adapter raced away after the
     /// routing decision).
     Rejected(SubmitError),
+    /// The replica holding this request died and the remaining deadline
+    /// could not survive a re-routed retry (fleet failover path; see
+    /// docs/PROTOCOL.md). Requests whose deadline *can* survive are
+    /// silently re-submitted to a surviving replica instead — the
+    /// stream may restart (`First` again) but always terminates.
+    ReplicaLost,
 }
 
 impl AbortReason {
@@ -96,6 +102,7 @@ impl AbortReason {
             AbortReason::Cancelled => "cancelled",
             AbortReason::DeadlineExceeded => "deadline",
             AbortReason::Rejected(_) => "rejected",
+            AbortReason::ReplicaLost => "replica_lost",
         }
     }
 }
@@ -382,6 +389,19 @@ pub trait ServingBackend {
     fn flightrec(&mut self) -> Option<crate::util::json::Json> {
         None
     }
+
+    /// Chaos-testing hook: forcibly kill one fleet replica, as if its
+    /// engine thread had crashed. Returns `true` if the kill was
+    /// delivered (the replica existed and was alive). Default `false`
+    /// for backends with no replicas to kill; implemented by the fleet
+    /// [`Coordinator`] and relayed over the wire by [`NdjsonClient`]
+    /// (`kill-replica` op, protocol v4).
+    ///
+    /// [`Coordinator`]: crate::coordinator::Coordinator
+    /// [`NdjsonClient`]: crate::serving::frontend::NdjsonClient
+    fn kill_replica(&mut self, _replica: usize) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]
@@ -441,6 +461,7 @@ mod tests {
             AbortReason::Rejected(SubmitError::QueueFull).as_str(),
             "rejected"
         );
+        assert_eq!(AbortReason::ReplicaLost.as_str(), "replica_lost");
     }
 
     #[test]

@@ -126,6 +126,11 @@ pub struct OpenLoopOutcome {
     /// Admitted but expired before completing
     /// ([`AbortReason::DeadlineExceeded`]).
     pub deadline_expired: usize,
+    /// Admitted, then the serving replica died and the remaining
+    /// deadline could not survive a re-route
+    /// ([`AbortReason::ReplicaLost`]). Requests that *were* re-routed
+    /// successfully show up under `completed` like any other.
+    pub replica_lost: usize,
     /// Other admitted-but-not-completed requests (cancellations).
     pub aborted_other: usize,
     /// TTFT over completed requests (seconds).
@@ -162,6 +167,11 @@ impl OpenLoopOutcome {
             self.rejected,
             self.wall,
         )
+        + &if self.replica_lost > 0 {
+            format!(" lost={}", self.replica_lost)
+        } else {
+            String::new()
+        }
     }
 }
 
@@ -218,6 +228,7 @@ pub fn drive<B: ServingBackend>(backend: &mut B, spec: &OpenLoopSpec) -> Result<
         rejected: 0,
         deadline_unmeetable: 0,
         deadline_expired: 0,
+        replica_lost: 0,
         aborted_other: 0,
         ttft: Samples::new().summary(),
         e2e: Samples::new().summary(),
@@ -304,6 +315,7 @@ fn sweep(
                             outcome.deadline_unmeetable += 1
                         }
                         AbortReason::Rejected(_) => outcome.rejected += 1,
+                        AbortReason::ReplicaLost => outcome.replica_lost += 1,
                         AbortReason::Cancelled => outcome.aborted_other += 1,
                     }
                 }
@@ -454,6 +466,7 @@ pub fn run_fleet_open_loop(spec: &FleetLoadSpec, policy: RoutingPolicy) -> Resul
         replicate_rps: f64::INFINITY,
         rate_halflife: 2.0,
         max_copies: spec.replicas.min(2).max(1),
+        ..Default::default()
     };
     let spawn_cfg = cfg.clone();
     let perf = spec.perf;
@@ -519,6 +532,7 @@ pub fn fleet_online_json(spec: &FleetLoadSpec, rows: &[PolicyOutcome]) -> Json {
                     "deadline_miss_rate",
                     Json::Num(r.outcome.deadline_miss_rate()),
                 ),
+                ("replica_lost", Json::Int(r.outcome.replica_lost as i64)),
                 ("ttft_p50_ms", Json::Num(r.outcome.ttft.median * 1e3)),
                 ("ttft_p99_ms", Json::Num(r.outcome.ttft.p99 * 1e3)),
                 ("e2e_p50_ms", Json::Num(r.outcome.e2e.median * 1e3)),

@@ -76,6 +76,7 @@ fn fleet_serves_skewed_trace_with_full_accounting() {
             replicate_rps: f64::INFINITY,
             rate_halflife: 1.0,
             max_copies: 2,
+            ..Default::default()
         },
         ads.clone(),
     );
@@ -127,6 +128,7 @@ fn bounded_queues_shed_and_unknown_adapters_are_refused() {
             replicate_rps: f64::INFINITY,
             rate_halflife: 1.0,
             max_copies: 2,
+            ..Default::default()
         },
         ads.clone(),
     );
@@ -173,6 +175,7 @@ fn hot_adapter_gets_replicated() {
             replicate_rps: 2.0, // trip the threshold quickly
             rate_halflife: 0.5,
             max_copies: 2,
+            ..Default::default()
         },
         ads.clone(),
     );
@@ -222,6 +225,7 @@ fn fleet_serving_backend_streams_cancels_and_drains() {
             replicate_rps: f64::INFINITY,
             rate_halflife: 1.0,
             max_copies: 2,
+            ..Default::default()
         },
         ads.clone(),
     );
@@ -328,6 +332,7 @@ fn round_robin_thrashes_where_affinity_holds() {
                 replicate_rps: f64::INFINITY,
                 rate_halflife: 1.0,
                 max_copies: 2,
+                ..Default::default()
             },
             ads.clone(),
         );

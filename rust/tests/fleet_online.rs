@@ -1,8 +1,11 @@
 //! Online fleet serving end to end: deadline-aware routing over live
 //! replicas (split EWMA signal), typed deadline rejections, the fleet
 //! behind the NDJSON TCP frontend (submit/stream/cancel/drain over ≥2
-//! sim replicas, driven through [`NdjsonClient`]), and the open-loop
-//! load generator.
+//! sim replicas, driven through [`NdjsonClient`]), the open-loop load
+//! generator, and the membership/chaos suite — replica death mid-run
+//! (failover re-routing, typed `ReplicaLost` aborts, zero lost
+//! streams), runtime join via [`Coordinator::add_replica`], and
+//! drain-and-retire via [`Coordinator::retire_replica`].
 
 use expertweave::adapters::generator::synth_fleet_adapters;
 use expertweave::coordinator::{Coordinator, CoordinatorConfig, RoutingPolicy};
@@ -48,6 +51,27 @@ fn pump_until<B: ServingBackend>(
     panic!("never reached: {what} ({} events)", events.len());
 }
 
+/// Pump until every handle's stream reached a terminal event, folding
+/// each stream into its `events` slot (or panic after a generous bound).
+fn pump_all<B: ServingBackend>(
+    backend: &mut B,
+    handles: &[RequestHandle],
+    events: &mut [Vec<TokenEvent>],
+    what: &str,
+) {
+    for _ in 0..30_000 {
+        let _ = backend.pump().unwrap();
+        for (h, evs) in handles.iter().zip(events.iter_mut()) {
+            evs.extend(h.drain_events());
+        }
+        if events.iter().all(|evs| evs.iter().any(|e| e.is_terminal())) {
+            return;
+        }
+    }
+    let open = events.iter().filter(|e| !e.iter().any(|ev| ev.is_terminal())).count();
+    panic!("never reached: {what} ({open} stream(s) still open)");
+}
+
 fn has_first(evs: &[TokenEvent]) -> bool {
     evs.iter().any(|e| matches!(e, TokenEvent::First { .. }))
 }
@@ -81,6 +105,7 @@ fn deadline_aware_routes_around_slow_replica() {
             replicate_rps: f64::INFINITY,
             rate_halflife: 1.0,
             max_copies: 2,
+            ..Default::default()
         },
         move |i| {
             let cfg = spawn_cfg.clone();
@@ -187,6 +212,7 @@ fn fleet_ndjson_tcp_serve_stream_cancel_drain() {
                 replicate_rps: f64::INFINITY,
                 rate_halflife: 1.0,
                 max_copies: 2,
+                ..Default::default()
             },
             move |i| {
                 let cfg = spawn_cfg.clone();
@@ -325,6 +351,7 @@ fn open_loop_accounts_for_every_arrival() {
             + outcome.rejected
             + outcome.deadline_unmeetable
             + outcome.deadline_expired
+            + outcome.replica_lost
             + outcome.aborted_other,
         outcome.offered,
         "every arrival is completed, rejected, or missed: {outcome:?}"
@@ -338,4 +365,230 @@ fn open_loop_accounts_for_every_arrival() {
     // the engine's own books agree
     let report = engine.report();
     assert_eq!(report.requests, outcome.completed);
+}
+
+/// Chaos: a 3-replica fleet where replica 0's sim engine crashes
+/// deterministically mid-run (`sim_fail_after`). Every submitted
+/// stream must still reach a terminal event — with no deadlines
+/// attached, every request routed to the doomed replica is re-routed
+/// to a survivor and completes — the fleet keeps accepting submits
+/// after the loss, and the books show the failover.
+#[test]
+fn chaos_replica_death_reroutes_without_lost_streams() {
+    let cfg = ModelConfig::sim_default();
+    let spawn_cfg = cfg.clone();
+    let mut coord = Coordinator::launch(
+        CoordinatorConfig {
+            replicas: 3,
+            policy: RoutingPolicy::RoundRobin,
+            adapter_capacity: 2,
+            queue_cap: 0,
+            replicate_rps: f64::INFINITY,
+            rate_halflife: 1.0,
+            max_copies: 2,
+            ..Default::default()
+        },
+        move |i| {
+            let cfg = spawn_cfg.clone();
+            Box::new(move || {
+                Engine::sim_weave(
+                    &cfg,
+                    SimPerf::fast(),
+                    &[],
+                    Variant::Weave,
+                    StoreMode::Virtual,
+                    EngineOptions {
+                        page_size: 64 << 10,
+                        seed: i as u64,
+                        // replica 0 dies after a dozen device steps —
+                        // mid-decode for the batch below
+                        sim_fail_after: if i == 0 { 12 } else { 0 },
+                        ..Default::default()
+                    },
+                )
+            })
+        },
+        Vec::new(), // base-model traffic: residency plays no role here
+    )
+    .unwrap();
+    let started = std::time::Instant::now();
+
+    // round-robin spreads the batch over all three replicas, so the
+    // doomed one holds work when it dies (max_new 24 > 12 fail steps:
+    // nothing it was given can complete before the crash)
+    let handles: Vec<RequestHandle> =
+        (0..12).map(|_| coord.submit(req(None, 6, 24)).unwrap()).collect();
+    let mut events: Vec<Vec<TokenEvent>> = vec![Vec::new(); handles.len()];
+    pump_all(&mut coord, &handles, &mut events, "all streams settle across the crash");
+
+    // zero lost streams, and every re-route lands (no deadline to miss)
+    let done = events.iter().filter(|e| has_done(e)).count();
+    assert_eq!(done, handles.len(), "every request completes: {events:?}");
+
+    // the fleet keeps serving with the survivors
+    assert_eq!(coord.live_count(), 2);
+    let after = coord.submit(req(None, 4, 2)).unwrap();
+    let mut evs = Vec::new();
+    pump_until(&mut coord, &after, &mut evs, "post-crash submit done", has_done);
+
+    ServingBackend::drain(&mut coord).unwrap();
+    let (per_replica, stats) = coord.finish(started).unwrap();
+    assert_eq!(per_replica.len(), 3, "the dead replica keeps its (empty) report slot");
+    assert_eq!(stats.replica_retired, 1);
+    assert!(stats.requests_rerouted >= 1, "the doomed replica held work: {stats:?}");
+    assert_eq!(stats.reroute_aborted, 0, "no deadlines -> every re-route lands");
+    let completed: usize = per_replica.iter().map(|r| r.requests).sum();
+    assert_eq!(completed, 13, "12 batch + 1 post-crash, all on survivors: {per_replica:?}");
+}
+
+/// Runtime membership: a replica added mid-run ([`Coordinator::
+/// add_replica`]) takes its share of traffic, and drain-and-retire
+/// ([`Coordinator::retire_replica`]) removes the founder without
+/// losing its report.
+#[test]
+fn runtime_join_and_retire_shift_traffic() {
+    let cfg = ModelConfig::sim_default();
+    let spawn_cfg = cfg.clone();
+    let engine_for = |seed: u64| {
+        let cfg = cfg.clone();
+        move || {
+            Engine::sim_weave(
+                &cfg,
+                SimPerf::fast(),
+                &[],
+                Variant::Weave,
+                StoreMode::Virtual,
+                EngineOptions { page_size: 64 << 10, seed, ..Default::default() },
+            )
+        }
+    };
+    let mut coord = Coordinator::launch(
+        CoordinatorConfig {
+            replicas: 1,
+            policy: RoutingPolicy::RoundRobin,
+            adapter_capacity: 2,
+            queue_cap: 0,
+            replicate_rps: f64::INFINITY,
+            rate_halflife: 1.0,
+            max_copies: 1,
+            ..Default::default()
+        },
+        move |i| {
+            let cfg = spawn_cfg.clone();
+            Box::new(move || {
+                Engine::sim_weave(
+                    &cfg,
+                    SimPerf::fast(),
+                    &[],
+                    Variant::Weave,
+                    StoreMode::Virtual,
+                    EngineOptions { page_size: 64 << 10, seed: i as u64, ..Default::default() },
+                )
+            })
+        },
+        Vec::new(),
+    )
+    .unwrap();
+    let started = std::time::Instant::now();
+
+    // pre-join traffic lands on the only replica
+    let a = coord.submit(req(None, 4, 2)).unwrap();
+    let mut evs_a = Vec::new();
+    pump_until(&mut coord, &a, &mut evs_a, "pre-join done", has_done);
+
+    // join: a fresh engine thread spun up mid-run, index append-only
+    let ix = coord.add_replica(Box::new(engine_for(1))).unwrap();
+    assert_eq!(ix, 1);
+    assert_eq!(coord.live_count(), 2);
+
+    // round-robin now alternates across both replicas
+    let handles: Vec<RequestHandle> =
+        (0..6).map(|_| coord.submit(req(None, 4, 2)).unwrap()).collect();
+    let mut events: Vec<Vec<TokenEvent>> = vec![Vec::new(); handles.len()];
+    pump_all(&mut coord, &handles, &mut events, "post-join batch done");
+    assert!(events.iter().all(|e| has_done(e)), "{events:?}");
+
+    // drain-and-retire the founder: remaining traffic flows to the
+    // newcomer, and the founder's report survives the retire
+    coord.retire_replica(0).unwrap();
+    assert_eq!(coord.live_count(), 1);
+    let b = coord.submit(req(None, 4, 2)).unwrap();
+    let mut evs_b = Vec::new();
+    pump_until(&mut coord, &b, &mut evs_b, "post-retire done", has_done);
+
+    let (per_replica, stats) = coord.finish(started).unwrap();
+    assert_eq!(per_replica.len(), 2);
+    assert!(per_replica[1].requests >= 3, "the newcomer serves traffic: {per_replica:?}");
+    let completed: usize = per_replica.iter().map(|r| r.requests).sum();
+    assert_eq!(completed, 8, "retire must not drop the founder's report: {per_replica:?}");
+    assert_eq!(stats.routed, 8);
+    assert_eq!(stats.replica_retired, 1);
+    assert_eq!(stats.requests_rerouted, 0, "a clean retire re-routes nothing");
+}
+
+/// The kill-switch regression this PR removes: killing the *only*
+/// replica mid-decode must surface a typed [`AbortReason::ReplicaLost`]
+/// terminal on the in-flight stream — never a hang — and later submits
+/// shed typed instead of poisoning the coordinator fatally.
+#[test]
+fn kill_only_replica_aborts_typed_not_fatal() {
+    let cfg = ModelConfig::sim_default();
+    let spawn_cfg = cfg.clone();
+    let mut coord = Coordinator::launch(
+        CoordinatorConfig {
+            replicas: 1,
+            policy: RoutingPolicy::RoundRobin,
+            adapter_capacity: 2,
+            queue_cap: 0,
+            replicate_rps: f64::INFINITY,
+            rate_halflife: 1.0,
+            max_copies: 1,
+            ..Default::default()
+        },
+        move |i| {
+            let cfg = spawn_cfg.clone();
+            Box::new(move || {
+                Engine::sim_weave(
+                    &cfg,
+                    SimPerf::fast(),
+                    &[],
+                    Variant::Weave,
+                    StoreMode::Virtual,
+                    EngineOptions { page_size: 64 << 10, seed: i as u64, ..Default::default() },
+                )
+            })
+        },
+        Vec::new(),
+    )
+    .unwrap();
+    let started = std::time::Instant::now();
+
+    let h = coord.submit(req(None, 4, 2000)).unwrap();
+    let mut evs = Vec::new();
+    pump_until(&mut coord, &h, &mut evs, "victim decoding", has_first);
+
+    // fault injection: die as if the engine had crashed
+    assert!(coord.kill_replica(0));
+    pump_until(&mut coord, &h, &mut evs, "typed terminal after kill", |evs| {
+        evs.iter().any(|e| e.is_terminal())
+    });
+    assert!(
+        matches!(
+            evs.last(),
+            Some(TokenEvent::Aborted { reason: AbortReason::ReplicaLost, .. })
+        ),
+        "no survivor to re-route to -> typed ReplicaLost: {evs:?}"
+    );
+
+    // the fleet is degraded, not poisoned: submits shed typed
+    assert_eq!(coord.live_count(), 0);
+    match coord.submit(req(None, 2, 1)) {
+        Err(SubmitError::Shed) => {}
+        other => panic!("expected Shed with no live replicas, got {other:?}"),
+    }
+
+    let (per_replica, stats) = coord.finish(started).unwrap();
+    assert_eq!(per_replica.len(), 1);
+    assert_eq!(stats.replica_retired, 1);
+    assert_eq!(stats.reroute_aborted, 1);
 }

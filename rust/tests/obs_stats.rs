@@ -147,7 +147,10 @@ fn live_engine_stats_frame_matches_prometheus_scrape() {
     // the engine is live (no drain yet): both surfaces must answer now
     c.send(r#"{"op":"stats","id":"s1"}"#);
     let frame = c.wait_for("s1", "stats");
-    assert_eq!(frame.at(&["version"]).as_i64(), Some(1));
+    assert_eq!(
+        frame.at(&["version"]).as_i64(),
+        Some(expertweave::obs::STATS_VERSION)
+    );
     assert_eq!(frame.at(&["replicas"]).as_i64(), Some(1));
     assert_eq!(frame.at(&["counters", "requests_completed"]).as_i64(), Some(2));
     assert_eq!(frame.at(&["counters", "requests_submitted"]).as_i64(), Some(2));
@@ -240,7 +243,10 @@ fn live_fleet_stats_merge_replicas_and_match_prometheus() {
     // carries the coordinator's door counters
     c.send(r#"{"op":"stats","id":"fs"}"#);
     let frame = c.wait_for("fs", "stats");
-    assert_eq!(frame.at(&["version"]).as_i64(), Some(1));
+    assert_eq!(
+        frame.at(&["version"]).as_i64(),
+        Some(expertweave::obs::STATS_VERSION)
+    );
     assert_eq!(frame.at(&["replicas"]).as_i64(), Some(2));
     assert_eq!(
         frame.at(&["counters", "requests_completed"]).as_i64(),
