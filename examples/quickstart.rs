@@ -8,7 +8,7 @@
 use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
 use expertweave::engine::{Engine, EngineOptions, RequestSpec};
 use expertweave::runtime::{ArtifactSet, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::weights::StoreMode;
 use std::path::Path;
 
@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
             adapter: who.map(str::to_string),
             prompt: (1..=8 + i as i32).collect(),
             max_new_tokens: 6,
-            sampling: Sampling::Greedy,
+            sampling: SamplingParams::greedy(),
         })?;
     }
 

@@ -12,7 +12,11 @@
 //! A third series re-runs the fast path with the live-telemetry
 //! registry disabled (`ObsRegistry::set_enabled(false)`) to isolate the
 //! cost of always-on metric recording (a handful of relaxed atomic adds
-//! per step — expected to be measurement noise).
+//! per step — expected to be measurement noise). A fourth series drives
+//! a mixed greedy + temperature + nucleus batch (one third each, seeded)
+//! so every step takes the per-row sampling path — the production
+//! sampling surface must stay allocation-free and within a small factor
+//! of the all-greedy fast path.
 //!
 //! Emits `target/bench_results/BENCH_hotpath.json` — the first point of
 //! the repo's perf trajectory; later PRs append comparable runs.
@@ -25,7 +29,7 @@ use expertweave::bench::Table;
 use expertweave::engine::{Engine, EngineOptions, RequestSpec};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{SimPerf, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::util::args::Args;
 use expertweave::util::json::{obj, Json};
 use expertweave::weights::StoreMode;
@@ -65,6 +69,7 @@ fn run_decode(
     adapters: &[Adapter],
     full_logits: bool,
     obs: bool,
+    sampled: bool,
     seqs: usize,
     warmup: usize,
     steps: usize,
@@ -85,11 +90,22 @@ fn run_decode(
     e.metrics.reserve_steps(warmup + steps + 16);
     for i in 0..seqs {
         let who = (i % 2 == 0).then(|| adapters[0].name.clone());
+        // the sampled mix mirrors the hotpath_alloc suite: a third
+        // greedy, a third plain temperature, a third nucleus, all seeded
+        let sampling = if sampled {
+            match i % 3 {
+                0 => SamplingParams::greedy(),
+                1 => SamplingParams::temperature(0.8).with_seed(100 + i as u64),
+                _ => SamplingParams::top_p(0.9, 0.8).with_seed(100 + i as u64),
+            }
+        } else {
+            SamplingParams::greedy()
+        };
         e.submit(RequestSpec {
             adapter: who,
             prompt: (1..=8).collect(),
             max_new_tokens: warmup + steps + 8,
-            sampling: Sampling::Greedy,
+            sampling,
         })?;
     }
     for _ in 0..warmup {
@@ -143,12 +159,14 @@ fn main() -> anyhow::Result<()> {
     let mut fast = None::<RunResult>;
     let mut obs_off = None::<RunResult>;
     let mut full = None::<RunResult>;
+    let mut sampled = None::<RunResult>;
     for _ in 0..reps {
         // interleave so host drift cancels; "fastpath" records live
         // telemetry (the production default), "obs off" isolates it
-        let f = run_decode(&cfg, &adapters, false, true, seqs, warmup, steps)?;
-        let o = run_decode(&cfg, &adapters, false, false, seqs, warmup, steps)?;
-        let l = run_decode(&cfg, &adapters, true, true, seqs, warmup, steps)?;
+        let f = run_decode(&cfg, &adapters, false, true, false, seqs, warmup, steps)?;
+        let o = run_decode(&cfg, &adapters, false, false, false, seqs, warmup, steps)?;
+        let l = run_decode(&cfg, &adapters, true, true, false, seqs, warmup, steps)?;
+        let s = run_decode(&cfg, &adapters, false, true, true, seqs, warmup, steps)?;
         if fast.as_ref().is_none_or(|b| f.steps_per_sec > b.steps_per_sec) {
             fast = Some(f);
         }
@@ -158,10 +176,14 @@ fn main() -> anyhow::Result<()> {
         if full.as_ref().is_none_or(|b| l.steps_per_sec > b.steps_per_sec) {
             full = Some(l);
         }
+        if sampled.as_ref().is_none_or(|b| s.steps_per_sec > b.steps_per_sec) {
+            sampled = Some(s);
+        }
     }
     let fast = fast.unwrap();
     let obs_off = obs_off.unwrap();
     let full = full.unwrap();
+    let sampled = sampled.unwrap();
     anyhow::ensure!(fast.steps_per_sec > 0.0, "fast path measured zero steps/sec");
     let speedup = fast.steps_per_sec / full.steps_per_sec.max(1e-12);
     // recording cost per step (negative = noise; both are best-of-reps)
@@ -183,6 +205,12 @@ fn main() -> anyhow::Result<()> {
         format!("{:.0}", obs_off.steps_per_sec),
         format!("{:.0}", obs_off.ns_per_step),
         fmt_allocs(obs_off.allocs_per_step),
+    ]);
+    t.row(&[
+        "sampled mix (obs on)".into(),
+        format!("{:.0}", sampled.steps_per_sec),
+        format!("{:.0}", sampled.ns_per_step),
+        fmt_allocs(sampled.allocs_per_step),
     ]);
     t.row(&[
         "full-logits (legacy-equiv)".into(),
@@ -259,6 +287,24 @@ fn main() -> anyhow::Result<()> {
                     obs_off.allocs_per_step.map_or(Json::Null, Json::Num),
                 ),
             ]),
+        ),
+        // mixed greedy + seeded temperature/nucleus batch: every step
+        // takes the per-row sampling path; flat keys are the CI contract
+        (
+            "sampled",
+            obj(vec![
+                ("steps_per_sec", Json::Num(sampled.steps_per_sec)),
+                ("ns_per_step", Json::Num(sampled.ns_per_step)),
+                (
+                    "allocs_per_step",
+                    sampled.allocs_per_step.map_or(Json::Null, Json::Num),
+                ),
+            ]),
+        ),
+        ("sampled_steps_per_s", Json::Num(sampled.steps_per_sec)),
+        (
+            "sampled_allocs_per_step",
+            sampled.allocs_per_step.map_or(Json::Null, Json::Num),
         ),
         ("obs_overhead_ns_per_step", Json::Num(obs_overhead_ns)),
         ("speedup", Json::Num(speedup)),

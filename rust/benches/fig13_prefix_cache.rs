@@ -24,7 +24,7 @@ use expertweave::bench::Table;
 use expertweave::engine::{Engine, EngineOptions, RequestSpec};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{SimPerf, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::util::args::Args;
 use expertweave::util::json::{arr, obj, Json};
 use expertweave::weights::StoreMode;
@@ -87,7 +87,7 @@ fn run_series(
             adapter: Some(adapters[aid_ix as usize].name.clone()),
             prompt: prompt_for(i, aid_ix, prompt_len, shared, cfg.vocab),
             max_new_tokens: max_new,
-            sampling: Sampling::Greedy,
+            sampling: SamplingParams::greedy(),
         })?;
         Ok(())
     };

@@ -22,7 +22,7 @@ use expertweave::coordinator::{Coordinator, CoordinatorConfig, RoutingPolicy};
 use expertweave::engine::{Engine, EngineOptions};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{SimPerf, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::serving::{RequestHandle, ServeRequest, ServingBackend, TokenEvent};
 use expertweave::util::args::Args;
 use expertweave::util::json::{arr, obj, Json};
@@ -147,7 +147,7 @@ fn main() -> anyhow::Result<()> {
                     .map(|_| (1 + rng.below(cfg.vocab as u64 - 1)) as i32)
                     .collect(),
                 max_new_tokens: 8,
-                sampling: Sampling::Greedy,
+                sampling: SamplingParams::greedy(),
                 deadline: None,
                 trace: None,
             };

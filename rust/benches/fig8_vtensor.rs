@@ -11,7 +11,7 @@ use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
 use expertweave::bench::Table;
 use expertweave::engine::{Engine, EngineOptions, RequestSpec};
 use expertweave::runtime::{ArtifactSet, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::util::args::Args;
 use expertweave::util::stats::Samples;
 use expertweave::weights::StoreMode;
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
             adapter: Some(name.to_string()),
             prompt: (0..plen as i32).collect(),
             max_new_tokens: 1,
-            sampling: Sampling::Greedy,
+            sampling: SamplingParams::greedy(),
         })?;
         let done = engine.run_to_completion()?;
         Ok(done[0].record.ttft.as_secs_f64())
@@ -94,7 +94,7 @@ fn main() -> anyhow::Result<()> {
                 adapter: Some(name.to_string()),
                 prompt: (0..2).collect(),
                 max_new_tokens: decode_steps,
-                sampling: Sampling::Greedy,
+                sampling: SamplingParams::greedy(),
             })?;
         }
         for c in engine.run_to_completion()? {

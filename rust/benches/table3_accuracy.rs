@@ -15,7 +15,7 @@ use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
 use expertweave::bench::Table;
 use expertweave::engine::{Engine, EngineOptions, RequestSpec};
 use expertweave::runtime::{ArtifactSet, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::weights::StoreMode;
 use expertweave::workload::prompts::PromptGen;
 use std::path::PathBuf;
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
                         adapter: adapter.map(str::to_string),
                         prompt: p.clone(),
                         max_new_tokens: MAX_NEW,
-                        sampling: Sampling::Greedy,
+                        sampling: SamplingParams::greedy(),
                     })
                     .unwrap(),
             );

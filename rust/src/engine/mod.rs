@@ -29,7 +29,7 @@ use crate::runtime::{
     ArtifactSet, ParamSource, Runtime, SimPerf, SimRuntime, StepInputs, StepOutput, StepYield,
     Variant,
 };
-use crate::sampler::{sample, Sampling};
+use crate::sampler::{FinishReason, SamplingParams};
 use crate::scheduler::{SchedConfig, Scheduler, SeqState, StepWorkspace};
 use crate::serving::{
     AbortReason, RequestHandle, RequestId, ServeRequest, ServingBackend, SubmitError, TokenEvent,
@@ -52,7 +52,7 @@ pub struct RequestSpec {
     pub adapter: Option<String>,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
-    pub sampling: Sampling,
+    pub sampling: SamplingParams,
 }
 
 /// Completed request (tokens + latency record).
@@ -61,6 +61,10 @@ pub struct Completion {
     pub id: u64,
     pub adapter: Option<String>,
     pub output: Vec<i32>,
+    /// Why generation ended: `Length` (token budget) or `Stop` (stop
+    /// sequence / stop token matched). Carried on the NDJSON `done`
+    /// frame as `finish`.
+    pub finish: FinishReason,
     pub record: RequestRecord,
 }
 
@@ -299,7 +303,7 @@ impl Engine {
         let obs = Arc::new(ObsRegistry::new(cfg.max_adapters));
         let constructed = Instant::now();
         let mut engine = Engine {
-            ws: StepWorkspace::new(&sched_cfg),
+            ws: StepWorkspace::new(&sched_cfg, cfg.vocab),
             scheduler: Scheduler::new(sched_cfg),
             kv: PagedKvCache::new(cfg.kv_cap, opts.kv_block, opts.kv_share),
             kv_block: opts.kv_block,
@@ -715,14 +719,21 @@ impl Engine {
         let id = self.next_seq;
         self.next_seq += 1;
         self.flightrec.record(EventKind::Submit, id, aid, req.prompt.len() as u64);
-        let mut seq = SeqState::new(
-            id,
-            aid,
-            req.adapter,
-            req.prompt,
-            req.max_new_tokens.max(1),
-            req.sampling,
-        );
+        // Resolve sampling once at the door: clamp out-of-range knobs,
+        // pin the seed (an explicit per-request seed makes the sampled
+        // stream reproducible across backend modes and fleet replicas;
+        // otherwise one is drawn here, off the step hot path), and fold
+        // the optional total-length cap into max_new.
+        let mut sampling = req.sampling;
+        sampling.sanitize();
+        if sampling.seed.is_none() {
+            sampling.seed = Some(self.rng.next_u64());
+        }
+        let mut max_new = req.max_new_tokens.max(1);
+        if sampling.max_len > 0 {
+            max_new = max_new.min(sampling.max_len.saturating_sub(req.prompt.len()).max(1));
+        }
+        let mut seq = SeqState::new(id, aid, req.adapter, req.prompt, max_new, sampling);
         seq.trace = req.trace.unwrap_or(0);
         if let Some(d) = req.deadline {
             seq.deadline = Some(Instant::now() + d);
@@ -853,17 +864,39 @@ impl Engine {
             want_tokens,
             &mut self.step_out,
         )?;
-        // sample every row that completed its backlog (disjoint field
-        // borrows: rows are read while scheduler/streams/rng mutate)
-        for &r in self.ws.rows.iter() {
+        // sample every row that completed its backlog (indexed loop +
+        // disjoint field borrows: rows are copied out while the sampler
+        // bank, step output and scheduler mutate)
+        let vocab = self.cfg.vocab;
+        for i in 0..self.ws.rows.len() {
+            let r = self.ws.rows[i];
             let tok = match self.step_out.kind {
                 StepYield::GreedyTokens => self.step_out.tokens[r.row],
-                StepYield::Logits => sample(
-                    self.step_out.row_logits(r.row, self.cfg.vocab),
-                    r.sampling,
-                    &mut self.rng,
-                ),
+                StepYield::Logits => {
+                    // Per-request state: randomness comes from the slot's
+                    // seed-derived PRNG, so the token stream is invariant
+                    // to batch composition and slot assignment order.
+                    let params = self
+                        .scheduler
+                        .sampling(r.seq)
+                        .expect("out-row points at a running sequence");
+                    let row =
+                        &mut self.step_out.logits[r.row * vocab..(r.row + 1) * vocab];
+                    self.ws.samplers.sample_row(r.sampler as usize, params, row)
+                }
             };
+            // Stop/penalty bookkeeping runs on both paths so the greedy
+            // fast path and the logits path observe identical state.
+            let stop = {
+                let params = self
+                    .scheduler
+                    .sampling(r.seq)
+                    .expect("out-row points at a running sequence");
+                self.ws.samplers.observe(r.sampler as usize, params, tok)
+            };
+            if stop {
+                self.scheduler.mark_stop(r.seq);
+            }
             let first = self.scheduler.push_token(r.seq, tok)?;
             self.obs.record_token(r.aid);
             if first {
@@ -961,6 +994,7 @@ impl Engine {
                     id: seq.id,
                     adapter: seq.adapter,
                     output: seq.tokens[seq.prompt_len..].to_vec(),
+                    finish: seq.finish,
                     record,
                 };
                 if let Some(tx) = self.streams.remove(&seq.id) {
@@ -1060,7 +1094,7 @@ impl Engine {
             "reset_session with requests in flight"
         );
         let sched_cfg = Scheduler::rebuild_config(&self.scheduler);
-        self.ws = StepWorkspace::new(&sched_cfg);
+        self.ws = StepWorkspace::new(&sched_cfg, self.cfg.vocab);
         self.scheduler = Scheduler::new(sched_cfg);
         self.kv = PagedKvCache::new(self.cfg.kv_cap, self.kv_block, self.kv_share);
         self.kv_hits_seen = 0;

@@ -535,6 +535,7 @@ fn loadgen(argv: Vec<String>) -> Result<()> {
     .opt("max-new", Some("8"), "output budget per request")
     .opt("alpha", Some("0.5"), "power-law adapter skew (1 = uniform)")
     .opt("prefix-overlap", Some("0"), "percent of each prompt drawn from shared preambles (0-100)")
+    .opt("sampled-frac", Some("0"), "percent of requests issued as seeded sampled decodes (0-100)")
     .opt("vocab", Some("512"), "prompt-token vocabulary bound (remote mode)")
     .opt("seed", Some("0"), "arrival-process seed")
     .opt("kill-replica", None, "chaos: kill fleet replica I, T ms into the run, as \"I@T\" (remote mode)")
@@ -558,6 +559,7 @@ fn loadgen(argv: Vec<String>) -> Result<()> {
             .then(|| std::time::Duration::from_secs_f64(deadline_ms / 1e3)),
         vocab: a.get_usize("vocab").map_err(anyhow::Error::msg)?,
         prefix_overlap: a.get_f64("prefix-overlap").map_err(anyhow::Error::msg)? / 100.0,
+        sampled_frac: a.get_f64("sampled-frac").map_err(anyhow::Error::msg)? / 100.0,
         seed: a.get_usize("seed").map_err(anyhow::Error::msg)? as u64,
     };
 

@@ -1,51 +1,464 @@
-//! Token sampling over step logits: greedy, temperature, top-k.
+//! Production sampling surface over step logits.
 //!
 //! Operates on one `[vocab]` row of the step output (the engine slices the
-//! `[O, vocab]` block by out-row index). Deterministic given the PRNG.
+//! `[O, vocab]` block by out-row index). Every request carries a
+//! [`SamplingParams`]; per-request mutable state (PRNG, penalty counts,
+//! stop-sequence ring) lives in a preallocated [`SamplerBank`] slot so the
+//! steady-state decode loop never heap-allocates.
+//!
+//! Determinism contract: a sampled token depends only on the request's
+//! resolved seed, the number of tokens the request has sampled so far, and
+//! the logits row — never on batch composition, slot assignment order, or
+//! which backend mode produced the logits. Greedy rows consume no
+//! randomness, so mixing greedy and sampled requests in one batch cannot
+//! perturb either stream.
+//!
+//! NaN policy: logits are ordered with [`f32::total_cmp`] after mapping NaN
+//! to `-inf`, so a backend emitting a NaN logit can never panic the sampler
+//! and the NaN token is simply unsampleable.
 
 use crate::util::rng::Pcg;
 
-/// Sampling configuration per request.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum Sampling {
-    /// argmax (ties -> lowest token id). Used by the accuracy experiments
-    /// (greedy agreement must be exact).
-    Greedy,
-    /// softmax(logits / temperature) sampling.
-    Temperature(f32),
-    /// top-k filter then temperature sampling.
-    TopK { k: usize, temperature: f32 },
+/// Most stop sequences a single request may carry (protocol cap, see
+/// `docs/PROTOCOL.md` v5).
+pub const MAX_STOP_SEQS: usize = 8;
+/// Longest stop sequence, in tokens (protocol cap). Bounds the per-slot
+/// recent-token ring used for match detection.
+pub const MAX_STOP_SEQ_LEN: usize = 16;
+
+/// Per-request sampling configuration (serving API + NDJSON protocol v5).
+///
+/// The zero value of each knob disables it: `temperature == 0.0` is greedy
+/// argmax, `top_k == 0` and `top_p == 1.0` apply no filter,
+/// `repetition_penalty == 1.0` and zero presence/frequency penalties leave
+/// logits untouched, `max_len == 0` imposes no total-length cap, and empty
+/// stop/bias lists are no-ops. [`SamplingParams::greedy`] is the
+/// all-disabled default used by every greedy-agreement experiment.
+///
+/// Penalty semantics: the penalty token-count table counts *seen* tokens —
+/// the prompt plus everything generated so far. `repetition_penalty`
+/// divides positive logits (multiplies negative ones) of seen tokens,
+/// `presence_penalty` is subtracted once per seen token, and
+/// `frequency_penalty` is subtracted once per occurrence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `0.0` (or below) selects greedy argmax.
+    pub temperature: f32,
+    /// Keep only the `top_k` largest logits before sampling; `0` disables.
+    pub top_k: usize,
+    /// Nucleus filter: sample from the minimal probability-sorted prefix
+    /// whose mass reaches `top_p`; `1.0` disables.
+    pub top_p: f32,
+    /// Divide positive / multiply negative logits of seen tokens; `1.0`
+    /// disables.
+    pub repetition_penalty: f32,
+    /// Subtracted from the logit of every seen token; `0.0` disables.
+    pub presence_penalty: f32,
+    /// Subtracted per occurrence of a seen token; `0.0` disables.
+    pub frequency_penalty: f32,
+    /// Token-id sequences that finish the request with reason `stop` once
+    /// the generated stream ends with one of them (matches may straddle
+    /// step boundaries). At most [`MAX_STOP_SEQS`] sequences of at most
+    /// [`MAX_STOP_SEQ_LEN`] tokens each.
+    pub stop_sequences: Vec<Vec<i32>>,
+    /// Single token ids that finish the request with reason `stop`.
+    pub stop_token_ids: Vec<i32>,
+    /// Cap on total sequence length (prompt + generated); `0` disables.
+    /// Tighter than `max_new_tokens` wins.
+    pub max_len: usize,
+    /// Additive per-token logit bias; `-inf` makes a token unsampleable.
+    pub logit_bias: Vec<(i32, f32)>,
+    /// Per-request seed. `Some` pins the sampled stream: the same seed and
+    /// prompt reproduce byte-identical tokens across backend modes, batch
+    /// compositions, and fleet replicas. `None` draws a seed from the
+    /// engine at submit time.
+    pub seed: Option<u64>,
 }
 
-/// Sample one token id from a logits row.
-pub fn sample(logits: &[f32], mode: Sampling, rng: &mut Pcg) -> i32 {
-    match mode {
-        Sampling::Greedy => argmax(logits),
-        Sampling::Temperature(t) => {
-            let probs = softmax_scaled(logits, t);
-            pick(&probs, rng)
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self::greedy()
+    }
+}
+
+impl SamplingParams {
+    /// Greedy argmax with every knob disabled — the exact-agreement mode
+    /// used by the accuracy experiments.
+    pub fn greedy() -> SamplingParams {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repetition_penalty: 1.0,
+            presence_penalty: 0.0,
+            frequency_penalty: 0.0,
+            stop_sequences: Vec::new(),
+            stop_token_ids: Vec::new(),
+            max_len: 0,
+            logit_bias: Vec::new(),
+            seed: None,
         }
-        Sampling::TopK { k, temperature } => {
-            let k = k.clamp(1, logits.len());
-            // indices of the k largest logits
-            let mut idx: Vec<usize> = (0..logits.len()).collect();
-            idx.select_nth_unstable_by(k - 1, |&a, &b| {
-                logits[b].partial_cmp(&logits[a]).unwrap()
-            });
-            idx.truncate(k);
-            let sub: Vec<f32> = idx.iter().map(|&i| logits[i]).collect();
-            let probs = softmax_scaled(&sub, temperature);
-            idx[pick(&probs, rng) as usize] as i32
+    }
+
+    /// Plain temperature sampling.
+    pub fn temperature(t: f32) -> SamplingParams {
+        SamplingParams { temperature: t, ..Self::greedy() }
+    }
+
+    /// Top-k filter then temperature sampling.
+    pub fn top_k(k: usize, t: f32) -> SamplingParams {
+        SamplingParams { temperature: t, top_k: k, ..Self::greedy() }
+    }
+
+    /// Nucleus (top-p) filter then temperature sampling.
+    pub fn top_p(p: f32, t: f32) -> SamplingParams {
+        SamplingParams { temperature: t, top_p: p, ..Self::greedy() }
+    }
+
+    /// Builder-style seed pin.
+    pub fn with_seed(mut self, seed: u64) -> SamplingParams {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// `true` when token choice is argmax (no randomness consumed).
+    pub fn is_greedy(&self) -> bool {
+        !(self.temperature > 0.0)
+    }
+
+    /// `true` when any logit-mutating knob is active.
+    pub fn has_penalties(&self) -> bool {
+        self.repetition_penalty != 1.0
+            || self.presence_penalty != 0.0
+            || self.frequency_penalty != 0.0
+    }
+
+    /// `true` when this request's rows need materialized logits. Plain
+    /// greedy rows (no penalties, no bias) can ride the backend's O(1)
+    /// greedy fast path; anything else forces the logits path.
+    pub fn needs_logits(&self) -> bool {
+        !self.is_greedy() || self.has_penalties() || !self.logit_bias.is_empty()
+    }
+
+    /// `true` when the request can ever finish with reason `stop`.
+    pub fn has_stops(&self) -> bool {
+        !self.stop_sequences.is_empty() || !self.stop_token_ids.is_empty()
+    }
+
+    /// Clamp every knob into its valid range and enforce the stop caps.
+    /// Called once at submit; keeps the hot path branch-free of validity
+    /// checks.
+    pub fn sanitize(&mut self) {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            self.temperature = 0.0;
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 || self.top_p > 1.0 {
+            self.top_p = 1.0;
+        }
+        if !self.repetition_penalty.is_finite() || self.repetition_penalty <= 0.0 {
+            self.repetition_penalty = 1.0;
+        }
+        if !self.presence_penalty.is_finite() {
+            self.presence_penalty = 0.0;
+        }
+        if !self.frequency_penalty.is_finite() {
+            self.frequency_penalty = 0.0;
+        }
+        self.stop_sequences.truncate(MAX_STOP_SEQS);
+        self.stop_sequences.retain(|s| !s.is_empty());
+        for s in &mut self.stop_sequences {
+            s.truncate(MAX_STOP_SEQ_LEN);
         }
     }
 }
 
-/// argmax with deterministic tie-break (lowest index).
+/// Why a finished request stopped generating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens` (or the `max_len` total cap).
+    Length,
+    /// Matched a stop sequence or stop token id.
+    Stop,
+}
+
+impl FinishReason {
+    /// Stable wire tag used by the NDJSON `done` frame.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+        }
+    }
+}
+
+/// Mutable per-request sampler state. One slot per schedulable sequence,
+/// preallocated in the bank and recycled on slot reuse.
+#[derive(Debug, Clone)]
+struct SlotState {
+    rng: Pcg,
+    /// Seen-token occurrence counts (prompt + generated), vocab-sized.
+    counts: Vec<u32>,
+    /// Token ids with `counts > 0`, so reset is O(distinct seen) instead
+    /// of O(vocab).
+    touched: Vec<i32>,
+    /// Last `MAX_STOP_SEQ_LEN` generated tokens (stop-sequence cursor).
+    recent: [i32; MAX_STOP_SEQ_LEN],
+    recent_len: usize,
+}
+
+/// Stream id for per-request sampler PRNGs: keeps request streams disjoint
+/// from the engine-level PCG streams (e.g. 555 for the legacy engine rng).
+const SAMPLER_STREAM: u64 = 0x53_41_4d_50; // "SAMP"
+
+impl SlotState {
+    fn with_vocab(vocab: usize) -> SlotState {
+        SlotState {
+            rng: Pcg::with_stream(0, SAMPLER_STREAM),
+            counts: vec![0; vocab],
+            touched: Vec::with_capacity(vocab),
+            recent: [0; MAX_STOP_SEQ_LEN],
+            recent_len: 0,
+        }
+    }
+
+    fn reset(&mut self, seed: u64, prompt: &[i32]) {
+        self.rng = Pcg::with_stream(seed, SAMPLER_STREAM);
+        for &t in self.touched.iter() {
+            self.counts[t as usize] = 0;
+        }
+        self.touched.clear();
+        self.recent_len = 0;
+        for &t in prompt {
+            self.count(t);
+        }
+    }
+
+    fn count(&mut self, tok: i32) {
+        if tok >= 0 && (tok as usize) < self.counts.len() {
+            if self.counts[tok as usize] == 0 {
+                self.touched.push(tok);
+            }
+            self.counts[tok as usize] += 1;
+        }
+    }
+
+    fn push_recent(&mut self, tok: i32) {
+        if self.recent_len == MAX_STOP_SEQ_LEN {
+            self.recent.copy_within(1.., 0);
+            self.recent[MAX_STOP_SEQ_LEN - 1] = tok;
+        } else {
+            self.recent[self.recent_len] = tok;
+            self.recent_len += 1;
+        }
+    }
+
+    /// Does the generated stream currently end with any stop sequence?
+    fn stop_matched(&self, stops: &[Vec<i32>]) -> bool {
+        stops.iter().any(|s| {
+            s.len() <= self.recent_len
+                && self.recent[self.recent_len - s.len()..self.recent_len] == s[..]
+        })
+    }
+}
+
+/// NaN-as-`-inf` ordering key: total order, never panics, and a NaN logit
+/// can never win a comparison against a real value.
+#[inline]
+fn key(x: f32) -> f32 {
+    if x.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        x
+    }
+}
+
+/// Preallocated bank of per-request sampler slots plus shared sort/prob
+/// scratch. Lives in the scheduler's `StepWorkspace`; nothing here
+/// allocates after construction.
+#[derive(Debug, Clone)]
+pub struct SamplerBank {
+    slots: Vec<SlotState>,
+    free: Vec<usize>,
+    vocab: usize,
+    /// Candidate token indices, reused per sampled row (top-k/top-p sort).
+    idx: Vec<usize>,
+    /// Candidate probabilities, parallel to `idx`.
+    probs: Vec<f32>,
+}
+
+impl SamplerBank {
+    /// Bank with `slots` recyclable request slots over a `vocab`-sized
+    /// token space. All memory is committed here.
+    pub fn new(slots: usize, vocab: usize) -> SamplerBank {
+        SamplerBank {
+            slots: (0..slots).map(|_| SlotState::with_vocab(vocab)).collect(),
+            free: (0..slots).rev().collect(),
+            vocab,
+            idx: Vec::with_capacity(vocab),
+            probs: Vec::with_capacity(vocab),
+        }
+    }
+
+    /// Number of slots currently attached to live requests.
+    pub fn in_use(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Attach a fresh request: seed its PRNG, zero its penalty table, seed
+    /// the table with the prompt. O(distinct prior tokens + prompt), no
+    /// allocation. Panics if the bank is exhausted (the scheduler bounds
+    /// concurrent sequences by bank size).
+    pub fn acquire(&mut self, seed: u64, prompt: &[i32]) -> usize {
+        let slot = self.free.pop().expect("sampler bank exhausted");
+        self.slots[slot].reset(seed, prompt);
+        slot
+    }
+
+    /// Return a slot to the free list (request finished or aborted).
+    pub fn release(&mut self, slot: usize) {
+        debug_assert!(!self.free.contains(&slot));
+        self.free.push(slot);
+    }
+
+    /// Sample the next token for `slot` from a mutable logits row,
+    /// applying logit bias and penalties in place. Allocation-free; greedy
+    /// params consume no randomness.
+    pub fn sample_row(&mut self, slot: usize, params: &SamplingParams, logits: &mut [f32]) -> i32 {
+        let st = &mut self.slots[slot];
+        for &(t, b) in &params.logit_bias {
+            if t >= 0 && (t as usize) < logits.len() {
+                logits[t as usize] += b;
+            }
+        }
+        if params.has_penalties() {
+            let rep = params.repetition_penalty;
+            for &t in st.touched.iter() {
+                let c = st.counts[t as usize] as f32;
+                let x = &mut logits[t as usize];
+                if rep != 1.0 {
+                    *x = if *x > 0.0 { *x / rep } else { *x * rep };
+                }
+                *x -= params.frequency_penalty * c + params.presence_penalty;
+            }
+        }
+        if params.is_greedy() {
+            return argmax(logits);
+        }
+
+        let n = logits.len();
+        let t = params.temperature;
+        let k = if params.top_k == 0 { n } else { params.top_k.min(n) };
+        if k == n && params.top_p >= 1.0 {
+            // Unfiltered temperature sampling: CDF walk in logit order, no
+            // sort needed.
+            let m = logits.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(key(x)));
+            let mut sum = 0.0f32;
+            for &x in logits.iter() {
+                sum += ((key(x) - m) / t).exp();
+            }
+            if !(sum > 0.0) || !sum.is_finite() {
+                return argmax(logits);
+            }
+            let u = st.rng.f32() * sum;
+            let mut acc = 0.0f32;
+            let mut last_live = 0usize;
+            for (i, &x) in logits.iter().enumerate() {
+                let p = ((key(x) - m) / t).exp();
+                if p > 0.0 {
+                    last_live = i;
+                }
+                acc += p;
+                if u < acc && p > 0.0 {
+                    return i as i32;
+                }
+            }
+            return last_live as i32;
+        }
+
+        // Filtered path: rank candidates (NaN sorts last via `key`), apply
+        // top-k, then take the minimal sorted prefix with mass >= top_p.
+        self.idx.clear();
+        self.idx.extend(0..n);
+        if k < n {
+            self.idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                key(logits[b]).total_cmp(&key(logits[a])).then(a.cmp(&b))
+            });
+            self.idx.truncate(k);
+        }
+        self.idx.sort_unstable_by(|&a, &b| {
+            key(logits[b]).total_cmp(&key(logits[a])).then(a.cmp(&b))
+        });
+        let m = key(logits[self.idx[0]]);
+        self.probs.clear();
+        let mut sum = 0.0f32;
+        for &i in self.idx.iter() {
+            let p = ((key(logits[i]) - m) / t).exp();
+            sum += p;
+            self.probs.push(p);
+        }
+        if !(sum > 0.0) || !sum.is_finite() {
+            return self.idx[0] as i32;
+        }
+        // Minimal prefix whose normalized mass reaches top_p.
+        let target = params.top_p * sum;
+        let mut cut = self.probs.len();
+        let mut acc = 0.0f32;
+        for (j, &p) in self.probs.iter().enumerate() {
+            acc += p;
+            if acc >= target {
+                cut = j + 1;
+                break;
+            }
+        }
+        let mass: f32 = self.probs[..cut].iter().sum();
+        let u = st.rng.f32() * mass;
+        let mut acc = 0.0f32;
+        let mut last_live = 0usize;
+        for (j, &p) in self.probs[..cut].iter().enumerate() {
+            if p > 0.0 {
+                last_live = j;
+            }
+            acc += p;
+            if u < acc && p > 0.0 {
+                return self.idx[j] as i32;
+            }
+        }
+        self.idx[last_live] as i32
+    }
+
+    /// Record an emitted token for `slot` (penalty counts + stop cursor)
+    /// and report whether the request should finish with reason `stop`.
+    /// Called for every emitted token on both the greedy fast path and the
+    /// logits path, so the two modes observe identical state.
+    pub fn observe(&mut self, slot: usize, params: &SamplingParams, tok: i32) -> bool {
+        let st = &mut self.slots[slot];
+        if params.has_penalties() || !params.stop_sequences.is_empty() {
+            st.count(tok);
+        }
+        if params.stop_token_ids.contains(&tok) {
+            return true;
+        }
+        if !params.stop_sequences.is_empty() {
+            st.push_recent(tok);
+            return st.stop_matched(&params.stop_sequences);
+        }
+        false
+    }
+
+    /// Vocab size the bank was committed for.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+}
+
+/// argmax with deterministic tie-break (lowest index). NaN logits are
+/// skipped — they can never win, so a NaN row cannot panic or poison the
+/// result.
 pub fn argmax(logits: &[f32]) -> i32 {
     let mut best = 0usize;
     let mut best_v = f32::NEG_INFINITY;
     for (i, &v) in logits.iter().enumerate() {
-        if v > best_v {
+        if !v.is_nan() && v > best_v {
             best_v = v;
             best = i;
         }
@@ -53,59 +466,37 @@ pub fn argmax(logits: &[f32]) -> i32 {
     best as i32
 }
 
-fn softmax_scaled(logits: &[f32], temperature: f32) -> Vec<f32> {
-    let t = temperature.max(1e-6);
-    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let mut e: Vec<f32> = logits.iter().map(|&x| ((x - m) / t).exp()).collect();
-    let s: f32 = e.iter().sum();
-    for v in &mut e {
-        *v /= s;
-    }
-    e
-}
-
-fn pick(probs: &[f32], rng: &mut Pcg) -> i32 {
-    let x = rng.f32();
-    let mut acc = 0.0;
-    for (i, &p) in probs.iter().enumerate() {
-        acc += p;
-        if x < acc {
-            return i as i32;
-        }
-    }
-    (probs.len() - 1) as i32
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn greedy_is_argmax_with_stable_ties() {
-        let l = [0.0, 3.0, 3.0, -1.0];
-        let mut rng = Pcg::new(0);
-        assert_eq!(sample(&l, Sampling::Greedy, &mut rng), 1);
+    fn one_shot(params: &SamplingParams, logits: &[f32], seed: u64) -> i32 {
+        let mut bank = SamplerBank::new(1, logits.len());
+        let slot = bank.acquire(seed, &[]);
+        let mut row = logits.to_vec();
+        bank.sample_row(slot, params, &mut row)
     }
 
     #[test]
-    fn zero_temperature_degenerates_to_argmax() {
-        let l = [0.1, 5.0, -2.0];
-        let mut rng = Pcg::new(1);
-        for _ in 0..50 {
-            assert_eq!(sample(&l, Sampling::Temperature(1e-9), &mut rng), 1);
-        }
+    fn greedy_is_argmax_with_stable_ties() {
+        let l = [0.0, 3.0, 3.0, -1.0];
+        assert_eq!(one_shot(&SamplingParams::greedy(), &l, 0), 1);
     }
 
     #[test]
     fn temperature_sampling_follows_distribution() {
         let l = [0.0f32, (2.0f32).ln()]; // probs 1/3, 2/3 at T=1
-        let mut rng = Pcg::new(2);
+        let mut bank = SamplerBank::new(1, 2);
+        let params = SamplingParams::temperature(1.0);
         let n = 30_000;
         let mut ones = 0;
-        for _ in 0..n {
-            if sample(&l, Sampling::Temperature(1.0), &mut rng) == 1 {
+        for s in 0..n {
+            let slot = bank.acquire(s, &[]);
+            let mut row = l;
+            if bank.sample_row(slot, &params, &mut row) == 1 {
                 ones += 1;
             }
+            bank.release(slot);
         }
         let frac = ones as f64 / n as f64;
         assert!((frac - 2.0 / 3.0).abs() < 0.02, "{frac}");
@@ -114,9 +505,12 @@ mod tests {
     #[test]
     fn topk_restricts_support() {
         let l = [0.0, 10.0, 9.0, -5.0, 8.0];
-        let mut rng = Pcg::new(3);
+        let mut bank = SamplerBank::new(1, 5);
+        let slot = bank.acquire(3, &[]);
+        let params = SamplingParams::top_k(2, 1.0);
         for _ in 0..200 {
-            let t = sample(&l, Sampling::TopK { k: 2, temperature: 1.0 }, &mut rng);
+            let mut row = l;
+            let t = bank.sample_row(slot, &params, &mut row);
             assert!(t == 1 || t == 2, "sampled {t} outside top-2");
         }
     }
@@ -124,10 +518,123 @@ mod tests {
     #[test]
     fn topk_k1_is_greedy() {
         let l = [1.0, 0.5, 2.0];
-        let mut rng = Pcg::new(4);
-        assert_eq!(
-            sample(&l, Sampling::TopK { k: 1, temperature: 1.0 }, &mut rng),
-            2
-        );
+        assert_eq!(one_shot(&SamplingParams::top_k(1, 1.0), &l, 4), 2);
+    }
+
+    #[test]
+    fn nan_row_does_not_panic_and_is_unsampleable() {
+        // Regression: the old TopK path ordered logits with
+        // partial_cmp().unwrap() and panicked on NaN.
+        let l = [1.0, f32::NAN, 3.0, f32::NAN, 2.0];
+        let mut bank = SamplerBank::new(1, 5);
+        let slot = bank.acquire(7, &[]);
+        for params in [
+            SamplingParams::greedy(),
+            SamplingParams::temperature(1.0),
+            SamplingParams::top_k(3, 1.0),
+            SamplingParams::top_p(0.9, 1.0),
+        ] {
+            for _ in 0..100 {
+                let mut row = l;
+                let t = bank.sample_row(slot, &params, &mut row);
+                assert!(t == 0 || t == 2 || t == 4, "sampled NaN token {t}");
+            }
+        }
+        let all_nan = [f32::NAN; 4];
+        assert_eq!(argmax(&all_nan), 0);
+        let mut row = all_nan;
+        let _ = bank.sample_row(slot, &SamplingParams::temperature(1.0), &mut row);
+    }
+
+    #[test]
+    fn seeded_stream_is_reproducible() {
+        let l: Vec<f32> = (0..32).map(|i| ((i * 37) % 11) as f32 * 0.3).collect();
+        let params = SamplingParams::top_p(0.8, 0.9);
+        let run = |seed: u64| -> Vec<i32> {
+            let mut bank = SamplerBank::new(1, 32);
+            let slot = bank.acquire(seed, &[]);
+            (0..64)
+                .map(|_| {
+                    let mut row = l.clone();
+                    bank.sample_row(slot, &params, &mut row)
+                })
+                .collect()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43));
+    }
+
+    #[test]
+    fn logit_bias_neg_inf_excludes_token() {
+        let l = [5.0, 4.9, 4.8, 4.7];
+        let mut params = SamplingParams::temperature(1.0);
+        params.logit_bias = vec![(0, f32::NEG_INFINITY)];
+        let mut bank = SamplerBank::new(1, 4);
+        let slot = bank.acquire(11, &[]);
+        for _ in 0..500 {
+            let mut row = l;
+            assert_ne!(bank.sample_row(slot, &params, &mut row), 0);
+        }
+    }
+
+    #[test]
+    fn penalties_discount_seen_tokens() {
+        let l = [2.0, 2.0, 0.0];
+        let mut params = SamplingParams::greedy();
+        params.repetition_penalty = 1.5;
+        let mut bank = SamplerBank::new(1, 3);
+        // Token 0 appears in the prompt, so greedy-with-penalty flips to 1.
+        let slot = bank.acquire(0, &[0]);
+        let mut row = l;
+        assert_eq!(bank.sample_row(slot, &params, &mut row), 1);
+    }
+
+    #[test]
+    fn observe_detects_stop_sequences_across_calls() {
+        let mut params = SamplingParams::greedy();
+        params.stop_sequences = vec![vec![7, 8, 9]];
+        params.stop_token_ids = vec![99];
+        let mut bank = SamplerBank::new(1, 128);
+        let slot = bank.acquire(0, &[]);
+        assert!(!bank.observe(slot, &params, 7));
+        assert!(!bank.observe(slot, &params, 8));
+        assert!(!bank.observe(slot, &params, 7)); // broken match restarts
+        assert!(!bank.observe(slot, &params, 8));
+        assert!(bank.observe(slot, &params, 9));
+        assert!(bank.observe(slot, &params, 99));
+    }
+
+    #[test]
+    fn slot_reuse_resets_state() {
+        let mut params = SamplingParams::greedy();
+        params.stop_sequences = vec![vec![1, 2]];
+        params.repetition_penalty = 2.0;
+        let mut bank = SamplerBank::new(1, 8);
+        let a = bank.acquire(0, &[3, 3, 3]);
+        assert!(!bank.observe(a, &params, 1));
+        bank.release(a);
+        let b = bank.acquire(0, &[]);
+        assert_eq!(a, b);
+        // Fresh slot: the dangling [1] prefix from the old request must not
+        // complete a stop match, and old penalty counts must be gone.
+        assert!(!bank.observe(b, &params, 2));
+        // Leaked counts for token 3 would halve its logit (3.0 -> 1.5) and
+        // flip the argmax to token 0.
+        let mut row = [2.0, 0.0, 0.0, 3.0, 0.0, 0.0, 0.0, 0.0];
+        assert_eq!(bank.sample_row(b, &params, &mut row), 3);
+    }
+
+    #[test]
+    fn sanitize_clamps_out_of_range() {
+        let mut p = SamplingParams::temperature(f32::NAN);
+        p.top_p = 0.0;
+        p.repetition_penalty = -3.0;
+        p.stop_sequences = vec![vec![1; 99]; 99];
+        p.sanitize();
+        assert_eq!(p.temperature, 0.0);
+        assert_eq!(p.top_p, 1.0);
+        assert_eq!(p.repetition_penalty, 1.0);
+        assert_eq!(p.stop_sequences.len(), MAX_STOP_SEQS);
+        assert!(p.stop_sequences.iter().all(|s| s.len() <= MAX_STOP_SEQ_LEN));
     }
 }

@@ -33,7 +33,7 @@
 
 use crate::kvcache::{CowCopy, PagedKvCache};
 use crate::runtime::engine::StepInputs;
-use crate::sampler::Sampling;
+use crate::sampler::{FinishReason, SamplerBank, SamplingParams};
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -96,7 +96,16 @@ pub struct SeqState {
     /// How many of `tokens` are already in the KV cache.
     pub prefilled: usize,
     pub max_new: usize,
-    pub sampling: Sampling,
+    pub sampling: SamplingParams,
+    /// `sampling.needs_logits()` captured at construction so batch build
+    /// copies a bool instead of re-walking the params per row per step.
+    pub needs_logits: bool,
+    /// Sampler-bank slot held while running ([`StepWorkspace::samplers`]);
+    /// acquired at admission, released with the KV blocks.
+    pub sampler_slot: Option<usize>,
+    /// Why the sequence finished. `Length` until a stop sequence / stop
+    /// token match marks it `Stop` (see [`Scheduler::mark_stop`]).
+    pub finish: FinishReason,
     pub arrival: Instant,
     /// Absolute completion deadline; past it the sequence is expired by
     /// [`Scheduler::expire_deadlines`] (queued sequences are dropped
@@ -120,13 +129,14 @@ impl SeqState {
         adapter: Option<String>,
         prompt: Vec<i32>,
         max_new: usize,
-        sampling: Sampling,
+        sampling: SamplingParams,
     ) -> Self {
         let prompt_len = prompt.len();
         // pre-size for the whole lifetime so per-step token pushes never
         // reallocate on the decode hot path
         let mut tokens = prompt;
         tokens.reserve(max_new);
+        let needs_logits = sampling.needs_logits();
         SeqState {
             id,
             trace: 0,
@@ -137,6 +147,9 @@ impl SeqState {
             prefilled: 0,
             max_new,
             sampling,
+            needs_logits,
+            sampler_slot: None,
+            finish: FinishReason::Length,
             arrival: Instant::now(),
             deadline: None,
             admitted_at: None,
@@ -157,7 +170,7 @@ impl SeqState {
     }
 
     pub fn done(&self) -> bool {
-        self.generated() >= self.max_new
+        self.finish == FinishReason::Stop || self.generated() >= self.max_new
     }
 
     /// In pure decode phase (prompt fully prefilled)?
@@ -189,9 +202,13 @@ pub struct OutRow {
     /// the engine attributes sampled tokens to adapters without
     /// re-scanning the running list (per-adapter obs counters).
     pub aid: i32,
-    /// The sequence's sampling mode (captured at batch build so the
-    /// engine samples without re-scanning the running list).
-    pub sampling: Sampling,
+    /// The sequence's slot in [`StepWorkspace::samplers`] (per-request
+    /// PRNG, penalty counts, stop cursor).
+    pub sampler: u32,
+    /// Whether this row's request needs materialized logits (sampled, or
+    /// greedy with penalties/bias). When no row does, the backend may
+    /// skip logits entirely (the O(1) greedy fast path).
+    pub needs_logits: bool,
 }
 
 /// Persistent, engine-owned buffers of the step hot path.
@@ -208,6 +225,11 @@ pub struct StepWorkspace {
     pub inputs: StepInputs,
     /// Live out-row bindings of the current batch.
     pub rows: Vec<OutRow>,
+    /// Per-request sampler state (PRNG, penalty token-count table,
+    /// stop-sequence cursor) plus shared sort/prob scratch. Slots are
+    /// acquired at admission and recycled on release, so the sampled
+    /// decode path allocates nothing mid-step.
+    pub samplers: SamplerBank,
     /// Scratch: (running-seq index, tokens this step).
     plan: Vec<(usize, usize)>,
     /// Scratch for KV slot allocation.
@@ -221,7 +243,9 @@ pub struct StepWorkspace {
 }
 
 impl StepWorkspace {
-    pub fn new(cfg: &SchedConfig) -> Self {
+    /// `vocab` sizes the sampler bank's penalty tables and sort scratch
+    /// (the model's logits width).
+    pub fn new(cfg: &SchedConfig, vocab: usize) -> Self {
         let max_bucket = cfg.max_bucket();
         let max_rows = cfg.out_rows(max_bucket);
         StepWorkspace {
@@ -236,6 +260,7 @@ impl StepWorkspace {
                 aid: Vec::with_capacity(max_bucket),
             },
             rows: Vec::with_capacity(max_rows),
+            samplers: SamplerBank::new(cfg.max_seqs, vocab),
             plan: Vec::with_capacity(cfg.max_seqs.min(max_rows.max(16))),
             slots: Vec::with_capacity(cfg.chunk.min(max_bucket)),
             freed: Vec::with_capacity(cfg.kv_cap),
@@ -243,12 +268,12 @@ impl StepWorkspace {
         }
     }
 
-    /// Every live row of the current batch wants greedy sampling (the
-    /// backend may then skip materializing logits entirely).
+    /// Every live row of the current batch is plain greedy — no sampled
+    /// request, no penalties, no logit bias — so the backend may skip
+    /// materializing logits entirely (the O(1) fast path).
     pub fn all_greedy(&self) -> bool {
-        self.rows.iter().all(|r| r.sampling == Sampling::Greedy)
+        self.rows.iter().all(|r| !r.needs_logits)
     }
-
 }
 
 /// The continuous-batching scheduler.
@@ -352,6 +377,13 @@ impl Scheduler {
             reserved += need;
             let mut seq = self.waiting.pop_front().unwrap();
             seq.admitted_at = Some(Instant::now());
+            // attach per-request sampler state: the bank has exactly
+            // max_seqs slots, so admission can never exhaust it. The seed
+            // is resolved at submit (engine); the id fallback keeps raw
+            // scheduler use deterministic.
+            let seed = seq.sampling.seed.unwrap_or(seq.id);
+            seq.sampler_slot =
+                Some(ws.samplers.acquire(seed, &seq.tokens[..seq.prompt_len]));
             // pre-size the block table so decode-path allocs never grow it
             kv.reserve_seq(seq.id, final_len, seq.aid);
             // adopt the cached prefix: those tokens are already resident,
@@ -505,7 +537,9 @@ impl Scheduler {
                     row: row_idx,
                     seq: seq.id,
                     aid: seq.aid,
-                    sampling: seq.sampling,
+                    sampler: seq.sampler_slot.expect("running seq holds a sampler slot")
+                        as u32,
+                    needs_logits: seq.needs_logits,
                 });
             }
             cursor += take;
@@ -528,17 +562,34 @@ impl Scheduler {
         Ok(first)
     }
 
-    /// Drop a sequence's KV block references. Only blocks whose
-    /// refcount reaches zero are physically freed — shared prefix
-    /// blocks stay resident for their surviving sequences — and only
-    /// those slots get their device-visible metadata cleared.
-    fn release(seq: &SeqState, kv: &mut PagedKvCache, ws: &mut StepWorkspace) {
-        let StepWorkspace { inputs, freed, .. } = ws;
+    /// Drop a sequence's KV block references and recycle its sampler
+    /// slot. Only blocks whose refcount reaches zero are physically
+    /// freed — shared prefix blocks stay resident for their surviving
+    /// sequences — and only those slots get their device-visible
+    /// metadata cleared.
+    fn release(seq: &mut SeqState, kv: &mut PagedKvCache, ws: &mut StepWorkspace) {
+        let StepWorkspace { inputs, freed, samplers, .. } = ws;
+        if let Some(slot) = seq.sampler_slot.take() {
+            samplers.release(slot);
+        }
         kv.decref_seq(seq.id, freed);
         for &s in freed.iter() {
             inputs.cache_seg[s as usize] = -1;
             inputs.cache_pos[s as usize] = 0;
         }
+    }
+
+    /// Mark a running sequence finished with reason `stop` (stop sequence
+    /// or stop token matched). It is collected by the next [`Self::reap`].
+    pub fn mark_stop(&mut self, id: u64) {
+        if let Some(seq) = self.running.iter_mut().find(|s| s.id == id) {
+            seq.finish = FinishReason::Stop;
+        }
+    }
+
+    /// A running sequence's sampling params (engine logits-path lookup).
+    pub fn sampling(&self, id: u64) -> Option<&SamplingParams> {
+        self.running.iter().find(|s| s.id == id).map(|s| &s.sampling)
     }
 
     /// Remove finished sequences, freeing their KV slots; returns them.
@@ -549,7 +600,7 @@ impl Scheduler {
             if self.running[i].done() {
                 let mut seq = self.running.swap_remove(i);
                 seq.finished_at = Some(Instant::now());
-                Self::release(&seq, kv, ws);
+                Self::release(&mut seq, kv, ws);
                 out.push(seq);
             } else {
                 i += 1;
@@ -571,8 +622,8 @@ impl Scheduler {
             return self.waiting.remove(pos);
         }
         if let Some(pos) = self.running.iter().position(|s| s.id == id) {
-            let seq = self.running.swap_remove(pos);
-            Self::release(&seq, kv, ws);
+            let mut seq = self.running.swap_remove(pos);
+            Self::release(&mut seq, kv, ws);
             return Some(seq);
         }
         None
@@ -600,8 +651,8 @@ impl Scheduler {
         let mut i = 0;
         while i < self.running.len() {
             if self.running[i].deadline.is_some_and(|d| d <= now) {
-                let seq = self.running.swap_remove(i);
-                Self::release(&seq, kv, ws);
+                let mut seq = self.running.swap_remove(i);
+                Self::release(&mut seq, kv, ws);
                 out.push(seq);
             } else {
                 i += 1;
@@ -626,7 +677,7 @@ mod tests {
             None,
             (0..prompt_len as i32).collect(),
             max_new,
-            Sampling::Greedy,
+            SamplingParams::greedy(),
         )
     }
 
@@ -637,9 +688,11 @@ mod tests {
         PagedKvCache::new(cap, 1, false)
     }
 
+    const VOCAB: usize = 64;
+
     fn setup() -> (Scheduler, PagedKvCache, StepWorkspace) {
         let c = cfg();
-        (Scheduler::new(c.clone()), flat_kv(64), StepWorkspace::new(&c))
+        (Scheduler::new(c.clone()), flat_kv(64), StepWorkspace::new(&c, VOCAB))
     }
 
     #[test]
@@ -703,7 +756,7 @@ mod tests {
         // KV-constrained admission: capacity 16, each seq reserves 6
         let c = SchedConfig { max_seqs: 64, abi_max_seqs: 64, kv_cap: 16, ..cfg() };
         let (mut s, mut kv, mut ws) =
-            (Scheduler::new(c.clone()), flat_kv(16), StepWorkspace::new(&c));
+            (Scheduler::new(c.clone()), flat_kv(16), StepWorkspace::new(&c, VOCAB));
         for i in 0..5 {
             s.submit(seq(i, 4, 2)); // needs 6 reserved
         }
@@ -733,7 +786,7 @@ mod tests {
             let t = ws.inputs.out_rows[r.row] as usize;
             assert!(t < b.bucket);
             assert!(ws.inputs.seg_ids[t] >= 0);
-            assert_eq!(r.sampling, Sampling::Greedy);
+            assert!(!r.needs_logits);
         }
         assert!(ws.all_greedy());
     }
@@ -748,7 +801,7 @@ mod tests {
                 Some(name.to_string()),
                 vec![1, 2, 3],
                 2,
-                Sampling::Greedy,
+                SamplingParams::greedy(),
             ));
         };
         with(1, "math");
@@ -829,10 +882,10 @@ mod tests {
         };
         let mut s = Scheduler::new(c.clone());
         let mut kv = PagedKvCache::new(20, 4, true);
-        let mut ws = StepWorkspace::new(&c);
+        let mut ws = StepWorkspace::new(&c, VOCAB);
         let prompt: Vec<i32> = (100..108).collect();
         let req = |id: u64| {
-            SeqState::new(id, 2, Some("math".into()), prompt.clone(), 4, Sampling::Greedy)
+            SeqState::new(id, 2, Some("math".into()), prompt.clone(), 4, SamplingParams::greedy())
         };
         s.submit(req(1));
         let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
@@ -907,16 +960,52 @@ mod tests {
     #[test]
     fn rows_capture_per_sequence_sampling() {
         let (mut s, mut kv, mut ws) = setup();
-        let mut t = seq(1, 2, 2);
-        t.sampling = Sampling::Temperature(0.7);
-        s.submit(t);
+        s.submit(SeqState::new(
+            1,
+            -1,
+            None,
+            vec![0, 1],
+            2,
+            SamplingParams::temperature(0.7),
+        ));
         s.submit(seq(2, 2, 2));
         let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
         assert_eq!(ws.rows.len(), 2);
-        assert!(!ws.all_greedy());
-        let by_seq = |id: u64| ws.rows.iter().find(|r| r.seq == id).unwrap().sampling;
-        assert_eq!(by_seq(1), Sampling::Temperature(0.7));
-        assert_eq!(by_seq(2), Sampling::Greedy);
+        assert!(!ws.all_greedy(), "one sampled row forces the logits path");
+        let by_seq = |id: u64| *ws.rows.iter().find(|r| r.seq == id).unwrap();
+        assert!(by_seq(1).needs_logits);
+        assert!(!by_seq(2).needs_logits);
+        // each running sequence holds a distinct sampler slot
+        assert_ne!(by_seq(1).sampler, by_seq(2).sampler);
+        assert_eq!(ws.samplers.in_use(), 2);
+        // draining releases the slots back to the bank
+        for _ in 0..4 {
+            let ids: Vec<u64> = ws.rows.iter().map(|r| r.seq).collect();
+            for id in ids {
+                s.push_token(id, 1).unwrap();
+            }
+            s.reap(&mut kv, &mut ws);
+            if s.build_batch(&mut kv, &mut ws).unwrap().is_none() {
+                break;
+            }
+        }
+        assert!(s.is_idle());
+        assert_eq!(ws.samplers.in_use(), 0, "sampler slots must be recycled");
+    }
+
+    #[test]
+    fn stop_marked_sequence_is_reaped_with_stop_reason() {
+        let (mut s, mut kv, mut ws) = setup();
+        s.submit(seq(1, 2, 8));
+        let _ = s.build_batch(&mut kv, &mut ws).unwrap().unwrap();
+        s.push_token(1, 5).unwrap();
+        s.mark_stop(1);
+        let done = s.reap(&mut kv, &mut ws);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Stop);
+        assert_eq!(done[0].generated(), 1, "stopped well before max_new");
+        assert_eq!(ws.samplers.in_use(), 0);
+        assert_eq!(kv.used_slots(), 0);
     }
 
     #[test]
@@ -961,7 +1050,7 @@ mod tests {
             };
             let mut s = Scheduler::new(cfg.clone());
             let mut kv = flat_kv(256);
-            let mut ws = StepWorkspace::new(&cfg);
+            let mut ws = StepWorkspace::new(&cfg, VOCAB);
             let mut next_id = 0u64;
             for _ in 0..30 {
                 if rng.below(2) == 0 {
@@ -993,10 +1082,11 @@ mod tests {
             }
             assert!(s.is_idle(), "scheduler must drain");
             assert_eq!(kv.used_slots(), 0);
+            assert_eq!(ws.samplers.in_use(), 0, "sampler slots must drain too");
         });
 
         fn seq_with(id: u64, p: usize, n: usize) -> SeqState {
-            SeqState::new(id, -1, None, (0..p as i32).collect(), n, Sampling::Greedy)
+            SeqState::new(id, -1, None, (0..p as i32).collect(), n, SamplingParams::greedy())
         }
     }
 }

@@ -26,7 +26,7 @@
 
 use crate::engine::{Completion, Engine};
 use crate::metrics::Report;
-use crate::sampler::Sampling;
+use crate::sampler::SamplingParams;
 use crate::serving::{RequestHandle, ServeRequest, ServingBackend, TokenEvent};
 use crate::workload::trace::Trace;
 use anyhow::Result;
@@ -125,7 +125,7 @@ pub fn replay_backend<B: ServingBackend>(
                 adapter: e.adapter.clone(),
                 prompt: e.prompt.clone(),
                 max_new_tokens: e.max_new_tokens,
-                sampling: Sampling::Greedy,
+                sampling: SamplingParams::greedy(),
                 deadline: None,
                 trace: None,
             };

@@ -6,8 +6,10 @@
 //! [`docs/PROTOCOL.md`](../../../docs/PROTOCOL.md)** — one JSON object
 //! per line in each direction (parsed and emitted with
 //! [`crate::util::json`]; no external deps). In one breath: submit
-//! frames carry `id`/`adapter`/`prompt`/`max_new_tokens`/`deadline_ms`/
-//! `temperature`; `{"op":"cancel","id":..}` cancels;
+//! frames carry `id`/`adapter`/`prompt`/`max_new_tokens`/`deadline_ms`
+//! plus the protocol-v5 sampling fields (`temperature`, `top_k`,
+//! `top_p`, the three penalties, `stop`, `stop_token_ids`,
+//! `logit_bias`, `max_len`, `seed`); `{"op":"cancel","id":..}` cancels;
 //! `{"op":"stats"}` answers with one versioned live-telemetry frame
 //! (counters, gauges, latency quantiles — see [`crate::obs`]);
 //! `{"op":"drain"}` finishes all in-flight work, acknowledges with
@@ -33,7 +35,7 @@
 
 use crate::engine::Completion;
 use crate::metrics::RequestRecord;
-use crate::sampler::Sampling;
+use crate::sampler::{FinishReason, SamplingParams};
 use crate::serving::{
     AbortReason, RequestHandle, RequestId, ServeRequest, ServingBackend, SubmitError,
     TokenEvent,
@@ -238,6 +240,7 @@ fn event_json(tag: &str, ev: TokenEvent) -> Json {
                 ("id", Json::Str(tag.to_string())),
                 ("event", Json::Str("done".into())),
                 ("tokens", Json::Arr(tokens)),
+                ("finish", Json::Str(completion.finish.as_str().into())),
                 ("prompt_tokens", Json::Int(rec.prompt_tokens as i64)),
                 ("ttft_ms", Json::Num(rec.ttft.as_secs_f64() * 1e3)),
                 (
@@ -318,12 +321,91 @@ fn parse_request(v: &Json) -> std::result::Result<ServeRequest, (String, String)
             Some(Duration::from_secs_f64(ms / 1e3))
         }
     };
-    let sampling = match v.get("temperature") {
-        None | Some(Json::Null) => Sampling::Greedy,
-        Some(t) => Sampling::Temperature(
-            t.as_f64().ok_or_else(|| bad("\"temperature\" must be a number"))? as f32,
-        ),
+    // Protocol v5 sampling fields: every one optional, zero value =
+    // disabled. Out-of-range values are clamped by `sanitize` at submit;
+    // only *type* errors are rejected here.
+    let num = |key: &'static str| -> std::result::Result<Option<f64>, (String, String)> {
+        match v.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(x) => x
+                .as_f64()
+                .filter(|f| f.is_finite())
+                .map(Some)
+                .ok_or_else(|| bad(&format!("\"{key}\" must be a finite number"))),
+        }
     };
+    let uint = |key: &'static str| -> std::result::Result<Option<usize>, (String, String)> {
+        match v.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(x) => x
+                .as_usize()
+                .map(Some)
+                .ok_or_else(|| bad(&format!("\"{key}\" must be a non-negative integer"))),
+        }
+    };
+    let tok_list = |x: &Json, what: &str| -> std::result::Result<Vec<i32>, (String, String)> {
+        x.as_arr()
+            .ok_or_else(|| bad(&format!("{what} must be an array of token ids")))?
+            .iter()
+            .map(|t| t.as_i64().map(|i| i as i32))
+            .collect::<Option<Vec<i32>>>()
+            .ok_or_else(|| bad(&format!("{what} must contain integers")))
+    };
+    let mut sampling = SamplingParams::greedy();
+    if let Some(t) = num("temperature")? {
+        sampling.temperature = t as f32;
+    }
+    if let Some(k) = uint("top_k")? {
+        sampling.top_k = k;
+    }
+    if let Some(p) = num("top_p")? {
+        sampling.top_p = p as f32;
+    }
+    if let Some(r) = num("repetition_penalty")? {
+        sampling.repetition_penalty = r as f32;
+    }
+    if let Some(p) = num("presence_penalty")? {
+        sampling.presence_penalty = p as f32;
+    }
+    if let Some(f) = num("frequency_penalty")? {
+        sampling.frequency_penalty = f as f32;
+    }
+    if let Some(n) = uint("max_len")? {
+        sampling.max_len = n;
+    }
+    if let Some(s) = uint("seed")? {
+        sampling.seed = Some(s as u64);
+    }
+    match v.get("stop") {
+        None | Some(Json::Null) => {}
+        Some(s) => {
+            let seqs = s
+                .as_arr()
+                .ok_or_else(|| bad("\"stop\" must be an array of token-id arrays"))?;
+            for seq in seqs {
+                sampling.stop_sequences.push(tok_list(seq, "each \"stop\" entry")?);
+            }
+        }
+    }
+    match v.get("stop_token_ids") {
+        None | Some(Json::Null) => {}
+        Some(s) => sampling.stop_token_ids = tok_list(s, "\"stop_token_ids\"")?,
+    }
+    match v.get("logit_bias") {
+        None | Some(Json::Null) => {}
+        Some(b) => {
+            let pairs = b
+                .as_arr()
+                .ok_or_else(|| bad("\"logit_bias\" must be an array of [token, bias] pairs"))?;
+            for p in pairs {
+                let pair = p.as_arr().filter(|a| a.len() == 2);
+                let (tok, bias) = pair
+                    .and_then(|a| Some((a[0].as_i64()?, a[1].as_f64()?)))
+                    .ok_or_else(|| bad("each \"logit_bias\" entry must be [token, bias]"))?;
+                sampling.logit_bias.push((tok as i32, bias as f32));
+            }
+        }
+    }
     let trace = match v.get("trace") {
         None | Some(Json::Null) => None,
         Some(t) => Some(
@@ -717,6 +799,10 @@ fn done_event(rid: RequestId, v: &Json) -> TokenEvent {
         .and_then(Json::as_arr)
         .map(|a| a.iter().filter_map(Json::as_i64).map(|t| t as i32).collect())
         .unwrap_or_default();
+    let finish = match v.get("finish").and_then(|f| f.as_str()) {
+        Some("stop") => FinishReason::Stop,
+        _ => FinishReason::Length,
+    };
     let ms = |k: &str| v.get(k).and_then(Json::as_f64);
     let dur = |x: f64| Duration::from_secs_f64((x / 1e3).max(0.0));
     let record = RequestRecord {
@@ -730,7 +816,7 @@ fn done_event(rid: RequestId, v: &Json) -> TokenEvent {
     };
     TokenEvent::Done {
         id: rid,
-        completion: Completion { id: rid, adapter: None, output, record },
+        completion: Completion { id: rid, adapter: None, output, finish, record },
     }
 }
 
@@ -774,8 +860,65 @@ impl ServingBackend for NdjsonClient {
         if let Some(d) = req.deadline {
             fields.push(("deadline_ms", Json::Num(d.as_secs_f64() * 1e3)));
         }
-        if let Sampling::Temperature(t) = req.sampling {
-            fields.push(("temperature", Json::Num(t as f64)));
+        // Sampling fields (protocol v5): serialize only the knobs that
+        // deviate from the greedy default, so v4-era greedy traffic is
+        // byte-identical on the wire.
+        let s = &req.sampling;
+        if s.temperature != 0.0 {
+            fields.push(("temperature", Json::Num(s.temperature as f64)));
+        }
+        if s.top_k != 0 {
+            fields.push(("top_k", Json::Int(s.top_k as i64)));
+        }
+        if s.top_p != 1.0 {
+            fields.push(("top_p", Json::Num(s.top_p as f64)));
+        }
+        if s.repetition_penalty != 1.0 {
+            fields.push(("repetition_penalty", Json::Num(s.repetition_penalty as f64)));
+        }
+        if s.presence_penalty != 0.0 {
+            fields.push(("presence_penalty", Json::Num(s.presence_penalty as f64)));
+        }
+        if s.frequency_penalty != 0.0 {
+            fields.push(("frequency_penalty", Json::Num(s.frequency_penalty as f64)));
+        }
+        if !s.stop_sequences.is_empty() {
+            fields.push((
+                "stop",
+                Json::Arr(
+                    s.stop_sequences
+                        .iter()
+                        .map(|seq| {
+                            Json::Arr(seq.iter().map(|&t| Json::Int(t as i64)).collect())
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !s.stop_token_ids.is_empty() {
+            fields.push((
+                "stop_token_ids",
+                Json::Arr(s.stop_token_ids.iter().map(|&t| Json::Int(t as i64)).collect()),
+            ));
+        }
+        if !s.logit_bias.is_empty() {
+            fields.push((
+                "logit_bias",
+                Json::Arr(
+                    s.logit_bias
+                        .iter()
+                        .map(|&(t, b)| {
+                            Json::Arr(vec![Json::Int(t as i64), Json::Num(b as f64)])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if s.max_len != 0 {
+            fields.push(("max_len", Json::Int(s.max_len as i64)));
+        }
+        if let Some(seed) = s.seed {
+            fields.push(("seed", Json::Int(seed as i64)));
         }
         if let Some(t) = req.trace {
             fields.push(("trace", Json::Int(t as i64)));

@@ -33,7 +33,7 @@
 pub mod frontend;
 
 use crate::engine::{Completion, RequestSpec};
-use crate::sampler::Sampling;
+use crate::sampler::SamplingParams;
 use std::fmt;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
@@ -48,7 +48,10 @@ pub struct ServeRequest {
     pub adapter: Option<String>,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
-    pub sampling: Sampling,
+    /// Per-request sampling configuration (temperature, top-k/top-p,
+    /// penalties, stop conditions, logit bias, seed — NDJSON protocol
+    /// v5). [`SamplingParams::greedy`] for exact-agreement decoding.
+    pub sampling: SamplingParams,
     /// Relative deadline from submission. A request that has not
     /// *completed* by its deadline is aborted with
     /// [`AbortReason::DeadlineExceeded`]; a request whose deadline
@@ -238,7 +241,7 @@ impl std::error::Error for SubmitError {}
 /// # use expertweave::engine::{Engine, EngineOptions};
 /// # use expertweave::model::ModelConfig;
 /// # use expertweave::runtime::{SimPerf, Variant};
-/// # use expertweave::sampler::Sampling;
+/// # use expertweave::sampler::SamplingParams;
 /// # use expertweave::serving::{ServeRequest, ServingBackend};
 /// # use expertweave::weights::StoreMode;
 /// # let cfg = ModelConfig::sim_default();
@@ -250,7 +253,7 @@ impl std::error::Error for SubmitError {}
 ///         adapter: None,
 ///         prompt: vec![7, 8],
 ///         max_new_tokens: 1,
-///         sampling: Sampling::Greedy,
+///         sampling: SamplingParams::greedy(),
 ///         deadline: None,
 ///         trace: None,
 ///     })
@@ -310,7 +313,7 @@ impl RequestHandle {
 /// use expertweave::engine::{Engine, EngineOptions};
 /// use expertweave::model::ModelConfig;
 /// use expertweave::runtime::{SimPerf, Variant};
-/// use expertweave::sampler::Sampling;
+/// use expertweave::sampler::SamplingParams;
 /// use expertweave::serving::{ServeRequest, ServingBackend, TokenEvent};
 /// use expertweave::weights::StoreMode;
 ///
@@ -329,7 +332,7 @@ impl RequestHandle {
 ///         adapter: None,
 ///         prompt: vec![1, 2, 3],
 ///         max_new_tokens: 2,
-///         sampling: Sampling::Greedy,
+///         sampling: SamplingParams::greedy(),
 ///         deadline: None,
 ///         trace: None,
 ///     })
@@ -438,6 +441,7 @@ mod tests {
             id: 3,
             adapter: None,
             output: vec![],
+            finish: crate::sampler::FinishReason::Length,
             record: crate::metrics::RequestRecord {
                 id: 3,
                 adapter: None,

@@ -27,7 +27,7 @@ use crate::metrics::Report;
 use crate::model::ModelConfig;
 use crate::obs::trace::TraceLog;
 use crate::runtime::{SimPerf, Variant};
-use crate::sampler::Sampling;
+use crate::sampler::SamplingParams;
 use crate::serving::{
     AbortReason, RequestHandle, ServeRequest, ServingBackend, SubmitError, TokenEvent,
 };
@@ -68,6 +68,13 @@ pub struct OpenLoopSpec {
     /// (adapter, pool slot), so two requests hitting the same slot carry
     /// byte-identical prefixes across replicas and runs.
     pub prefix_overlap: f64,
+    /// Fraction (`0..=1`) of requests issued as *sampled* decodes
+    /// (temperature + nucleus filter with a per-request seed drawn from
+    /// the workload stream) instead of greedy — exercises the mixed
+    /// greedy+sampled batch path under load. `0.0` keeps the legacy
+    /// all-greedy mix and leaves the arrival stream byte-identical to
+    /// pre-v5 runs.
+    pub sampled_frac: f64,
     pub seed: u64,
 }
 
@@ -104,6 +111,7 @@ impl Default for OpenLoopSpec {
             deadline: None,
             vocab: 512,
             prefix_overlap: 0.0,
+            sampled_frac: 0.0,
             seed: 0,
         }
     }
@@ -199,11 +207,18 @@ fn gen_request(rng: &mut Pcg, spec: &OpenLoopSpec, shares: &[f64]) -> ServeReque
             }
         })
         .collect();
+    // the extra draws happen only when the sampled mix is enabled, so a
+    // sampled_frac of 0 reproduces the pre-v5 request stream exactly
+    let sampling = if spec.sampled_frac > 0.0 && rng.f64() < spec.sampled_frac.min(1.0) {
+        SamplingParams::top_p(0.9, 0.8).with_seed(rng.next_u64())
+    } else {
+        SamplingParams::greedy()
+    };
     ServeRequest {
         adapter,
         prompt,
         max_new_tokens: spec.max_new.max(1),
-        sampling: Sampling::Greedy,
+        sampling,
         deadline: spec.deadline,
         trace: None,
     }
@@ -562,6 +577,7 @@ pub fn fleet_online_json(spec: &FleetLoadSpec, rows: &[PolicyOutcome]) -> Json {
         ),
         ("alpha", Json::Num(spec.open_loop.alpha)),
         ("prefix_overlap", Json::Num(spec.open_loop.prefix_overlap)),
+        ("sampled_frac", Json::Num(spec.open_loop.sampled_frac)),
         ("seed", Json::Int(spec.open_loop.seed as i64)),
         ("policies", arr(policies)),
     ])

@@ -8,7 +8,7 @@ use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
 use expertweave::engine::{Engine, EngineOptions, RequestSpec};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{SimPerf, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::weights::StoreMode;
 
 fn cfg() -> ModelConfig {
@@ -44,7 +44,7 @@ fn req(adapter: &str, n: usize) -> RequestSpec {
         adapter: Some(adapter.to_string()),
         prompt: vec![1, 2, 3, 4],
         max_new_tokens: n,
-        sampling: Sampling::Greedy,
+        sampling: SamplingParams::greedy(),
     }
 }
 

@@ -8,7 +8,7 @@ use expertweave::coordinator::{Coordinator, CoordinatorConfig, RoutingPolicy};
 use expertweave::engine::{Engine, EngineOptions};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{SimPerf, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::serving::{
     AbortReason, ServeRequest, ServingBackend, SubmitError, TokenEvent,
 };
@@ -234,7 +234,7 @@ fn fleet_serving_backend_streams_cancels_and_drains() {
         adapter: Some(name.to_string()),
         prompt: (1..=8).collect(),
         max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
+        sampling: SamplingParams::greedy(),
         deadline: None,
         trace: None,
     };

@@ -7,7 +7,7 @@ use expertweave::adapters::generator::{paper_adapter_profiles, synth_adapter};
 use expertweave::engine::{Engine, EngineOptions, RequestSpec};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{ArtifactSet, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::server;
 use expertweave::weights::StoreMode;
 use expertweave::workload::trace::{Trace, TraceSpec};
@@ -37,7 +37,7 @@ fn req(adapter: Option<&str>, prompt: Vec<i32>, n: usize) -> RequestSpec {
         adapter: adapter.map(str::to_string),
         prompt,
         max_new_tokens: n,
-        sampling: Sampling::Greedy,
+        sampling: SamplingParams::greedy(),
     }
 }
 

@@ -12,7 +12,7 @@ use expertweave::coordinator::{Coordinator, CoordinatorConfig, RoutingPolicy};
 use expertweave::engine::{Engine, EngineOptions};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{SimPerf, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::serving::frontend::{NdjsonClient, NdjsonServer};
 use expertweave::serving::{
     AbortReason, RequestHandle, ServeRequest, ServingBackend, SubmitError, TokenEvent,
@@ -26,7 +26,7 @@ fn req(adapter: Option<&str>, prompt_len: usize, max_new: usize) -> ServeRequest
         adapter: adapter.map(str::to_string),
         prompt: (1..=prompt_len as i32).collect(),
         max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
+        sampling: SamplingParams::greedy(),
         deadline: None,
         trace: None,
     }
@@ -342,6 +342,7 @@ fn open_loop_accounts_for_every_arrival() {
         deadline: None,
         vocab: cfg.vocab,
         prefix_overlap: 0.0,
+        sampled_frac: 0.5,
         seed: 7,
     };
     let outcome = openloop::drive(&mut engine, &spec).unwrap();
@@ -365,6 +366,98 @@ fn open_loop_accounts_for_every_arrival() {
     // the engine's own books agree
     let report = engine.report();
     assert_eq!(report.requests, outcome.completed);
+}
+
+/// Determinism across deployment shapes (protocol v5): the same seeded
+/// sampled request produces a byte-identical token stream on a solo
+/// [`Engine`] and on a fleet replica built with the same engine seed —
+/// the sampler's PRNG is keyed only by the request seed, and the sim's
+/// pseudo-logits only by the engine seed, so neither the coordinator
+/// hop nor the replica thread may perturb the stream.
+#[test]
+fn seeded_sampling_matches_between_solo_engine_and_fleet_replica() {
+    let cfg = ModelConfig::sim_default();
+    let sampled_req = || {
+        let mut r = req(None, 6, 12);
+        r.sampling = SamplingParams::top_p(0.9, 0.8).with_seed(0xD1CE);
+        r
+    };
+    let output_of = |evs: &[TokenEvent]| -> Vec<i32> {
+        let done = evs
+            .iter()
+            .find_map(|e| match e {
+                TokenEvent::Done { completion, .. } => Some(completion.output.clone()),
+                _ => None,
+            })
+            .expect("stream completed");
+        // the incremental First/Token view must agree with the completion
+        let streamed: Vec<i32> = evs
+            .iter()
+            .filter_map(|e| match e {
+                TokenEvent::First { token, .. } | TokenEvent::Token { token, .. } => {
+                    Some(*token)
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(streamed, done, "streamed tokens must match the completion");
+        done
+    };
+
+    // solo engine with seed 0 — the same engine seed replica 0 gets below
+    let mut engine = Engine::sim_weave(
+        &cfg,
+        SimPerf::fast(),
+        &[],
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions { page_size: 64 << 10, seed: 0, ..Default::default() },
+    )
+    .unwrap();
+    let h = engine.submit_request(sampled_req()).unwrap();
+    let mut evs = Vec::new();
+    pump_until(&mut engine, &h, &mut evs, "solo sampled done", has_done);
+    let solo = output_of(&evs);
+    assert_eq!(solo.len(), 12);
+
+    // one-replica fleet: same model config, replica seeds are their index
+    let spawn_cfg = cfg.clone();
+    let mut coord = Coordinator::launch(
+        CoordinatorConfig {
+            replicas: 1,
+            policy: RoutingPolicy::RoundRobin,
+            adapter_capacity: 2,
+            queue_cap: 0,
+            replicate_rps: f64::INFINITY,
+            rate_halflife: 1.0,
+            max_copies: 1,
+            ..Default::default()
+        },
+        move |i| {
+            let cfg = spawn_cfg.clone();
+            Box::new(move || {
+                Engine::sim_weave(
+                    &cfg,
+                    SimPerf::fast(),
+                    &[],
+                    Variant::Weave,
+                    StoreMode::Virtual,
+                    EngineOptions { page_size: 64 << 10, seed: i as u64, ..Default::default() },
+                )
+            })
+        },
+        Vec::new(),
+    )
+    .unwrap();
+    let started = std::time::Instant::now();
+    let h = coord.submit(sampled_req()).unwrap();
+    let mut evs = Vec::new();
+    pump_until(&mut coord, &h, &mut evs, "fleet sampled done", has_done);
+    let fleet = output_of(&evs);
+    ServingBackend::drain(&mut coord).unwrap();
+    coord.finish(started).unwrap();
+
+    assert_eq!(solo, fleet, "request seed + engine seed must pin the sampled stream");
 }
 
 /// Chaos: a 3-replica fleet where replica 0's sim engine crashes

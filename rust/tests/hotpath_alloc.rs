@@ -13,14 +13,21 @@
 //! cargo test --features alloc-counter --test hotpath_alloc -- --nocapture
 //! ```
 //!
+//! A second phase inside the same test re-proves the contract for a
+//! *mixed* greedy + temperature + top-p batch: the logits path with
+//! per-request sampler slots ([`SamplerBank`]) must be just as
+//! allocation-free as the O(1) greedy path.
+//!
 //! This file holds exactly one #[test] so no concurrent test can pollute
 //! the global allocation counter.
+//!
+//! [`SamplerBank`]: expertweave::sampler::SamplerBank
 
 use expertweave::adapters::generator::synth_fleet_adapters;
 use expertweave::engine::{Engine, EngineOptions, RequestSpec};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{SimPerf, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::util::alloc_counter::{allocations, CountingAlloc};
 use expertweave::weights::StoreMode;
 use std::time::Instant;
@@ -57,7 +64,7 @@ fn steady_state_decode_performs_zero_allocations() {
             adapter: who,
             prompt: (1..=PROMPT as i32).collect(),
             max_new_tokens: MAX_NEW,
-            sampling: Sampling::Greedy,
+            sampling: SamplingParams::greedy(),
         })
         .unwrap();
     }
@@ -135,6 +142,74 @@ fn steady_state_decode_performs_zero_allocations() {
     );
 
     // sanity: the session still drains and completes everything
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), SEQS);
+    assert!(done.iter().all(|c| c.output.len() == MAX_NEW));
+
+    // ----- phase 2: mixed greedy + sampled batch, same contract -----
+    //
+    // A third of the rows decode greedily, a third sample with plain
+    // temperature, a third through the nucleus filter — every step now
+    // takes the logits path with per-row dispatch, per-slot PRNGs, and
+    // the shared sort scratch. The zero-allocation contract must hold
+    // for this mixture too (the ISSUE's production-sampling claim).
+    e.metrics.reserve_steps(WARMUP + MEASURE + MAX_NEW + 16);
+    for i in 0..SEQS {
+        let who = (i % 2 == 0).then(|| adapters[i / 2 % 2].name.clone());
+        let sampling = match i % 3 {
+            0 => SamplingParams::greedy(),
+            1 => SamplingParams::temperature(0.8).with_seed(100 + i as u64),
+            _ => SamplingParams::top_p(0.9, 0.8).with_seed(100 + i as u64),
+        };
+        e.submit(RequestSpec {
+            adapter: who,
+            prompt: (1..=PROMPT as i32).collect(),
+            max_new_tokens: MAX_NEW,
+            sampling,
+        })
+        .unwrap();
+    }
+    // warmup: prefill completes and the logits buffer reaches its
+    // steady capacity (the greedy phase never materialized logits)
+    for _ in 0..WARMUP {
+        e.step().unwrap();
+    }
+    let (waiting, running) = e.queue_depth();
+    assert_eq!(waiting, 0, "mixed batch must be admitted");
+    assert_eq!(running, SEQS, "mixed batch must still be decoding");
+    let obs_before = obs.snapshot();
+
+    let before = allocations();
+    let t0 = Instant::now();
+    for _ in 0..MEASURE {
+        e.step().unwrap();
+    }
+    let elapsed = t0.elapsed();
+    let after = allocations();
+    assert_eq!(
+        after - before,
+        0,
+        "mixed greedy+sampled decode must not allocate (got {} allocations over {MEASURE} steps)",
+        after - before
+    );
+
+    let obs_after = obs.snapshot();
+    assert_eq!(
+        obs_after.steps - obs_before.steps,
+        MEASURE as u64,
+        "every mixed step must be recorded"
+    );
+    assert_eq!(
+        obs_after.tokens_decode - obs_before.tokens_decode,
+        (MEASURE * SEQS) as u64,
+        "every greedy and sampled token must be counted"
+    );
+    let steps_per_sec = MEASURE as f64 / elapsed.as_secs_f64().max(1e-12);
+    println!(
+        "hotpath/mixed: {steps_per_sec:.0} steps/s, 0 allocations over {MEASURE} mixed steps"
+    );
+
+    // the mixed session drains and completes everything too
     let done = e.run_to_completion().unwrap();
     assert_eq!(done.len(), SEQS);
     assert!(done.iter().all(|c| c.output.len() == MAX_NEW));

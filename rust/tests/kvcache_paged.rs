@@ -9,7 +9,7 @@ use expertweave::adapters::generator::synth_fleet_adapters;
 use expertweave::engine::{Engine, EngineOptions, RequestSpec};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{SimPerf, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::serving::ServeRequest;
 use expertweave::weights::StoreMode;
 use expertweave::workload::preamble_token;
@@ -55,7 +55,7 @@ fn spec(adapter: &Adapter, prompt: Vec<i32>, max_new: usize) -> RequestSpec {
         adapter: Some(adapter.name.clone()),
         prompt,
         max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
+        sampling: SamplingParams::greedy(),
     }
 }
 
@@ -135,7 +135,7 @@ fn deadline_expiry_releases_shared_pages() {
         adapter: Some(adapters[0].name.clone()),
         prompt: prompt(1, 32, 32),
         max_new_tokens: 400,
-        sampling: Sampling::Greedy,
+        sampling: SamplingParams::greedy(),
         deadline: Some(Duration::from_millis(25)),
         trace: None,
     };

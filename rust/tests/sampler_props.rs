@@ -1,0 +1,262 @@
+//! Property suite for the production sampling surface ([`SamplingParams`]
+//! / [`SamplerBank`]): randomized invariants over the filtered sampling
+//! paths, plus engine-level stop-condition behaviour.
+//!
+//! Properties pinned here (the ISSUE 10 archetype centerpiece):
+//! - the top-p support is exactly the *minimal* probability-sorted prefix
+//!   whose mass reaches `p` — nothing outside it is ever sampled, and the
+//!   boundary token completing the mass stays sampleable;
+//! - top-k only ever returns one of the `k` largest logits;
+//! - the repetition penalty strictly lowers a seen token's relative
+//!   probability and leaves unseen tokens untouched;
+//! - a `-inf` logit bias makes a token unsampleable under every mode;
+//! - stop-sequence matching fires across a step boundary (the match
+//!   cursor persists between engine steps), and `max_len` caps the total
+//!   sequence length.
+
+use expertweave::engine::{Engine, EngineOptions, RequestSpec};
+use expertweave::model::ModelConfig;
+use expertweave::runtime::{SimPerf, Variant};
+use expertweave::sampler::{FinishReason, SamplerBank, SamplingParams};
+use expertweave::util::prop;
+use expertweave::weights::StoreMode;
+
+/// The sampler's NaN-as-`-inf` ordering key, mirrored for references.
+fn key(x: f32) -> f32 {
+    if x.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        x
+    }
+}
+
+/// Candidate order the sampler uses: logit descending, index ascending.
+fn ranked(logits: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| key(logits[b]).total_cmp(&key(logits[a])).then(a.cmp(&b)));
+    idx
+}
+
+fn sim_engine(seed: u64) -> Engine {
+    Engine::sim_weave(
+        &ModelConfig::sim_default(),
+        SimPerf::instant(),
+        &[],
+        Variant::Weave,
+        StoreMode::Virtual,
+        EngineOptions { page_size: 64 << 10, seed, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn greedy_req(prompt: Vec<i32>, max_new: usize, sampling: SamplingParams) -> RequestSpec {
+    RequestSpec { adapter: None, prompt, max_new_tokens: max_new, sampling }
+}
+
+#[test]
+fn top_p_samples_only_from_minimal_prefix_mass() {
+    prop::check(101, 30, |rng| {
+        let n = 4 + rng.below(12) as usize;
+        let logits: Vec<f32> = (0..n).map(|_| rng.f32() * 8.0 - 4.0).collect();
+        let p = 0.2 + rng.f32() * 0.75;
+        // reference support, mirroring the sampler's f32 math exactly:
+        // rank candidates, accumulate probabilities until the mass
+        // reaches p * total — that prefix is the only legal support
+        let idx = ranked(&logits);
+        let m = key(logits[idx[0]]);
+        let probs: Vec<f32> = idx.iter().map(|&i| (key(logits[i]) - m).exp()).collect();
+        let sum: f32 = probs.iter().sum();
+        let target = p * sum;
+        let mut cut = probs.len();
+        let mut acc = 0.0f32;
+        for (j, &q) in probs.iter().enumerate() {
+            acc += q;
+            if acc >= target {
+                cut = j + 1;
+                break;
+            }
+        }
+        let support = &idx[..cut];
+
+        let params = SamplingParams::top_p(p, 1.0);
+        let mut bank = SamplerBank::new(1, n);
+        for s in 0..64u64 {
+            let slot = bank.acquire(rng.next_u64() ^ s, &[]);
+            let mut row = logits.clone();
+            let t = bank.sample_row(slot, &params, &mut row) as usize;
+            assert!(
+                support.contains(&t),
+                "sampled {t} outside the top-{p} support {support:?} of {logits:?}"
+            );
+            bank.release(slot);
+        }
+    });
+}
+
+#[test]
+fn top_p_prefix_is_minimal() {
+    // probs 0.5 / 0.3 / 0.2 at T=1 with p = 0.75: the minimal prefix is
+    // {0, 1} (0.5 < 0.75 <= 0.8). The boundary token that completes the
+    // mass must stay sampleable; the token just past it must not be.
+    let logits = [(0.5f32).ln(), (0.3f32).ln(), (0.2f32).ln()];
+    let params = SamplingParams::top_p(0.75, 1.0);
+    let mut bank = SamplerBank::new(1, 3);
+    let mut boundary_seen = false;
+    for s in 0..400u64 {
+        let slot = bank.acquire(s, &[]);
+        let mut row = logits;
+        let t = bank.sample_row(slot, &params, &mut row);
+        assert_ne!(t, 2, "token outside the minimal prefix must be unsampleable");
+        boundary_seen = boundary_seen || t == 1;
+        bank.release(slot);
+    }
+    assert!(boundary_seen, "the boundary token completing the mass is in the support");
+}
+
+#[test]
+fn top_k_samples_only_the_k_largest() {
+    prop::check(202, 30, |rng| {
+        let n = 4 + rng.below(12) as usize;
+        let logits: Vec<f32> = (0..n).map(|_| rng.f32() * 8.0 - 4.0).collect();
+        let k = 1 + rng.below(n as u64) as usize;
+        let top = &ranked(&logits)[..k];
+        let params = SamplingParams::top_k(k, 0.7);
+        let mut bank = SamplerBank::new(1, n);
+        for s in 0..64u64 {
+            let slot = bank.acquire(s, &[]);
+            let mut row = logits.clone();
+            let t = bank.sample_row(slot, &params, &mut row) as usize;
+            assert!(top.contains(&t), "sampled {t} outside the top-{k}: {top:?}");
+            bank.release(slot);
+        }
+    });
+}
+
+#[test]
+fn repetition_penalty_strictly_lowers_seen_token_probability() {
+    prop::check(303, 20, |rng| {
+        let n = 6usize;
+        // positive logits so the divide-by-penalty branch is operative
+        let logits: Vec<f32> = (0..n).map(|_| 1.0 + rng.f32() * 2.0).collect();
+        let seen = rng.below(n as u64) as i32;
+        let plain = SamplingParams::temperature(1.0);
+        let mut penalized = plain.clone();
+        penalized.repetition_penalty = 2.0 + rng.f32();
+        let mut bank = SamplerBank::new(1, n);
+
+        // (i) the logit transform: the seen token is discounted in place,
+        // every unseen token is untouched
+        let slot = bank.acquire(0, &[seen]);
+        let mut row = logits.clone();
+        let _ = bank.sample_row(slot, &penalized, &mut row);
+        assert!(row[seen as usize] < logits[seen as usize]);
+        for (i, (&got, &want)) in row.iter().zip(logits.iter()).enumerate() {
+            if i != seen as usize {
+                assert_eq!(got, want, "unseen token {i} must be untouched");
+            }
+        }
+        bank.release(slot);
+
+        // (ii) empirically: the seen token is drawn strictly less often
+        // (its logit at least halves, so the gap dwarfs sampling noise)
+        let mut freq = |params: &SamplingParams, prompt: &[i32]| -> f64 {
+            let draws = 8000u64;
+            let mut hits = 0u64;
+            for s in 0..draws {
+                let slot = bank.acquire(s, prompt);
+                let mut row = logits.clone();
+                if bank.sample_row(slot, params, &mut row) == seen {
+                    hits += 1;
+                }
+                bank.release(slot);
+            }
+            hits as f64 / draws as f64
+        };
+        let base = freq(&plain, &[]);
+        let discounted = freq(&penalized, &[seen]);
+        assert!(discounted < base, "penalized {discounted} !< baseline {base}");
+    });
+}
+
+#[test]
+fn neg_inf_logit_bias_is_never_sampled() {
+    prop::check(404, 25, |rng| {
+        let n = 4 + rng.below(8) as usize;
+        let logits: Vec<f32> = (0..n).map(|_| rng.f32() * 6.0 - 3.0).collect();
+        let banned = rng.below(n as u64) as i32;
+        let mut variants = vec![
+            SamplingParams::greedy(),
+            SamplingParams::temperature(0.8),
+            SamplingParams::top_k(2.max(n / 2), 1.0),
+            SamplingParams::top_p(0.9, 1.0),
+        ];
+        for params in &mut variants {
+            params.logit_bias = vec![(banned, f32::NEG_INFINITY)];
+        }
+        let mut bank = SamplerBank::new(1, n);
+        for params in &variants {
+            for s in 0..50u64 {
+                let slot = bank.acquire(s, &[]);
+                let mut row = logits.clone();
+                assert_ne!(bank.sample_row(slot, params, &mut row), banned);
+                bank.release(slot);
+            }
+        }
+    });
+}
+
+#[test]
+fn stop_sequence_match_straddles_step_boundary() {
+    // learn the deterministic greedy stream, then replay with a stop
+    // sequence spanning generated tokens 1..=2 — the engine emits one
+    // token per decode step, so the match begins in one step and
+    // completes in the next (the per-slot match cursor must persist)
+    let mut probe = sim_engine(7);
+    probe
+        .submit(greedy_req(vec![1, 2, 3, 4], 6, SamplingParams::greedy()))
+        .unwrap();
+    let done = probe.run_to_completion().unwrap();
+    let stream = done[0].output.clone();
+    assert_eq!(stream.len(), 6);
+    assert_eq!(done[0].finish, FinishReason::Length);
+
+    let stop = vec![stream[1], stream[2]];
+    let mut sampling = SamplingParams::greedy();
+    sampling.stop_sequences = vec![stop.clone()];
+    let mut e = sim_engine(7);
+    e.submit(greedy_req(vec![1, 2, 3, 4], 6, sampling)).unwrap();
+    let done = e.run_to_completion().unwrap();
+    let out = &done[0].output;
+    assert_eq!(done[0].finish, FinishReason::Stop, "must finish on the stop match");
+    assert!(out.len() < stream.len(), "the stop halts generation early: {out:?}");
+    assert_eq!(out[out.len() - 2..], stop[..], "output ends with the stop sequence");
+}
+
+#[test]
+fn stop_token_id_finishes_with_stop_reason() {
+    let mut probe = sim_engine(9);
+    probe
+        .submit(greedy_req(vec![5, 6, 7], 4, SamplingParams::greedy()))
+        .unwrap();
+    let stream = probe.run_to_completion().unwrap()[0].output.clone();
+
+    let mut sampling = SamplingParams::greedy();
+    sampling.stop_token_ids = vec![stream[1]];
+    let mut e = sim_engine(9);
+    e.submit(greedy_req(vec![5, 6, 7], 4, sampling)).unwrap();
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done[0].finish, FinishReason::Stop);
+    assert_eq!(*done[0].output.last().unwrap(), stream[1]);
+    assert!(done[0].output.len() <= 2);
+}
+
+#[test]
+fn max_len_caps_total_sequence_length() {
+    let mut sampling = SamplingParams::greedy();
+    sampling.max_len = 6; // prompt is 4 tokens -> at most 2 generated
+    let mut e = sim_engine(3);
+    e.submit(greedy_req(vec![1, 2, 3, 4], 100, sampling)).unwrap();
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done[0].output.len(), 2);
+    assert_eq!(done[0].finish, FinishReason::Length);
+}

@@ -7,7 +7,7 @@ use expertweave::adapters::generator::synth_fleet_adapters;
 use expertweave::engine::{Engine, EngineOptions};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{SimPerf, Variant};
-use expertweave::sampler::Sampling;
+use expertweave::sampler::SamplingParams;
 use expertweave::serving::frontend::NdjsonServer;
 use expertweave::serving::{
     AbortReason, ServeRequest, ServingBackend, SubmitError, TokenEvent,
@@ -38,7 +38,7 @@ fn req(adapter: Option<&str>, prompt_len: usize, max_new: usize) -> ServeRequest
         adapter: adapter.map(str::to_string),
         prompt: (1..=prompt_len as i32).collect(),
         max_new_tokens: max_new,
-        sampling: Sampling::Greedy,
+        sampling: SamplingParams::greedy(),
         deadline: None,
         trace: None,
     }
