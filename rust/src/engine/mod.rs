@@ -43,7 +43,7 @@ use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A request as submitted by clients / the trace replayer.
 #[derive(Debug, Clone)]
@@ -269,6 +269,11 @@ pub struct Engine {
     queue_cap: usize,
     /// Per-request token-event subscribers ([`ServingBackend::submit`]).
     streams: HashMap<RequestId, Sender<TokenEvent>>,
+    /// Requests finished at the door (total-length cap already exhausted
+    /// by the prompt): their `Done` event is sent at submit, and the
+    /// completions surface through the next [`Engine::step`] so
+    /// `run_to_completion` callers observe them too.
+    instant_done: Vec<Completion>,
     /// Draining: every new submit fails with `ShuttingDown`.
     shutting_down: bool,
     /// Any in-flight request carries a deadline (skips the per-step
@@ -329,6 +334,7 @@ impl Engine {
             compute_share: opts.compute_share.clamp(0.05, 1.0),
             queue_cap: opts.queue_cap,
             streams: HashMap::new(),
+            instant_done: Vec::new(),
             shutting_down: false,
             has_deadlines: false,
             weights,
@@ -731,7 +737,20 @@ impl Engine {
         }
         let mut max_new = req.max_new_tokens.max(1);
         if sampling.max_len > 0 {
-            max_new = max_new.min(sampling.max_len.saturating_sub(req.prompt.len()).max(1));
+            // A total-length cap at or below the prompt leaves no token
+            // budget at all: finish immediately with reason `length` and
+            // empty output (no batch slot, no KV, no generated token).
+            if sampling.max_len <= req.prompt.len() {
+                return Ok(self.finish_at_door(
+                    id,
+                    aid,
+                    req.adapter,
+                    req.prompt,
+                    req.trace,
+                    sampling,
+                ));
+            }
+            max_new = max_new.min(sampling.max_len - req.prompt.len());
         }
         let mut seq = SeqState::new(id, aid, req.adapter, req.prompt, max_new, sampling);
         seq.trace = req.trace.unwrap_or(0);
@@ -743,6 +762,50 @@ impl Engine {
         let (handle, tx) = RequestHandle::new(id);
         self.streams.insert(id, tx);
         Ok(handle)
+    }
+
+    /// Complete an admitted request at the door with reason `length` and
+    /// no output (its `max_len` cap is already exhausted by the prompt).
+    /// Books the same completion records as a stepped request, sends the
+    /// terminal `Done` on the returned handle immediately, and queues the
+    /// completion for the next [`Engine::step`].
+    fn finish_at_door(
+        &mut self,
+        id: u64,
+        aid: i32,
+        adapter: Option<String>,
+        prompt: Vec<i32>,
+        trace: Option<u64>,
+        sampling: SamplingParams,
+    ) -> RequestHandle {
+        let now = Instant::now();
+        let mut seq = SeqState::new(id, aid, adapter, prompt, 0, sampling);
+        seq.trace = trace.unwrap_or(0);
+        seq.finished_at = Some(now);
+        self.obs.record_completed(aid, 0, 0);
+        self.flightrec.record(EventKind::Done, id, aid, 0);
+        self.trace_request(&seq, "done");
+        let record = RequestRecord {
+            id,
+            adapter: seq.adapter.clone(),
+            prompt_tokens: seq.prompt_len,
+            output_tokens: 0,
+            ttft: Duration::ZERO,
+            tpot: None,
+            e2e: now - seq.arrival,
+        };
+        self.metrics.complete_request(record.clone());
+        let completion = Completion {
+            id,
+            adapter: seq.adapter,
+            output: Vec::new(),
+            finish: FinishReason::Length,
+            record,
+        };
+        self.instant_done.push(completion.clone());
+        let (handle, tx) = RequestHandle::new(id);
+        let _ = tx.send(TokenEvent::Done { id, completion });
+        handle
     }
 
     /// Cancel a queued or running request: its KV slots are freed
@@ -852,9 +915,13 @@ impl Engine {
     /// (`tests/hotpath_alloc.rs` asserts the zero-allocation property).
     pub fn step(&mut self) -> Result<Option<Vec<Completion>>> {
         self.process_expiries();
+        // requests completed at the door since the last step (max_len
+        // exhausted by the prompt) are folded into this step's result so
+        // `run_to_completion` callers observe them
+        let mut instant = std::mem::take(&mut self.instant_done);
         let t0 = Instant::now();
         let Some(batch) = self.scheduler.build_batch(&mut self.kv, &mut self.ws)? else {
-            return Ok(None);
+            return Ok(if instant.is_empty() { None } else { Some(instant) });
         };
         let want_tokens = self.ws.all_greedy();
         self.backend.step_into(
@@ -870,16 +937,18 @@ impl Engine {
         let vocab = self.cfg.vocab;
         for i in 0..self.ws.rows.len() {
             let r = self.ws.rows[i];
+            let ridx = r.ridx as usize;
+            // Per-request params, fetched once per row and O(1) by the
+            // running-list index captured at batch build (the running
+            // list does not mutate between build_batch and this loop, and
+            // `sampling_at` asserts the id still matches).
+            let params = self.scheduler.sampling_at(ridx, r.seq);
             let tok = match self.step_out.kind {
                 StepYield::GreedyTokens => self.step_out.tokens[r.row],
                 StepYield::Logits => {
                     // Per-request state: randomness comes from the slot's
                     // seed-derived PRNG, so the token stream is invariant
                     // to batch composition and slot assignment order.
-                    let params = self
-                        .scheduler
-                        .sampling(r.seq)
-                        .expect("out-row points at a running sequence");
                     let row =
                         &mut self.step_out.logits[r.row * vocab..(r.row + 1) * vocab];
                     self.ws.samplers.sample_row(r.sampler as usize, params, row)
@@ -887,17 +956,11 @@ impl Engine {
             };
             // Stop/penalty bookkeeping runs on both paths so the greedy
             // fast path and the logits path observe identical state.
-            let stop = {
-                let params = self
-                    .scheduler
-                    .sampling(r.seq)
-                    .expect("out-row points at a running sequence");
-                self.ws.samplers.observe(r.sampler as usize, params, tok)
-            };
+            let stop = self.ws.samplers.observe(r.sampler as usize, params, tok);
             if stop {
-                self.scheduler.mark_stop(r.seq);
+                self.scheduler.mark_stop_at(ridx, r.seq);
             }
-            let first = self.scheduler.push_token(r.seq, tok)?;
+            let first = self.scheduler.push_token_at(ridx, r.seq, tok);
             self.obs.record_token(r.aid);
             if first {
                 self.flightrec.record(EventKind::FirstToken, r.seq, r.aid, tok as u32 as u64);
@@ -1006,7 +1069,8 @@ impl Engine {
                 completion
             })
             .collect();
-        Ok(Some(completions))
+        instant.extend(completions);
+        Ok(Some(instant))
     }
 
     /// Drain everything that is queued; returns all completions.
@@ -1107,6 +1171,7 @@ impl Engine {
             self.trace = Some(TraceLog::with_origin(self.constructed));
         }
         self.streams.clear();
+        self.instant_done.clear();
         self.shutting_down = false;
         self.has_deadlines = false;
         self.ewma_prefill = 0.0;

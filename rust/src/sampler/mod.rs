@@ -59,7 +59,9 @@ pub struct SamplingParams {
     /// Token-id sequences that finish the request with reason `stop` once
     /// the generated stream ends with one of them (matches may straddle
     /// step boundaries). At most [`MAX_STOP_SEQS`] sequences of at most
-    /// [`MAX_STOP_SEQ_LEN`] tokens each.
+    /// [`MAX_STOP_SEQ_LEN`] tokens each; sequences over the length cap
+    /// are *dropped* by [`SamplingParams::sanitize`], never truncated — a
+    /// truncated prefix would match more often than the caller asked.
     pub stop_sequences: Vec<Vec<i32>>,
     /// Single token ids that finish the request with reason `stop`.
     pub stop_token_ids: Vec<i32>,
@@ -164,10 +166,18 @@ impl SamplingParams {
         if !self.frequency_penalty.is_finite() {
             self.frequency_penalty = 0.0;
         }
+        // Over-long stop sequences are dropped, not truncated: matching a
+        // 16-token prefix would fire *more* often than the caller asked,
+        // ending generation on text they never requested a stop for.
+        self.stop_sequences
+            .retain(|s| !s.is_empty() && s.len() <= MAX_STOP_SEQ_LEN);
         self.stop_sequences.truncate(MAX_STOP_SEQS);
-        self.stop_sequences.retain(|s| !s.is_empty());
-        for s in &mut self.stop_sequences {
-            s.truncate(MAX_STOP_SEQ_LEN);
+        // A NaN bias would poison its logit (NaN propagates through the
+        // additive bias); neutralize it rather than ban the token.
+        for (_, b) in &mut self.logit_bias {
+            if b.is_nan() {
+                *b = 0.0;
+            }
         }
     }
 }
@@ -629,12 +639,23 @@ mod tests {
         let mut p = SamplingParams::temperature(f32::NAN);
         p.top_p = 0.0;
         p.repetition_penalty = -3.0;
-        p.stop_sequences = vec![vec![1; 99]; 99];
+        // over-long sequences must be dropped (a truncated prefix would
+        // stop too often), valid ones kept — even when invalid ones come
+        // first — and the sequence-count cap applies to the survivors
+        p.stop_sequences = vec![vec![1; 99], vec![2, 3], vec![], vec![4; 17], vec![5]];
+        p.logit_bias = vec![(0, f32::NAN), (1, f32::NEG_INFINITY), (2, 0.5)];
         p.sanitize();
         assert_eq!(p.temperature, 0.0);
         assert_eq!(p.top_p, 1.0);
         assert_eq!(p.repetition_penalty, 1.0);
-        assert_eq!(p.stop_sequences.len(), MAX_STOP_SEQS);
-        assert!(p.stop_sequences.iter().all(|s| s.len() <= MAX_STOP_SEQ_LEN));
+        assert_eq!(p.stop_sequences, vec![vec![2, 3], vec![5]]);
+        let mut many = SamplingParams::greedy();
+        many.stop_sequences = vec![vec![1; 2]; 99];
+        many.sanitize();
+        assert_eq!(many.stop_sequences.len(), MAX_STOP_SEQS);
+        // NaN bias neutralized; -inf (a deliberate ban) passes through
+        assert_eq!(p.logit_bias[0].1, 0.0);
+        assert_eq!(p.logit_bias[1].1, f32::NEG_INFINITY);
+        assert_eq!(p.logit_bias[2].1, 0.5);
     }
 }

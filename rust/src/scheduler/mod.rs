@@ -198,6 +198,12 @@ pub struct OutRow {
     pub row: usize,
     /// Sequence id to push the sampled token to.
     pub seq: u64,
+    /// The sequence's index in the scheduler's running list at batch
+    /// build. Valid until the running list next mutates (reap / cancel /
+    /// expire) — i.e. for the whole per-step sampling loop — so the
+    /// engine's `*_at` lookups are O(1) instead of scanning the running
+    /// list per row (`seq` double-checks against staleness).
+    pub ridx: u32,
     /// The sequence's adapter id (-1 = base), captured at batch build so
     /// the engine attributes sampled tokens to adapters without
     /// re-scanning the running list (per-adapter obs counters).
@@ -536,6 +542,7 @@ impl Scheduler {
                 rows.push(OutRow {
                     row: row_idx,
                     seq: seq.id,
+                    ridx: si as u32,
                     aid: seq.aid,
                     sampler: seq.sampler_slot.expect("running seq holds a sampler slot")
                         as u32,
@@ -587,9 +594,45 @@ impl Scheduler {
         }
     }
 
-    /// A running sequence's sampling params (engine logits-path lookup).
+    /// A running sequence's sampling params (id-keyed linear scan; the
+    /// step hot path uses [`Self::sampling_at`] instead).
     pub fn sampling(&self, id: u64) -> Option<&SamplingParams> {
         self.running.iter().find(|s| s.id == id).map(|s| &s.sampling)
+    }
+
+    /// Bind an [`OutRow`] back to its running sequence, panicking if the
+    /// binding went stale (the running list mutated since batch build —
+    /// a step-loop ordering bug, not a recoverable condition).
+    fn at(&self, idx: usize, id: u64) -> &SeqState {
+        let seq = &self.running[idx];
+        assert_eq!(seq.id, id, "stale OutRow: running list mutated mid-step");
+        seq
+    }
+
+    /// O(1) variant of [`Self::sampling`] keyed by [`OutRow::ridx`] + id.
+    /// Only valid between the batch build and the next running-list
+    /// mutation — exactly the engine's per-step sampling loop.
+    pub fn sampling_at(&self, idx: usize, id: u64) -> &SamplingParams {
+        &self.at(idx, id).sampling
+    }
+
+    /// O(1) variant of [`Self::mark_stop`] keyed by [`OutRow::ridx`] + id.
+    pub fn mark_stop_at(&mut self, idx: usize, id: u64) {
+        self.at(idx, id);
+        self.running[idx].finish = FinishReason::Stop;
+    }
+
+    /// O(1) variant of [`Self::push_token`] keyed by [`OutRow::ridx`] +
+    /// id; same TTFT-edge return.
+    pub fn push_token_at(&mut self, idx: usize, id: u64, token: i32) -> bool {
+        self.at(idx, id);
+        let seq = &mut self.running[idx];
+        seq.tokens.push(token);
+        let first = seq.first_token_at.is_none();
+        if first {
+            seq.first_token_at = Some(Instant::now());
+        }
+        first
     }
 
     /// Remove finished sequences, freeing their KV slots; returns them.

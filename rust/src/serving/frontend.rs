@@ -373,8 +373,22 @@ fn parse_request(v: &Json) -> std::result::Result<ServeRequest, (String, String)
     if let Some(n) = uint("max_len")? {
         sampling.max_len = n;
     }
-    if let Some(s) = uint("seed")? {
-        sampling.seed = Some(s as u64);
+    match v.get("seed") {
+        None | Some(Json::Null) => {}
+        Some(s) => {
+            // Lossless u64 seeds: JSON numbers lose integer precision
+            // past 2^53 (and our Int fast path past 2^63), so the full
+            // range travels as a decimal string — NdjsonClient always
+            // emits that form. Plain non-negative integers are accepted
+            // too (hand-written clients, the CI smoke test).
+            let parsed = match s {
+                Json::Str(t) => t.parse::<u64>().ok(),
+                _ => s.as_i64().filter(|&i| i >= 0).map(|i| i as u64),
+            };
+            sampling.seed = Some(parsed.ok_or_else(|| {
+                bad("\"seed\" must be a non-negative integer or a decimal string")
+            })?);
+        }
     }
     match v.get("stop") {
         None | Some(Json::Null) => {}
@@ -908,7 +922,22 @@ impl ServingBackend for NdjsonClient {
                     s.logit_bias
                         .iter()
                         .map(|&(t, b)| {
-                            Json::Arr(vec![Json::Int(t as i64), Json::Num(b as f64)])
+                            // JSON has no Inf literal: a ±inf bias (the
+                            // documented "unsampleable" form) ships as a
+                            // finite f64 beyond f32 range, which the
+                            // server's f32 narrowing turns back into ±inf
+                            // (PROTOCOL.md, logit_bias). NaN is a no-op
+                            // bias (sanitize would zero it anyway).
+                            let wire = if b.is_finite() {
+                                b as f64
+                            } else if b == f32::NEG_INFINITY {
+                                -1e39
+                            } else if b == f32::INFINITY {
+                                1e39
+                            } else {
+                                0.0
+                            };
+                            Json::Arr(vec![Json::Int(t as i64), Json::Num(wire)])
                         })
                         .collect(),
                 ),
@@ -918,7 +947,10 @@ impl ServingBackend for NdjsonClient {
             fields.push(("max_len", Json::Int(s.max_len as i64)));
         }
         if let Some(seed) = s.seed {
-            fields.push(("seed", Json::Int(seed as i64)));
+            // decimal string: lossless for the full u64 range (an Int
+            // would wrap past 2^63 and be rejected server-side; loadgen
+            // draws seeds from the whole range)
+            fields.push(("seed", Json::Str(seed.to_string())));
         }
         if let Some(t) = req.trace {
             fields.push(("trace", Json::Int(t as i64)));

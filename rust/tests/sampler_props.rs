@@ -260,3 +260,26 @@ fn max_len_caps_total_sequence_length() {
     assert_eq!(done[0].output.len(), 2);
     assert_eq!(done[0].finish, FinishReason::Length);
 }
+
+/// A `max_len` already exhausted by the prompt finishes at the door:
+/// reason `length`, *empty* output (no forced token), no KV held — and
+/// the completion still surfaces through `run_to_completion`.
+#[test]
+fn max_len_at_or_below_prompt_finishes_immediately_with_empty_output() {
+    for cap in [4usize, 2, 1] {
+        let mut sampling = SamplingParams::greedy();
+        sampling.max_len = cap; // prompt is 4 tokens: zero token budget
+        let mut e = sim_engine(3);
+        let free = e.kv_free_slots();
+        e.submit(greedy_req(vec![1, 2, 3, 4], 100, sampling)).unwrap();
+        assert_eq!(e.kv_free_slots(), free, "door completion must not touch KV");
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].output.is_empty(), "no token may be generated (cap {cap})");
+        assert_eq!(done[0].finish, FinishReason::Length);
+        assert_eq!(done[0].record.output_tokens, 0);
+        let report = e.report();
+        assert_eq!(report.requests, 1, "booked as a completion, not a rejection");
+        assert_eq!(report.rejected, 0);
+    }
+}

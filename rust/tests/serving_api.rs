@@ -4,13 +4,13 @@
 //! TCP frontend end to end (submit, stream, cancel, drain).
 
 use expertweave::adapters::generator::synth_fleet_adapters;
-use expertweave::engine::{Engine, EngineOptions};
+use expertweave::engine::{Completion, Engine, EngineOptions};
 use expertweave::model::ModelConfig;
 use expertweave::runtime::{SimPerf, Variant};
 use expertweave::sampler::SamplingParams;
-use expertweave::serving::frontend::NdjsonServer;
+use expertweave::serving::frontend::{NdjsonClient, NdjsonServer};
 use expertweave::serving::{
-    AbortReason, ServeRequest, ServingBackend, SubmitError, TokenEvent,
+    AbortReason, RequestHandle, ServeRequest, ServingBackend, SubmitError, TokenEvent,
 };
 use expertweave::weights::StoreMode;
 use std::io::{BufRead, BufReader, Write};
@@ -425,4 +425,102 @@ fn ndjson_tcp_serve_stream_cancel_drain() {
     assert_eq!(report.requests, 2);
     assert_eq!(report.aborted, 1);
     assert_eq!(report.rejected, 1);
+}
+
+/// Pump an [`NdjsonClient`] until the handle's stream terminates, and
+/// return the completion (panics on an abort/error frame — a server-side
+/// parse rejection would surface here).
+fn wire_completion(client: &mut NdjsonClient, h: &RequestHandle) -> Completion {
+    let mut evs = Vec::new();
+    for _ in 0..30_000 {
+        let _ = client.pump().unwrap();
+        evs.extend(h.drain_events());
+        if let Some(ev) = evs.iter().find(|e| e.is_terminal()) {
+            match ev {
+                TokenEvent::Done { completion, .. } => return completion.clone(),
+                other => panic!("stream ended without Done: {other:?}"),
+            }
+        }
+    }
+    panic!("no terminal event ({} events so far)", evs.len());
+}
+
+/// Seeds in the upper half of the u64 range (>= 2^63) round-trip the
+/// wire losslessly: the client ships them as decimal strings (an i64
+/// `Int` wire form would wrap negative and be rejected at parse — the
+/// regression this test pins), so a seeded sampled request submitted
+/// over TCP reproduces the in-process token stream exactly, twice. The
+/// third request covers the `-inf` logit-bias wire form: the finite
+/// ±1e39 sentinel the client emits narrows back to ±inf server-side and
+/// the banned token never appears.
+#[test]
+fn ndjson_big_seed_round_trips_and_inf_bias_crosses_the_wire() {
+    const BIG_SEED: u64 = u64::MAX - 12345; // i64 form would be negative
+
+    fn sampled(seed: u64) -> ServeRequest {
+        ServeRequest {
+            adapter: None,
+            prompt: vec![1, 2, 3, 4],
+            max_new_tokens: 6,
+            sampling: SamplingParams::top_p(0.9, 0.8).with_seed(seed),
+            deadline: None,
+            trace: None,
+        }
+    }
+
+    // in-process reference stream from an identically constructed engine
+    let reference = {
+        let (mut e, _) = sim_engine(EngineOptions::default());
+        let h = e.submit_request(sampled(BIG_SEED)).unwrap();
+        while ServingBackend::pump(&mut e).unwrap() {}
+        let done = h
+            .drain_events()
+            .into_iter()
+            .find_map(|ev| match ev {
+                TokenEvent::Done { completion, .. } => Some(completion),
+                _ => None,
+            })
+            .expect("reference request must complete");
+        done.output
+    };
+    assert_eq!(reference.len(), 6);
+
+    let server = NdjsonServer::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let serving = std::thread::spawn(move || {
+        let (mut engine, _names) = sim_engine(EngineOptions::default());
+        server.run(&mut engine).unwrap();
+    });
+
+    let mut client = NdjsonClient::connect(&addr.to_string()).unwrap();
+
+    // 1) + 2) the same big-seed request, twice: both must equal the
+    // in-process reference byte for byte (the old Int wire form lost
+    // ~half of loadgen's full-range seeds to a protocol error here)
+    for round in 0..2 {
+        let h = client.submit(sampled(BIG_SEED)).unwrap();
+        let done = wire_completion(&mut client, &h);
+        assert_eq!(
+            done.output, reference,
+            "wire stream diverged from the in-process reference (round {round})"
+        );
+    }
+
+    // 3) ban the reference's first sampled token with a -inf bias: the
+    // stream must still complete and never contain the banned token
+    let banned = reference[0];
+    let mut req = sampled(BIG_SEED);
+    req.sampling.logit_bias = vec![(banned, f32::NEG_INFINITY)];
+    let h = client.submit(req).unwrap();
+    let done = wire_completion(&mut client, &h);
+    assert_eq!(done.output.len(), 6);
+    assert!(
+        !done.output.contains(&banned),
+        "-inf-biased token {banned} sampled anyway: {:?}",
+        done.output
+    );
+
+    ServingBackend::drain(&mut client).unwrap();
+    drop(client);
+    serving.join().unwrap();
 }
